@@ -1,0 +1,108 @@
+//! Multi-tenant cache management: capacity pressure, dataset-granular
+//! eviction (§3.1's two options), pinning, and the aggregate-capacity win
+//! (§4.1: a single job can use the whole cluster's cache).
+//!
+//! Run: cargo run --offline --example multi_tenant_eviction
+
+use hoard::cache::{CacheEvent, EvictionPolicy};
+use hoard::cluster::NodeSpec;
+use hoard::coordinator::Hoard;
+use hoard::k8s::{Dataset, DatasetPhase, ObjectMeta};
+use hoard::netsim::Topology;
+use hoard::storage::{Device, DeviceKind, Volume};
+use hoard::util::fmt;
+
+fn small_testbed(policy: EvictionPolicy) -> Hoard {
+    // 4 nodes with deliberately small caches (100 GB each) so two
+    // ImageNet-scale datasets contend.
+    let specs: Vec<NodeSpec> = (0..4)
+        .map(|i| {
+            let mut s = NodeSpec::paper_node(format!("node{i}"));
+            s.cache_volume = Volume::new(vec![Device::new(DeviceKind::Nvme, 100_000_000_000)]);
+            s
+        })
+        .collect();
+    Hoard::new(specs, Topology::paper_testbed(), policy)
+}
+
+fn dataset(name: &str, bytes: u64) -> Dataset {
+    Dataset {
+        meta: ObjectMeta::named(name),
+        url: format!("nfs://storage1/{name}"),
+        total_bytes: bytes,
+        num_items: 1_000_000,
+        prefetch: true,
+        stripe_width: 0,
+        status: DatasetPhase::Pending,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // --- Scenario 1: manual policy (paper option i) -----------------------
+    let mut h = small_testbed(EvictionPolicy::Manual);
+    println!("cluster cache: {} aggregate\n", fmt::bytes(h.cache.total_capacity()));
+
+    h.datasets.create(dataset("team-a", 300_000_000_000))?;
+    h.reconcile_to_fixpoint()?;
+    h.datasets.create(dataset("team-b", 250_000_000_000))?;
+    h.reconcile_to_fixpoint()?;
+    println!(
+        "manual policy: team-a={:?}, team-b={:?} (B must wait for a manual evict)",
+        h.datasets.get("team-a").unwrap().status,
+        h.datasets.get("team-b").unwrap().status,
+    );
+    assert_eq!(h.datasets.get("team-b").unwrap().status, DatasetPhase::Failed);
+
+    // User manually deletes team-a; team-b can now be recreated.
+    h.datasets.delete("team-a")?;
+    h.datasets.delete("team-b")?;
+    h.reconcile_to_fixpoint()?;
+    h.datasets.create(dataset("team-b", 250_000_000_000))?;
+    h.reconcile_to_fixpoint()?;
+    println!(
+        "after manual evict of team-a: team-b={:?}",
+        h.datasets.get("team-b").unwrap().status
+    );
+    assert_eq!(h.datasets.get("team-b").unwrap().status, DatasetPhase::Ready);
+
+    // --- Scenario 2: dataset-LRU policy (paper option ii) -----------------
+    let mut h = small_testbed(EvictionPolicy::DatasetLru);
+    h.datasets.create(dataset("old-corpus", 300_000_000_000))?;
+    h.reconcile_to_fixpoint()?;
+    h.datasets.create(dataset("fresh-corpus", 250_000_000_000))?;
+    h.reconcile_to_fixpoint()?;
+    let evicted: Vec<_> = h
+        .cache
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            CacheEvent::Evicted(n) => Some(n.clone()),
+            _ => None,
+        })
+        .collect();
+    println!(
+        "\nLRU policy: fresh-corpus={:?} after evicting {:?}",
+        h.datasets.get("fresh-corpus").unwrap().status,
+        evicted
+    );
+    assert_eq!(evicted, vec!["old-corpus".to_string()]);
+
+    // --- Scenario 3: aggregate capacity beats any single node -------------
+    // 350 GB dataset > 100 GB node cache, fits the 400 GB aggregate.
+    let mut h = small_testbed(EvictionPolicy::Manual);
+    h.datasets.create(dataset("bigset", 350_000_000_000))?;
+    h.reconcile_to_fixpoint()?;
+    let rec = h.cache.registry.get("bigset").unwrap();
+    println!(
+        "\naggregate capacity: 350 GB dataset striped {} wide on 100 GB/node caches → {:?}",
+        rec.stripe.as_ref().unwrap().width(),
+        h.datasets.get("bigset").unwrap().status,
+    );
+    for i in 0..4 {
+        println!(
+            "  node{i}: {} used",
+            fmt::bytes(h.cache.node_used(hoard::netsim::NodeId(i)))
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time-only Python: JAX/Pallas model authoring + AOT lowering.
+
+Nothing in this package is imported at runtime; `make artifacts` runs
+`compile.aot` once and the Rust coordinator consumes the emitted HLO text.
+"""

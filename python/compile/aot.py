@@ -1,0 +1,107 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the Rust runtime.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+behind the published `xla` 0.1.6 crate) rejects (`proto.id() <= INT_MAX`).
+The HLO text parser reassigns ids, so text round-trips cleanly.
+
+Artifacts (written to --out-dir, default ../artifacts):
+  init.hlo.txt        (seed i32)                         -> 8 params
+  train_step.hlo.txt  (8 params, 8 momenta, images, lbl) -> 8+8 updated + loss
+  predict.hlo.txt     (8 params, images)                 -> logits
+  preprocess.hlo.txt  (images u8)                        -> normalized f32
+  manifest.json       positional signatures for each artifact
+
+Run via `make artifacts`; python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import preprocess as pp
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True: the Rust
+    side unwraps the single tuple output)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return {"shape": list(shape), "dtype": str(jnp.dtype(dtype).name)}
+
+
+def build_entrypoints(batch: int):
+    """(name, fn, example_args, doc) for every artifact."""
+    img = jax.ShapeDtypeStruct((batch, model.IMG, model.IMG, model.CHANNELS),
+                               jnp.uint8)
+    lbl = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    params = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in model.PARAM_SPECS]
+    seed = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def init_fn(seed):
+        return model.init_params(seed)
+
+    return [
+        ("init", init_fn, (seed,), "seed -> initial params"),
+        ("train_step", model.train_step, (*params, *params, img, lbl),
+         "params, momenta, images_u8, labels -> params', momenta', loss"),
+        ("predict", model.predict, (*params, img),
+         "params, images_u8 -> logits"),
+        ("preprocess", lambda x: (pp(x),), (img,),
+         "images_u8 -> normalized f32"),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--batch", type=int, default=model.BATCH)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "batch": args.batch,
+        "image": [model.IMG, model.IMG, model.CHANNELS],
+        "num_classes": model.NUM_CLASSES,
+        "lr": model.LR,
+        "momentum": model.MOMENTUM,
+        "param_specs": [{"name": n, **_spec(s, jnp.float32)}
+                        for n, s in model.PARAM_SPECS],
+        "entrypoints": {},
+    }
+
+    for name, fn, ex_args, doc in build_entrypoints(args.batch):
+        lowered = jax.jit(fn).lower(*ex_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *ex_args)
+        manifest["entrypoints"][name] = {
+            "doc": doc,
+            "inputs": [_spec(a.shape, a.dtype) for a in ex_args],
+            "outputs": [_spec(o.shape, o.dtype) for o in outs],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

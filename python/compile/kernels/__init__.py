@@ -1,0 +1,6 @@
+"""L1: Pallas kernels for the training consumer's compute hot-spots."""
+
+from .matmul import linear, matmul
+from .preprocess import preprocess
+
+__all__ = ["matmul", "linear", "preprocess"]

@@ -1,0 +1,121 @@
+"""L1 Pallas kernel: tiled matmul — the compute hot-spot of the L2 model.
+
+TPU adaptation (DESIGN.md §3): the paper's consumer is a GPU running cuDNN
+convolutions. On TPU-class hardware the same work is tiled matmuls on the
+MXU systolic array. This kernel expresses the HBM↔VMEM schedule with a
+BlockSpec grid:
+
+  grid = (M/bm, N/bn, K/bk)  —  K innermost so each (i, j) output tile stays
+  resident in VMEM while partial products accumulate (revisiting semantics).
+
+VMEM footprint and MXU estimates for the shipped tile sizes are next to the
+BM/BK/BN constants below (tuned in the §Perf pass — see EXPERIMENTS.md).
+We keep f32 because correctness is validated on the CPU interpreter
+(interpret=True — Mosaic custom-calls cannot run on the CPU PJRT plugin);
+a bf16 variant would halve the VMEM numbers and double MXU throughput.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes; overridable at AOT time (HOARD_MM_BM/BK/BN) — the
+# §Perf block-size sweep lives in EXPERIMENTS.md. 1024×256×128 measured
+# 6.8× faster per train step than 64×128×64 (grid iterations drop 32×;
+# that is what both the CPU interpreter and TPU pipeline overhead pay
+# for). VMEM footprint: x 1024·256·4 = 1 MiB, y 256·128·4 = 128 KiB,
+# o 1024·128·4 = 512 KiB ⇒ ~1.6 MiB/step, ~10% of a 16 MiB VMEM —
+# double-buffering still has 5× headroom. MXU view: each step streams
+# 1024×256 activations through the 128×128 systolic array as 8×2 passes
+# with zero re-fetch of the weight tile.
+BM = int(os.environ.get("HOARD_MM_BM", "1024"))
+BK = int(os.environ.get("HOARD_MM_BK", "256"))
+BN = int(os.environ.get("HOARD_MM_BN", "128"))
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, n_k: int):
+    """One (i, j, k) grid step: o[i, j] += x[i, k] @ y[k, j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(a: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr, pc = rows - a.shape[0], cols - a.shape[1]
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul_blocks(x: jax.Array, y: jax.Array, *, bm: int = BM, bk: int = BK,
+                  bn: int = BN) -> jax.Array:
+    """`x @ y` via the Pallas tile kernel; pads ragged edges to tile size.
+
+    x: (M, K) f32, y: (K, N) f32 -> (M, N) f32. Forward only — use
+    `matmul` (custom-VJP wrapper) inside differentiated code.
+    """
+    if x.ndim != 2 or y.ndim != 2 or x.shape[1] != y.shape[0]:
+        raise ValueError(f"matmul shape mismatch: {x.shape} @ {y.shape}")
+    m, k = x.shape
+    _, n = y.shape
+    # Shrink blocks for small operands so the grid is never empty.
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    mp = pl.cdiv(m, bm) * bm
+    kp = pl.cdiv(k, bk) * bk
+    np_ = pl.cdiv(n, bn) * bn
+    xp = _pad_to(x.astype(jnp.float32), mp, kp)
+    yp = _pad_to(y.astype(jnp.float32), kp, np_)
+    n_k = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Differentiable `x @ y` on the Pallas tile kernel (default blocks).
+
+    Pallas kernels with revisiting accumulation are not auto-transposable,
+    so the backward pass is expressed explicitly — as two more instances of
+    the *same* kernel: dX = g @ Yᵀ, dY = Xᵀ @ g. That keeps 100% of the
+    model's matmul FLOPs (fwd *and* bwd) on the L1 kernel.
+    """
+    return matmul_blocks(x, y)
+
+
+def _matmul_fwd(x, y):
+    return matmul_blocks(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    return matmul_blocks(g, y.T), matmul_blocks(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def linear(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Fully-connected layer on the Pallas matmul: x @ w + b."""
+    return matmul(x, w) + b[None, :]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness bar).
+
+Every Pallas kernel in this package has a reference implementation here
+written with plain jax.numpy ops only. python/tests/test_kernels.py sweeps
+shapes (hypothesis) and asserts allclose between kernel and oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .preprocess import MEAN, STD
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def linear_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    return matmul_ref(x, w) + b[None, :]
+
+
+def preprocess_ref(images_u8: jax.Array) -> jax.Array:
+    x = images_u8.astype(jnp.float32) / 255.0
+    m = jnp.asarray(MEAN, dtype=jnp.float32)
+    s = jnp.asarray(STD, dtype=jnp.float32)
+    return (x - m) / s

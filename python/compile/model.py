@@ -1,0 +1,133 @@
+"""L2: the training consumer — a small CNN classifier in JAX.
+
+This is the "DL job" that Hoard feeds: the reproduction's stand-in for
+AlexNet in tf_cnn_benchmarks (DESIGN.md §2). Convolutions are lowered to
+im2col + the L1 Pallas matmul kernel so the paper's compute hot-spot runs
+through our kernel; the input-pipeline normalization runs through the L1
+preprocess kernel. fwd/bwd via jax.grad, SGD with momentum.
+
+Everything here takes/returns *flat tuples of arrays* so the AOT artifacts
+have a stable positional calling convention for the Rust runtime (see
+aot.py, which also emits a JSON manifest of the signatures).
+
+Architecture (32x32x3 inputs, NUM_CLASSES logits):
+  conv3x3(3->16) + relu + maxpool2        # 16x16x16
+  conv3x3(16->32) + relu + maxpool2       # 8x8x32
+  flatten (2048) -> linear(2048->128) + relu -> linear(128->NUM_CLASSES)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import linear, matmul, preprocess
+
+IMG = 32
+CHANNELS = 3
+NUM_CLASSES = 10
+BATCH = 64
+# SGD-momentum; 0.05 diverges on this model (verified in the e2e run), 0.01
+# trains stably with the He init below.
+LR = 0.01
+MOMENTUM = 0.9
+
+# (name, shape) of every parameter, in calling-convention order.
+PARAM_SPECS = (
+    ("conv1_w", (3, 3, CHANNELS, 16)),
+    ("conv1_b", (16,)),
+    ("conv2_w", (3, 3, 16, 32)),
+    ("conv2_b", (32,)),
+    ("fc1_w", (2048, 128)),
+    ("fc1_b", (128,)),
+    ("fc2_w", (128, NUM_CLASSES)),
+    ("fc2_b", (NUM_CLASSES,)),
+)
+N_PARAMS = len(PARAM_SPECS)
+
+
+def init_params(seed: jax.Array):
+    """He-init parameters from an int32 seed. Returns the flat tuple."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in PARAM_SPECS:
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            std = jnp.sqrt(2.0 / fan_in)
+            out.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return tuple(out)
+
+
+def _im2col(x: jax.Array, kh: int, kw: int) -> jax.Array:
+    """(B, H, W, C) -> (B*H*W, kh*kw*C) patches with SAME zero padding."""
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (kh // 2, kh // 2), (kw // 2, kw // 2), (0, 0)))
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(xp[:, dy:dy + h, dx:dx + w, :])
+    patches = jnp.concatenate(cols, axis=-1)  # (B, H, W, kh*kw*C)
+    return patches.reshape(b * h * w, kh * kw * c)
+
+
+def conv3x3(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """SAME conv as im2col + Pallas matmul. w: (3, 3, Cin, Cout)."""
+    bsz, h, wd, _ = x.shape
+    cout = w.shape[-1]
+    cols = _im2col(x, 3, 3)                      # (B*H*W, 9*Cin)
+    wm = w.reshape(-1, cout)                     # (9*Cin, Cout)
+    y = matmul(cols, wm) + b[None, :]
+    return y.reshape(bsz, h, wd, cout)
+
+
+def maxpool2(x: jax.Array) -> jax.Array:
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    return x.max(axis=(2, 4))
+
+
+def forward(params, images_f32: jax.Array) -> jax.Array:
+    """Logits for a (B, 32, 32, 3) f32 batch."""
+    c1w, c1b, c2w, c2b, f1w, f1b, f2w, f2b = params
+    x = jax.nn.relu(conv3x3(images_f32, c1w, c1b))
+    x = maxpool2(x)
+    x = jax.nn.relu(conv3x3(x, c2w, c2b))
+    x = maxpool2(x)
+    x = x.reshape(x.shape[0], -1)                # (B, 2048)
+    x = jax.nn.relu(linear(x, f1w, f1b))
+    return linear(x, f2w, f2b)
+
+
+def loss_fn(params, images_f32: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = forward(params, images_f32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, NUM_CLASSES, dtype=jnp.float32)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def train_step(*flat):
+    """Positional AOT entrypoint.
+
+    flat = (*params[8], *momentum[8], images_u8(B,32,32,3), labels(B,)i32)
+    returns (*new_params[8], *new_momentum[8], loss).
+    """
+    params = tuple(flat[:N_PARAMS])
+    moms = tuple(flat[N_PARAMS:2 * N_PARAMS])
+    images_u8, labels = flat[2 * N_PARAMS], flat[2 * N_PARAMS + 1]
+    images = preprocess(images_u8)               # L1 kernel
+    loss, grads = jax.value_and_grad(loss_fn)(params, images, labels)
+    new_moms = tuple(MOMENTUM * m + g for m, g in zip(moms, grads))
+    new_params = tuple(p - LR * m for p, m in zip(params, new_moms))
+    return (*new_params, *new_moms, loss)
+
+
+def predict(*flat):
+    """flat = (*params[8], images_u8) -> (logits,). Inference entrypoint."""
+    params = tuple(flat[:N_PARAMS])
+    images = preprocess(flat[N_PARAMS])
+    return (forward(params, images),)

@@ -1,0 +1,74 @@
+"""AOT contract tests: the manifest and HLO artifacts the Rust runtime
+consumes must stay in lock-step with model.py's calling convention."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def artifacts_built():
+    return os.path.exists(os.path.join(ART, "manifest.json"))
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    if not artifacts_built():
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_params_match_model(manifest):
+    specs = manifest["param_specs"]
+    assert [s["name"] for s in specs] == [n for n, _ in model.PARAM_SPECS]
+    for s, (_, shape) in zip(specs, model.PARAM_SPECS):
+        assert tuple(s["shape"]) == shape
+        assert s["dtype"] == "float32"
+
+
+def test_manifest_train_step_signature(manifest):
+    ts = manifest["entrypoints"]["train_step"]
+    n = model.N_PARAMS
+    assert len(ts["inputs"]) == 2 * n + 2
+    assert len(ts["outputs"]) == 2 * n + 1
+    img = ts["inputs"][2 * n]
+    assert img["dtype"] == "uint8"
+    assert img["shape"] == [manifest["batch"], model.IMG, model.IMG, model.CHANNELS]
+    assert ts["outputs"][-1]["shape"] == []  # scalar loss
+
+
+def test_manifest_hyperparams_match(manifest):
+    assert manifest["lr"] == pytest.approx(model.LR)
+    assert manifest["momentum"] == pytest.approx(model.MOMENTUM)
+    assert manifest["num_classes"] == model.NUM_CLASSES
+
+
+def test_hlo_artifacts_exist_and_parse_shape(manifest):
+    for name in manifest["entrypoints"]:
+        path = os.path.join(ART, f"{name}.hlo.txt")
+        assert os.path.exists(path), name
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, f"{name} is not HLO text"
+
+
+def test_entrypoint_shapes_agree_with_eval_shape(manifest):
+    # Re-derive the expected output shapes from the model, independent of
+    # what aot.py recorded.
+    import jax
+
+    ts = manifest["entrypoints"]["train_step"]
+    b = manifest["batch"]
+    img = jax.ShapeDtypeStruct((b, model.IMG, model.IMG, model.CHANNELS), jnp.uint8)
+    lbl = jax.ShapeDtypeStruct((b,), jnp.int32)
+    params = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in model.PARAM_SPECS]
+    outs = jax.eval_shape(model.train_step, *params, *params, img, lbl)
+    assert len(outs) == len(ts["outputs"])
+    for o, spec in zip(outs, ts["outputs"]):
+        assert list(o.shape) == spec["shape"]

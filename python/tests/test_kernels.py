@@ -1,0 +1,129 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes/dtypes per the session contract; every property
+asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, linear, preprocess
+from compile.kernels.matmul import matmul_blocks
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIM = st.integers(min_value=1, max_value=160)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+class TestMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIM, k=DIM, n=DIM, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref_any_shape(self, m, k, n, seed):
+        kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(kx, (m, k), jnp.float32)
+        y = jax.random.normal(ky, (k, n), jnp.float32)
+        np.testing.assert_allclose(
+            matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("m,k,n", [
+        (1, 1, 1), (64, 128, 64), (65, 129, 63), (128, 2048, 128),
+        (7, 3, 5), (256, 27, 16),
+    ])
+    def test_matches_ref_fixed(self, m, k, n):
+        x, y = rand(0, (m, k)), rand(1, (k, n))
+        np.testing.assert_allclose(
+            matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+    def test_block_edges_pad_correctly(self):
+        # Exactly one past a block boundary in each dim.
+        x, y = rand(2, (65, 129)), rand(3, (129, 65))
+        np.testing.assert_allclose(
+            matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+    def test_custom_block_sizes(self):
+        x, y = rand(4, (96, 96)), rand(5, (96, 96))
+        out = matmul_blocks(x, y, bm=32, bk=32, bn=32)
+        np.testing.assert_allclose(out, ref.matmul_ref(x, y),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_gradients_match_ref(self):
+        # The custom VJP (backward = two more Pallas matmuls) must agree
+        # with jnp.dot's autodiff.
+        x, y = rand(9, (24, 40)), rand(10, (40, 16))
+
+        def f_kernel(x, y):
+            return jnp.sum(matmul(x, y) ** 2)
+
+        def f_ref(x, y):
+            return jnp.sum(ref.matmul_ref(x, y) ** 2)
+
+        gx_k, gy_k = jax.grad(f_kernel, argnums=(0, 1))(x, y)
+        gx_r, gy_r = jax.grad(f_ref, argnums=(0, 1))(x, y)
+        np.testing.assert_allclose(gx_k, gx_r, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(gy_k, gy_r, rtol=1e-3, atol=1e-3)
+
+    def test_identity(self):
+        x = rand(6, (33, 33))
+        np.testing.assert_allclose(matmul(x, jnp.eye(33)), x,
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            matmul(jnp.zeros((2, 3)), jnp.zeros((4, 2)))
+
+    def test_non_2d_raises(self):
+        with pytest.raises(ValueError):
+            matmul(jnp.zeros((2, 3, 4)), jnp.zeros((4, 2)))
+
+    def test_bf16_inputs_upcast(self):
+        x = rand(7, (32, 32)).astype(jnp.bfloat16)
+        y = rand(8, (32, 32)).astype(jnp.bfloat16)
+        out = matmul(x, y)
+        assert out.dtype == jnp.float32
+        np.testing.assert_allclose(out, ref.matmul_ref(x, y),
+                                   rtol=2e-2, atol=2e-2)
+
+
+class TestLinear:
+    @settings(max_examples=15, deadline=None)
+    @given(b=st.integers(1, 64), din=st.integers(1, 96),
+           dout=st.integers(1, 96), seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, b, din, dout, seed):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = jax.random.normal(k1, (b, din))
+        w = jax.random.normal(k2, (din, dout))
+        bias = jax.random.normal(k3, (dout,))
+        np.testing.assert_allclose(linear(x, w, bias),
+                                   ref.linear_ref(x, w, bias),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestPreprocess:
+    @settings(max_examples=15, deadline=None)
+    @given(b=st.integers(1, 16), h=st.sampled_from([8, 16, 32]),
+           w=st.sampled_from([8, 16, 32]), seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, b, h, w, seed):
+        img = jax.random.randint(jax.random.PRNGKey(seed), (b, h, w, 3),
+                                 0, 256, jnp.uint8)
+        np.testing.assert_allclose(preprocess(img), ref.preprocess_ref(img),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_extreme_values(self):
+        img = jnp.stack([jnp.zeros((32, 32, 3), jnp.uint8),
+                         jnp.full((32, 32, 3), 255, jnp.uint8)])
+        out = preprocess(img)
+        expect = ref.preprocess_ref(img)
+        np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+        assert jnp.isfinite(out).all()
+
+    def test_rejects_non_batch(self):
+        with pytest.raises(ValueError):
+            preprocess(jnp.zeros((32, 32, 3), jnp.uint8))

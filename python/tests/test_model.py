@@ -1,0 +1,123 @@
+"""L2 correctness: model shapes, gradient flow, training-step semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+B = 8
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jnp.int32(0))
+
+
+@pytest.fixture(scope="module")
+def batch():
+    key = jax.random.PRNGKey(42)
+    k1, k2 = jax.random.split(key)
+    img = jax.random.randint(k1, (B, model.IMG, model.IMG, model.CHANNELS),
+                             0, 256, jnp.uint8)
+    lbl = jax.random.randint(k2, (B,), 0, model.NUM_CLASSES, jnp.int32)
+    return img, lbl
+
+
+def test_init_shapes(params):
+    assert len(params) == model.N_PARAMS
+    for p, (name, shape) in zip(params, model.PARAM_SPECS):
+        assert p.shape == shape, name
+        assert p.dtype == jnp.float32
+
+
+def test_init_deterministic():
+    a = model.init_params(jnp.int32(7))
+    b = model.init_params(jnp.int32(7))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_init_seed_sensitivity():
+    a = model.init_params(jnp.int32(0))
+    b = model.init_params(jnp.int32(1))
+    assert any(not np.allclose(x, y) for x, y in zip(a, b))
+
+
+def test_forward_shape(params, batch):
+    img, _ = batch
+    from compile.kernels import preprocess
+    logits = model.forward(params, preprocess(img))
+    assert logits.shape == (B, model.NUM_CLASSES)
+    assert jnp.isfinite(logits).all()
+
+
+def test_loss_finite_positive(params, batch):
+    img, lbl = batch
+    from compile.kernels import preprocess
+    loss = model.loss_fn(params, preprocess(img), lbl)
+    assert jnp.isfinite(loss)
+    assert loss > 0  # cross-entropy of an untrained model
+
+
+def test_train_step_signature(params, batch):
+    img, lbl = batch
+    zeros = tuple(jnp.zeros_like(p) for p in params)
+    out = model.train_step(*params, *zeros, img, lbl)
+    assert len(out) == 2 * model.N_PARAMS + 1
+    for p, o in zip(params, out[:model.N_PARAMS]):
+        assert p.shape == o.shape
+    assert out[-1].shape == ()
+
+
+def test_train_step_reduces_loss_on_fixed_batch(params, batch):
+    img, lbl = batch
+    p = params
+    m = tuple(jnp.zeros_like(x) for x in p)
+    losses = []
+    for _ in range(8):
+        out = model.train_step(*p, *m, img, lbl)
+        p = out[:model.N_PARAMS]
+        m = out[model.N_PARAMS:2 * model.N_PARAMS]
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_momentum_accumulates(params, batch):
+    img, lbl = batch
+    zeros = tuple(jnp.zeros_like(p) for p in params)
+    out = model.train_step(*params, *zeros, img, lbl)
+    new_moms = out[model.N_PARAMS:2 * model.N_PARAMS]
+    # After one step from zero momentum, momentum == gradient (nonzero).
+    assert any(float(jnp.abs(mm).max()) > 0 for mm in new_moms)
+
+
+def test_predict_matches_forward(params, batch):
+    img, _ = batch
+    from compile.kernels import preprocess
+    logits = model.predict(*params, img)[0]
+    np.testing.assert_allclose(
+        logits, model.forward(params, preprocess(img)), rtol=1e-4, atol=1e-4)
+
+
+def test_maxpool2():
+    x = jnp.arange(16.0).reshape(1, 4, 4, 1)
+    out = model.maxpool2(x)
+    np.testing.assert_array_equal(out[0, :, :, 0],
+                                  jnp.array([[5.0, 7.0], [13.0, 15.0]]))
+
+
+def test_im2col_reconstructs_conv():
+    # conv3x3 via im2col must equal lax.conv_general_dilated.
+    key = jax.random.PRNGKey(3)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (2, 8, 8, 3))
+    w = jax.random.normal(k2, (3, 3, 3, 5))
+    got = model.conv3x3(x, w, jnp.zeros(5))
+    want = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

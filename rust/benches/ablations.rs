@@ -1,0 +1,14 @@
+//! Ablation benches over Hoard's design choices (not in the paper's tables,
+//! but backing its prose claims): stripe width, prefetch vs demand fetch,
+//! eviction policy, and co-scheduling (§4.5 forward-looking argument).
+
+mod common;
+
+use hoard::experiments::ablations as ab;
+
+fn main() {
+    println!("{}", common::bench("ablation_stripe_width", ab::ablation_stripe_width).console());
+    println!("{}", common::bench("ablation_prefetch", ab::ablation_prefetch).console());
+    println!("{}", common::bench("ablation_eviction", ab::ablation_eviction).console());
+    println!("{}", common::bench("ablation_coscheduling", ab::ablation_coscheduling).console());
+}

@@ -1,0 +1,22 @@
+//! Shared bench scaffolding (criterion is unavailable offline): wall-clock
+//! the experiment, print its table(s), and emit a one-line machine-readable
+//! summary so `cargo bench | grep BENCH` collates across targets.
+
+use std::time::Instant;
+
+pub fn bench<T>(name: &str, mut f: impl FnMut() -> T) -> T {
+    // Warm-up + 3 measured repetitions (the experiments are deterministic;
+    // repetitions measure harness cost, not noise).
+    let _ = f();
+    let mut times = vec![];
+    let mut out = None;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        out = Some(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let best = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    println!("BENCH {name} best={best:.4}s mean={mean:.4}s runs={}", times.len());
+    out.unwrap()
+}

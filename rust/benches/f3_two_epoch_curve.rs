@@ -1,0 +1,22 @@
+//! Regenerates **Figure 3**: two-epoch training performance for REM / NVMe /
+//! Hoard (img/s over time, epoch boundary visible as the Hoard step-up).
+//! Writes the series to target/f3_series.csv for external plotting.
+
+mod common;
+
+use hoard::experiments::{figure3_two_epochs, series_csv};
+use hoard::metrics::ascii_plot;
+
+fn main() {
+    let (series, table) = common::bench("f3_two_epoch_curve", figure3_two_epochs);
+    let refs: Vec<(&str, &[(f64, f64)])> =
+        series.iter().map(|(n, s)| (n.as_str(), s.as_slice())).collect();
+    println!("{}", ascii_plot("Figure 3 — img/s over time (2 epochs)", &refs, 76, 18));
+    println!("{}", table.console());
+    let csv = series_csv(&refs);
+    let path = "target/f3_series.csv";
+    if std::fs::write(path, &csv).is_ok() {
+        println!("series written to {path} ({} rows)", csv.lines().count() - 1);
+    }
+    println!("paper reference: Hoard epoch1 ≈ REM, epoch2 ≈ NVMe; NVMe ≈ 2.3× REM");
+}

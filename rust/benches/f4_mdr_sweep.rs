@@ -1,0 +1,12 @@
+//! Regenerates **Figure 4**: training performance vs memory-to-dataset
+//! ratio (MDR). Paper: REM degrades as MDR shrinks (buffer-cache trashing);
+//! Hoard delivers local-NVMe speed regardless of pagepool size; at
+//! MDR > 1.1 all systems converge after the first epoch.
+
+mod common;
+
+fn main() {
+    let t = common::bench("f4_mdr_sweep", hoard::experiments::figure4_mdr_sweep);
+    println!("{}", t.console());
+    println!("paper reference: Hoard ≈ NVMe at every MDR; REM recovers only at MDR > 1.1");
+}

@@ -1,0 +1,11 @@
+//! Regenerates **Figure 5**: training performance vs remote-storage
+//! bandwidth (`tc`-throttled NFS). Paper: REM tracks the bandwidth; Hoard
+//! depends on it only during the first epoch.
+
+mod common;
+
+fn main() {
+    let t = common::bench("f5_remote_bw_sweep", hoard::experiments::figure5_remote_bw_sweep);
+    println!("{}", t.console());
+    println!("paper reference: REM ∝ BW; Hoard warm epochs flat at local speed");
+}

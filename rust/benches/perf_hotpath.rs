@@ -1,0 +1,61 @@
+//! L3 hot-path micro-benchmarks (§Perf): the fair-share allocator, the
+//! fluid-sim inner loop, and the cache read-location resolution — the three
+//! code paths every experiment and the real-mode VFS lean on.
+
+mod common;
+
+use hoard::cache::{CacheManager, EvictionPolicy};
+use hoard::netsim::{fair_share, Flow, NodeId, Resource, ResourceId};
+use hoard::storage::{Device, DeviceKind, Volume};
+use hoard::workload::trainsim::{paper_scenario, ReadMode};
+use hoard::workload::DatasetSpec;
+
+fn main() {
+    // 1. fair_share: 8 resources × 64 flows (bigger than any experiment).
+    let resources: Vec<Resource> = (0..8)
+        .map(|i| Resource { name: format!("r{i}"), capacity: 1e9 + i as f64 })
+        .collect();
+    let flows: Vec<Flow> = (0..64)
+        .map(|i| Flow {
+            path: vec![ResourceId(i % 8), ResourceId((i + 3) % 8)],
+            demand: if i % 5 == 0 { f64::INFINITY } else { 1e7 * (i as f64 + 1.0) },
+        })
+        .collect();
+    let iters = 10_000;
+    let rates = common::bench("perf_fair_share_64flows_x10k", || {
+        let mut last = vec![];
+        for _ in 0..iters {
+            last = fair_share(&resources, &flows);
+        }
+        last
+    });
+    assert_eq!(rates.len(), 64);
+
+    // 2. Whole 90-epoch 4-job simulation (the Table 3 inner loop).
+    let res = common::bench("perf_sim_90_epochs", || paper_scenario(ReadMode::Hoard, 90).run());
+    assert!(res.makespan > 0.0);
+
+    // 3. Cache read-location resolution: 1M lookups.
+    let vols: Vec<Volume> =
+        (0..4).map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 40)])).collect();
+    let mut cache = CacheManager::new(vols, EvictionPolicy::Manual);
+    cache
+        .register(DatasetSpec::new("d", 1_281_167, 144_000_000_000), "nfs://s/d".into())
+        .unwrap();
+    cache.place("d", (0..4).map(NodeId).collect()).unwrap();
+    cache.prefetch_tick("d", 144_000_000_000).unwrap();
+    let n = 1_000_000u64;
+    let hits = common::bench("perf_read_location_1M", || {
+        let mut local = 0u64;
+        for i in 0..n {
+            if matches!(
+                cache.read_location("d", i % 1_281_167, NodeId(0)).unwrap(),
+                hoard::cache::ReadLocation::Local
+            ) {
+                local += 1;
+            }
+        }
+        local
+    });
+    assert!(hits > 0);
+}

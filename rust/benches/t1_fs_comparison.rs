@@ -1,0 +1,11 @@
+//! Regenerates **Table 1**: distributed-FS comparison (GlusterFS / Alluxio /
+//! Spectrum Scale), single-epoch ResNet50 training duration + feature fit.
+//! Paper: Gluster 28.9 min, Alluxio 28.6 min, Spectrum Scale 27.5 min.
+
+mod common;
+
+fn main() {
+    let t = common::bench("t1_fs_comparison", hoard::experiments::table1_fs_comparison);
+    println!("{}", t.console());
+    println!("paper reference: glusterfs 28.9 | alluxio 28.6 | spectrum-scale 27.5 (minutes)");
+}

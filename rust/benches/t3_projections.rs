@@ -1,0 +1,11 @@
+//! Regenerates **Table 3**: long-training speedup projections vs REM.
+//! Paper: Hoard 0.93/1.98/2.07/2.1 ×, NVMe 2.28/2.3/2.32/2.32 × at
+//! 2/30/60/90 epochs.
+
+mod common;
+
+fn main() {
+    let t = common::bench("t3_projections", hoard::experiments::table3_projections);
+    println!("{}", t.console());
+    println!("paper reference: Hoard 0.93 | 1.98 | 2.07 | 2.1 ×   NVMe 2.28 | 2.3 | 2.32 | 2.32 ×");
+}

@@ -1,0 +1,11 @@
+//! Regenerates **Table 4**: network usage during a 60-epoch training.
+//! Paper (per 4-GPU job): REM 8.1 TB, 1.23 Gb/s, 14.90 h;
+//! Hoard 8.1 TB, 2.7 Gb/s, 6.97 h.
+
+mod common;
+
+fn main() {
+    let t = common::bench("t4_network_usage", hoard::experiments::table4_network_usage);
+    println!("{}", t.console());
+    println!("paper reference: REM 8.1 TB / 1.23 Gb/s / 14.90 h — Hoard 8.1 TB / 2.7 Gb/s / 6.97 h");
+}

@@ -1,0 +1,11 @@
+//! Regenerates **Table 5**: % of the 320 Gb/s rack uplink consumed by
+//! misplaced DL jobs (24 jobs, 32-port 40G TOR, 3:1 oversubscription).
+//! Paper: 20/40/60/80 % misplaced → 5/9/13/17 %.
+
+mod common;
+
+fn main() {
+    let t = common::bench("t5_rack_uplink", hoard::experiments::table5_rack_uplink);
+    println!("{}", t.console());
+    println!("paper reference: 5% | 9% | 13% | 17%");
+}

@@ -1,0 +1,11 @@
+//! Regenerates the **§4.1 utilization claim**: with Hoard, the cluster
+//! completes ≈2× more jobs per unit time (hyper-parameter sweep scenario,
+//! dataset cached once and reused across rounds).
+
+mod common;
+
+fn main() {
+    let t = common::bench("util_2x", hoard::experiments::utilization_2x);
+    println!("{}", t.console());
+    println!("paper reference: \"at least 2x more jobs\" (§4.1)");
+}

@@ -1,0 +1,230 @@
+//! Minimal threaded HTTP/1.1 server on std::net (the offline build has no
+//! tokio/hyper). Enough of the protocol for the Hoard REST API: one request
+//! per connection, Content-Length bodies, JSON in/out.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Self {
+        Response { status, content_type: "application/json", body: body.into_bytes() }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Self {
+        Response { status, content_type: "text/plain", body: body.into().into_bytes() }
+    }
+
+    pub fn not_found() -> Self {
+        Response::json(404, r#"{"error":"not found"}"#.to_string())
+    }
+
+    fn status_line(&self) -> &'static str {
+        match self.status {
+            200 => "200 OK",
+            201 => "201 Created",
+            204 => "204 No Content",
+            400 => "400 Bad Request",
+            404 => "404 Not Found",
+            409 => "409 Conflict",
+            500 => "500 Internal Server Error",
+            _ => "200 OK",
+        }
+    }
+}
+
+/// Parse one HTTP/1.1 request from a stream.
+pub fn parse_request(stream: &mut dyn Read) -> Result<Request> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("missing method")?.to_string();
+    let path = parts.next().context("missing path")?.to_string();
+    if !matches!(method.as_str(), "GET" | "POST" | "PUT" | "DELETE") {
+        bail!("unsupported method {method}");
+    }
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().context("bad content-length")?;
+            }
+        }
+    }
+    if content_length > 64 << 20 {
+        bail!("body too large");
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Request { method, path, body })
+}
+
+pub fn write_response(stream: &mut dyn Write, resp: &Response) -> Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status_line(),
+        resp.content_type,
+        resp.body.len()
+    )?;
+    stream.write_all(&resp.body)?;
+    Ok(())
+}
+
+/// A running server; `handler` is called per request on worker threads.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve until dropped/stopped.
+    pub fn start<F>(addr: &str, handler: F) -> Result<Server>
+    where
+        F: Fn(&Request) -> Response + Send + Sync + 'static,
+    {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handler = Arc::new(handler);
+        let join = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((mut sock, _peer)) => {
+                        let h = handler.clone();
+                        std::thread::spawn(move || {
+                            let resp = match parse_request(&mut sock) {
+                                Ok(req) => h(&req),
+                                Err(e) => Response::json(400, format!(r#"{{"error":"{e}"}}"#)),
+                            };
+                            let _ = write_response(&mut sock, &resp);
+                            let _ = sock.shutdown(std::net::Shutdown::Both);
+                        });
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(Server { addr: local, stop, join: Some(join) })
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Blocking single-request client (tests, examples, CLI).
+pub fn request(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    let mut sock = TcpStream::connect(addr)?;
+    write!(
+        sock,
+        "{method} {path} HTTP/1.1\r\nHost: hoard\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut reader = BufReader::new(sock);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .context("bad status line")?
+        .parse()?;
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        if h.trim().is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse()?;
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_simple_request() {
+        let raw = b"POST /api/x HTTP/1.1\r\nContent-Length: 4\r\nHost: h\r\n\r\nabcd";
+        let req = parse_request(&mut &raw[..]).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/api/x");
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn parse_rejects_bad_method() {
+        let raw = b"BREW /pot HTTP/1.1\r\n\r\n";
+        assert!(parse_request(&mut &raw[..]).is_err());
+    }
+
+    #[test]
+    fn server_roundtrip() {
+        let srv = Server::start("127.0.0.1:0", |req| {
+            Response::text(200, format!("{} {}", req.method, req.path))
+        })
+        .unwrap();
+        let (status, body) = request(srv.addr, "GET", "/hello", "").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "GET /hello");
+    }
+
+    #[test]
+    fn server_concurrent_requests() {
+        let srv = Server::start("127.0.0.1:0", |_req| Response::text(200, "ok")).unwrap();
+        let addr = srv.addr;
+        let handles: Vec<_> = (0..8)
+            .map(|_| std::thread::spawn(move || request(addr, "GET", "/", "").unwrap().0))
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 200);
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! The Hoard API server (paper §3.1): REST endpoints to create/query/delete
+//! dataset resources and to submit/track DL jobs, backed by the coordinator
+//! control plane. This is the "turnkey cloud service" surface the paper
+//! contrasts with bare Alluxio/cachefsd setups.
+
+pub mod http;
+pub mod routes;
+
+pub use http::{request, Request, Response, Server};
+pub use routes::ApiState;
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::coordinator::Hoard;
+
+/// Start the API server on `addr` over a shared control plane.
+pub fn serve(addr: &str, hoard: Arc<Mutex<Hoard>>) -> Result<Server> {
+    let state = ApiState { hoard };
+    Server::start(addr, move |req| state.route(req))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Json;
+
+    fn post_dataset(addr: std::net::SocketAddr, name: &str, bytes: u64) -> (u16, String) {
+        let body = format!(
+            r#"{{"name":"{name}","url":"nfs://storage1/{name}","total_bytes":{bytes},"num_items":1000,"prefetch":true}}"#
+        );
+        request(addr, "POST", "/api/v1/datasets", &body).unwrap()
+    }
+
+    #[test]
+    fn dataset_job_lifecycle_over_http() {
+        let hoard = Arc::new(Mutex::new(Hoard::paper_testbed()));
+        let srv = serve("127.0.0.1:0", hoard.clone()).unwrap();
+
+        // Health.
+        let (st, body) = request(srv.addr, "GET", "/healthz", "").unwrap();
+        assert_eq!((st, body.as_str()), (200, "ok"));
+
+        // Create a dataset.
+        let (st, body) = post_dataset(srv.addr, "imagenet", 144_000_000_000);
+        assert_eq!(st, 201, "{body}");
+
+        // List datasets — should be cached (prefetch) after reconcile.
+        let (st, body) = request(srv.addr, "GET", "/api/v1/datasets", "").unwrap();
+        assert_eq!(st, 200);
+        let j = Json::parse(&body).unwrap();
+        let items = j.get("items").unwrap().as_arr().unwrap();
+        assert_eq!(items.len(), 1);
+        assert_eq!(items[0].get("phase").unwrap().as_str(), Some("Ready"));
+        assert_eq!(items[0].get("stripe_nodes").unwrap().as_arr().unwrap().len(), 4);
+
+        // Submit a job.
+        let job = r#"{"name":"train1","dataset":"imagenet","gpus":4,"replicas":1,"epochs":2}"#;
+        let (st, body) = request(srv.addr, "POST", "/api/v1/jobs", job).unwrap();
+        assert_eq!(st, 201, "{body}");
+        let (st, body) = request(srv.addr, "GET", "/api/v1/jobs/train1", "").unwrap();
+        assert_eq!(st, 200);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("phase").unwrap().as_str(), Some("Running"));
+
+        // Complete it; dataset unpins but stays cached.
+        let (st, _) = request(srv.addr, "POST", "/api/v1/jobs/train1/complete", "").unwrap();
+        assert_eq!(st, 200);
+        let (_, body) = request(srv.addr, "GET", "/api/v1/datasets/imagenet", "").unwrap();
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("pin_count").unwrap().as_u64(), Some(0));
+        assert_eq!(j.get("phase").unwrap().as_str(), Some("Ready"));
+
+        // Delete the dataset.
+        let (st, _) = request(srv.addr, "DELETE", "/api/v1/datasets/imagenet", "").unwrap();
+        assert_eq!(st, 204);
+        let (st, _) = request(srv.addr, "GET", "/api/v1/datasets/imagenet", "").unwrap();
+        assert_eq!(st, 404);
+    }
+
+    #[test]
+    fn stats_and_errors() {
+        let hoard = Arc::new(Mutex::new(Hoard::paper_testbed()));
+        let srv = serve("127.0.0.1:0", hoard).unwrap();
+
+        let (st, body) = request(srv.addr, "GET", "/api/v1/stats", "").unwrap();
+        assert_eq!(st, 200);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("nodes").unwrap().as_arr().unwrap().len(), 4);
+
+        // Duplicate dataset -> 409.
+        post_dataset(srv.addr, "a", 1000);
+        let (st, _) = post_dataset(srv.addr, "a", 1000);
+        assert_eq!(st, 409);
+
+        // Bad JSON -> 400.
+        let (st, _) = request(srv.addr, "POST", "/api/v1/datasets", "{oops").unwrap();
+        assert_eq!(st, 400);
+
+        // Job for unknown dataset -> pending (not failed), visible in list.
+        let job = r#"{"name":"j","dataset":"ghost","gpus":4,"replicas":1,"epochs":1}"#;
+        let (st, _) = request(srv.addr, "POST", "/api/v1/jobs", job).unwrap();
+        assert_eq!(st, 201);
+        let (_, body) = request(srv.addr, "GET", "/api/v1/jobs/j", "").unwrap();
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("phase").unwrap().as_str(), Some("Pending"));
+
+        // Unknown route -> 404.
+        let (st, _) = request(srv.addr, "GET", "/api/v2/nope", "").unwrap();
+        assert_eq!(st, 404);
+    }
+}

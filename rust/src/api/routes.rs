@@ -1,0 +1,280 @@
+//! REST routing for the Hoard API server. Every mutating request triggers a
+//! control-plane reconcile so responses reflect settled state — the
+//! user-visible behaviour of the paper's "turnkey" workflow.
+
+use std::sync::{Arc, Mutex};
+
+use super::http::{Request, Response};
+use crate::coordinator::{job_controller, Hoard};
+use crate::k8s::{Dataset, DatasetPhase, DlJob, JobPhase, ObjectMeta, StoreError};
+use crate::util::Json;
+
+#[derive(Clone)]
+pub struct ApiState {
+    pub hoard: Arc<Mutex<Hoard>>,
+}
+
+impl ApiState {
+    pub fn route(&self, req: &Request) -> Response {
+        let path: Vec<&str> = req.path.trim_matches('/').split('/').collect();
+        match (req.method.as_str(), path.as_slice()) {
+            ("GET", ["healthz"]) => Response::text(200, "ok"),
+            ("GET", ["api", "v1", "stats"]) => self.stats(),
+            ("GET", ["api", "v1", "datasets"]) => self.list_datasets(),
+            ("POST", ["api", "v1", "datasets"]) => self.create_dataset(&req.body),
+            ("GET", ["api", "v1", "datasets", name]) => self.get_dataset(name),
+            ("DELETE", ["api", "v1", "datasets", name]) => self.delete_dataset(name),
+            ("GET", ["api", "v1", "jobs"]) => self.list_jobs(),
+            ("POST", ["api", "v1", "jobs"]) => self.create_job(&req.body),
+            ("GET", ["api", "v1", "jobs", name]) => self.get_job(name),
+            ("POST", ["api", "v1", "jobs", name, "complete"]) => self.complete_job(name),
+            _ => Response::not_found(),
+        }
+    }
+
+    fn with<T>(&self, f: impl FnOnce(&mut Hoard) -> T) -> T {
+        let mut h = self.hoard.lock().unwrap();
+        f(&mut h)
+    }
+
+    fn dataset_json(h: &Hoard, d: &Dataset) -> Json {
+        let rec = h.cache.registry.get(&d.meta.name);
+        let stripe_nodes = rec
+            .and_then(|r| r.stripe.as_ref())
+            .map(|s| s.nodes().iter().map(|n| Json::num(n.0 as f64)).collect())
+            .unwrap_or_default();
+        let (resident, pins) = rec
+            .map(|r| (r.resident_bytes(), r.pin_count))
+            .unwrap_or((0, 0));
+        Json::obj(vec![
+            ("name", Json::str(&d.meta.name)),
+            ("url", Json::str(&d.url)),
+            ("total_bytes", Json::num(d.total_bytes as f64)),
+            ("num_items", Json::num(d.num_items as f64)),
+            ("prefetch", Json::Bool(d.prefetch)),
+            ("phase", Json::str(format!("{:?}", d.status))),
+            ("resident_bytes", Json::num(resident as f64)),
+            ("pin_count", Json::num(pins as f64)),
+            ("stripe_nodes", Json::arr(stripe_nodes)),
+        ])
+    }
+
+    fn job_json(j: &DlJob) -> Json {
+        let (phase, nodes) = match &j.status {
+            JobPhase::Pending => ("Pending".to_string(), vec![]),
+            JobPhase::Scheduled { nodes } => ("Scheduled".to_string(), nodes.clone()),
+            JobPhase::Running => ("Running".to_string(), vec![]),
+            JobPhase::Succeeded => ("Succeeded".to_string(), vec![]),
+            JobPhase::Failed(r) => (format!("Failed: {r}"), vec![]),
+        };
+        Json::obj(vec![
+            ("name", Json::str(&j.meta.name)),
+            ("dataset", Json::str(&j.dataset)),
+            ("gpus", Json::num(j.gpus as f64)),
+            ("replicas", Json::num(j.replicas as f64)),
+            ("epochs", Json::num(j.epochs as f64)),
+            ("phase", Json::str(phase)),
+            ("nodes", Json::arr(nodes.into_iter().map(|n| Json::num(n as f64)).collect())),
+        ])
+    }
+
+    fn stats(&self) -> Response {
+        self.with(|h| {
+            let nodes: Vec<Json> = (0..h.nodes.len())
+                .map(|i| {
+                    let nid = crate::netsim::NodeId(i);
+                    Json::obj(vec![
+                        ("name", Json::str(&h.nodes[i].spec.name)),
+                        ("gpus_free", Json::num(h.nodes[i].gpus_free() as f64)),
+                        ("cache_capacity", Json::num(h.cache.volume(nid).capacity() as f64)),
+                        ("cache_used", Json::num(h.cache.node_used(nid) as f64)),
+                    ])
+                })
+                .collect();
+            let body = Json::obj(vec![
+                ("nodes", Json::arr(nodes)),
+                ("datasets", Json::num(h.cache.registry.len() as f64)),
+                ("cache_resident_bytes", Json::num(h.cache.registry.resident_bytes() as f64)),
+            ]);
+            Response::json(200, body.to_string())
+        })
+    }
+
+    fn list_datasets(&self) -> Response {
+        self.with(|h| {
+            let items: Vec<Json> =
+                h.datasets.list().map(|d| Self::dataset_json(h, d)).collect();
+            Response::json(200, Json::obj(vec![("items", Json::arr(items))]).to_string())
+        })
+    }
+
+    fn get_dataset(&self, name: &str) -> Response {
+        self.with(|h| match h.datasets.get(name) {
+            Some(d) => Response::json(200, Self::dataset_json(h, d).to_string()),
+            None => Response::not_found(),
+        })
+    }
+
+    fn create_dataset(&self, body: &[u8]) -> Response {
+        let Ok(text) = std::str::from_utf8(body) else {
+            return Response::json(400, r#"{"error":"body is not utf-8"}"#.into());
+        };
+        let j = match Json::parse(text) {
+            Ok(j) => j,
+            Err(e) => return Response::json(400, format!(r#"{{"error":"{e}"}}"#)),
+        };
+        let (Some(name), Some(url)) = (
+            j.get("name").and_then(|v| v.as_str()).map(str::to_string),
+            j.get("url").and_then(|v| v.as_str()).map(str::to_string),
+        ) else {
+            return Response::json(400, r#"{"error":"name and url required"}"#.into());
+        };
+        if crate::remote::DatasetUrl::parse(&url).is_err() {
+            return Response::json(400, r#"{"error":"invalid url"}"#.into());
+        }
+        let ds = Dataset {
+            meta: ObjectMeta::named(&name),
+            url,
+            total_bytes: j.get("total_bytes").and_then(|v| v.as_u64()).unwrap_or(0),
+            num_items: j.get("num_items").and_then(|v| v.as_u64()).unwrap_or(1).max(1),
+            prefetch: j.get("prefetch").and_then(|v| v.as_bool()).unwrap_or(false),
+            stripe_width: j.get("stripe_width").and_then(|v| v.as_u64()).unwrap_or(0) as usize,
+            status: DatasetPhase::Pending,
+        };
+        self.with(|h| match h.datasets.create(ds) {
+            Ok(created) => {
+                let _ = h.reconcile_to_fixpoint();
+                let d = h.datasets.get(&created.meta.name).unwrap().clone();
+                Response::json(201, Self::dataset_json(h, &d).to_string())
+            }
+            Err(StoreError::AlreadyExists { .. }) => {
+                Response::json(409, format!(r#"{{"error":"dataset '{name}' exists"}}"#))
+            }
+            Err(e) => Response::json(500, format!(r#"{{"error":"{e}"}}"#)),
+        })
+    }
+
+    fn delete_dataset(&self, name: &str) -> Response {
+        self.with(|h| {
+            if h.datasets.get(name).is_none() {
+                return Response::not_found();
+            }
+            // Refuse deletion while pinned by running jobs.
+            if let Some(rec) = h.cache.registry.get(name) {
+                if rec.pin_count > 0 {
+                    return Response::json(
+                        409,
+                        format!(r#"{{"error":"dataset '{name}' pinned by {} job(s)"}}"#, rec.pin_count),
+                    );
+                }
+            }
+            h.datasets.delete(name).unwrap();
+            let _ = h.reconcile_to_fixpoint();
+            Response { status: 204, content_type: "application/json", body: vec![] }
+        })
+    }
+
+    fn list_jobs(&self) -> Response {
+        self.with(|h| {
+            let items: Vec<Json> = h.jobs.list().map(Self::job_json).collect();
+            Response::json(200, Json::obj(vec![("items", Json::arr(items))]).to_string())
+        })
+    }
+
+    fn get_job(&self, name: &str) -> Response {
+        self.with(|h| match h.jobs.get(name) {
+            Some(j) => Response::json(200, Self::job_json(j).to_string()),
+            None => Response::not_found(),
+        })
+    }
+
+    fn create_job(&self, body: &[u8]) -> Response {
+        let Ok(text) = std::str::from_utf8(body) else {
+            return Response::json(400, r#"{"error":"body is not utf-8"}"#.into());
+        };
+        let j = match Json::parse(text) {
+            Ok(j) => j,
+            Err(e) => return Response::json(400, format!(r#"{{"error":"{e}"}}"#)),
+        };
+        let (Some(name), Some(dataset)) = (
+            j.get("name").and_then(|v| v.as_str()).map(str::to_string),
+            j.get("dataset").and_then(|v| v.as_str()).map(str::to_string),
+        ) else {
+            return Response::json(400, r#"{"error":"name and dataset required"}"#.into());
+        };
+        let job = DlJob {
+            meta: ObjectMeta::named(&name),
+            dataset,
+            gpus: j.get("gpus").and_then(|v| v.as_u64()).unwrap_or(1) as u32,
+            replicas: j.get("replicas").and_then(|v| v.as_u64()).unwrap_or(1) as u32,
+            container_image: j
+                .get("image")
+                .and_then(|v| v.as_str())
+                .unwrap_or("tf-cnn-benchmarks:latest")
+                .to_string(),
+            mount_path: j.get("mount_path").and_then(|v| v.as_str()).unwrap_or("/data").to_string(),
+            epochs: j.get("epochs").and_then(|v| v.as_u64()).unwrap_or(1) as u32,
+            status: JobPhase::Pending,
+        };
+        self.with(|h| match h.jobs.create(job) {
+            Ok(created) => {
+                let _ = h.reconcile_to_fixpoint();
+                let out = Self::job_json(h.jobs.get(&created.meta.name).unwrap());
+                Response::json(201, out.to_string())
+            }
+            Err(StoreError::AlreadyExists { .. }) => {
+                Response::json(409, format!(r#"{{"error":"job '{name}' exists"}}"#))
+            }
+            Err(e) => Response::json(500, format!(r#"{{"error":"{e}"}}"#)),
+        })
+    }
+
+    fn complete_job(&self, name: &str) -> Response {
+        self.with(|h| {
+            if h.jobs.get(name).is_none() {
+                return Response::not_found();
+            }
+            match job_controller::complete_job(h, name) {
+                Ok(()) => {
+                    let _ = h.reconcile_to_fixpoint();
+                    Response::json(200, Self::job_json(h.jobs.get(name).unwrap()).to_string())
+                }
+                Err(e) => Response::json(500, format!(r#"{{"error":"{e}"}}"#)),
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full lifecycle is covered in api::tests; here: pinned-delete guard.
+    #[test]
+    fn delete_pinned_dataset_conflicts() {
+        let hoard = Arc::new(Mutex::new(Hoard::paper_testbed()));
+        let state = ApiState { hoard };
+        let mk = |method: &str, path: &str, body: &str| Request {
+            method: method.into(),
+            path: path.into(),
+            body: body.as_bytes().to_vec(),
+        };
+        let r = state.route(&mk(
+            "POST",
+            "/api/v1/datasets",
+            r#"{"name":"d","url":"nfs://s/d","total_bytes":1000,"num_items":10,"prefetch":true}"#,
+        ));
+        assert_eq!(r.status, 201);
+        let r = state.route(&mk(
+            "POST",
+            "/api/v1/jobs",
+            r#"{"name":"j","dataset":"d","gpus":4,"replicas":1,"epochs":1}"#,
+        ));
+        assert_eq!(r.status, 201);
+        let r = state.route(&mk("DELETE", "/api/v1/datasets/d", ""));
+        assert_eq!(r.status, 409, "{}", String::from_utf8_lossy(&r.body));
+        state.route(&mk("POST", "/api/v1/jobs/j/complete", ""));
+        let r = state.route(&mk("DELETE", "/api/v1/datasets/d", ""));
+        assert_eq!(r.status, 204);
+    }
+}

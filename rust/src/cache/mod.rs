@@ -1,0 +1,449 @@
+//! The Hoard distributed cache layer — the paper's core contribution.
+//!
+//! Responsibilities (paper §3.2, "distributed cache layer" + "dataset
+//! management layer" data plane):
+//!  * accept *what/where* commands from the coordinator (it never makes
+//!    placement choices on its own),
+//!  * stripe each dataset over the chosen node subset ([`stripe`]),
+//!  * track dataset life cycles decoupled from jobs ([`registry`]),
+//!  * serve reads with AFM-style transparent miss handling / prefetch
+//!    ([`CacheManager::read_location`], [`CacheManager::prefetch_tick`]),
+//!  * evict at dataset granularity ([`eviction`]).
+
+pub mod eviction;
+pub mod registry;
+pub mod stripe;
+
+pub use eviction::{plan_admission, Admission, EvictionPolicy};
+pub use registry::{DatasetRecord, DatasetState, Registry, RegistryError};
+pub use stripe::StripeMap;
+
+use crate::netsim::NodeId;
+use crate::storage::Volume;
+use crate::workload::DatasetSpec;
+
+/// Where a read is served from — drives both the fluid simulation and the
+/// real-mode VFS.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadLocation {
+    /// On the reader's own cache volume.
+    Local,
+    /// On a peer cache node.
+    Peer(NodeId),
+    /// Not cached (yet): fetch from the remote store via the AFM gateway,
+    /// then it will live on `fill_node`.
+    RemoteFill { fill_node: NodeId },
+}
+
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum CacheError {
+    #[error(transparent)]
+    Registry(#[from] RegistryError),
+    #[error("dataset '{0}' has no stripe placement yet")]
+    NotPlaced(String),
+    #[error("cache admission rejected: need {need} bytes, reclaimable {reclaimable}")]
+    Full { need: u64, reclaimable: u64 },
+    #[error("node {0} is not a cache member for dataset '{1}'")]
+    NotAMember(usize, String),
+}
+
+/// Cache-layer events, for observability and tests.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CacheEvent {
+    Registered(String),
+    Placed { dataset: String, nodes: Vec<usize> },
+    PrefetchStarted(String),
+    FullyCached(String),
+    Evicted(String),
+    Deleted(String),
+    NodeFailed { node: usize, datasets_lost: Vec<String> },
+    NodeRecovered(usize),
+}
+
+/// The per-cluster cache manager: registry + node volumes + policy.
+#[derive(Debug)]
+pub struct CacheManager {
+    pub registry: Registry,
+    volumes: Vec<Volume>,
+    /// Per-node health; failed nodes hold no data and accept no placements
+    /// until recovered.
+    healthy: Vec<bool>,
+    pub policy: EvictionPolicy,
+    pub chunk_bytes: u64,
+    pub events: Vec<CacheEvent>,
+}
+
+impl CacheManager {
+    pub fn new(volumes: Vec<Volume>, policy: EvictionPolicy) -> Self {
+        let healthy = vec![true; volumes.len()];
+        CacheManager {
+            registry: Registry::new(),
+            volumes,
+            healthy,
+            policy,
+            chunk_bytes: 64 << 20,
+            events: vec![],
+        }
+    }
+
+    pub fn node_healthy(&self, n: NodeId) -> bool {
+        self.healthy[n.0]
+    }
+
+    /// A cache node died (disk loss / node loss). Every dataset striped on
+    /// it loses its placement — striping without replication means a lost
+    /// stripe invalidates the *dataset* (Requirement 2 granularity: a
+    /// partial dataset is as good as none). Reservations are released
+    /// everywhere; affected datasets revert to `Registered` so the
+    /// coordinator's repair loop re-places them on healthy nodes and AFM
+    /// re-fetches from the authoritative remote copy. Returns the affected
+    /// dataset names.
+    pub fn fail_node(&mut self, n: NodeId) -> Vec<String> {
+        if !self.healthy[n.0] {
+            return vec![];
+        }
+        self.healthy[n.0] = false;
+        let affected: Vec<String> = self
+            .registry
+            .iter()
+            .filter(|r| r.stripe.as_ref().is_some_and(|s| s.contains(n)))
+            .map(|r| r.spec.name.clone())
+            .collect();
+        for name in &affected {
+            let rec = self.registry.get_mut(name).expect("listed above");
+            let total = rec.spec.total_bytes;
+            let stripe = rec.stripe.take().expect("filtered on stripe");
+            rec.state = DatasetState::Registered;
+            for &sn in stripe.nodes() {
+                let share = stripe.bytes_on_node(sn, total);
+                self.volumes[sn.0].release(share).expect("reserved at placement");
+            }
+        }
+        self.events.push(CacheEvent::NodeFailed {
+            node: n.0,
+            datasets_lost: affected.clone(),
+        });
+        affected
+    }
+
+    /// Bring a failed node back (empty — its old data is considered gone).
+    pub fn recover_node(&mut self, n: NodeId) {
+        if !self.healthy[n.0] {
+            self.healthy[n.0] = true;
+            self.events.push(CacheEvent::NodeRecovered(n.0));
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.volumes.len()
+    }
+
+    pub fn volume(&self, n: NodeId) -> &Volume {
+        &self.volumes[n.0]
+    }
+
+    /// Total cache capacity across all nodes (the paper's "4 TB for any
+    /// single job" aggregate-capacity point, §4.1).
+    pub fn total_capacity(&self) -> u64 {
+        self.volumes.iter().map(|v| v.capacity()).sum()
+    }
+
+    /// Register a dataset custom resource (no placement yet).
+    pub fn register(&mut self, spec: DatasetSpec, url: String) -> Result<(), CacheError> {
+        let name = spec.name.clone();
+        self.registry.register(spec, url)?;
+        self.events.push(CacheEvent::Registered(name));
+        Ok(())
+    }
+
+    /// Place a dataset on `nodes` (chosen by the coordinator), reserving
+    /// capacity — evicting per policy if needed. Transitions to `Caching`.
+    pub fn place(&mut self, name: &str, nodes: Vec<NodeId>) -> Result<(), CacheError> {
+        if let Some(&bad) = nodes.iter().find(|n| !self.healthy[n.0]) {
+            return Err(CacheError::NotAMember(bad.0, format!("{name} (node failed)")));
+        }
+        let need = {
+            let rec = self.registry.get_mut(name)?;
+            if rec.stripe.is_some() {
+                return Ok(()); // already placed
+            }
+            rec.spec.total_bytes
+        };
+        // Capacity check against the *chosen subset*.
+        let subset_capacity: u64 = nodes.iter().map(|n| self.volumes[n.0].capacity()).sum();
+        let subset_used: u64 = nodes.iter().map(|n| self.volumes[n.0].used()).sum();
+        if need > subset_capacity.saturating_sub(subset_used) {
+            match plan_admission(self.policy, &self.registry, self.total_capacity(), need) {
+                Admission::Fits => {}
+                Admission::EvictFirst(victims) => {
+                    for v in victims {
+                        self.evict(&v)?;
+                    }
+                }
+                Admission::Rejected { need, reclaimable } => {
+                    return Err(CacheError::Full { need, reclaimable });
+                }
+            }
+        }
+        // Adapt the chunk so small datasets still spread over the whole
+        // subset (each node holds ≈ total/k, the large-dataset behaviour).
+        let k = nodes.len() as u64;
+        let chunk = self.chunk_bytes.min(need.div_ceil(k)).max(1);
+        let stripe = StripeMap::new(nodes.clone(), chunk);
+        // Reserve per-node shares.
+        for &n in &nodes {
+            let share = stripe.bytes_on_node(n, need);
+            self.volumes[n.0]
+                .allocate(share)
+                .map_err(|_| CacheError::Full { need: share, reclaimable: 0 })?;
+        }
+        let rec = self.registry.get_mut(name)?;
+        rec.stripe = Some(stripe);
+        rec.state = DatasetState::Caching { fetched_bytes: 0 };
+        self.events.push(CacheEvent::Placed {
+            dataset: name.to_string(),
+            nodes: nodes.iter().map(|n| n.0).collect(),
+        });
+        Ok(())
+    }
+
+    /// Record `bytes` of remote fetch progress (AFM fill or prefetch).
+    pub fn prefetch_tick(&mut self, name: &str, bytes: u64) -> Result<(), CacheError> {
+        let rec = self.registry.get_mut(name)?;
+        let total = rec.spec.total_bytes;
+        match &mut rec.state {
+            DatasetState::Caching { fetched_bytes } => {
+                *fetched_bytes = (*fetched_bytes + bytes).min(total);
+                if *fetched_bytes >= total {
+                    rec.state = DatasetState::Cached;
+                    self.events.push(CacheEvent::FullyCached(name.to_string()));
+                }
+                Ok(())
+            }
+            DatasetState::Cached => Ok(()),
+            s => Err(CacheError::Registry(RegistryError::BadTransition(
+                name.into(),
+                format!("prefetch in state {s:?}"),
+            ))),
+        }
+    }
+
+    /// Resolve where item `item` of `name` is served for a reader on
+    /// `reader` — the transparent-caching decision point.
+    pub fn read_location(&self, name: &str, item: u64, reader: NodeId) -> Result<ReadLocation, CacheError> {
+        let rec = self.registry.get(name).ok_or_else(|| {
+            CacheError::Registry(RegistryError::NotFound(name.to_string()))
+        })?;
+        let stripe = rec.stripe.as_ref().ok_or_else(|| CacheError::NotPlaced(name.into()))?;
+        let home = stripe.node_of_item(item);
+        match rec.state {
+            DatasetState::Cached => {
+                if home == reader {
+                    Ok(ReadLocation::Local)
+                } else {
+                    Ok(ReadLocation::Peer(home))
+                }
+            }
+            DatasetState::Caching { fetched_bytes } => {
+                // Approximate fill front: items below the fetched fraction
+                // are resident (AFM fills in stripe order under prefetch).
+                let frac = fetched_bytes as f64 / rec.spec.total_bytes.max(1) as f64;
+                let resident = (frac * rec.spec.num_items as f64) as u64;
+                if item < resident {
+                    if home == reader {
+                        Ok(ReadLocation::Local)
+                    } else {
+                        Ok(ReadLocation::Peer(home))
+                    }
+                } else {
+                    Ok(ReadLocation::RemoteFill { fill_node: home })
+                }
+            }
+            _ => Ok(ReadLocation::RemoteFill { fill_node: home }),
+        }
+    }
+
+    /// Evict a dataset's bytes (keeps the registration, per §3.1: the
+    /// resource exists; its cache residency is gone).
+    pub fn evict(&mut self, name: &str) -> Result<(), CacheError> {
+        let rec = self.registry.get_mut(name)?;
+        if rec.pin_count > 0 {
+            return Err(CacheError::Registry(RegistryError::Pinned(name.into(), rec.pin_count)));
+        }
+        let resident = rec.resident_bytes();
+        let total = rec.spec.total_bytes;
+        if let Some(stripe) = rec.stripe.take() {
+            rec.state = DatasetState::Registered;
+            // Release per-node reservations (reservation was for the full
+            // dataset regardless of fetch progress).
+            let _ = resident;
+            for &n in stripe.nodes() {
+                let share = stripe.bytes_on_node(n, total);
+                self.volumes[n.0].release(share).expect("reserved earlier");
+            }
+            self.events.push(CacheEvent::Evicted(name.to_string()));
+        }
+        Ok(())
+    }
+
+    /// Delete the dataset resource entirely (evicts first if needed).
+    pub fn delete(&mut self, name: &str) -> Result<(), CacheError> {
+        self.evict(name)?;
+        self.registry.remove(name)?;
+        self.events.push(CacheEvent::Deleted(name.to_string()));
+        Ok(())
+    }
+
+    /// Used bytes on node `n`'s cache volume.
+    pub fn node_used(&self, n: NodeId) -> u64 {
+        self.volumes[n.0].used()
+    }
+
+    /// Bytes on node `n` held by *evictable* datasets — space the LRU
+    /// policy could reclaim for a new placement.
+    pub fn evictable_bytes_on(&self, n: NodeId) -> u64 {
+        if self.policy == EvictionPolicy::Manual {
+            return 0;
+        }
+        self.registry
+            .iter()
+            .filter(|r| r.is_evictable())
+            .filter_map(|r| r.stripe.as_ref().map(|s| s.bytes_on_node(n, r.spec.total_bytes)))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::{Device, DeviceKind};
+
+    fn manager(nodes: usize, cap_each: u64, policy: EvictionPolicy) -> CacheManager {
+        let vols = (0..nodes)
+            .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, cap_each)]))
+            .collect();
+        CacheManager::new(vols, policy)
+    }
+
+    fn ds(name: &str, items: u64, bytes: u64) -> DatasetSpec {
+        DatasetSpec::new(name, items, bytes)
+    }
+
+    #[test]
+    fn register_place_fetch_read() {
+        let mut m = manager(4, 1000, EvictionPolicy::Manual);
+        m.register(ds("a", 100, 400), "nfs://s/a".into()).unwrap();
+        m.place("a", vec![NodeId(0), NodeId(1)]).unwrap();
+        assert_eq!(m.node_used(NodeId(0)), 200);
+        assert_eq!(m.node_used(NodeId(2)), 0);
+
+        // Cold read: remote fill.
+        match m.read_location("a", 0, NodeId(0)).unwrap() {
+            ReadLocation::RemoteFill { .. } => {}
+            other => panic!("{other:?}"),
+        }
+        // Fetch everything.
+        m.prefetch_tick("a", 400).unwrap();
+        assert_eq!(m.registry.get("a").unwrap().state, DatasetState::Cached);
+        // Item 0 homes on node 0 (round robin over [0, 1]).
+        assert_eq!(m.read_location("a", 0, NodeId(0)).unwrap(), ReadLocation::Local);
+        assert_eq!(m.read_location("a", 1, NodeId(0)).unwrap(), ReadLocation::Peer(NodeId(1)));
+    }
+
+    #[test]
+    fn aggregate_capacity_allows_bigger_than_node() {
+        // Paper §4.1: 4 × 1 TB nodes ⇒ a single job can use ~4 TB.
+        let mut m = manager(4, 1000, EvictionPolicy::Manual);
+        m.register(ds("big", 10, 3500), "nfs://s/big".into()).unwrap();
+        m.place("big", (0..4).map(NodeId).collect()).unwrap();
+        assert!(m.node_used(NodeId(0)) >= 800);
+    }
+
+    #[test]
+    fn manual_policy_rejects_overflow() {
+        let mut m = manager(2, 100, EvictionPolicy::Manual);
+        m.register(ds("a", 10, 180), "nfs://s/a".into()).unwrap();
+        m.place("a", vec![NodeId(0), NodeId(1)]).unwrap();
+        m.register(ds("b", 10, 100), "nfs://s/b".into()).unwrap();
+        assert!(matches!(
+            m.place("b", vec![NodeId(0), NodeId(1)]),
+            Err(CacheError::Full { .. })
+        ));
+    }
+
+    #[test]
+    fn lru_policy_evicts_idle_dataset() {
+        let mut m = manager(2, 100, EvictionPolicy::DatasetLru);
+        m.register(ds("a", 10, 180), "nfs://s/a".into()).unwrap();
+        m.place("a", vec![NodeId(0), NodeId(1)]).unwrap();
+        m.prefetch_tick("a", 180).unwrap();
+        m.register(ds("b", 10, 100), "nfs://s/b".into()).unwrap();
+        m.place("b", vec![NodeId(0), NodeId(1)]).unwrap();
+        assert!(m.events.contains(&CacheEvent::Evicted("a".into())));
+        assert_eq!(m.registry.get("a").unwrap().state, DatasetState::Registered);
+        assert!(m.registry.get("a").unwrap().stripe.is_none());
+    }
+
+    #[test]
+    fn pinned_dataset_survives_pressure() {
+        let mut m = manager(2, 100, EvictionPolicy::DatasetLru);
+        m.register(ds("a", 10, 180), "nfs://s/a".into()).unwrap();
+        m.place("a", vec![NodeId(0), NodeId(1)]).unwrap();
+        m.registry.pin("a").unwrap();
+        m.register(ds("b", 10, 100), "nfs://s/b".into()).unwrap();
+        assert!(matches!(
+            m.place("b", vec![NodeId(0), NodeId(1)]),
+            Err(CacheError::Full { .. })
+        ));
+        assert!(m.registry.get("a").unwrap().stripe.is_some());
+    }
+
+    #[test]
+    fn evict_releases_capacity_exactly() {
+        let mut m = manager(3, 500, EvictionPolicy::Manual);
+        m.register(ds("a", 30, 299), "nfs://s/a".into()).unwrap();
+        m.place("a", vec![NodeId(0), NodeId(1), NodeId(2)]).unwrap();
+        let used: u64 = (0..3).map(|i| m.node_used(NodeId(i))).sum();
+        assert_eq!(used, 299);
+        m.evict("a").unwrap();
+        assert_eq!((0..3).map(|i| m.node_used(NodeId(i))).sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn delete_removes_registration() {
+        let mut m = manager(2, 100, EvictionPolicy::Manual);
+        m.register(ds("a", 10, 50), "nfs://s/a".into()).unwrap();
+        m.place("a", vec![NodeId(0)]).unwrap();
+        m.delete("a").unwrap();
+        assert!(m.registry.get("a").is_none());
+        assert_eq!(m.node_used(NodeId(0)), 0);
+    }
+
+    #[test]
+    fn partial_fetch_serves_mixed_locations() {
+        let mut m = manager(2, 1000, EvictionPolicy::Manual);
+        m.register(ds("a", 100, 1000), "nfs://s/a".into()).unwrap();
+        m.place("a", vec![NodeId(0), NodeId(1)]).unwrap();
+        m.prefetch_tick("a", 500).unwrap();
+        // Items below the fill front are cached, above are remote.
+        let low = m.read_location("a", 0, NodeId(0)).unwrap();
+        let high = m.read_location("a", 99, NodeId(0)).unwrap();
+        assert!(matches!(low, ReadLocation::Local | ReadLocation::Peer(_)));
+        assert!(matches!(high, ReadLocation::RemoteFill { .. }));
+    }
+
+    #[test]
+    fn life_cycle_decoupled_from_jobs() {
+        // Requirement 2: data survives job completion; a returning job
+        // re-pins warm data.
+        let mut m = manager(2, 1000, EvictionPolicy::DatasetLru);
+        m.register(ds("a", 10, 100), "nfs://s/a".into()).unwrap();
+        m.place("a", vec![NodeId(0), NodeId(1)]).unwrap();
+        m.prefetch_tick("a", 100).unwrap();
+        m.registry.pin("a").unwrap(); // job 1 mounts
+        m.registry.unpin("a").unwrap(); // job 1 finishes
+        assert_eq!(m.registry.get("a").unwrap().state, DatasetState::Cached);
+        m.registry.pin("a").unwrap(); // job 2 (same data) mounts — warm
+        assert_eq!(m.read_location("a", 0, NodeId(0)).unwrap(), ReadLocation::Local);
+    }
+}

@@ -1,0 +1,241 @@
+//! Dataset registry: the cache-resident state machine whose life cycle is
+//! *decoupled from job life cycles* (paper Requirement 2). A dataset stays
+//! cached after its jobs finish, so repeated runs ("think time") and
+//! hyper-parameter sweeps hit warm data.
+
+use std::collections::BTreeMap;
+
+use crate::cache::stripe::StripeMap;
+use crate::workload::DatasetSpec;
+
+/// Life-cycle states (§3.1/§3.2).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DatasetState {
+    /// Custom resource created; nothing placed yet.
+    Registered,
+    /// Cache nodes selected, fetch in progress (on-demand or prefetch).
+    Caching { fetched_bytes: u64 },
+    /// Fully resident on its stripe set.
+    Cached,
+    /// Being removed from the cache.
+    Evicting,
+}
+
+/// One cached (or cacheable) dataset.
+#[derive(Debug, Clone)]
+pub struct DatasetRecord {
+    pub spec: DatasetSpec,
+    /// Remote source, e.g. "nfs://storage1/exports/imagenet".
+    pub url: String,
+    pub state: DatasetState,
+    pub stripe: Option<StripeMap>,
+    /// Logical clock of the last job access (drives dataset-granular LRU).
+    pub last_access: u64,
+    /// Jobs currently mounting this dataset (pinned ⇒ not evictable).
+    pub pin_count: u32,
+}
+
+impl DatasetRecord {
+    pub fn is_evictable(&self) -> bool {
+        self.pin_count == 0 && !matches!(self.state, DatasetState::Evicting)
+    }
+
+    /// Bytes currently occupying cache space.
+    pub fn resident_bytes(&self) -> u64 {
+        match self.state {
+            DatasetState::Registered => 0,
+            DatasetState::Caching { fetched_bytes } => fetched_bytes,
+            DatasetState::Cached | DatasetState::Evicting => self.spec.total_bytes,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum RegistryError {
+    #[error("dataset '{0}' already registered")]
+    Duplicate(String),
+    #[error("dataset '{0}' not found")]
+    NotFound(String),
+    #[error("dataset '{0}' is pinned by {1} job(s)")]
+    Pinned(String, u32),
+    #[error("invalid state transition for '{0}': {1}")]
+    BadTransition(String, String),
+}
+
+/// Name-keyed registry with a logical access clock.
+#[derive(Debug, Default)]
+pub struct Registry {
+    entries: BTreeMap<String, DatasetRecord>,
+    clock: u64,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&mut self, spec: DatasetSpec, url: String) -> Result<(), RegistryError> {
+        if self.entries.contains_key(&spec.name) {
+            return Err(RegistryError::Duplicate(spec.name));
+        }
+        self.clock += 1;
+        let rec = DatasetRecord {
+            url,
+            state: DatasetState::Registered,
+            stripe: None,
+            last_access: self.clock,
+            pin_count: 0,
+            spec,
+        };
+        self.entries.insert(rec.spec.name.clone(), rec);
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&DatasetRecord> {
+        self.entries.get(name)
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut DatasetRecord, RegistryError> {
+        self.entries
+            .get_mut(name)
+            .ok_or_else(|| RegistryError::NotFound(name.to_string()))
+    }
+
+    pub fn remove(&mut self, name: &str) -> Result<DatasetRecord, RegistryError> {
+        let rec = self
+            .entries
+            .get(name)
+            .ok_or_else(|| RegistryError::NotFound(name.to_string()))?;
+        if rec.pin_count > 0 {
+            return Err(RegistryError::Pinned(name.to_string(), rec.pin_count));
+        }
+        Ok(self.entries.remove(name).unwrap())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &DatasetRecord> {
+        self.entries.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Mark a job access (bumps the LRU clock, pins while mounted).
+    pub fn pin(&mut self, name: &str) -> Result<(), RegistryError> {
+        self.clock += 1;
+        let clock = self.clock;
+        let rec = self.get_mut(name)?;
+        rec.last_access = clock;
+        rec.pin_count += 1;
+        Ok(())
+    }
+
+    pub fn unpin(&mut self, name: &str) -> Result<(), RegistryError> {
+        let rec = self.get_mut(name)?;
+        if rec.pin_count == 0 {
+            return Err(RegistryError::BadTransition(name.into(), "unpin at 0".into()));
+        }
+        rec.pin_count -= 1;
+        Ok(())
+    }
+
+    /// Total bytes resident across all datasets.
+    pub fn resident_bytes(&self) -> u64 {
+        self.entries.values().map(|r| r.resident_bytes()).sum()
+    }
+
+    /// Least-recently-used evictable dataset, if any.
+    pub fn lru_candidate(&self) -> Option<&DatasetRecord> {
+        self.entries
+            .values()
+            .filter(|r| r.is_evictable() && r.resident_bytes() > 0)
+            .min_by_key(|r| r.last_access)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, bytes: u64) -> DatasetSpec {
+        DatasetSpec::new(name, 100, bytes)
+    }
+
+    fn reg_with(names: &[(&str, u64)]) -> Registry {
+        let mut r = Registry::new();
+        for (n, b) in names {
+            r.register(spec(n, *b), format!("nfs://x/{n}")).unwrap();
+        }
+        r
+    }
+
+    #[test]
+    fn register_and_duplicate() {
+        let mut r = reg_with(&[("a", 10)]);
+        assert!(matches!(
+            r.register(spec("a", 10), "nfs://x/a".into()),
+            Err(RegistryError::Duplicate(_))
+        ));
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn pin_blocks_removal() {
+        let mut r = reg_with(&[("a", 10)]);
+        r.pin("a").unwrap();
+        assert!(matches!(r.remove("a"), Err(RegistryError::Pinned(_, 1))));
+        r.unpin("a").unwrap();
+        r.remove("a").unwrap();
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn unpin_at_zero_fails() {
+        let mut r = reg_with(&[("a", 10)]);
+        assert!(r.unpin("a").is_err());
+    }
+
+    #[test]
+    fn lru_candidate_ordering() {
+        let mut r = reg_with(&[("a", 10), ("b", 10), ("c", 10)]);
+        for n in ["a", "b", "c"] {
+            r.get_mut(n).unwrap().state = DatasetState::Cached;
+        }
+        // Access order: a (oldest), then c, then b was never re-touched.
+        r.pin("a").unwrap();
+        r.unpin("a").unwrap();
+        r.pin("c").unwrap();
+        r.unpin("c").unwrap();
+        assert_eq!(r.lru_candidate().unwrap().spec.name, "b");
+        // Pin b: next candidate is a.
+        r.pin("b").unwrap();
+        assert_eq!(r.lru_candidate().unwrap().spec.name, "a");
+    }
+
+    #[test]
+    fn resident_bytes_by_state() {
+        let mut r = reg_with(&[("a", 100), ("b", 50)]);
+        assert_eq!(r.resident_bytes(), 0);
+        r.get_mut("a").unwrap().state = DatasetState::Caching { fetched_bytes: 30 };
+        r.get_mut("b").unwrap().state = DatasetState::Cached;
+        assert_eq!(r.resident_bytes(), 80);
+    }
+
+    #[test]
+    fn evicting_not_a_candidate() {
+        let mut r = reg_with(&[("a", 10)]);
+        r.get_mut("a").unwrap().state = DatasetState::Evicting;
+        assert!(r.lru_candidate().is_none());
+    }
+
+    #[test]
+    fn missing_dataset_errors() {
+        let mut r = Registry::new();
+        assert!(matches!(r.pin("nope"), Err(RegistryError::NotFound(_))));
+        assert!(matches!(r.remove("nope"), Err(RegistryError::NotFound(_))));
+    }
+}

@@ -1,0 +1,171 @@
+//! Stripe placement: how a dataset's items/bytes spread over the selected
+//! cache nodes (paper Requirement 1: aggregate the capacity of a *subset*
+//! of nodes; the subset is chosen by the coordinator, not the FS).
+
+use crate::netsim::NodeId;
+
+/// Deterministic mapping of dataset items and byte ranges onto a fixed,
+/// ordered set of cache nodes. Items are round-robined (file-granular
+/// striping, what AFM filesets give us); byte ranges use fixed-size chunks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StripeMap {
+    nodes: Vec<NodeId>,
+    /// Chunk size for byte-range striping.
+    pub chunk_bytes: u64,
+}
+
+impl StripeMap {
+    pub fn new(nodes: Vec<NodeId>, chunk_bytes: u64) -> Self {
+        assert!(!nodes.is_empty(), "stripe set must be non-empty");
+        assert!(chunk_bytes > 0);
+        StripeMap { nodes, chunk_bytes }
+    }
+
+    pub fn width(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn nodes(&self) -> &[NodeId] {
+        &self.nodes
+    }
+
+    pub fn contains(&self, n: NodeId) -> bool {
+        self.nodes.contains(&n)
+    }
+
+    /// Cache node holding item `i` (file-granular placement).
+    pub fn node_of_item(&self, i: u64) -> NodeId {
+        self.nodes[(i % self.nodes.len() as u64) as usize]
+    }
+
+    /// Cache node holding byte `offset` (chunk-granular placement).
+    pub fn node_of_offset(&self, offset: u64) -> NodeId {
+        let chunk = offset / self.chunk_bytes;
+        self.nodes[(chunk % self.nodes.len() as u64) as usize]
+    }
+
+    /// Bytes of a `total`-byte dataset stored on node `n` (± one chunk).
+    pub fn bytes_on_node(&self, n: NodeId, total: u64) -> u64 {
+        if !self.contains(n) {
+            return 0;
+        }
+        let k = self.nodes.len() as u64;
+        let full_rounds = total / (self.chunk_bytes * k);
+        let base = full_rounds * self.chunk_bytes;
+        let rem = total - full_rounds * self.chunk_bytes * k;
+        // Distribute the remainder chunk-by-chunk in node order.
+        let pos = self.nodes.iter().position(|&x| x == n).unwrap() as u64;
+        let extra_full_chunks = rem / self.chunk_bytes;
+        let tail = rem % self.chunk_bytes;
+        let extra = if pos < extra_full_chunks {
+            self.chunk_bytes
+        } else if pos == extra_full_chunks {
+            tail
+        } else {
+            0
+        };
+        base + extra
+    }
+
+    /// Fraction of reads served locally for a consumer on node `n`.
+    pub fn local_fraction(&self, n: NodeId) -> f64 {
+        if self.contains(n) {
+            1.0 / self.nodes.len() as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nodes(ids: &[usize]) -> Vec<NodeId> {
+        ids.iter().map(|&i| NodeId(i)).collect()
+    }
+
+    #[test]
+    fn round_robin_items() {
+        let s = StripeMap::new(nodes(&[0, 2, 3]), 1 << 20);
+        assert_eq!(s.node_of_item(0), NodeId(0));
+        assert_eq!(s.node_of_item(1), NodeId(2));
+        assert_eq!(s.node_of_item(2), NodeId(3));
+        assert_eq!(s.node_of_item(3), NodeId(0));
+    }
+
+    #[test]
+    fn offset_striping() {
+        let s = StripeMap::new(nodes(&[0, 1]), 100);
+        assert_eq!(s.node_of_offset(0), NodeId(0));
+        assert_eq!(s.node_of_offset(99), NodeId(0));
+        assert_eq!(s.node_of_offset(100), NodeId(1));
+        assert_eq!(s.node_of_offset(250), NodeId(0));
+    }
+
+    #[test]
+    fn bytes_on_node_sums_to_total() {
+        for total in [0u64, 1, 99, 100, 350, 1000, 12345] {
+            let s = StripeMap::new(nodes(&[0, 1, 2]), 100);
+            let sum: u64 = (0..3).map(|i| s.bytes_on_node(NodeId(i), total)).sum();
+            assert_eq!(sum, total, "total={total}");
+        }
+    }
+
+    #[test]
+    fn bytes_on_node_balanced() {
+        let s = StripeMap::new(nodes(&[0, 1, 2, 3]), 1 << 20);
+        let total = 144_000_000_000u64;
+        for i in 0..4 {
+            let b = s.bytes_on_node(NodeId(i), total);
+            let want = total / 4;
+            assert!((b as i64 - want as i64).unsigned_abs() <= 1 << 20);
+        }
+    }
+
+    #[test]
+    fn non_member_holds_nothing() {
+        let s = StripeMap::new(nodes(&[1, 2]), 100);
+        assert_eq!(s.bytes_on_node(NodeId(0), 1000), 0);
+        assert_eq!(s.local_fraction(NodeId(0)), 0.0);
+        assert!((s.local_fraction(NodeId(1)) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty")]
+    fn empty_stripe_rejected() {
+        StripeMap::new(vec![], 100);
+    }
+
+    #[test]
+    fn prop_item_mapping_balanced_and_member() {
+        use crate::util::{prop::forall, Rng};
+        forall(
+            100,
+            |rng: &mut Rng| {
+                let k = 1 + rng.gen_range(8) as usize;
+                let mut ids: Vec<usize> = (0..16).collect();
+                rng.shuffle(&mut ids);
+                ids.truncate(k);
+                (ids, 1 + rng.gen_range(10_000))
+            },
+            |(ids, items)| {
+                let s = StripeMap::new(nodes(ids), 1 << 20);
+                let mut counts = std::collections::HashMap::new();
+                for i in 0..*items {
+                    let n = s.node_of_item(i);
+                    if !s.contains(n) {
+                        return Err(format!("item {i} on non-member {n:?}"));
+                    }
+                    *counts.entry(n).or_insert(0u64) += 1;
+                }
+                let max = counts.values().max().unwrap();
+                let min = counts.values().min().copied().unwrap_or(0);
+                if max - min > 1 {
+                    return Err(format!("imbalance {max}-{min}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

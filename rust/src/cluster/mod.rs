@@ -1,0 +1,155 @@
+//! Compute-node model: resource inventory (Table 2), GPU consumption rates,
+//! the Linux buffer-cache simulation, and `stress`-style memory pressure.
+
+pub mod buffercache;
+pub mod gpu;
+
+pub use buffercache::{epoch_hit_rate, BlockLru};
+pub use gpu::{gpu_images_per_sec, DlModel, GpuDemand, GpuKind};
+
+use crate::storage::Volume;
+use crate::util::fmt::GB;
+
+/// Static node inventory, defaults from the paper's Table 2.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub name: String,
+    pub cpu_cores: u32,
+    pub memory: u64,
+    pub gpus: u32,
+    pub gpu_kind: GpuKind,
+    /// Local cache devices handed to the distributed cache layer.
+    pub cache_volume: Volume,
+    /// NIC bandwidth, bytes/s.
+    pub nic_bw: f64,
+}
+
+impl NodeSpec {
+    /// IBM Power S822LC: 2×8 cores, 512 GB, 4×P100, 100 GbE, 2 NVMe cache.
+    pub fn paper_node(name: impl Into<String>) -> Self {
+        NodeSpec {
+            name: name.into(),
+            cpu_cores: 16,
+            memory: 512 * GB,
+            gpus: 4,
+            gpu_kind: GpuKind::P100,
+            cache_volume: Volume::paper_cache_volume(),
+            nic_bw: 12.5e9,
+        }
+    }
+}
+
+/// Mutable per-node state tracked by the cluster model.
+#[derive(Debug, Clone)]
+pub struct NodeState {
+    pub spec: NodeSpec,
+    /// GPUs currently allocated to jobs.
+    pub gpus_allocated: u32,
+    /// Memory reserved by workloads + `stress` hogs (reduces buffer cache).
+    pub memory_reserved: u64,
+    /// Memory pinned as Spectrum-Scale-style pagepool (Hoard's in-memory tier).
+    pub pagepool: u64,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum ClusterError {
+    #[error("not enough free GPUs: want {want}, free {free}")]
+    NoGpus { want: u32, free: u32 },
+    #[error("not enough free memory: want {want}, free {free}")]
+    NoMemory { want: u64, free: u64 },
+}
+
+impl NodeState {
+    pub fn new(spec: NodeSpec) -> Self {
+        NodeState { spec, gpus_allocated: 0, memory_reserved: 0, pagepool: 0 }
+    }
+
+    pub fn gpus_free(&self) -> u32 {
+        self.spec.gpus - self.gpus_allocated
+    }
+
+    pub fn allocate_gpus(&mut self, n: u32) -> Result<(), ClusterError> {
+        if n > self.gpus_free() {
+            return Err(ClusterError::NoGpus { want: n, free: self.gpus_free() });
+        }
+        self.gpus_allocated += n;
+        Ok(())
+    }
+
+    pub fn release_gpus(&mut self, n: u32) {
+        self.gpus_allocated = self.gpus_allocated.saturating_sub(n);
+    }
+
+    /// Free memory available to the OS buffer cache (total − reserved −
+    /// pagepool). The Figure 4 experiment's `stress` tool raises
+    /// `memory_reserved` to tune the memory-to-dataset ratio (MDR).
+    pub fn buffer_cache_bytes(&self) -> u64 {
+        self.spec.memory.saturating_sub(self.memory_reserved + self.pagepool)
+    }
+
+    pub fn reserve_memory(&mut self, bytes: u64) -> Result<(), ClusterError> {
+        let free = self.buffer_cache_bytes();
+        if bytes > free {
+            return Err(ClusterError::NoMemory { want: bytes, free });
+        }
+        self.memory_reserved += bytes;
+        Ok(())
+    }
+
+    pub fn set_pagepool(&mut self, bytes: u64) {
+        self.pagepool = bytes.min(self.spec.memory);
+    }
+
+    /// Apply `stress -m`-style pressure so that free memory = `target`.
+    pub fn stress_to_free_memory(&mut self, target: u64) {
+        let avail = self.spec.memory.saturating_sub(self.pagepool);
+        self.memory_reserved = avail.saturating_sub(target);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_node_spec() {
+        let n = NodeSpec::paper_node("n0");
+        assert_eq!(n.gpus, 4);
+        assert_eq!(n.memory, 512 * GB);
+        assert_eq!(n.cache_volume.capacity(), 1024 * GB);
+    }
+
+    #[test]
+    fn gpu_allocation() {
+        let mut s = NodeState::new(NodeSpec::paper_node("n0"));
+        s.allocate_gpus(3).unwrap();
+        assert_eq!(s.gpus_free(), 1);
+        assert!(s.allocate_gpus(2).is_err());
+        s.release_gpus(3);
+        assert_eq!(s.gpus_free(), 4);
+    }
+
+    #[test]
+    fn stress_controls_buffer_cache() {
+        let mut s = NodeState::new(NodeSpec::paper_node("n0"));
+        s.stress_to_free_memory(72 * GB); // MDR 0.5 of a 144 GB dataset
+        assert_eq!(s.buffer_cache_bytes(), 72 * GB);
+    }
+
+    #[test]
+    fn pagepool_subtracts_from_buffer_cache() {
+        let mut s = NodeState::new(NodeSpec::paper_node("n0"));
+        s.set_pagepool(64 * GB);
+        assert_eq!(s.buffer_cache_bytes(), (512 - 64) * GB);
+        s.stress_to_free_memory(10 * GB);
+        assert_eq!(s.buffer_cache_bytes(), 10 * GB);
+    }
+
+    #[test]
+    fn memory_reservation_bounds() {
+        let mut s = NodeState::new(NodeSpec::paper_node("n0"));
+        assert!(s.reserve_memory(600 * GB).is_err());
+        s.reserve_memory(500 * GB).unwrap();
+        assert!(s.reserve_memory(20 * GB).is_err());
+    }
+}

@@ -1,0 +1,215 @@
+//! Cluster/experiment configuration: JSON-file loadable, with defaults
+//! matching the paper's testbed (Table 2).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::cache::EvictionPolicy;
+use crate::cluster::{GpuKind, NodeSpec};
+use crate::coordinator::Hoard;
+use crate::netsim::Topology;
+use crate::storage::{Device, DeviceKind, Volume};
+use crate::util::fmt::{parse_bytes, GB};
+use crate::util::Json;
+
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub racks: usize,
+    pub nodes_per_rack: usize,
+    pub gpus_per_node: u32,
+    pub gpu_kind: GpuKind,
+    pub memory_per_node: u64,
+    pub cache_devices_per_node: usize,
+    pub cache_device_bytes: u64,
+    /// NIC bandwidth, bytes/s (100 GbE = 12.5e9).
+    pub nic_bw: f64,
+    /// Rack uplink bandwidth, bytes/s.
+    pub uplink_bw: f64,
+    /// Remote store peak bandwidth, bytes/s.
+    pub remote_bw: f64,
+    pub eviction: EvictionPolicy,
+    /// Spectrum-style pagepool per node, bytes.
+    pub pagepool: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self::paper_testbed()
+    }
+}
+
+impl ClusterConfig {
+    /// Table 2: 4 × POWER8, 4 × P100 each, 512 GB RAM, 2 × 512 GB NVMe for
+    /// the cache, 100 GbE, 1.05 GB/s NFS.
+    pub fn paper_testbed() -> Self {
+        ClusterConfig {
+            racks: 1,
+            nodes_per_rack: 4,
+            gpus_per_node: 4,
+            gpu_kind: GpuKind::P100,
+            memory_per_node: 512 * GB,
+            cache_devices_per_node: 2,
+            cache_device_bytes: 512 * GB,
+            nic_bw: 12.5e9,
+            uplink_bw: f64::INFINITY,
+            remote_bw: 1.05e9,
+            eviction: EvictionPolicy::Manual,
+            pagepool: 16 * GB,
+        }
+    }
+
+    /// The Table 5 data-center model: racks of 32-port 40G TORs with 3:1
+    /// oversubscription ⇒ 320 Gb/s uplink.
+    pub fn table5_datacenter(racks: usize, nodes_per_rack: usize) -> Self {
+        ClusterConfig {
+            racks,
+            nodes_per_rack,
+            nic_bw: 5e9,       // 40G NICs
+            uplink_bw: 40e9,   // 320 Gb/s
+            ..Self::paper_testbed()
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.racks * self.nodes_per_rack
+    }
+
+    pub fn topology(&self) -> Topology {
+        Topology::new(self.racks, self.nodes_per_rack, self.nic_bw, self.uplink_bw)
+    }
+
+    pub fn node_specs(&self) -> Vec<NodeSpec> {
+        (0..self.num_nodes())
+            .map(|i| NodeSpec {
+                name: format!("node{i}"),
+                cpu_cores: 16,
+                memory: self.memory_per_node,
+                gpus: self.gpus_per_node,
+                gpu_kind: self.gpu_kind,
+                cache_volume: Volume::new(
+                    (0..self.cache_devices_per_node)
+                        .map(|_| Device::new(DeviceKind::Nvme, self.cache_device_bytes))
+                        .collect(),
+                ),
+                nic_bw: self.nic_bw,
+            })
+            .collect()
+    }
+
+    /// Assemble the full control plane from this config.
+    pub fn build(&self) -> Hoard {
+        let mut h = Hoard::new(self.node_specs(), self.topology(), self.eviction);
+        for n in &mut h.nodes {
+            n.set_pagepool(self.pagepool);
+        }
+        h
+    }
+
+    /// Load from a JSON file; missing keys fall back to paper defaults.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("config is not valid json")?;
+        let mut c = Self::paper_testbed();
+        let get_u = |k: &str| j.get(k).and_then(|v| v.as_u64());
+        let get_f = |k: &str| j.get(k).and_then(|v| v.as_f64());
+        let get_b = |k: &str| j.get(k).and_then(|v| v.as_str()).and_then(parse_bytes);
+        if let Some(v) = get_u("racks") {
+            c.racks = v as usize;
+        }
+        if let Some(v) = get_u("nodes_per_rack") {
+            c.nodes_per_rack = v as usize;
+        }
+        if let Some(v) = get_u("gpus_per_node") {
+            c.gpus_per_node = v as u32;
+        }
+        if let Some(v) = j.get("gpu") .and_then(|v| v.as_str()) {
+            c.gpu_kind = match v {
+                "p100" | "P100" => GpuKind::P100,
+                "v100" | "V100" => GpuKind::V100,
+                other => anyhow::bail!("unknown gpu '{other}'"),
+            };
+        }
+        if let Some(v) = get_b("memory_per_node") {
+            c.memory_per_node = v;
+        }
+        if let Some(v) = get_u("cache_devices_per_node") {
+            c.cache_devices_per_node = v as usize;
+        }
+        if let Some(v) = get_b("cache_device_bytes") {
+            c.cache_device_bytes = v;
+        }
+        if let Some(v) = get_f("nic_gbps") {
+            c.nic_bw = v * 1e9 / 8.0;
+        }
+        if let Some(v) = get_f("uplink_gbps") {
+            c.uplink_bw = v * 1e9 / 8.0;
+        }
+        if let Some(v) = get_f("remote_gbps") {
+            c.remote_bw = v * 1e9 / 8.0;
+        }
+        if let Some(v) = get_b("remote_bytes_per_s") {
+            c.remote_bw = v as f64;
+        }
+        if let Some(v) = j.get("eviction").and_then(|v| v.as_str()) {
+            c.eviction = EvictionPolicy::parse(v)
+                .with_context(|| format!("unknown eviction policy '{v}'"))?;
+        }
+        if let Some(v) = get_b("pagepool") {
+            c.pagepool = v;
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_match_table2() {
+        let c = ClusterConfig::paper_testbed();
+        assert_eq!(c.num_nodes(), 4);
+        assert_eq!(c.gpus_per_node, 4);
+        assert_eq!(c.memory_per_node, 512 * GB);
+        assert_eq!(c.cache_devices_per_node, 2);
+        let h = c.build();
+        assert_eq!(h.nodes.len(), 4);
+        assert_eq!(h.cache.total_capacity(), 4 * 1024 * GB);
+    }
+
+    #[test]
+    fn parse_overrides() {
+        let c = ClusterConfig::parse(
+            r#"{"racks": 2, "nodes_per_rack": 8, "gpu": "v100",
+                "eviction": "lru", "pagepool": "32GB", "nic_gbps": 40}"#,
+        )
+        .unwrap();
+        assert_eq!(c.num_nodes(), 16);
+        assert_eq!(c.gpu_kind, GpuKind::V100);
+        assert_eq!(c.eviction, EvictionPolicy::DatasetLru);
+        assert_eq!(c.pagepool, 32 * GB);
+        assert!((c.nic_bw - 5e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(ClusterConfig::parse("not json").is_err());
+        assert!(ClusterConfig::parse(r#"{"gpu": "tpu"}"#).is_err());
+        assert!(ClusterConfig::parse(r#"{"eviction": "fifo"}"#).is_err());
+    }
+
+    #[test]
+    fn table5_shape() {
+        let c = ClusterConfig::table5_datacenter(3, 8);
+        assert_eq!(c.num_nodes(), 24);
+        assert!((c.uplink_bw - 40e9).abs() < 1.0);
+        let t = c.topology();
+        assert_eq!(t.racks, 3);
+    }
+}

@@ -1,0 +1,193 @@
+//! Dataset controller: watches `Dataset` custom resources and drives the
+//! cache layer — register, select cache nodes, place, prefetch, and reflect
+//! progress back into the resource status (paper §3.2).
+
+use anyhow::Result;
+
+use super::placement::{select_cache_nodes, PlacementInput};
+use super::Hoard;
+use crate::cache::{CacheError, DatasetState};
+use crate::k8s::{Dataset, DatasetPhase};
+use crate::netsim::NodeId;
+use crate::workload::DatasetSpec;
+
+/// Default stripe width when the resource doesn't request one: all nodes,
+/// capped at 4 (the paper's testbed width — wider stripes add peer hops
+/// without adding bandwidth once NICs stop being the bottleneck).
+pub fn default_stripe_width(cluster_nodes: usize) -> usize {
+    cluster_nodes.min(4).max(1)
+}
+
+pub fn reconcile_datasets(h: &mut Hoard) -> Result<()> {
+    let names: Vec<String> = h.datasets.list().map(|d| d.meta.name.clone()).collect();
+    for name in names {
+        let mut ds = h.datasets.get(&name).unwrap().clone();
+        // Repair loop: a dataset that lost its stripe placement (cache-node
+        // failure) while Caching/Ready goes back to Pending so it is
+        // re-placed on healthy nodes and re-fetched from the remote copy.
+        if matches!(ds.status, DatasetPhase::Caching | DatasetPhase::Ready)
+            && h.cache
+                .registry
+                .get(&name)
+                .map(|r| r.stripe.is_none())
+                .unwrap_or(false)
+        {
+            ds.status = DatasetPhase::Pending;
+            ds = h.datasets.update(ds)?;
+        }
+        match ds.status {
+            DatasetPhase::Pending => reconcile_pending(h, ds)?,
+            DatasetPhase::Caching => reconcile_caching(h, ds)?,
+            DatasetPhase::Ready | DatasetPhase::Failed => {}
+        }
+    }
+    // Deleted resources: evict + drop from cache.
+    let cached: Vec<String> = h.cache.registry.iter().map(|r| r.spec.name.clone()).collect();
+    for name in cached {
+        if h.datasets.get(&name).is_none() {
+            // Ignore pin errors: the job controller unpins on completion and
+            // the next tick retries.
+            let _ = h.cache.delete(&name);
+        }
+    }
+    Ok(())
+}
+
+fn reconcile_pending(h: &mut Hoard, mut ds: Dataset) -> Result<()> {
+    // 1. Register with the cache layer (idempotent across ticks).
+    if h.cache.registry.get(&ds.meta.name).is_none() {
+        h.cache.register(
+            DatasetSpec::new(ds.meta.name.clone(), ds.num_items, ds.total_bytes),
+            ds.url.clone(),
+        )?;
+    }
+    // 2. Choose cache nodes (healthy only) and place.
+    let inputs: Vec<PlacementInput> = h
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| h.cache.node_healthy(NodeId(*i)))
+        .map(|(i, n)| PlacementInput {
+            node: NodeId(i),
+            gpus_free: n.gpus_free(),
+            // Free space plus what the eviction policy could reclaim —
+            // the cache manager performs the actual eviction at placement.
+            cache_free_bytes: h.cache.volume(NodeId(i)).free()
+                + h.cache.evictable_bytes_on(NodeId(i)),
+        })
+        .collect();
+    let width = if ds.stripe_width > 0 {
+        ds.stripe_width.min(inputs.len())
+    } else {
+        default_stripe_width(inputs.len())
+    };
+    let Some(nodes) = select_cache_nodes(&inputs, &h.topology, width, ds.total_bytes) else {
+        ds.status = DatasetPhase::Failed;
+        h.datasets.update(ds)?;
+        return Ok(());
+    };
+    match h.cache.place(&ds.meta.name, nodes) {
+        Ok(()) => {
+            ds.status = DatasetPhase::Caching;
+            h.datasets.update(ds)?;
+        }
+        Err(CacheError::Full { .. }) => {
+            ds.status = DatasetPhase::Failed;
+            h.datasets.update(ds)?;
+        }
+        Err(e) => return Err(e.into()),
+    }
+    Ok(())
+}
+
+fn reconcile_caching(h: &mut Hoard, mut ds: Dataset) -> Result<()> {
+    // Prefetch-enabled datasets pull from the remote store every tick;
+    // on-demand datasets fill as jobs read (driven by the data path).
+    if ds.prefetch {
+        h.cache.prefetch_tick(&ds.meta.name, h.prefetch_bytes_per_tick)?;
+    }
+    if matches!(h.cache.registry.get(&ds.meta.name).map(|r| &r.state), Some(DatasetState::Cached)) {
+        ds.status = DatasetPhase::Ready;
+        h.datasets.update(ds)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::k8s::ObjectMeta;
+
+    fn dataset(name: &str, bytes: u64, prefetch: bool) -> Dataset {
+        Dataset {
+            meta: ObjectMeta::named(name),
+            url: format!("nfs://storage1/{name}"),
+            total_bytes: bytes,
+            num_items: 1000,
+            prefetch,
+            stripe_width: 0,
+            status: DatasetPhase::Pending,
+        }
+    }
+
+    #[test]
+    fn pending_to_caching_places_stripes() {
+        let mut h = Hoard::paper_testbed();
+        h.datasets.create(dataset("imagenet", 144e9 as u64, false)).unwrap();
+        h.reconcile().unwrap();
+        assert_eq!(h.datasets.get("imagenet").unwrap().status, DatasetPhase::Caching);
+        let rec = h.cache.registry.get("imagenet").unwrap();
+        assert_eq!(rec.stripe.as_ref().unwrap().width(), 4);
+    }
+
+    #[test]
+    fn prefetch_reaches_ready() {
+        let mut h = Hoard::paper_testbed();
+        h.datasets.create(dataset("d", 16 << 30, true)).unwrap();
+        let ticks = h.reconcile_to_fixpoint().unwrap();
+        assert!(ticks >= 1);
+        assert_eq!(h.datasets.get("d").unwrap().status, DatasetPhase::Ready);
+        assert_eq!(h.cache.registry.get("d").unwrap().state, DatasetState::Cached);
+    }
+
+    #[test]
+    fn on_demand_stays_caching_until_data_path_fills() {
+        let mut h = Hoard::paper_testbed();
+        h.datasets.create(dataset("d", 16 << 30, false)).unwrap();
+        h.reconcile_to_fixpoint().unwrap();
+        assert_eq!(h.datasets.get("d").unwrap().status, DatasetPhase::Caching);
+        // Data path reports fill completion (e.g. first epoch done).
+        h.cache.prefetch_tick("d", 16 << 30).unwrap();
+        h.reconcile_to_fixpoint().unwrap();
+        assert_eq!(h.datasets.get("d").unwrap().status, DatasetPhase::Ready);
+    }
+
+    #[test]
+    fn oversized_dataset_fails() {
+        let mut h = Hoard::paper_testbed(); // 4 TB aggregate
+        h.datasets.create(dataset("huge", 5 << 40, true)).unwrap();
+        h.reconcile_to_fixpoint().unwrap();
+        assert_eq!(h.datasets.get("huge").unwrap().status, DatasetPhase::Failed);
+    }
+
+    #[test]
+    fn resource_deletion_evicts() {
+        let mut h = Hoard::paper_testbed();
+        h.datasets.create(dataset("d", 1 << 30, true)).unwrap();
+        h.reconcile_to_fixpoint().unwrap();
+        assert!(h.cache.registry.get("d").is_some());
+        h.datasets.delete("d").unwrap();
+        h.reconcile_to_fixpoint().unwrap();
+        assert!(h.cache.registry.get("d").is_none());
+    }
+
+    #[test]
+    fn explicit_stripe_width_honoured() {
+        let mut h = Hoard::paper_testbed();
+        let mut d = dataset("d", 1 << 30, false);
+        d.stripe_width = 2;
+        h.datasets.create(d).unwrap();
+        h.reconcile().unwrap();
+        assert_eq!(h.cache.registry.get("d").unwrap().stripe.as_ref().unwrap().width(), 2);
+    }
+}

@@ -1,0 +1,271 @@
+//! DL-job controller: watches `DlJob` custom resources, co-selects compute
+//! nodes against the dataset's cache nodes, encodes the decision as pod
+//! labels, lets the default scheduler bind pods, and manages dataset pins
+//! across the job's life cycle (paper §3.1/§3.2).
+
+use anyhow::Result;
+
+use super::placement::{select_compute_nodes, PlacementInput};
+use super::Hoard;
+use crate::k8s::{labels, JobPhase, Labels, NodeInfo, ObjectMeta, Pod, PodPhase};
+use crate::netsim::NodeId;
+
+pub fn reconcile_jobs(h: &mut Hoard) -> Result<()> {
+    let names: Vec<String> = h.jobs.list().map(|j| j.meta.name.clone()).collect();
+    for name in names {
+        let job = h.jobs.get(&name).unwrap().clone();
+        match &job.status {
+            JobPhase::Pending => reconcile_pending(h, job)?,
+            JobPhase::Scheduled { .. } => reconcile_scheduled(h, job)?,
+            JobPhase::Running | JobPhase::Succeeded | JobPhase::Failed(_) => {}
+        }
+    }
+    Ok(())
+}
+
+fn reconcile_pending(h: &mut Hoard, mut job: crate::k8s::DlJob) -> Result<()> {
+    // The dataset must exist and be placed before compute is chosen —
+    // co-scheduling requires knowing where the stripes live.
+    let Some(rec) = h.cache.registry.get(&job.dataset) else {
+        return Ok(()); // dataset resource not reconciled yet; retry next tick
+    };
+    let Some(stripe) = rec.stripe.as_ref() else {
+        return Ok(());
+    };
+    let cache_nodes: Vec<NodeId> = stripe.nodes().to_vec();
+
+    // Free GPUs minus reservations held by pods that are created but not
+    // yet bound by the default scheduler — otherwise several jobs decided
+    // in the same tick would all pick the same "free" node and deadlock on
+    // their own node-pinning labels.
+    let mut pending_gpus = vec![0u32; h.nodes.len()];
+    for p in h.pods.list().filter(|p| p.phase == PodPhase::Pending) {
+        if let Some(target) = p.node_selector.get(labels::NODE) {
+            if let Some(idx) = target.strip_prefix("node").and_then(|s| s.parse::<usize>().ok()) {
+                if idx < pending_gpus.len() {
+                    pending_gpus[idx] += p.gpus;
+                }
+            }
+        }
+    }
+    let inputs: Vec<PlacementInput> = h
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(i, n)| PlacementInput {
+            node: NodeId(i),
+            gpus_free: n.gpus_free().saturating_sub(pending_gpus[i]),
+            cache_free_bytes: h.cache.volume(NodeId(i)).free(),
+        })
+        .collect();
+    let Some(placement) =
+        select_compute_nodes(&inputs, &h.topology, &cache_nodes, job.replicas, job.gpus)
+    else {
+        job.status = JobPhase::Failed("insufficient GPUs".into());
+        h.jobs.update(job)?;
+        return Ok(());
+    };
+
+    // Pin the dataset for the job's lifetime (Requirement 2 life cycle).
+    h.cache.registry.pin(&job.dataset)?;
+
+    // Encode decisions as pod labels; the default scheduler binds them.
+    let mut nodes = vec![];
+    for (ri, (node, _loc)) in placement.iter().enumerate() {
+        let mut selector = Labels::new();
+        selector.insert(labels::NODE.into(), format!("node{}", node.0));
+        selector.insert(
+            labels::PREFERRED_RACK.into(),
+            format!("rack{}", h.topology.rack_of(*node).0),
+        );
+        h.pods.create(Pod {
+            meta: ObjectMeta::named(format!("{}-{ri}", job.meta.name)),
+            job: job.meta.name.clone(),
+            gpus: job.gpus,
+            node_selector: selector,
+            assigned_node: None,
+            phase: PodPhase::Pending,
+        })?;
+        nodes.push(node.0);
+    }
+    job.status = JobPhase::Scheduled { nodes };
+    h.jobs.update(job)?;
+    Ok(())
+}
+
+fn reconcile_scheduled(h: &mut Hoard, mut job: crate::k8s::DlJob) -> Result<()> {
+    // Run the default scheduler over this job's pending pods.
+    let racks: Vec<usize> = (0..h.nodes.len())
+        .map(|i| h.topology.rack_of(NodeId(i)).0)
+        .collect();
+    let mut infos = NodeInfo::from_states(&h.nodes, &racks);
+    let mut pods: Vec<Pod> = h
+        .pods
+        .list()
+        .filter(|p| p.job == job.meta.name)
+        .cloned()
+        .collect();
+    let mut all_running = true;
+    for p in pods.iter_mut() {
+        if p.phase == PodPhase::Pending {
+            match crate::k8s::schedule_pod(p, &mut infos) {
+                Ok(node) => {
+                    h.nodes[node].allocate_gpus(p.gpus)?;
+                    h.pods.update(p.clone())?;
+                }
+                Err(_) => {
+                    all_running = false; // retry next tick
+                }
+            }
+        }
+    }
+    if all_running && pods.iter().all(|p| h.pods.get(&p.meta.name).unwrap().phase == PodPhase::Running) {
+        job.status = JobPhase::Running;
+        h.jobs.update(job)?;
+    }
+    Ok(())
+}
+
+/// Mark a running job finished: release GPUs, unpin the dataset, succeed
+/// pods. Called by the workload driver when training completes.
+pub fn complete_job(h: &mut Hoard, name: &str) -> Result<()> {
+    let Some(job) = h.jobs.get(name).cloned() else {
+        anyhow::bail!("job '{name}' not found");
+    };
+    let pods: Vec<Pod> = h.pods.list().filter(|p| p.job == name).cloned().collect();
+    for mut p in pods {
+        if let Some(node) = p.assigned_node {
+            if p.phase == PodPhase::Running {
+                h.nodes[node].release_gpus(p.gpus);
+            }
+        }
+        p.phase = PodPhase::Succeeded;
+        h.pods.update(p)?;
+    }
+    h.cache.registry.unpin(&job.dataset)?;
+    let mut job = h.jobs.get(name).unwrap().clone();
+    job.status = JobPhase::Succeeded;
+    h.jobs.update(job)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::k8s::{Dataset, DatasetPhase, DlJob};
+
+    fn dataset(name: &str, bytes: u64) -> Dataset {
+        Dataset {
+            meta: ObjectMeta::named(name),
+            url: format!("nfs://storage1/{name}"),
+            total_bytes: bytes,
+            num_items: 1000,
+            prefetch: true,
+            stripe_width: 0,
+            status: DatasetPhase::Pending,
+        }
+    }
+
+    fn dljob(name: &str, dataset: &str, replicas: u32, gpus: u32) -> DlJob {
+        DlJob {
+            meta: ObjectMeta::named(name),
+            dataset: dataset.into(),
+            gpus,
+            replicas,
+            container_image: "tf-cnn-bench:latest".into(),
+            mount_path: "/data".into(),
+            epochs: 2,
+            status: JobPhase::Pending,
+        }
+    }
+
+    #[test]
+    fn job_waits_for_dataset_then_runs_colocated() {
+        let mut h = Hoard::paper_testbed();
+        h.jobs.create(dljob("j0", "imagenet", 1, 4)).unwrap();
+        h.reconcile().unwrap();
+        // No dataset yet: still pending.
+        assert_eq!(h.jobs.get("j0").unwrap().status, JobPhase::Pending);
+
+        h.datasets.create(dataset("imagenet", 144e9 as u64)).unwrap();
+        h.reconcile_to_fixpoint().unwrap();
+        let job = h.jobs.get("j0").unwrap();
+        assert_eq!(job.status, JobPhase::Running);
+        let pod = h.pods.get("j0-0").unwrap();
+        let node = pod.assigned_node.unwrap();
+        // Dataset striped over all 4 nodes ⇒ every placement is node-local.
+        let rec = h.cache.registry.get("imagenet").unwrap();
+        assert!(rec.stripe.as_ref().unwrap().contains(NodeId(node)));
+        assert_eq!(rec.pin_count, 1);
+    }
+
+    #[test]
+    fn four_jobs_fill_the_testbed() {
+        let mut h = Hoard::paper_testbed();
+        h.datasets.create(dataset("imagenet", 144e9 as u64)).unwrap();
+        for i in 0..4 {
+            h.jobs.create(dljob(&format!("j{i}"), "imagenet", 1, 4)).unwrap();
+        }
+        h.reconcile_to_fixpoint().unwrap();
+        let mut nodes_used: Vec<usize> = h
+            .pods
+            .list()
+            .map(|p| p.assigned_node.expect("all pods scheduled"))
+            .collect();
+        nodes_used.sort_unstable();
+        assert_eq!(nodes_used, vec![0, 1, 2, 3], "one 4-GPU job per node");
+        assert_eq!(h.cache.registry.get("imagenet").unwrap().pin_count, 4);
+    }
+
+    #[test]
+    fn gpu_exhaustion_fails_job() {
+        let mut h = Hoard::paper_testbed();
+        h.datasets.create(dataset("d", 1 << 30)).unwrap();
+        for i in 0..4 {
+            h.jobs.create(dljob(&format!("j{i}"), "d", 1, 4)).unwrap();
+        }
+        h.reconcile_to_fixpoint().unwrap();
+        h.jobs.create(dljob("j-extra", "d", 1, 4)).unwrap();
+        h.reconcile_to_fixpoint().unwrap();
+        assert!(matches!(h.jobs.get("j-extra").unwrap().status, JobPhase::Failed(_)));
+    }
+
+    #[test]
+    fn completion_releases_and_unpins() {
+        let mut h = Hoard::paper_testbed();
+        h.datasets.create(dataset("d", 1 << 30)).unwrap();
+        h.jobs.create(dljob("j0", "d", 2, 4)).unwrap();
+        h.reconcile_to_fixpoint().unwrap();
+        assert_eq!(h.jobs.get("j0").unwrap().status, JobPhase::Running);
+        complete_job(&mut h, "j0").unwrap();
+        assert_eq!(h.jobs.get("j0").unwrap().status, JobPhase::Succeeded);
+        assert_eq!(h.cache.registry.get("d").unwrap().pin_count, 0);
+        assert_eq!(h.nodes.iter().map(|n| n.gpus_free()).sum::<u32>(), 16);
+        // Data remains cached for returning jobs (Requirement 2).
+        assert!(h.cache.registry.get("d").unwrap().stripe.is_some());
+    }
+
+    #[test]
+    fn hyperparameter_sweep_reuses_cache() {
+        // The paper's motivating workflow: N sequential jobs, one fetch.
+        let mut h = Hoard::paper_testbed();
+        h.datasets.create(dataset("d", 4 << 30)).unwrap();
+        h.reconcile_to_fixpoint().unwrap();
+        let fetch_events = |h: &Hoard| {
+            h.cache
+                .events
+                .iter()
+                .filter(|e| matches!(e, crate::cache::CacheEvent::Placed { .. }))
+                .count()
+        };
+        assert_eq!(fetch_events(&h), 1);
+        for round in 0..3 {
+            let jn = format!("sweep-{round}");
+            h.jobs.create(dljob(&jn, "d", 1, 4)).unwrap();
+            h.reconcile_to_fixpoint().unwrap();
+            assert_eq!(h.jobs.get(&jn).unwrap().status, JobPhase::Running);
+            complete_job(&mut h, &jn).unwrap();
+        }
+        assert_eq!(fetch_events(&h), 1, "dataset must be placed exactly once");
+    }
+}

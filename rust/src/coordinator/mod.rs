@@ -1,0 +1,85 @@
+//! The Hoard scheduling layer (paper §3.2): two custom-resource controllers
+//! plus the co-scheduler, glued to the cache layer through the dataset
+//! manager. This is the paper's *system contribution* — placement decisions
+//! flow downward (controllers → dataset manager → cache), never upward.
+
+pub mod dataset_controller;
+pub mod job_controller;
+pub mod placement;
+
+pub use dataset_controller::reconcile_datasets;
+pub use job_controller::reconcile_jobs;
+pub use placement::{select_cache_nodes, select_compute_nodes, Locality, PlacementInput};
+
+use crate::cache::{CacheManager, EvictionPolicy};
+use crate::cluster::{NodeSpec, NodeState};
+use crate::k8s::{Dataset, DlJob, Pod, Pvc, Store};
+use crate::netsim::Topology;
+
+/// The assembled control plane: object stores + cluster model + cache.
+pub struct Hoard {
+    pub datasets: Store<Dataset>,
+    pub jobs: Store<DlJob>,
+    pub pods: Store<Pod>,
+    pub pvcs: Store<Pvc>,
+    pub nodes: Vec<NodeState>,
+    pub topology: Topology,
+    pub cache: CacheManager,
+    /// Remote-fetch bytes applied per reconcile tick in prefetch mode
+    /// (simulated AFM gateway ingest; real mode drives this from the VFS).
+    pub prefetch_bytes_per_tick: u64,
+}
+
+impl Hoard {
+    pub fn new(specs: Vec<NodeSpec>, topology: Topology, policy: EvictionPolicy) -> Self {
+        assert_eq!(specs.len(), topology.num_nodes());
+        let volumes = specs.iter().map(|s| s.cache_volume.clone()).collect();
+        Hoard {
+            datasets: Store::new(),
+            jobs: Store::new(),
+            pods: Store::new(),
+            pvcs: Store::new(),
+            nodes: specs.into_iter().map(NodeState::new).collect(),
+            topology,
+            cache: CacheManager::new(volumes, policy),
+            prefetch_bytes_per_tick: 8 << 30,
+        }
+    }
+
+    /// The paper's 4-node testbed with the default manual eviction.
+    pub fn paper_testbed() -> Self {
+        let specs = (0..4).map(|i| NodeSpec::paper_node(format!("node{i}"))).collect();
+        Hoard::new(specs, Topology::paper_testbed(), EvictionPolicy::Manual)
+    }
+
+    /// One control-plane tick: reconcile datasets, jobs, then PVCs.
+    /// Deterministic and idempotent — tests drive it step by step.
+    pub fn reconcile(&mut self) -> anyhow::Result<()> {
+        reconcile_datasets(self)?;
+        reconcile_jobs(self)?;
+        crate::k8s::reconcile_pvcs(&self.cache, &mut self.pvcs)?;
+        Ok(())
+    }
+
+    /// Run ticks until nothing changes (fixpoint), with a safety bound.
+    pub fn reconcile_to_fixpoint(&mut self) -> anyhow::Result<u32> {
+        let fingerprint = |h: &Hoard| {
+            (
+                h.datasets.revision(),
+                h.jobs.revision(),
+                h.pods.revision(),
+                h.pvcs.revision(),
+                h.cache.events.len(),
+                h.cache.registry.resident_bytes(), // prefetch progress
+            )
+        };
+        for tick in 0..1024 {
+            let before = fingerprint(self);
+            self.reconcile()?;
+            if fingerprint(self) == before {
+                return Ok(tick);
+            }
+        }
+        anyhow::bail!("control plane did not reach a fixpoint in 1024 ticks")
+    }
+}

@@ -1,0 +1,293 @@
+//! Co-placement of cache nodes and compute nodes (paper §3.1/§4.5):
+//! "these two sets are co-selected to maximize locality of containers and
+//! cache-nodes, also taking into account the data-center topology (rack-
+//! locality is prioritized if node-locality cannot be satisfied)".
+
+use crate::netsim::{NodeId, RackId, Topology};
+
+/// Inputs the placement algorithm consults per node.
+#[derive(Debug, Clone)]
+pub struct PlacementInput {
+    pub node: NodeId,
+    pub gpus_free: u32,
+    pub cache_free_bytes: u64,
+}
+
+/// Achieved locality class for a (job, dataset) pairing — reported in the
+/// ablations and Table 5 reproduction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Locality {
+    NodeLocal,
+    RackLocal,
+    Misplaced,
+}
+
+/// Choose `width` cache nodes for a dataset of `bytes`, preferring nodes
+/// with the most free cache, breaking ties toward packing a single rack
+/// (minimizes future cross-rack reads).
+pub fn select_cache_nodes(
+    inputs: &[PlacementInput],
+    topo: &Topology,
+    width: usize,
+    bytes: u64,
+) -> Option<Vec<NodeId>> {
+    if width == 0 || width > inputs.len() {
+        return None;
+    }
+    // Rank racks by aggregate free cache, then fill from the best rack out.
+    let mut racks: Vec<(RackId, u64)> = (0..topo.racks)
+        .map(|r| {
+            let free: u64 = inputs
+                .iter()
+                .filter(|i| topo.rack_of(i.node) == RackId(r))
+                .map(|i| i.cache_free_bytes)
+                .sum();
+            (RackId(r), free)
+        })
+        .collect();
+    racks.sort_by(|a, b| b.1.cmp(&a.1).then(a.0 .0.cmp(&b.0 .0)));
+
+    let mut chosen: Vec<&PlacementInput> = Vec::with_capacity(width);
+    for (rack, _) in &racks {
+        let mut members: Vec<&PlacementInput> = inputs
+            .iter()
+            .filter(|i| topo.rack_of(i.node) == *rack && !chosen.iter().any(|c| c.node == i.node))
+            .collect();
+        members.sort_by(|a, b| b.cache_free_bytes.cmp(&a.cache_free_bytes).then(a.node.0.cmp(&b.node.0)));
+        for m in members {
+            if chosen.len() == width {
+                break;
+            }
+            chosen.push(m);
+        }
+        if chosen.len() == width {
+            break;
+        }
+    }
+    let total_free: u64 = chosen.iter().map(|c| c.cache_free_bytes).sum();
+    if total_free < bytes {
+        return None;
+    }
+    let mut nodes: Vec<NodeId> = chosen.iter().map(|c| c.node).collect();
+    nodes.sort_by_key(|n| n.0);
+    Some(nodes)
+}
+
+/// Choose `replicas` compute nodes (each needing `gpus_per_replica`) for a
+/// job whose dataset lives on `cache_nodes`. Preference order per replica:
+/// node-local (on a cache node) > rack-local (same rack as a cache node) >
+/// anywhere with GPUs.
+pub fn select_compute_nodes(
+    inputs: &[PlacementInput],
+    topo: &Topology,
+    cache_nodes: &[NodeId],
+    replicas: u32,
+    gpus_per_replica: u32,
+) -> Option<Vec<(NodeId, Locality)>> {
+    let cache_racks: Vec<RackId> = cache_nodes.iter().map(|&n| topo.rack_of(n)).collect();
+    let mut free: Vec<(NodeId, u32)> = inputs.iter().map(|i| (i.node, i.gpus_free)).collect();
+    let mut out = Vec::with_capacity(replicas as usize);
+    for _ in 0..replicas {
+        // Score every node that still has room.
+        let mut best: Option<(u32, u32, NodeId)> = None; // (locality_rank, free, node)
+        for &(n, f) in &free {
+            if f < gpus_per_replica {
+                continue;
+            }
+            let rank = if cache_nodes.contains(&n) {
+                0
+            } else if cache_racks.contains(&topo.rack_of(n)) {
+                1
+            } else {
+                2
+            };
+            let better = match best {
+                None => true,
+                Some((br, bf, bn)) => {
+                    (rank, std::cmp::Reverse(f), n.0) < (br, std::cmp::Reverse(bf), bn.0)
+                }
+            };
+            if better {
+                best = Some((rank, f, n));
+            }
+        }
+        let (rank, _, node) = best?;
+        let slot = free.iter_mut().find(|(n, _)| *n == node).unwrap();
+        slot.1 -= gpus_per_replica;
+        let loc = match rank {
+            0 => Locality::NodeLocal,
+            1 => Locality::RackLocal,
+            _ => Locality::Misplaced,
+        };
+        out.push((node, loc));
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs(n: usize, gpus: u32, cache_free: u64) -> Vec<PlacementInput> {
+        (0..n)
+            .map(|i| PlacementInput { node: NodeId(i), gpus_free: gpus, cache_free_bytes: cache_free })
+            .collect()
+    }
+
+    fn topo_2x4() -> Topology {
+        Topology::new(2, 4, 12.5e9, 40e9)
+    }
+
+    #[test]
+    fn cache_nodes_pack_one_rack() {
+        let topo = topo_2x4();
+        let inp = inputs(8, 4, 1000);
+        let nodes = select_cache_nodes(&inp, &topo, 4, 3000).unwrap();
+        let racks: std::collections::HashSet<_> =
+            nodes.iter().map(|&n| topo.rack_of(n)).collect();
+        assert_eq!(racks.len(), 1, "width-4 stripe should fit one rack: {nodes:?}");
+    }
+
+    #[test]
+    fn cache_selection_respects_capacity() {
+        let topo = topo_2x4();
+        let mut inp = inputs(8, 4, 10);
+        assert!(select_cache_nodes(&inp, &topo, 4, 1000).is_none());
+        inp[0].cache_free_bytes = 2000;
+        let nodes = select_cache_nodes(&inp, &topo, 1, 1000).unwrap();
+        assert_eq!(nodes, vec![NodeId(0)]);
+    }
+
+    #[test]
+    fn cache_selection_prefers_freest_nodes() {
+        let topo = topo_2x4();
+        let mut inp = inputs(8, 4, 100);
+        inp[5].cache_free_bytes = 5000;
+        inp[6].cache_free_bytes = 5000;
+        let nodes = select_cache_nodes(&inp, &topo, 2, 6000).unwrap();
+        assert_eq!(nodes, vec![NodeId(5), NodeId(6)]);
+    }
+
+    #[test]
+    fn compute_prefers_node_local() {
+        let topo = topo_2x4();
+        let inp = inputs(8, 4, 1000);
+        let cache = vec![NodeId(2), NodeId(3)];
+        let placed = select_compute_nodes(&inp, &topo, &cache, 2, 4).unwrap();
+        for (n, loc) in &placed {
+            assert!(cache.contains(n));
+            assert_eq!(*loc, Locality::NodeLocal);
+        }
+    }
+
+    #[test]
+    fn compute_falls_back_to_rack_local() {
+        let topo = topo_2x4();
+        let mut inp = inputs(8, 4, 1000);
+        // Cache nodes have no free GPUs; rack-mates do.
+        inp[2].gpus_free = 0;
+        inp[3].gpus_free = 0;
+        let cache = vec![NodeId(2), NodeId(3)];
+        let placed = select_compute_nodes(&inp, &topo, &cache, 1, 4).unwrap();
+        let (n, loc) = placed[0];
+        assert_eq!(topo.rack_of(n), topo.rack_of(NodeId(2)));
+        assert_eq!(loc, Locality::RackLocal);
+    }
+
+    #[test]
+    fn compute_misplaced_as_last_resort() {
+        let topo = topo_2x4();
+        let mut inp = inputs(8, 4, 1000);
+        for i in 0..4 {
+            inp[i].gpus_free = 0; // all of rack0 (cache rack) busy
+        }
+        let cache = vec![NodeId(0), NodeId(1)];
+        let placed = select_compute_nodes(&inp, &topo, &cache, 1, 4).unwrap();
+        assert_eq!(placed[0].1, Locality::Misplaced);
+    }
+
+    #[test]
+    fn compute_multi_replica_spreads() {
+        let topo = topo_2x4();
+        let inp = inputs(8, 4, 1000);
+        let cache: Vec<NodeId> = (0..4).map(NodeId).collect();
+        let placed = select_compute_nodes(&inp, &topo, &cache, 4, 4).unwrap();
+        let nodes: std::collections::HashSet<_> = placed.iter().map(|(n, _)| *n).collect();
+        assert_eq!(nodes.len(), 4, "4×4-GPU replicas need 4 distinct nodes");
+    }
+
+    #[test]
+    fn insufficient_gpus_is_none() {
+        let topo = topo_2x4();
+        let inp = inputs(2, 2, 1000);
+        assert!(select_compute_nodes(&inp, &topo, &[NodeId(0)], 1, 4).is_none());
+    }
+
+    #[test]
+    fn prop_compute_selection_sound() {
+        use crate::util::{prop::forall, Rng};
+        forall(
+            150,
+            |rng: &mut Rng| {
+                let gpus: Vec<u32> = (0..8).map(|_| rng.gen_range(5) as u32).collect();
+                let cache_k = 1 + rng.gen_range(4) as usize;
+                let replicas = 1 + rng.gen_range(4) as u32;
+                let per = 1 + rng.gen_range(4) as u32;
+                (gpus, cache_k, replicas, per)
+            },
+            |(gpus, cache_k, replicas, per)| {
+                let topo = topo_2x4();
+                let inp: Vec<PlacementInput> = gpus
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &g)| PlacementInput {
+                        node: NodeId(i),
+                        gpus_free: g,
+                        cache_free_bytes: 1000,
+                    })
+                    .collect();
+                let cache: Vec<NodeId> = (0..*cache_k).map(NodeId).collect();
+                match select_compute_nodes(&inp, &topo, &cache, *replicas, *per) {
+                    None => {
+                        // Must genuinely not fit: total feasible replica slots.
+                        let slots: u32 = gpus.iter().map(|g| g / per).sum();
+                        if slots >= *replicas {
+                            return Err(format!("refused feasible placement ({slots} slots)"));
+                        }
+                    }
+                    Some(placed) => {
+                        if placed.len() != *replicas as usize {
+                            return Err("wrong replica count".into());
+                        }
+                        // Per-node GPU budget respected.
+                        let mut used = std::collections::HashMap::new();
+                        for (n, _) in &placed {
+                            *used.entry(n.0).or_insert(0u32) += per;
+                        }
+                        for (n, u) in used {
+                            if u > gpus[n] {
+                                return Err(format!("node {n} over-committed"));
+                            }
+                        }
+                        // Locality labels truthful.
+                        for (n, loc) in &placed {
+                            let is_local = cache.contains(n);
+                            let is_rack = cache.iter().any(|c| topo.rack_of(*c) == topo.rack_of(*n));
+                            let want = if is_local {
+                                Locality::NodeLocal
+                            } else if is_rack {
+                                Locality::RackLocal
+                            } else {
+                                Locality::Misplaced
+                            };
+                            if *loc != want {
+                                return Err(format!("locality mislabeled for {n:?}"));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,215 @@
+//! Distributed file-system backends for the cache layer (paper §3.3,
+//! Table 1). The paper benchmarked GlusterFS, Alluxio and IBM Spectrum
+//! Scale, then picked Spectrum Scale because it alone combines a remote
+//! cache mode (AFM) with *node-subset* placement. We model all three behind
+//! one trait so the Table 1 comparison — performance **and** feature fit —
+//! is reproducible, and so the cache layer stays backend-agnostic
+//! (the paper's "flexible enough to integrate a different file system").
+
+use crate::cluster::GpuDemand;
+use crate::workload::DatasetSpec;
+
+/// Feature matrix from §3.3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FsFeatures {
+    /// Can act as a transparent cache of another store (AFM-style).
+    pub cache_mode: bool,
+    /// Can constrain a dataset to a chosen subset of nodes (Requirement 1/3).
+    pub node_subset: bool,
+    /// Exposes full POSIX semantics (Requirement 4).
+    pub posix: bool,
+}
+
+pub trait DistFs: std::fmt::Debug + Send + Sync {
+    fn name(&self) -> &'static str;
+    fn features(&self) -> FsFeatures;
+
+    /// Sustained per-client read throughput (bytes/s) for the DL training
+    /// pattern (small random file reads, `clients` concurrent trainers per
+    /// server). Calibrated from Table 1 — see each backend.
+    fn per_client_read_bw(&self, clients: u32) -> f64;
+
+    /// Metadata operation cost (open/stat), seconds. DL epochs open every
+    /// file once, so this matters at millions of files.
+    fn metadata_op_cost(&self) -> f64;
+
+    /// Whether the Hoard cache layer can be built on this backend at all.
+    fn usable_for_hoard(&self) -> bool {
+        let f = self.features();
+        f.cache_mode && f.node_subset && f.posix
+    }
+
+    /// Duration of one training epoch (seconds) for `job` over `ds`, I/O
+    /// and compute overlapped (the slower of the two paces the epoch).
+    fn epoch_duration(&self, ds: &DatasetSpec, job: &GpuDemand, clients: u32) -> f64 {
+        let io = ds.total_bytes as f64 / self.per_client_read_bw(clients)
+            + ds.num_items as f64 * self.metadata_op_cost();
+        let compute = ds.num_items as f64 / job.images_per_sec();
+        io.max(compute)
+    }
+}
+
+/// IBM Spectrum Scale (GPFS) + AFM: the selected backend.
+/// Table 1: 27.5 min for 1 epoch ResNet50 ⇒ ~86.4 MB/s per 4-GPU client at
+/// the benchmark's synchronous-read settings.
+#[derive(Debug, Clone, Default)]
+pub struct SpectrumLike;
+
+/// Alluxio (Tachyon): cache mode yes, node-subset **no** — every dataset is
+/// spread over all nodes, defeating co-scheduling. Table 1: 28.6 min.
+#[derive(Debug, Clone, Default)]
+pub struct AlluxioLike;
+
+/// GlusterFS: no out-of-the-box cache mode (would require code changes).
+/// Table 1: 28.9 min.
+#[derive(Debug, Clone, Default)]
+pub struct GlusterLike;
+
+fn degraded(base: f64, clients: u32, retention: f64) -> f64 {
+    if clients <= 1 {
+        base
+    } else {
+        base * retention.powf((clients as f64).log2())
+    }
+}
+
+impl DistFs for SpectrumLike {
+    fn name(&self) -> &'static str {
+        "spectrum-scale"
+    }
+
+    fn features(&self) -> FsFeatures {
+        FsFeatures { cache_mode: true, node_subset: true, posix: true }
+    }
+
+    fn per_client_read_bw(&self, clients: u32) -> f64 {
+        // 27.5 min total − 1.28 M × 120 µs metadata ⇒ ~96.3 MB/s data path.
+        degraded(96.3e6, clients, 0.97)
+    }
+
+    fn metadata_op_cost(&self) -> f64 {
+        120e-6
+    }
+}
+
+impl DistFs for AlluxioLike {
+    fn name(&self) -> &'static str {
+        "alluxio"
+    }
+
+    fn features(&self) -> FsFeatures {
+        // POSIX via FUSE shim; cache of remote stores supported; placement
+        // on a chosen node subset not supported (§3.3).
+        FsFeatures { cache_mode: true, node_subset: false, posix: true }
+    }
+
+    fn per_client_read_bw(&self, clients: u32) -> f64 {
+        // 28.6 min total − 1.28 M × 180 µs metadata ⇒ ~97.0 MB/s data path.
+        degraded(97.0e6, clients, 0.96)
+    }
+
+    fn metadata_op_cost(&self) -> f64 {
+        180e-6
+    }
+}
+
+impl DistFs for GlusterLike {
+    fn name(&self) -> &'static str {
+        "glusterfs"
+    }
+
+    fn features(&self) -> FsFeatures {
+        FsFeatures { cache_mode: false, node_subset: true, posix: true }
+    }
+
+    fn per_client_read_bw(&self, clients: u32) -> f64 {
+        // 28.9 min total − 1.28 M × 250 µs metadata ⇒ ~101.9 MB/s data path.
+        degraded(101.9e6, clients, 0.95)
+    }
+
+    fn metadata_op_cost(&self) -> f64 {
+        250e-6
+    }
+}
+
+/// All candidate backends, in the paper's Table 1 order.
+pub fn all_backends() -> Vec<Box<dyn DistFs>> {
+    vec![Box::new(GlusterLike), Box::new(AlluxioLike), Box::new(SpectrumLike)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::DatasetSpec;
+
+    fn imagenet() -> DatasetSpec {
+        DatasetSpec::imagenet()
+    }
+
+    #[test]
+    fn table1_training_durations() {
+        // Paper Table 1: Gluster 28.9, Alluxio 28.6, Spectrum 27.5 minutes.
+        let ds = imagenet();
+        let job = GpuDemand::table1_resnet_job();
+        let cases: Vec<(Box<dyn DistFs>, f64)> = vec![
+            (Box::new(GlusterLike), 28.9),
+            (Box::new(AlluxioLike), 28.6),
+            (Box::new(SpectrumLike), 27.5),
+        ];
+        for (fs, want_min) in cases {
+            let got_min = fs.epoch_duration(&ds, &job, 1) / 60.0;
+            let err = (got_min - want_min).abs() / want_min;
+            assert!(err < 0.05, "{}: got {got_min:.1} want {want_min}", fs.name());
+        }
+    }
+
+    #[test]
+    fn only_spectrum_usable_for_hoard() {
+        assert!(SpectrumLike.usable_for_hoard());
+        assert!(!AlluxioLike.usable_for_hoard(), "no node-subset placement");
+        assert!(!GlusterLike.usable_for_hoard(), "no cache mode");
+    }
+
+    #[test]
+    fn spectrum_fastest() {
+        let ds = imagenet();
+        let job = GpuDemand::table1_resnet_job();
+        let s = SpectrumLike.epoch_duration(&ds, &job, 1);
+        let a = AlluxioLike.epoch_duration(&ds, &job, 1);
+        let g = GlusterLike.epoch_duration(&ds, &job, 1);
+        assert!(s < a && a < g);
+    }
+
+    #[test]
+    fn concurrency_degrades_throughput() {
+        for fs in all_backends() {
+            assert!(fs.per_client_read_bw(8) < fs.per_client_read_bw(1), "{}", fs.name());
+        }
+    }
+
+    #[test]
+    fn compute_bound_when_fs_is_fast() {
+        // A hypothetical infinitely fast FS pins the epoch at GPU speed.
+        #[derive(Debug)]
+        struct FastFs;
+        impl DistFs for FastFs {
+            fn name(&self) -> &'static str {
+                "fast"
+            }
+            fn features(&self) -> FsFeatures {
+                SpectrumLike.features()
+            }
+            fn per_client_read_bw(&self, _c: u32) -> f64 {
+                f64::INFINITY
+            }
+            fn metadata_op_cost(&self) -> f64 {
+                0.0
+            }
+        }
+        let ds = imagenet();
+        let job = GpuDemand::table1_resnet_job();
+        let t = FastFs.epoch_duration(&ds, &job, 1);
+        let compute = ds.num_items as f64 / job.images_per_sec();
+        assert!((t - compute).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,242 @@
+//! Ablations over Hoard's design choices (DESIGN.md §5): stripe width,
+//! prefetch vs demand-fetch, eviction policy under contention, and
+//! co-scheduling on/off. These back the claims the paper makes in prose
+//! (§3.1 on placement, §4.5 on co-scheduling).
+
+use crate::cache::{CacheEvent, CacheManager, EvictionPolicy};
+use crate::metrics::Table;
+use crate::netsim::{NodeId, Topology};
+use crate::remote::NfsModel;
+use crate::storage::{Device, DeviceKind, Volume};
+use crate::workload::trainsim::{ReadMode, TrainJobSim, TrainSim};
+use crate::workload::{DatasetSpec, TrainJobSpec};
+
+/// Stripe width 1..=4 on the paper testbed: warm-epoch fps and the
+/// local-read fraction. Width 1 turns the "distributed" cache into a single
+/// remote NVMe for 3 of 4 jobs.
+pub fn ablation_stripe_width() -> Table {
+    let mut t = Table::new(
+        "Ablation — stripe width (4 jobs, warm epochs)",
+        &[
+            "width",
+            "warm img/s per job",
+            "local read fraction",
+            "aggregate cache capacity (TB)",
+            "makespan (s, 2 warm epochs)",
+        ],
+    );
+    for width in 1..=4usize {
+        let topo = Topology::paper_testbed();
+        let vols: Vec<Volume> = (0..4).map(|_| Volume::paper_cache_volume()).collect();
+        let mut sim = TrainSim::new(topo, Box::new(NfsModel::paper_nfs()), &vols);
+        for i in 0..4 {
+            let mut job = TrainJobSim::new(
+                TrainJobSpec::paper_job(format!("job{i}"), 2),
+                NodeId(i),
+                ReadMode::Hoard,
+            );
+            job.cache_nodes = (0..width).map(NodeId).collect();
+            job.set_warm();
+            sim.add_job(job);
+        }
+        let res = sim.run();
+        let job0 = &res.jobs[0];
+        let items = 1_281_167.0;
+        let fps = items / job0.epoch_durations[0];
+        let local_frac = job0.bytes_from_local / job0.total_bytes_read();
+        t.row(vec![
+            format!("{width}"),
+            format!("{fps:.0}"),
+            format!("{local_frac:.2}"),
+            format!("{:.1}", width as f64 * 1.024),
+            format!("{:.0}", res.makespan),
+        ]);
+    }
+    t
+}
+
+/// Prefetch vs demand-fetch: time until the dataset is fully resident and
+/// first-epoch duration. Prefetch overlaps fetch with early training.
+pub fn ablation_prefetch() -> Table {
+    let mut t = Table::new(
+        "Ablation — prefetch vs demand fetch (cold start)",
+        &["mode", "epoch-1 (s)", "epoch-2 (s)", "NFS bytes (GB)"],
+    );
+    // Demand fetch: plain cold Hoard epoch.
+    {
+        let mut sim = crate::workload::trainsim::paper_scenario(ReadMode::Hoard, 2);
+        let res = sim.run();
+        let e = &res.jobs[0].epoch_durations;
+        t.row(vec![
+            "demand-fetch".into(),
+            format!("{:.0}", e[0]),
+            format!("{:.0}", e[1]),
+            format!("{:.0}", res.traffic.bytes[res.nfs_resource.0] / 1e9),
+        ]);
+    }
+    // Prefetch: dataset staged before the job starts (fetch time charged
+    // up front at full NFS speed — 1 reader, no seeky degradation).
+    {
+        let nfs = NfsModel::paper_nfs();
+        let prefetch_secs = 144e9 / crate::remote::RemoteStore::effective_bw(&nfs, 4);
+        let mut sim = crate::workload::trainsim::paper_scenario(ReadMode::Hoard, 2);
+        for j in &mut sim.jobs {
+            j.set_warm();
+        }
+        let res = sim.run();
+        let e = &res.jobs[0].epoch_durations;
+        t.row(vec![
+            format!("prefetch (+{prefetch_secs:.0}s staging)"),
+            format!("{:.0}", e[0]),
+            format!("{:.0}", e[1]),
+            "144".into(),
+        ]);
+    }
+    t
+}
+
+/// Eviction policy under capacity contention: manual rejects the second
+/// dataset; dataset-LRU evicts the idle one and both sweeps finish.
+pub fn ablation_eviction() -> Table {
+    let mut t = Table::new(
+        "Ablation — eviction policy under contention (2 datasets, cache fits 1.3)",
+        &["policy", "dataset B admitted", "evictions", "events"],
+    );
+    for (name, policy) in
+        [("manual", EvictionPolicy::Manual), ("dataset-lru", EvictionPolicy::DatasetLru)]
+    {
+        let vols: Vec<Volume> = (0..4)
+            .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 50_000_000_000)]))
+            .collect();
+        let mut cache = CacheManager::new(vols, policy);
+        cache
+            .register(DatasetSpec::new("A", 1000, 144_000_000_000), "nfs://s/A".into())
+            .unwrap();
+        cache.place("A", (0..4).map(NodeId).collect()).unwrap();
+        cache.prefetch_tick("A", 144_000_000_000).unwrap();
+        cache
+            .register(DatasetSpec::new("B", 1000, 120_000_000_000), "nfs://s/B".into())
+            .unwrap();
+        let admitted = cache.place("B", (0..4).map(NodeId).collect()).is_ok();
+        let evictions =
+            cache.events.iter().filter(|e| matches!(e, CacheEvent::Evicted(_))).count();
+        t.row(vec![
+            name.into(),
+            yn(admitted),
+            format!("{evictions}"),
+            format!("{}", cache.events.len()),
+        ]);
+    }
+    t
+}
+
+fn yn(b: bool) -> String {
+    (if b { "yes" } else { "no" }).to_string()
+}
+
+/// Co-scheduling on/off: warm-epoch fps when jobs run on their cache nodes
+/// vs one rack over. With P100s on 100 GbE the paper "could not stress the
+/// cache enough" (§4.5); with V100-class consumers (3× the demand) on a
+/// 40G/3:1 fabric, misplacement saturates the rack uplink — the future the
+/// paper's §4.5 warns about. Both rows are reported.
+pub fn ablation_coscheduling() -> Table {
+    let mut t = Table::new(
+        "Ablation — co-scheduling (2 racks of 4, 40G NICs, 3:1 uplink, warm epochs)",
+        &["gpu", "placement", "warm img/s per job", "uplink utilization"],
+    );
+    use crate::cluster::{DlModel, GpuDemand, GpuKind};
+    for gpu in [GpuKind::P100, GpuKind::V100] {
+        for (name, misplaced) in [("co-scheduled", false), ("misplaced (other rack)", true)] {
+            // 40G NICs (5 GB/s), 3:1 oversubscribed uplink (~6.7 GB/s for
+            // 4 nodes × 40G = 160G downlink ⇒ ~53 Gb/s up).
+            let topo = Topology::new(2, 4, 5e9, 6.7e9);
+            let vols: Vec<Volume> = (0..8).map(|_| Volume::paper_cache_volume()).collect();
+            let mut sim = TrainSim::new(topo, Box::new(NfsModel::paper_nfs()), &vols);
+            for i in 0..4 {
+                let node = NodeId(i);
+                let mut spec = TrainJobSpec::paper_job(format!("job{i}"), 1);
+                spec.demand = GpuDemand { gpus: 4, gpu, model: DlModel::AlexNet, batch_per_gpu: 1536 };
+                let mut job = TrainJobSim::new(spec, node, ReadMode::Hoard);
+                job.cache_nodes = if misplaced {
+                    (4..8).map(NodeId).collect() // rack 1 holds the data
+                } else {
+                    (0..4).map(NodeId).collect()
+                };
+                job.set_warm();
+                sim.add_job(job);
+            }
+            let res = sim.run();
+            let items = 1_281_167.0;
+            let fps = items / res.jobs[0].epoch_durations[0];
+            // Rack-0 uplink rx utilization: the interference the paper's
+            // §4.5 worries about (bandwidth stolen from other tenants).
+            let mut util = 0.0f64;
+            for i in 0..res.traffic.bytes.len() {
+                let id = crate::netsim::ResourceId(i);
+                if let crate::netsim::LinkClass::UplinkRx(0) = sim.topology.class_of(id) {
+                    util = res.traffic.bytes[i] / res.makespan
+                        / sim.topology.resources()[i].capacity;
+                }
+            }
+            t.row(vec![
+                format!("{gpu:?}"),
+                name.into(),
+                format!("{fps:.0}"),
+                format!("{:.0}%", util * 100.0),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stripe_width_scales_capacity_not_throughput() {
+        // The paper's point (§4.1): striping multiplies *capacity*; at the
+        // testbed's NVMe/NIC headroom, warm throughput is width-invariant.
+        let t = ablation_stripe_width();
+        let fps: Vec<f64> = t.rows.iter().map(|r| r[1].parse().unwrap()).collect();
+        for f in &fps {
+            assert!((f - fps[0]).abs() / fps[0] < 0.02, "{fps:?}");
+        }
+        // Local fraction tracks 1/width for the co-located job.
+        let lf: Vec<f64> = t.rows.iter().map(|r| r[2].parse().unwrap()).collect();
+        assert!((lf[3] - 0.25).abs() < 0.05, "{lf:?}");
+        assert!(lf[0] > 0.9, "width-1 job0 reads all-local: {lf:?}");
+        // Capacity column grows linearly.
+        let cap: Vec<f64> = t.rows.iter().map(|r| r[3].parse().unwrap()).collect();
+        assert!((cap[3] / cap[0] - 4.0).abs() < 0.15, "{cap:?}");
+    }
+
+    #[test]
+    fn prefetch_warm_epochs_match() {
+        let t = ablation_prefetch();
+        let demand_e2: f64 = t.rows[0][2].parse().unwrap();
+        let prefetch_e1: f64 = t.rows[1][1].parse().unwrap();
+        // With prefetch, even "epoch 1" runs at warm speed.
+        assert!((prefetch_e1 - demand_e2).abs() / demand_e2 < 0.05);
+    }
+
+    #[test]
+    fn eviction_policies_differ() {
+        let t = ablation_eviction();
+        assert_eq!(t.rows[0][1], "no");
+        assert_eq!(t.rows[1][1], "yes");
+        assert_eq!(t.rows[1][2], "1");
+    }
+
+    #[test]
+    fn misplacement_interferes_3x_more_with_v100() {
+        let t = ablation_coscheduling();
+        // rows: P100 co / P100 mis / V100 co / V100 mis.
+        let util = |r: usize| -> f64 { t.rows[r][3].trim_end_matches('%').parse().unwrap() };
+        assert!(util(0) < 1.0, "co-scheduled jobs must not touch the uplink");
+        assert!(util(2) < 1.0);
+        let (p100, v100) = (util(1), util(3));
+        assert!(p100 > 5.0, "misplaced P100 jobs use the uplink: {p100}%");
+        assert!((v100 / p100 - 3.0).abs() < 0.3, "V100 interference ≈ 3×: {v100}% vs {p100}%");
+    }
+}

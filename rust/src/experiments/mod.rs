@@ -1,0 +1,68 @@
+//! Experiment harness: one function per paper table/figure (DESIGN.md §5),
+//! shared by `cargo bench` targets and the `hoard exp` CLI. Each returns a
+//! [`metrics::Table`] (and, for figures, fps series) so callers can render
+//! console, markdown, or CSV.
+
+pub mod ablations;
+pub mod paper;
+
+pub use paper::*;
+
+/// Calibration constants derived from the paper's own numbers; the deeper
+/// story for each lives next to its definition.
+pub mod calib {
+    /// ImageNet train split: ~1.28 M images, ~144 GB ⇒ 112.4 KB average.
+    pub const IMAGENET_ITEMS: u64 = 1_281_167;
+    pub const IMAGENET_BYTES: u64 = 144_000_000_000;
+
+    /// Table 4 anchor points.
+    pub const REM_60_EPOCH_HOURS: f64 = 14.9;
+    pub const HOARD_60_EPOCH_HOURS: f64 = 6.97;
+
+    /// Table 3 anchor points (speedup vs REM).
+    pub const NVME_SPEEDUP_90: f64 = 2.32;
+    pub const HOARD_SPEEDUP_90: f64 = 2.1;
+    pub const HOARD_SPEEDUP_2: f64 = 0.93;
+
+    pub use crate::workload::trainsim::{AFM_COLD_BW_PER_JOB, SPECTRUM_CLIENT_EFF};
+}
+
+/// Format a speedup like the paper's Table 3 ("2.07 ×").
+pub fn speedup(x: f64) -> String {
+    format!("{x:.2} ×")
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Write series as CSV ("t,series1,series2" long format: name,t,value).
+pub fn series_csv(series: &[(&str, &[(f64, f64)])]) -> String {
+    let mut out = String::from("series,t_seconds,images_per_sec\n");
+    for (name, pts) in series {
+        for (t, v) in *pts {
+            out.push_str(&format!("{name},{t:.1},{v:.1}\n"));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn helpers() {
+        assert_eq!(speedup(2.0666), "2.07 ×");
+        assert_eq!(mean(&[1.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+        let pts = [(0.0, 1.0)];
+        let csv = series_csv(&[("a", &pts)]);
+        assert!(csv.contains("a,0.0,1.0"));
+    }
+}

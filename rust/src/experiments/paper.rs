@@ -1,0 +1,417 @@
+//! Reproductions of every table and figure in the paper's evaluation
+//! (§3.3 Table 1, §4.1 Fig. 3 + Table 3, §4.2 Fig. 4, §4.3 Fig. 5,
+//! §4.4 Table 4, §4.5 Table 5, plus the §4.1 2×-utilization claim).
+
+use crate::cluster::GpuDemand;
+use crate::config::ClusterConfig;
+use crate::dfs::all_backends;
+use crate::metrics::Table;
+use crate::netsim::{LinkClass, NodeId, Topology};
+use crate::remote::NfsModel;
+use crate::storage::Volume;
+use crate::workload::trainsim::{paper_scenario, ReadMode, TrainJobSim, TrainSim};
+use crate::workload::{DatasetSpec, TrainJobSpec};
+
+use super::mean;
+
+/// Table 1 — distributed-FS comparison: single-epoch ResNet50 training
+/// duration plus the feature matrix that drove the Spectrum Scale choice.
+pub fn table1_fs_comparison() -> Table {
+    let mut t = Table::new(
+        "Table 1 — file systems for the distributed cache (1 epoch ResNet50, 4×P100, BS 128)",
+        &["File system", "Training duration (min)", "cache mode", "node subset", "POSIX", "usable for Hoard"],
+    );
+    let ds = DatasetSpec::imagenet();
+    let job = GpuDemand::table1_resnet_job();
+    for fs in all_backends() {
+        let minutes = fs.epoch_duration(&ds, &job, 1) / 60.0;
+        let f = fs.features();
+        t.row(vec![
+            fs.name().to_string(),
+            format!("{minutes:.1}"),
+            yn(f.cache_mode),
+            yn(f.node_subset),
+            yn(f.posix),
+            yn(fs.usable_for_hoard()),
+        ]);
+    }
+    t
+}
+
+fn yn(b: bool) -> String {
+    (if b { "yes" } else { "no" }).to_string()
+}
+
+/// Figure 3 — two-epoch training performance curves for REM / NVMe / Hoard.
+/// Returns per-mode (time, images/s) series (job 0 of 4) plus a summary
+/// table of per-epoch mean fps.
+pub fn figure3_two_epochs() -> (Vec<(String, Vec<(f64, f64)>)>, Table) {
+    let mut table = Table::new(
+        "Figure 3 — two-epoch training performance (per 4-GPU job)",
+        &["mode", "epoch-1 img/s", "epoch-2 img/s", "epoch-1 (s)", "epoch-2 (s)"],
+    );
+    let mut all_series = vec![];
+    for (name, mode) in
+        [("REM", ReadMode::Remote), ("NVMe", ReadMode::LocalNvme), ("Hoard", ReadMode::Hoard)]
+    {
+        let mut sim = paper_scenario(mode, 2);
+        sim.sample_interval = 20.0;
+        let res = sim.run();
+        let job = &res.jobs[0];
+        let e = &job.epoch_durations;
+        let items = 1_281_167.0;
+        table.row(vec![
+            name.to_string(),
+            format!("{:.0}", items / e[0]),
+            format!("{:.0}", items / e[1]),
+            format!("{:.0}", e[0]),
+            format!("{:.0}", e[1]),
+        ]);
+        all_series.push((name.to_string(), job.fps_series.clone()));
+    }
+    (all_series, table)
+}
+
+/// Table 3 — long-training speedup projections vs REM.
+pub fn table3_projections() -> Table {
+    let mut t = Table::new(
+        "Table 3 — long-training speedup projections (remote storage baseline)",
+        &["", "2 epochs", "30 epochs", "60 epochs", "90 epochs"],
+    );
+    let epochs = [2u32, 30, 60, 90];
+    let mut rows: Vec<(&str, ReadMode)> =
+        vec![("REM", ReadMode::Remote), ("Hoard", ReadMode::Hoard), ("NVMe", ReadMode::LocalNvme)];
+    let mut rem_time = [0.0f64; 4];
+    for (i, &e) in epochs.iter().enumerate() {
+        rem_time[i] = paper_scenario(ReadMode::Remote, e).run().makespan;
+    }
+    for (name, mode) in rows.drain(..) {
+        let mut cells = vec![name.to_string()];
+        for (i, &e) in epochs.iter().enumerate() {
+            let t = if mode == ReadMode::Remote {
+                rem_time[i]
+            } else {
+                paper_scenario(mode, e).run().makespan
+            };
+            cells.push(super::speedup(rem_time[i] / t));
+        }
+        t.row(cells);
+    }
+    t
+}
+
+/// Figure 4 — training performance vs memory-to-dataset ratio (MDR), first
+/// and subsequent epochs, for all three systems. The `stress` tool is
+/// modelled by shrinking the buffer cache; Hoard's pagepool is set to the
+/// same MDR (paper §4.2).
+pub fn figure4_mdr_sweep() -> Table {
+    let mut t = Table::new(
+        "Figure 4 — training performance vs memory/dataset ratio (img/s per job)",
+        &["MDR", "REM e1", "REM e2+", "NVMe e1", "NVMe e2+", "Hoard e1", "Hoard e2+"],
+    );
+    let ds_bytes = 144e9;
+    for mdr in [0.25, 0.5, 0.75, 1.0, 1.1] {
+        let mut cells = vec![format!("{mdr}")];
+        for mode in [ReadMode::Remote, ReadMode::LocalNvme, ReadMode::Hoard] {
+            let mut sim = paper_scenario(mode, 3);
+            for j in &mut sim.jobs {
+                j.buffer_cache_bytes = mdr * ds_bytes;
+                if mode == ReadMode::Hoard {
+                    // Hoard's RAM tier is its pagepool, not the OS cache.
+                    j.pagepool_bytes = mdr * ds_bytes;
+                    j.buffer_cache_bytes = 0.0;
+                }
+            }
+            let res = sim.run();
+            let e = &res.jobs[0].epoch_durations;
+            let items = 1_281_167.0;
+            cells.push(format!("{:.0}", items / e[0]));
+            cells.push(format!("{:.0}", items / mean(&e[1..])));
+        }
+        t.row(cells);
+    }
+    t
+}
+
+/// Figure 5 — training performance vs remote-storage bandwidth (the `tc`
+/// throttling experiment), first and subsequent epochs.
+pub fn figure5_remote_bw_sweep() -> Table {
+    let mut t = Table::new(
+        "Figure 5 — training performance vs remote storage bandwidth (img/s per job)",
+        &["NFS peak (GB/s)", "REM e1", "REM e2+", "Hoard e1", "Hoard e2+"],
+    );
+    for frac in [0.2, 0.4, 0.6, 0.8, 1.0] {
+        let mut cells = vec![format!("{:.2}", 1.05 * frac)];
+        for mode in [ReadMode::Remote, ReadMode::Hoard] {
+            let topo = Topology::paper_testbed();
+            let vols: Vec<Volume> = (0..4).map(|_| Volume::paper_cache_volume()).collect();
+            let mut sim = TrainSim::new(topo, Box::new(NfsModel::throttled(frac)), &vols);
+            for i in 0..4 {
+                let mut job = TrainJobSim::new(
+                    TrainJobSpec::paper_job(format!("job{i}"), 3),
+                    NodeId(i),
+                    mode,
+                );
+                if mode == ReadMode::Hoard {
+                    job.cache_nodes = (0..4).map(NodeId).collect();
+                    job.pagepool_bytes = 16e9;
+                }
+                sim.add_job(job);
+            }
+            let res = sim.run();
+            let e = &res.jobs[0].epoch_durations;
+            let items = 1_281_167.0;
+            cells.push(format!("{:.0}", items / e[0]));
+            cells.push(format!("{:.0}", items / mean(&e[1..])));
+        }
+        t.row(cells);
+    }
+    t
+}
+
+/// Table 4 — network usage over a 60-epoch training (per 4-GPU job):
+/// total data moved, transmission rate, training duration.
+pub fn table4_network_usage() -> Table {
+    let mut t = Table::new(
+        "Table 4 — network usage during training (60 epochs, per 4-GPU job)",
+        &["", "Total data transferred (TB)", "Transfer rate (Gb/s)", "Training duration (hours)"],
+    );
+    for (name, mode) in [("REM", ReadMode::Remote), ("Hoard", ReadMode::Hoard)] {
+        let mut sim = paper_scenario(mode, 60);
+        let res = sim.run();
+        let job = &res.jobs[0];
+        let dur_h = job.total_duration / 3600.0;
+        // The paper's "total data transmitted" is the dataset moved per
+        // epoch per job (for REM: NFS→node; for Hoard: the distributed-FS
+        // exchange between cache nodes serving the job, incl. its local
+        // stripe reads which GPFS still accounts as NSD traffic).
+        let moved = job.bytes_from_remote + job.bytes_from_local + job.bytes_from_peers;
+        let rate_gbps = moved * 8.0 / job.total_duration / 1e9;
+        t.row(vec![
+            name.to_string(),
+            format!("{:.1}", moved / 1e12),
+            format!("{rate_gbps:.2}"),
+            format!("{dur_h:.2}"),
+        ]);
+    }
+    t
+}
+
+/// Table 5 — % of a rack's 320 Gb/s uplink consumed when a fraction of 24
+/// DL jobs is scheduled on a rack that does not cache their dataset.
+pub fn table5_rack_uplink() -> Table {
+    let mut t = Table::new(
+        "Table 5 — rack up-link bandwidth used by misplaced DL jobs (24 jobs, 40G TOR, 3:1)",
+        &["% jobs misplaced", "up-link BW used"],
+    );
+    for misplaced_pct in [20u32, 40, 60, 80] {
+        let cfg = ClusterConfig::table5_datacenter(6, 4);
+        let topo = cfg.topology();
+        let vols: Vec<Volume> = (0..topo.num_nodes()).map(|_| Volume::paper_cache_volume()).collect();
+        let mut sim = TrainSim::new(topo, Box::new(NfsModel::paper_nfs()), &vols);
+        let n_jobs = 24usize;
+        let n_misplaced = (n_jobs * misplaced_pct as usize + 50) / 100; // round
+        for j in 0..n_jobs {
+            let node = NodeId(j % sim.topology.num_nodes());
+            let my_rack = sim.topology.rack_of(node);
+            let mut job = TrainJobSim::new(
+                TrainJobSpec::paper_job(format!("job{j}"), 1),
+                node,
+                ReadMode::Hoard,
+            );
+            job.pagepool_bytes = 0.0;
+            job.set_warm(); // datasets already cached — steady-state view
+            let cache_rack = if j < n_misplaced {
+                // Dataset cached on the next rack over.
+                crate::netsim::RackId((my_rack.0 + 1) % sim.topology.racks)
+            } else {
+                my_rack
+            };
+            job.cache_nodes = sim.topology.nodes_in_rack(cache_rack).collect();
+            sim.add_job(job);
+        }
+        let res = sim.run();
+        // Mean cross-rack transfer rate, as a fraction of one TOR uplink —
+        // the paper's metric (all misplaced traffic vs the 320 Gb/s uplink).
+        let mut uplink_bytes = 0.0;
+        let mut uplink_cap = 1.0;
+        for i in 0..res.traffic.bytes.len() {
+            let id = crate::netsim::ResourceId(i);
+            if let LinkClass::UplinkRx(_) = sim.topology.class_of(id) {
+                uplink_bytes += res.traffic.bytes[i];
+                uplink_cap = sim.topology.resources()[i].capacity;
+            }
+        }
+        let used_frac = uplink_bytes / res.makespan / uplink_cap;
+        t.row(vec![format!("{misplaced_pct}"), format!("{:.0}%", (used_frac * 100.0).ceil())]);
+    }
+    t
+}
+
+/// §4.1 claim — "the cluster can support 2x more jobs": hyper-parameter
+/// sweep of 3 sequential rounds × 4 concurrent 10-epoch jobs over one
+/// shared dataset; jobs-per-hour ratio Hoard vs REM.
+pub fn utilization_2x() -> Table {
+    let mut t = Table::new(
+        "§4.1 — cluster utilization: hyper-parameter sweep throughput (12 jobs, 10 epochs each)",
+        &["mode", "makespan (h)", "jobs/hour", "vs REM"],
+    );
+    let mut base = 0.0;
+    for (name, mode) in [("REM", ReadMode::Remote), ("Hoard", ReadMode::Hoard)] {
+        let mut total = 0.0;
+        for round in 0..3 {
+            let mut sim = paper_scenario(mode, 10);
+            if mode == ReadMode::Hoard && round > 0 {
+                // Dataset already cached from round 1 (life cycle decoupled
+                // from jobs): mark jobs warm-start.
+                for j in &mut sim.jobs {
+                    j.buffer_cache_bytes = 0.0;
+                    warm_start(j);
+                }
+            }
+            total += sim.run().makespan;
+        }
+        let hours = total / 3600.0;
+        let jph = 12.0 / hours;
+        if name == "REM" {
+            base = jph;
+        }
+        t.row(vec![
+            name.to_string(),
+            format!("{hours:.2}"),
+            format!("{jph:.2}"),
+            super::speedup(jph / base),
+        ]);
+    }
+    t
+}
+
+/// Flip a Hoard job to warm-start (dataset already resident).
+pub fn warm_start(job: &mut TrainJobSim) {
+    // Epoch counter is private; emulate warm start by reducing the spec's
+    // epoch count and accounting the skipped cold epoch as zero-cost —
+    // the fluid sim treats epoch index 0 as the cold one, so instead mark
+    // it via a 1-item cold epoch: set dataset as already cached through
+    // `cache_nodes` and give the sim a warm hint.
+    job.set_warm();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_shape_matches_paper() {
+        let t = table1_fs_comparison();
+        assert_eq!(t.rows.len(), 3);
+        // Durations within 5% of 28.9 / 28.6 / 27.5 and ordered.
+        let mins: Vec<f64> = t.rows.iter().map(|r| r[1].parse().unwrap()).collect();
+        assert!((mins[0] - 28.9).abs() / 28.9 < 0.05, "{mins:?}");
+        assert!((mins[1] - 28.6).abs() / 28.6 < 0.05);
+        assert!((mins[2] - 27.5).abs() / 27.5 < 0.05);
+        // Only spectrum-scale usable.
+        assert_eq!(t.rows[2][5], "yes");
+        assert_eq!(t.rows[0][5], "no");
+        assert_eq!(t.rows[1][5], "no");
+    }
+
+    #[test]
+    fn figure3_curve_shape() {
+        let (series, table) = figure3_two_epochs();
+        assert_eq!(series.len(), 3);
+        // Hoard epoch-2 fps ≈ NVMe fps; epoch-1 slower than REM.
+        let rem_e1: f64 = table.rows[0][1].parse().unwrap();
+        let nvme_e2: f64 = table.rows[1][2].parse().unwrap();
+        let hoard_e1: f64 = table.rows[2][1].parse().unwrap();
+        let hoard_e2: f64 = table.rows[2][2].parse().unwrap();
+        assert!(hoard_e1 < rem_e1);
+        assert!(hoard_e2 > 0.9 * nvme_e2);
+    }
+
+    #[test]
+    fn table3_matches_paper_within_5pct() {
+        let t = table3_projections();
+        let parse = |s: &str| s.trim_end_matches(" ×").parse::<f64>().unwrap();
+        // rows: REM, Hoard, NVMe; cols: 2, 30, 60, 90.
+        let hoard: Vec<f64> = (1..5).map(|i| parse(&t.rows[1][i])).collect();
+        let nvme: Vec<f64> = (1..5).map(|i| parse(&t.rows[2][i])).collect();
+        for (got, want) in hoard.iter().zip([0.93, 1.98, 2.07, 2.1]) {
+            assert!((got - want).abs() / want < 0.05, "hoard {got} vs {want}");
+        }
+        for (got, want) in nvme.iter().zip([2.28, 2.3, 2.32, 2.32]) {
+            assert!((got - want).abs() / want < 0.05, "nvme {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn figure4_hoard_agnostic_to_memory() {
+        let t = figure4_mdr_sweep();
+        // Hoard e2+ fps varies < 15% across MDR; REM e2+ varies a lot.
+        let hoard: Vec<f64> = t.rows.iter().map(|r| r[6].parse().unwrap()).collect();
+        let rem: Vec<f64> = t.rows.iter().map(|r| r[2].parse().unwrap()).collect();
+        let spread = |v: &[f64]| {
+            (v.iter().cloned().fold(f64::MIN, f64::max) - v.iter().cloned().fold(f64::MAX, f64::min))
+                / mean(v)
+        };
+        assert!(spread(&hoard) < 0.15, "hoard spread {hoard:?}");
+        assert!(spread(&rem) > 0.5, "rem should depend on MDR: {rem:?}");
+        // MDR 1.1: everything converges after warm-up.
+        let last = t.rows.last().unwrap();
+        let rem_e2: f64 = last[2].parse().unwrap();
+        let nvme_e2: f64 = last[4].parse().unwrap();
+        assert!((rem_e2 - nvme_e2).abs() / nvme_e2 < 0.05);
+    }
+
+    #[test]
+    fn figure5_rem_tracks_bw_hoard_does_not() {
+        let t = figure5_remote_bw_sweep();
+        let rem_e2: Vec<f64> = t.rows.iter().map(|r| r[2].parse().unwrap()).collect();
+        let hoard_e2: Vec<f64> = t.rows.iter().map(|r| r[4].parse().unwrap()).collect();
+        assert!(rem_e2[0] < 0.3 * rem_e2[4], "REM must scale with BW: {rem_e2:?}");
+        let spread = (hoard_e2[4] - hoard_e2[0]).abs() / hoard_e2[4];
+        assert!(spread < 0.05, "Hoard warm epochs BW-independent: {hoard_e2:?}");
+        // Hoard cold epoch slower at low BW.
+        let hoard_e1: Vec<f64> = t.rows.iter().map(|r| r[3].parse().unwrap()).collect();
+        assert!(hoard_e1[0] < hoard_e1[4]);
+    }
+
+    #[test]
+    fn table4_matches_paper() {
+        let t = table4_network_usage();
+        let rem_tb: f64 = t.rows[0][1].parse().unwrap();
+        let hoard_tb: f64 = t.rows[1][1].parse().unwrap();
+        let rem_rate: f64 = t.rows[0][2].parse().unwrap();
+        let hoard_rate: f64 = t.rows[1][2].parse().unwrap();
+        let rem_h: f64 = t.rows[0][3].parse().unwrap();
+        let hoard_h: f64 = t.rows[1][3].parse().unwrap();
+        // Total moved matches in both systems (the paper's first check).
+        assert!((rem_tb - hoard_tb).abs() / rem_tb < 0.02, "{rem_tb} vs {hoard_tb}");
+        assert!((rem_tb - 8.6).abs() < 0.8); // ~144 GB × 60
+        // Rate ~2.1–2.2× higher under Hoard; durations 14.9 vs 6.97 h.
+        let ratio = hoard_rate / rem_rate;
+        assert!((ratio - 2.14).abs() < 0.15, "rate ratio {ratio}");
+        assert!((rem_h - 14.9).abs() / 14.9 < 0.03);
+        assert!((hoard_h - 6.97).abs() / 6.97 < 0.05);
+    }
+
+    #[test]
+    fn table5_matches_paper() {
+        let t = table5_rack_uplink();
+        let got: Vec<f64> = t
+            .rows
+            .iter()
+            .map(|r| r[1].trim_end_matches('%').parse().unwrap())
+            .collect();
+        for (g, want) in got.iter().zip([5.0, 9.0, 13.0, 17.0]) {
+            assert!((g - want).abs() <= 2.0, "uplink {got:?} vs paper [5, 9, 13, 17]");
+        }
+    }
+
+    #[test]
+    fn utilization_at_least_1_9x() {
+        let t = utilization_2x();
+        let parse = |s: &str| s.trim_end_matches(" ×").parse::<f64>().unwrap();
+        let ratio = parse(&t.rows[1][3]);
+        assert!(ratio > 1.9, "Hoard should roughly double utilization: {ratio}");
+    }
+}

@@ -1,0 +1,17 @@
+//! Mini-Kubernetes substrate: typed object stores with watch events,
+//! `Dataset`/`DlJob` custom resources, a label-honouring default pod
+//! scheduler, and a dynamic volume provisioner. The paper deploys Hoard on
+//! real Kubernetes (§3); this module reproduces the integration surface so
+//! the coordinator's control loops are exercised faithfully.
+
+pub mod provisioner;
+pub mod resources;
+pub mod scheduler;
+pub mod store;
+
+pub use provisioner::reconcile_pvcs;
+pub use resources::{
+    labels, Dataset, DatasetPhase, DlJob, JobPhase, Labels, Object, ObjectMeta, Pod, PodPhase, Pvc,
+};
+pub use scheduler::{schedule_all, schedule_pod, NodeInfo, ScheduleError};
+pub use store::{Store, StoreError, WatchEvent};

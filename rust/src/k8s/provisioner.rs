@@ -1,0 +1,100 @@
+//! Dynamic volume provisioner (paper §3.2): watches for datasets that
+//! reached the cache and exposes them to pods as bound PVCs.
+
+use super::resources::{ObjectMeta, Pvc};
+use super::store::{Store, StoreError};
+use crate::cache::{CacheManager, DatasetState};
+
+/// Reconcile PVCs against cache state: create a claim per registered
+/// dataset, bind it once the dataset is placed (Caching or Cached — AFM
+/// serves through the cache from the first byte). Returns bound claims.
+pub fn reconcile_pvcs(cache: &CacheManager, pvcs: &mut Store<Pvc>) -> Result<Vec<String>, StoreError> {
+    let mut bound = vec![];
+    for rec in cache.registry.iter() {
+        let claim_name = format!("pvc-{}", rec.spec.name);
+        let placed = matches!(rec.state, DatasetState::Caching { .. } | DatasetState::Cached);
+        match pvcs.get(&claim_name) {
+            None => {
+                pvcs.create(Pvc {
+                    meta: ObjectMeta::named(&claim_name),
+                    dataset: rec.spec.name.clone(),
+                    bound: placed,
+                })?;
+                if placed {
+                    bound.push(claim_name);
+                }
+            }
+            Some(existing) if !existing.bound && placed => {
+                let mut p = existing.clone();
+                p.bound = true;
+                pvcs.update(p)?;
+                bound.push(claim_name);
+            }
+            Some(_) => {}
+        }
+    }
+    // Garbage-collect claims whose dataset is gone.
+    let orphans: Vec<String> = pvcs
+        .list()
+        .filter(|p| cache.registry.get(&p.dataset).is_none())
+        .map(|p| p.meta.name.clone())
+        .collect();
+    for name in orphans {
+        pvcs.delete(&name)?;
+    }
+    Ok(bound)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::EvictionPolicy;
+    use crate::netsim::NodeId;
+    use crate::storage::{Device, DeviceKind, Volume};
+    use crate::workload::DatasetSpec;
+
+    fn cache() -> CacheManager {
+        let vols = (0..2)
+            .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1000)]))
+            .collect();
+        CacheManager::new(vols, EvictionPolicy::Manual)
+    }
+
+    #[test]
+    fn binds_after_placement() {
+        let mut c = cache();
+        c.register(DatasetSpec::new("a", 10, 100), "nfs://s/a".into()).unwrap();
+        let mut pvcs = Store::new();
+        let bound = reconcile_pvcs(&c, &mut pvcs).unwrap();
+        assert!(bound.is_empty());
+        assert!(!pvcs.get("pvc-a").unwrap().bound);
+
+        c.place("a", vec![NodeId(0), NodeId(1)]).unwrap();
+        let bound = reconcile_pvcs(&c, &mut pvcs).unwrap();
+        assert_eq!(bound, vec!["pvc-a".to_string()]);
+        assert!(pvcs.get("pvc-a").unwrap().bound);
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut c = cache();
+        c.register(DatasetSpec::new("a", 10, 100), "nfs://s/a".into()).unwrap();
+        c.place("a", vec![NodeId(0)]).unwrap();
+        let mut pvcs = Store::new();
+        reconcile_pvcs(&c, &mut pvcs).unwrap();
+        let rev = pvcs.revision();
+        reconcile_pvcs(&c, &mut pvcs).unwrap();
+        assert_eq!(pvcs.revision(), rev, "no-op reconcile must not churn");
+    }
+
+    #[test]
+    fn garbage_collects_orphans() {
+        let mut c = cache();
+        c.register(DatasetSpec::new("a", 10, 100), "nfs://s/a".into()).unwrap();
+        let mut pvcs = Store::new();
+        reconcile_pvcs(&c, &mut pvcs).unwrap();
+        c.delete("a").unwrap();
+        reconcile_pvcs(&c, &mut pvcs).unwrap();
+        assert!(pvcs.get("pvc-a").is_none());
+    }
+}

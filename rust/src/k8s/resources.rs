@@ -1,0 +1,166 @@
+//! Custom resources, mirroring the paper's Kubernetes integration (§3.1):
+//! `Dataset` and `DlJob` custom resources, `Pvc`s exposing cached datasets,
+//! and `Pod`s the default scheduler places onto nodes via labels.
+
+use std::collections::BTreeMap;
+
+pub type Labels = BTreeMap<String, String>;
+
+/// Kubernetes-style object metadata.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ObjectMeta {
+    pub name: String,
+    pub labels: Labels,
+    pub uid: u64,
+    pub resource_version: u64,
+}
+
+impl ObjectMeta {
+    pub fn named(name: impl Into<String>) -> Self {
+        ObjectMeta { name: name.into(), ..Default::default() }
+    }
+}
+
+pub trait Object: Clone + std::fmt::Debug {
+    fn meta(&self) -> &ObjectMeta;
+    fn meta_mut(&mut self) -> &mut ObjectMeta;
+    fn kind() -> &'static str;
+}
+
+macro_rules! object_impl {
+    ($ty:ident, $kind:literal) => {
+        impl Object for $ty {
+            fn meta(&self) -> &ObjectMeta {
+                &self.meta
+            }
+            fn meta_mut(&mut self) -> &mut ObjectMeta {
+                &mut self.meta
+            }
+            fn kind() -> &'static str {
+                $kind
+            }
+        }
+    };
+}
+
+/// The `dataset` custom resource: remote dataset metadata + cache wishes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    pub meta: ObjectMeta,
+    /// e.g. "nfs://storage1/exports/imagenet" or "s3://bucket/prefix".
+    pub url: String,
+    pub total_bytes: u64,
+    pub num_items: u64,
+    /// Start fetching as soon as placed (vs on first access).
+    pub prefetch: bool,
+    /// Requested stripe width (0 = coordinator decides).
+    pub stripe_width: usize,
+    pub status: DatasetPhase,
+}
+object_impl!(Dataset, "Dataset");
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DatasetPhase {
+    #[default]
+    Pending,
+    Caching,
+    Ready,
+    Failed,
+}
+
+/// The `DL job` custom resource (§3.1): training job details + dataset ref.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DlJob {
+    pub meta: ObjectMeta,
+    pub dataset: String,
+    pub gpus: u32,
+    /// Worker count (pods); GPUs are per pod.
+    pub replicas: u32,
+    pub container_image: String,
+    /// Where the dataset volume appears inside the container.
+    pub mount_path: String,
+    pub epochs: u32,
+    pub status: JobPhase,
+}
+object_impl!(DlJob, "DlJob");
+
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum JobPhase {
+    #[default]
+    Pending,
+    /// Coordinator picked nodes; pods created.
+    Scheduled { nodes: Vec<usize> },
+    Running,
+    Succeeded,
+    Failed(String),
+}
+
+/// Persistent volume claim binding a cached dataset into a pod.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pvc {
+    pub meta: ObjectMeta,
+    pub dataset: String,
+    pub bound: bool,
+}
+object_impl!(Pvc, "Pvc");
+
+/// A scheduled unit of work. The coordinator encodes placement decisions as
+/// labels (paper §3.2) and the default scheduler honours them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pod {
+    pub meta: ObjectMeta,
+    pub job: String,
+    pub gpus: u32,
+    /// Label selector the target node must satisfy ("hoard.io/node").
+    pub node_selector: Labels,
+    pub assigned_node: Option<usize>,
+    pub phase: PodPhase,
+}
+object_impl!(Pod, "Pod");
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PodPhase {
+    #[default]
+    Pending,
+    Running,
+    Succeeded,
+    Failed,
+}
+
+/// Well-known label keys.
+pub mod labels {
+    /// Set by the coordinator on pods to pin them to a chosen node.
+    pub const NODE: &str = "hoard.io/node";
+    /// Set on nodes: rack membership.
+    pub const RACK: &str = "topology.hoard.io/rack";
+    /// Set by the coordinator on pods: preferred rack.
+    pub const PREFERRED_RACK: &str = "hoard.io/preferred-rack";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds() {
+        assert_eq!(Dataset::kind(), "Dataset");
+        assert_eq!(DlJob::kind(), "DlJob");
+        assert_eq!(Pvc::kind(), "Pvc");
+        assert_eq!(Pod::kind(), "Pod");
+    }
+
+    #[test]
+    fn meta_roundtrip() {
+        let mut p = Pod {
+            meta: ObjectMeta::named("p0"),
+            job: "j".into(),
+            gpus: 4,
+            node_selector: Labels::new(),
+            assigned_node: None,
+            phase: PodPhase::Pending,
+        };
+        p.meta_mut().labels.insert("a".into(), "b".into());
+        assert_eq!(p.meta().labels["a"], "b");
+        assert_eq!(p.meta().name, "p0");
+    }
+}

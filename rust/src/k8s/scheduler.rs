@@ -1,0 +1,179 @@
+//! The *default* pod scheduler: honours node-selector labels and GPU
+//! capacity, nothing else. Hoard's intelligence lives in the coordinator,
+//! which encodes its decisions as labels and "delegates the actual
+//! scheduling of pods to the default Kubernetes scheduler" (paper §3.2).
+
+use std::collections::BTreeMap;
+
+use super::resources::{labels, Labels, Pod, PodPhase};
+use crate::cluster::NodeState;
+
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum ScheduleError {
+    #[error("no node satisfies selector {0:?} with {1} free GPUs")]
+    Unschedulable(Labels, u32),
+}
+
+/// Node facts the default scheduler consults.
+#[derive(Debug, Clone)]
+pub struct NodeInfo {
+    pub index: usize,
+    pub labels: Labels,
+    pub gpus_free: u32,
+}
+
+impl NodeInfo {
+    pub fn from_states(states: &[NodeState], racks: &[usize]) -> Vec<NodeInfo> {
+        states
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let mut l = Labels::new();
+                l.insert(labels::NODE.into(), format!("node{i}"));
+                l.insert(labels::RACK.into(), format!("rack{}", racks.get(i).copied().unwrap_or(0)));
+                NodeInfo { index: i, labels: l, gpus_free: s.gpus_free() }
+            })
+            .collect()
+    }
+
+    fn satisfies(&self, selector: &Labels) -> bool {
+        selector.iter().all(|(k, v)| {
+            if k == labels::PREFERRED_RACK {
+                return true; // soft constraint, scoring only
+            }
+            self.labels.get(k) == Some(v)
+        })
+    }
+}
+
+/// Assign a pending pod to a node. Hard constraints: selector labels (minus
+/// soft ones) and GPU capacity. Soft: preferred rack, then most-free-GPUs
+/// (spreading).
+pub fn schedule_pod(pod: &mut Pod, nodes: &mut [NodeInfo]) -> Result<usize, ScheduleError> {
+    let preferred_rack = pod.node_selector.get(labels::PREFERRED_RACK).cloned();
+    let mut best: Option<(i64, usize)> = None;
+    for n in nodes.iter() {
+        if n.gpus_free < pod.gpus || !n.satisfies(&pod.node_selector) {
+            continue;
+        }
+        let mut score: i64 = n.gpus_free as i64;
+        if let Some(r) = &preferred_rack {
+            if n.labels.get(labels::RACK) == Some(r) {
+                score += 1000;
+            }
+        }
+        if best.map(|(s, _)| score > s).unwrap_or(true) {
+            best = Some((score, n.index));
+        }
+    }
+    let (_, idx) = best
+        .ok_or_else(|| ScheduleError::Unschedulable(pod.node_selector.clone(), pod.gpus))?;
+    let node = nodes.iter_mut().find(|n| n.index == idx).unwrap();
+    node.gpus_free -= pod.gpus;
+    pod.assigned_node = Some(idx);
+    pod.phase = PodPhase::Running;
+    Ok(idx)
+}
+
+/// Schedule many pods; returns name → node.
+pub fn schedule_all(
+    pods: &mut [Pod],
+    nodes: &mut Vec<NodeInfo>,
+) -> BTreeMap<String, Result<usize, ScheduleError>> {
+    let mut out = BTreeMap::new();
+    for p in pods.iter_mut() {
+        if p.phase != PodPhase::Pending {
+            continue;
+        }
+        out.insert(p.meta.name.clone(), schedule_pod(p, nodes));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NodeSpec;
+    use crate::k8s::resources::ObjectMeta;
+
+    fn nodes4() -> Vec<NodeInfo> {
+        let states: Vec<NodeState> =
+            (0..4).map(|i| NodeState::new(NodeSpec::paper_node(format!("n{i}")))).collect();
+        NodeInfo::from_states(&states, &[0, 0, 1, 1])
+    }
+
+    fn pod(name: &str, gpus: u32, selector: Labels) -> Pod {
+        Pod {
+            meta: ObjectMeta::named(name),
+            job: "j".into(),
+            gpus,
+            node_selector: selector,
+            assigned_node: None,
+            phase: PodPhase::Pending,
+        }
+    }
+
+    #[test]
+    fn respects_node_pin() {
+        let mut nodes = nodes4();
+        let mut sel = Labels::new();
+        sel.insert(labels::NODE.into(), "node2".into());
+        let mut p = pod("p", 4, sel);
+        assert_eq!(schedule_pod(&mut p, &mut nodes).unwrap(), 2);
+        assert_eq!(p.assigned_node, Some(2));
+        assert_eq!(nodes[2].gpus_free, 0);
+    }
+
+    #[test]
+    fn gpu_capacity_enforced() {
+        let mut nodes = nodes4();
+        let mut sel = Labels::new();
+        sel.insert(labels::NODE.into(), "node0".into());
+        let mut p1 = pod("p1", 4, sel.clone());
+        schedule_pod(&mut p1, &mut nodes).unwrap();
+        let mut p2 = pod("p2", 1, sel);
+        assert!(matches!(schedule_pod(&mut p2, &mut nodes), Err(ScheduleError::Unschedulable(..))));
+    }
+
+    #[test]
+    fn prefers_rack_softly() {
+        let mut nodes = nodes4();
+        let mut sel = Labels::new();
+        sel.insert(labels::PREFERRED_RACK.into(), "rack1".into());
+        let mut p = pod("p", 4, sel);
+        let n = schedule_pod(&mut p, &mut nodes).unwrap();
+        assert!(n == 2 || n == 3, "should land in rack1, got node{n}");
+    }
+
+    #[test]
+    fn preferred_rack_does_not_block() {
+        // If the preferred rack is full, schedule elsewhere rather than fail.
+        let mut nodes = nodes4();
+        nodes[2].gpus_free = 0;
+        nodes[3].gpus_free = 0;
+        let mut sel = Labels::new();
+        sel.insert(labels::PREFERRED_RACK.into(), "rack1".into());
+        let mut p = pod("p", 4, sel);
+        let n = schedule_pod(&mut p, &mut nodes).unwrap();
+        assert!(n == 0 || n == 1);
+    }
+
+    #[test]
+    fn spreads_by_free_gpus() {
+        let mut nodes = nodes4();
+        nodes[0].gpus_free = 1;
+        let mut p = pod("p", 1, Labels::new());
+        let n = schedule_pod(&mut p, &mut nodes).unwrap();
+        assert_ne!(n, 0, "should pick an emptier node");
+    }
+
+    #[test]
+    fn schedule_all_skips_non_pending() {
+        let mut nodes = nodes4();
+        let mut pods = vec![pod("a", 2, Labels::new()), pod("b", 2, Labels::new())];
+        pods[1].phase = PodPhase::Running;
+        let out = schedule_all(&mut pods, &mut nodes);
+        assert_eq!(out.len(), 1);
+        assert!(out["a"].is_ok());
+    }
+}

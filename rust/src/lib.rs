@@ -1,0 +1,36 @@
+//! # Hoard — distributed data caching for deep-learning training
+//!
+//! A from-scratch reproduction of *"Hoard: A Distributed Data Caching
+//! System to Accelerate Deep Learning Training on the Cloud"* (Pinto et
+//! al., 2018) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the Hoard system itself: a dataset-granular
+//!   distributed cache striped over compute-node NVMe ([`cache`]), a
+//!   mini-Kubernetes orchestration substrate ([`k8s`]), the co-scheduling
+//!   coordinator ([`coordinator`]), a POSIX-style VFS ([`posix`]), the REST
+//!   API ([`api`]), and calibrated simulations of every piece of the
+//!   paper's testbed ([`netsim`], [`storage`], [`cluster`], [`remote`],
+//!   [`dfs`], [`workload`]).
+//! * **L2/L1 (python/, build-time only)** — the training *consumer*: a JAX
+//!   CNN whose hot-spots are Pallas kernels, AOT-lowered to HLO text and
+//!   executed from Rust via PJRT ([`runtime`]).
+//!
+//! See DESIGN.md for the system inventory and the experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured numbers.
+
+pub mod api;
+pub mod cache;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod dfs;
+pub mod experiments;
+pub mod k8s;
+pub mod metrics;
+pub mod posix;
+pub mod runtime;
+pub mod netsim;
+pub mod remote;
+pub mod storage;
+pub mod util;
+pub mod workload;

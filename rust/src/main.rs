@@ -1,0 +1,201 @@
+//! `hoard` — CLI for the Hoard reproduction.
+//!
+//! Subcommands:
+//!   exp <id|all>        reproduce a paper table/figure (t1 f3 t3 f4 f5 t4
+//!                       t5 util ablations)
+//!   serve [--addr A]    run the Hoard API server over an in-process cluster
+//!   datagen --out DIR   generate a synthetic real-mode dataset
+//!   sim --mode M        run the paper 4-job scenario (rem|nvme|hoard)
+//!   info                print the testbed configuration (Table 2)
+
+use std::sync::{Arc, Mutex};
+
+use hoard::config::ClusterConfig;
+use hoard::experiments::{self, ablations};
+use hoard::metrics::ascii_plot;
+use hoard::util::fmt;
+use hoard::workload::datagen::{generate, DataGenConfig};
+use hoard::workload::trainsim::{paper_scenario, ReadMode};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("exp") => cmd_exp(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("datagen") => cmd_datagen(&args[1..]),
+        Some("sim") => cmd_sim(&args[1..]),
+        Some("info") => cmd_info(),
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}'\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    eprintln!(
+        "hoard — distributed data caching for DL training (paper reproduction)\n\n\
+         USAGE:\n  hoard exp <t1|f3|t3|f4|f5|t4|t5|util|ablations|all>\n  \
+         hoard serve [--addr 127.0.0.1:7070] [--config FILE]\n  \
+         hoard datagen --out DIR [--items N]\n  \
+         hoard sim --mode <rem|nvme|hoard> [--epochs N]\n  \
+         hoard info"
+    );
+}
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+fn flag<'a>(args: &'a [String], key: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+}
+
+fn cmd_exp(args: &[String]) -> i32 {
+    let which = args.first().map(String::as_str).unwrap_or("all");
+    let run = |id: &str| -> bool {
+        match id {
+            "t1" => println!("{}", experiments::table1_fs_comparison().console()),
+            "f3" => {
+                let (series, table) = experiments::figure3_two_epochs();
+                let refs: Vec<(&str, &[(f64, f64)])> =
+                    series.iter().map(|(n, s)| (n.as_str(), s.as_slice())).collect();
+                println!("{}", ascii_plot("Figure 3 — img/s over time", &refs, 72, 16));
+                println!("{}", table.console());
+            }
+            "t3" => println!("{}", experiments::table3_projections().console()),
+            "f4" => println!("{}", experiments::figure4_mdr_sweep().console()),
+            "f5" => println!("{}", experiments::figure5_remote_bw_sweep().console()),
+            "t4" => println!("{}", experiments::table4_network_usage().console()),
+            "t5" => println!("{}", experiments::table5_rack_uplink().console()),
+            "util" => println!("{}", experiments::utilization_2x().console()),
+            "ablations" => {
+                println!("{}", ablations::ablation_stripe_width().console());
+                println!("{}", ablations::ablation_prefetch().console());
+                println!("{}", ablations::ablation_eviction().console());
+                println!("{}", ablations::ablation_coscheduling().console());
+            }
+            _ => return false,
+        }
+        true
+    };
+    if which == "all" {
+        for id in ["t1", "f3", "t3", "f4", "f5", "t4", "t5", "util", "ablations"] {
+            run(id);
+        }
+        return 0;
+    }
+    if run(which) {
+        0
+    } else {
+        eprintln!("unknown experiment '{which}'");
+        2
+    }
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let addr = flag(args, "--addr").unwrap_or("127.0.0.1:7070");
+    let config = match flag(args, "--config") {
+        Some(path) => match ClusterConfig::load(std::path::Path::new(path)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("config error: {e:#}");
+                return 1;
+            }
+        },
+        None => ClusterConfig::paper_testbed(),
+    };
+    let hoard = Arc::new(Mutex::new(config.build()));
+    match hoard::api::serve(addr, hoard) {
+        Ok(server) => {
+            println!("hoard api listening on http://{}", server.addr);
+            println!("  GET  /healthz");
+            println!("  GET|POST /api/v1/datasets   DELETE /api/v1/datasets/NAME");
+            println!("  GET|POST /api/v1/jobs       POST /api/v1/jobs/NAME/complete");
+            println!("  GET  /api/v1/stats");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("serve failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_datagen(args: &[String]) -> i32 {
+    let Some(out) = flag(args, "--out") else {
+        eprintln!("datagen requires --out DIR");
+        return 2;
+    };
+    let items: u64 = flag(args, "--items").and_then(|s| s.parse().ok()).unwrap_or(4096);
+    let cfg = DataGenConfig { num_items: items, ..Default::default() };
+    match generate(std::path::Path::new(out), &cfg) {
+        Ok(bytes) => {
+            println!("wrote {} items ({}) under {out}", cfg.num_items, fmt::bytes(bytes));
+            0
+        }
+        Err(e) => {
+            eprintln!("datagen failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_sim(args: &[String]) -> i32 {
+    let mode = match flag(args, "--mode").unwrap_or("hoard") {
+        "rem" | "remote" => ReadMode::Remote,
+        "nvme" | "local" => ReadMode::LocalNvme,
+        "hoard" => ReadMode::Hoard,
+        other => {
+            eprintln!("unknown mode '{other}' (rem|nvme|hoard)");
+            return 2;
+        }
+    };
+    let epochs: u32 = flag(args, "--epochs").and_then(|s| s.parse().ok()).unwrap_or(2);
+    let mut sim = paper_scenario(mode, epochs);
+    let res = sim.run();
+    println!("4 jobs × 4 GPUs, AlexNet BS=1536, ImageNet, {epochs} epochs, mode {mode:?}");
+    for j in &res.jobs {
+        println!(
+            "  {}: total {}  epochs [{}]",
+            j.name,
+            fmt::duration(j.total_duration),
+            j.epoch_durations
+                .iter()
+                .map(|e| format!("{e:.0}s"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    }
+    println!(
+        "makespan {}  NFS bytes {}",
+        fmt::duration(res.makespan),
+        fmt::bytes(res.traffic.bytes[res.nfs_resource.0] as u64)
+    );
+    0
+}
+
+fn cmd_info() -> i32 {
+    let c = ClusterConfig::paper_testbed();
+    println!("Paper testbed (Table 2):");
+    println!("  nodes: {} × IBM Power S822LC (model)", c.num_nodes());
+    println!("  gpus:  {} × P100 per node", c.gpus_per_node);
+    println!("  mem:   {} per node", fmt::bytes(c.memory_per_node));
+    println!(
+        "  cache: {} × {} NVMe per node ({} aggregate)",
+        c.cache_devices_per_node,
+        fmt::bytes(c.cache_device_bytes),
+        fmt::bytes(c.num_nodes() as u64 * c.cache_devices_per_node as u64 * c.cache_device_bytes)
+    );
+    println!("  net:   {} NIC", fmt::rate(c.nic_bw));
+    println!("  nfs:   {} remote store", fmt::rate(c.remote_bw));
+    0
+}

@@ -1,0 +1,268 @@
+//! Lightweight metrics: counters/gauges/histograms plus table/series
+//! renderers shared by the experiment harness, the CLI and the benches.
+
+use std::collections::BTreeMap;
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Counter(pub u64);
+
+impl Counter {
+    pub fn inc(&mut self) {
+        self.0 += 1;
+    }
+
+    pub fn add(&mut self, n: u64) {
+        self.0 += n;
+    }
+}
+
+/// Fixed-boundary histogram (latencies in seconds by default).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    pub sum: f64,
+    pub n: u64,
+}
+
+impl Histogram {
+    pub fn new(bounds: Vec<f64>) -> Self {
+        let len = bounds.len() + 1;
+        Histogram { bounds, counts: vec![0; len], sum: 0.0, n: 0 }
+    }
+
+    /// Exponential bounds from `lo` doubling `steps` times.
+    pub fn exponential(lo: f64, steps: usize) -> Self {
+        let mut bounds = Vec::with_capacity(steps);
+        let mut b = lo;
+        for _ in 0..steps {
+            bounds.push(b);
+            b *= 2.0;
+        }
+        Self::new(bounds)
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        let idx = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.n += 1;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.n as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    self.bounds.last().copied().unwrap_or(f64::INFINITY) * 2.0
+                };
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// A named metrics registry (string-keyed; good enough at this scale).
+#[derive(Debug, Default)]
+pub struct Registry {
+    pub counters: BTreeMap<String, Counter>,
+    pub gauges: BTreeMap<String, f64>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&mut self, name: &str) -> &mut Counter {
+        self.counters.entry(name.to_string()).or_default()
+    }
+
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Prometheus-style text exposition (for the API's /metrics endpoint).
+    pub fn expose(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("{k} {}\n", v.0));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        out
+    }
+}
+
+/// A result table (what every experiment emits).
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// GitHub-flavoured markdown.
+    pub fn markdown(&self) -> String {
+        let mut out = format!("### {}\n\n", self.title);
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!("|{}\n", "---|".repeat(self.headers.len())));
+        for r in &self.rows {
+            out.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        out
+    }
+
+    /// Fixed-width console rendering.
+    pub fn console(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:width$}", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = format!("== {} ==\n", self.title);
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Poor-man's line plot for fps-vs-time series (Figure 3/4/5 console view).
+pub fn ascii_plot(title: &str, series: &[(&str, &[(f64, f64)])], width: usize, height: usize) -> String {
+    let (mut xmax, mut ymax) = (f64::MIN, f64::MIN);
+    for (_, pts) in series {
+        for &(x, y) in *pts {
+            xmax = xmax.max(x);
+            ymax = ymax.max(y);
+        }
+    }
+    if !xmax.is_finite() || !ymax.is_finite() || xmax <= 0.0 || ymax <= 0.0 {
+        return format!("{title}: (no data)\n");
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    let glyphs = ['*', '+', 'o', 'x', '#'];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for &(x, y) in *pts {
+            let col = ((x / xmax) * (width - 1) as f64).round() as usize;
+            let row = height - 1 - ((y / ymax) * (height - 1) as f64).round() as usize;
+            grid[row][col] = glyphs[si % glyphs.len()];
+        }
+    }
+    let mut out = format!("{title}  (ymax={ymax:.0}, xmax={xmax:.0})\n");
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", glyphs[si % glyphs.len()], name));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_registry() {
+        let mut r = Registry::new();
+        r.counter("reads").inc();
+        r.counter("reads").add(4);
+        r.set_gauge("cache_used", 0.5);
+        let text = r.expose();
+        assert!(text.contains("reads 5"));
+        assert!(text.contains("cache_used 0.5"));
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::exponential(0.001, 12);
+        for i in 1..=100 {
+            h.observe(i as f64 * 0.001);
+        }
+        assert!(h.mean() > 0.04 && h.mean() < 0.06);
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        assert_eq!(h.n, 100);
+    }
+
+    #[test]
+    fn table_rendering() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "x".into()]);
+        let md = t.markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | x |"));
+        let con = t.console();
+        assert!(con.contains("Demo"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn plot_handles_empty() {
+        assert!(ascii_plot("t", &[("s", &[])], 10, 5).contains("no data"));
+    }
+
+    #[test]
+    fn plot_draws_points() {
+        let pts = [(0.0, 1.0), (10.0, 2.0)];
+        let out = ascii_plot("t", &[("s", &pts)], 20, 6);
+        assert!(out.contains('*'));
+    }
+}

@@ -1,0 +1,298 @@
+//! Demand-capped max-min fair bandwidth allocation (water-filling).
+//!
+//! Each `Flow` crosses a set of `Resource`s (links, disks, servers) and has
+//! an intrinsic demand cap (e.g. the GPU can only consume 343 MB/s of
+//! images). The allocator repeatedly finds the most constrained resource,
+//! fixes the fair share of all flows crossing it, removes them, and repeats
+//! — the classic progressive-filling algorithm. O(R * F) per round, R
+//! rounds worst case; our experiments have tens of flows, so this is
+//! microseconds (see benches/perf_fairshare.rs).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ResourceId(pub usize);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FlowId(pub usize);
+
+/// A capacity-constrained resource, in bytes/second.
+#[derive(Debug, Clone)]
+pub struct Resource {
+    pub name: String,
+    pub capacity: f64,
+}
+
+/// A flow crossing `path` resources, wanting at most `demand` bytes/second.
+#[derive(Debug, Clone)]
+pub struct Flow {
+    pub path: Vec<ResourceId>,
+    pub demand: f64,
+}
+
+/// Compute the max-min fair rate for every flow. Returns rates indexed like
+/// `flows`. Flows with empty paths are only capped by their demand.
+pub fn fair_share(resources: &[Resource], flows: &[Flow]) -> Vec<f64> {
+    let nf = flows.len();
+    let nr = resources.len();
+    let mut rate = vec![0.0f64; nf];
+    let mut frozen = vec![false; nf];
+    let mut remaining_cap: Vec<f64> = resources.iter().map(|r| r.capacity).collect();
+
+    for (i, f) in flows.iter().enumerate() {
+        debug_assert!(f.demand >= 0.0, "negative demand");
+        for r in &f.path {
+            debug_assert!(r.0 < nr, "flow references unknown resource {}", r.0);
+        }
+        if f.path.is_empty() {
+            rate[i] = f.demand;
+            frozen[i] = true;
+        }
+    }
+
+    // Unfrozen flow indices; shrinks each round so later rounds never
+    // rescan settled flows (§Perf iteration 2).
+    let mut unfrozen: Vec<usize> = (0..nf).filter(|&i| !frozen[i]).collect();
+    let mut active = vec![0usize; nr];
+
+    while !unfrozen.is_empty() {
+        // Active flow count per resource.
+        active.iter_mut().for_each(|a| *a = 0);
+        for &i in &unfrozen {
+            for r in &flows[i].path {
+                active[r.0] += 1;
+            }
+        }
+
+        // The binding constraint: min over resources of cap/active, and min
+        // over unfrozen flows of their remaining demand.
+        let mut level = f64::INFINITY;
+        for r in 0..nr {
+            if active[r] > 0 {
+                level = level.min(remaining_cap[r] / active[r] as f64);
+            }
+        }
+        let mut demand_binds = false;
+        for &i in &unfrozen {
+            if flows[i].demand <= level {
+                level = level.min(flows[i].demand);
+                demand_binds = true;
+            }
+        }
+        debug_assert!(level.is_finite(), "no binding constraint");
+        let level = level.max(0.0);
+
+        // Freeze flows bound at this level: demand-capped flows first (they
+        // may leave capacity for others), otherwise everyone on a saturated
+        // resource.
+        let mut froze = false;
+        if demand_binds {
+            unfrozen.retain(|&i| {
+                let f = &flows[i];
+                if f.demand <= level + 1e-12 {
+                    rate[i] = f.demand;
+                    frozen[i] = true;
+                    froze = true;
+                    for r in &f.path {
+                        remaining_cap[r.0] = (remaining_cap[r.0] - f.demand).max(0.0);
+                    }
+                    false
+                } else {
+                    true
+                }
+            });
+        } else {
+            // Freeze flows crossing any resource saturated at this level.
+            // The saturated set is computed from a single snapshot (before
+            // any freezing this round) — determining it incrementally would
+            // mis-freeze flows on resources relieved earlier in the round.
+            let saturated: Vec<bool> = (0..nr)
+                .map(|r| active[r] > 0 && remaining_cap[r] / active[r] as f64 <= level + 1e-12)
+                .collect();
+            unfrozen.retain(|&i| {
+                let f = &flows[i];
+                if f.path.iter().any(|rr| saturated[rr.0]) {
+                    rate[i] = level;
+                    frozen[i] = true;
+                    froze = true;
+                    for rr in &f.path {
+                        remaining_cap[rr.0] = (remaining_cap[rr.0] - level).max(0.0);
+                    }
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        if !froze {
+            // Numerical corner: freeze everything at the level and stop.
+            for &i in &unfrozen {
+                rate[i] = level;
+                frozen[i] = true;
+            }
+            break;
+        }
+    }
+    rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn res(caps: &[f64]) -> Vec<Resource> {
+        caps.iter()
+            .enumerate()
+            .map(|(i, &c)| Resource { name: format!("r{i}"), capacity: c })
+            .collect()
+    }
+
+    #[test]
+    fn single_bottleneck_equal_split() {
+        let r = res(&[100.0]);
+        let f = vec![
+            Flow { path: vec![ResourceId(0)], demand: f64::INFINITY },
+            Flow { path: vec![ResourceId(0)], demand: f64::INFINITY },
+        ];
+        let rates = fair_share(&r, &f);
+        assert!((rates[0] - 50.0).abs() < 1e-9);
+        assert!((rates[1] - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn demand_capped_flow_releases_capacity() {
+        let r = res(&[100.0]);
+        let f = vec![
+            Flow { path: vec![ResourceId(0)], demand: 10.0 },
+            Flow { path: vec![ResourceId(0)], demand: f64::INFINITY },
+        ];
+        let rates = fair_share(&r, &f);
+        assert!((rates[0] - 10.0).abs() < 1e-9);
+        assert!((rates[1] - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multi_hop_takes_tightest_link() {
+        let r = res(&[100.0, 30.0]);
+        let f = vec![Flow { path: vec![ResourceId(0), ResourceId(1)], demand: f64::INFINITY }];
+        let rates = fair_share(&r, &f);
+        assert!((rates[0] - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn classic_three_flow_example() {
+        // Two links A (cap 10) and B (cap 8). f0 uses A+B, f1 uses A, f2 uses B.
+        // Max-min: f0 = 4 (B bottleneck), f2 = 4, then f1 = 6 on A.
+        let r = res(&[10.0, 8.0]);
+        let f = vec![
+            Flow { path: vec![ResourceId(0), ResourceId(1)], demand: f64::INFINITY },
+            Flow { path: vec![ResourceId(0)], demand: f64::INFINITY },
+            Flow { path: vec![ResourceId(1)], demand: f64::INFINITY },
+        ];
+        let rates = fair_share(&r, &f);
+        assert!((rates[0] - 4.0).abs() < 1e-9, "{rates:?}");
+        assert!((rates[1] - 6.0).abs() < 1e-9, "{rates:?}");
+        assert!((rates[2] - 4.0).abs() < 1e-9, "{rates:?}");
+    }
+
+    #[test]
+    fn empty_path_flow_gets_demand() {
+        let rates = fair_share(&[], &[Flow { path: vec![], demand: 7.0 }]);
+        assert_eq!(rates, vec![7.0]);
+    }
+
+    #[test]
+    fn zero_demand_flow() {
+        let r = res(&[100.0]);
+        let f = vec![
+            Flow { path: vec![ResourceId(0)], demand: 0.0 },
+            Flow { path: vec![ResourceId(0)], demand: f64::INFINITY },
+        ];
+        let rates = fair_share(&r, &f);
+        assert_eq!(rates[0], 0.0);
+        assert!((rates[1] - 100.0).abs() < 1e-9);
+    }
+
+    // Property: allocations never exceed capacity on any resource, never
+    // exceed demand, and the allocation is Pareto-efficient on every
+    // bottleneck (some resource is saturated or all demands met).
+    #[test]
+    fn prop_feasible_and_efficient() {
+        use crate::util::{prop::forall, Rng};
+        forall(
+            300,
+            |rng: &mut Rng| {
+                let nr = 1 + rng.gen_range(5) as usize;
+                let resources: Vec<f64> =
+                    (0..nr).map(|_| rng.range_f64(1.0, 100.0)).collect();
+                let nf = 1 + rng.gen_range(8) as usize;
+                let flows: Vec<(Vec<usize>, f64)> = (0..nf)
+                    .map(|_| {
+                        let hops = 1 + rng.gen_range(nr as u64) as usize;
+                        let mut path: Vec<usize> =
+                            (0..nr).collect();
+                        rng.shuffle(&mut path);
+                        path.truncate(hops);
+                        let demand = if rng.bool(0.3) {
+                            f64::INFINITY
+                        } else {
+                            rng.range_f64(0.0, 150.0)
+                        };
+                        (path, demand)
+                    })
+                    .collect();
+                (resources, flows)
+            },
+            |(resources, flows)| {
+                let rs = res(resources);
+                let fs: Vec<Flow> = flows
+                    .iter()
+                    .map(|(p, d)| Flow {
+                        path: p.iter().map(|&i| ResourceId(i)).collect(),
+                        demand: *d,
+                    })
+                    .collect();
+                let rates = fair_share(&rs, &fs);
+                // Feasibility per resource.
+                for (ri, r) in rs.iter().enumerate() {
+                    let load: f64 = fs
+                        .iter()
+                        .zip(&rates)
+                        .filter(|(f, _)| f.path.iter().any(|rr| rr.0 == ri))
+                        .map(|(_, &rt)| rt)
+                        .sum();
+                    if load > r.capacity * (1.0 + 1e-6) + 1e-6 {
+                        return Err(format!("resource {ri} over capacity: {load} > {}", r.capacity));
+                    }
+                }
+                // Demand caps.
+                for (i, f) in fs.iter().enumerate() {
+                    if rates[i] > f.demand * (1.0 + 1e-9) + 1e-9 {
+                        return Err(format!("flow {i} exceeds demand"));
+                    }
+                    if rates[i] < 0.0 {
+                        return Err(format!("flow {i} negative rate"));
+                    }
+                }
+                // Efficiency: every flow is either demand-met or crosses a
+                // saturated resource.
+                for (i, f) in fs.iter().enumerate() {
+                    if rates[i] + 1e-6 >= f.demand {
+                        continue;
+                    }
+                    let crosses_saturated = f.path.iter().any(|rr| {
+                        let load: f64 = fs
+                            .iter()
+                            .zip(&rates)
+                            .filter(|(g, _)| g.path.contains(rr))
+                            .map(|(_, &rt)| rt)
+                            .sum();
+                        load >= rs[rr.0].capacity * (1.0 - 1e-6) - 1e-6
+                    });
+                    if !crosses_saturated {
+                        return Err(format!("flow {i} starved without saturation"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,15 @@
+//! Flow-level network/resource simulation.
+//!
+//! Models the data-center fabric of the paper's testbed (nodes on a 100 GbE
+//! network; racks with 40 G TOR switches and 3:1-oversubscribed uplinks for
+//! the Table 5 analysis) plus any other rate-limited resource (NFS server,
+//! NVMe device) as capacity-constrained `Resource`s. Concurrent transfers
+//! are `Flow`s over paths of resources; instantaneous rates come from
+//! demand-capped **max-min fair** allocation (progressive water-filling),
+//! which is the standard fluid approximation for TCP-like fair sharing.
+
+pub mod fair;
+pub mod topology;
+
+pub use fair::{fair_share, Flow, FlowId, Resource, ResourceId};
+pub use topology::{LinkClass, NodeId, RackId, Topology, TrafficAccount};

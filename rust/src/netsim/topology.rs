@@ -1,0 +1,221 @@
+//! Data-center topology: nodes grouped into racks, TOR switches, rack
+//! uplinks to a core. Produces the `Resource` list + path lookup used by the
+//! fair-share allocator, and accounts per-link traffic (Table 4/5).
+
+use super::fair::{Resource, ResourceId};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RackId(pub usize);
+
+/// What a resource in the topology represents (for accounting/reports).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkClass {
+    /// Node NIC (full-duplex modelled as one resource per direction).
+    NicTx(usize),
+    NicRx(usize),
+    /// Rack uplink to the core (the Table 5 resource), per direction.
+    UplinkTx(usize),
+    UplinkRx(usize),
+    /// Extra non-topology resource registered by the caller (NFS server,
+    /// NVMe device, ...).
+    External,
+}
+
+/// A static fat-tree-lite topology: `racks` racks × `nodes_per_rack` nodes.
+/// Intra-rack traffic crosses only the two NICs (TOR assumed
+/// non-blocking, as in the paper's single-switch 100 GbE testbed);
+/// inter-rack traffic additionally crosses both rack uplinks.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub racks: usize,
+    pub nodes_per_rack: usize,
+    resources: Vec<Resource>,
+    classes: Vec<LinkClass>,
+    nic_tx: Vec<ResourceId>,
+    nic_rx: Vec<ResourceId>,
+    uplink_tx: Vec<ResourceId>,
+    uplink_rx: Vec<ResourceId>,
+}
+
+impl Topology {
+    /// `nic_bw` and `uplink_bw` in bytes/second.
+    pub fn new(racks: usize, nodes_per_rack: usize, nic_bw: f64, uplink_bw: f64) -> Self {
+        let mut t = Topology {
+            racks,
+            nodes_per_rack,
+            resources: Vec::new(),
+            classes: Vec::new(),
+            nic_tx: Vec::new(),
+            nic_rx: Vec::new(),
+            uplink_tx: Vec::new(),
+            uplink_rx: Vec::new(),
+        };
+        for n in 0..racks * nodes_per_rack {
+            let tx = t.add(format!("node{n}.nic.tx"), nic_bw, LinkClass::NicTx(n));
+            let rx = t.add(format!("node{n}.nic.rx"), nic_bw, LinkClass::NicRx(n));
+            t.nic_tx.push(tx);
+            t.nic_rx.push(rx);
+        }
+        for r in 0..racks {
+            let tx = t.add(format!("rack{r}.uplink.tx"), uplink_bw, LinkClass::UplinkTx(r));
+            let rx = t.add(format!("rack{r}.uplink.rx"), uplink_bw, LinkClass::UplinkRx(r));
+            t.uplink_tx.push(tx);
+            t.uplink_rx.push(rx);
+        }
+        t
+    }
+
+    /// The paper's testbed (Table 2): 1 rack, 4 nodes, 100 GbE NICs.
+    /// 100 Gb/s = 12.5 GB/s; uplink irrelevant in a single rack (set high).
+    pub fn paper_testbed() -> Self {
+        Topology::new(1, 4, 12.5e9, f64::INFINITY)
+    }
+
+    fn add(&mut self, name: String, capacity: f64, class: LinkClass) -> ResourceId {
+        let id = ResourceId(self.resources.len());
+        self.resources.push(Resource { name, capacity });
+        self.classes.push(class);
+        id
+    }
+
+    /// Register an external rate-limited resource (NFS server, device...).
+    pub fn add_external(&mut self, name: impl Into<String>, capacity: f64) -> ResourceId {
+        self.add(name.into(), capacity, LinkClass::External)
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.racks * self.nodes_per_rack
+    }
+
+    pub fn rack_of(&self, n: NodeId) -> RackId {
+        RackId(n.0 / self.nodes_per_rack)
+    }
+
+    pub fn nodes_in_rack(&self, r: RackId) -> impl Iterator<Item = NodeId> {
+        let lo = r.0 * self.nodes_per_rack;
+        (lo..lo + self.nodes_per_rack).map(NodeId)
+    }
+
+    pub fn resources(&self) -> &[Resource] {
+        &self.resources
+    }
+
+    pub fn class_of(&self, r: ResourceId) -> LinkClass {
+        self.classes[r.0]
+    }
+
+    pub fn uplink_tx_of(&self, r: RackId) -> ResourceId {
+        self.uplink_tx[r.0]
+    }
+
+    pub fn uplink_rx_of(&self, r: RackId) -> ResourceId {
+        self.uplink_rx[r.0]
+    }
+
+    /// Resources crossed by a transfer `from -> to`. Same node: none (local
+    /// DMA). Same rack: sender NIC tx + receiver NIC rx. Cross-rack: NICs +
+    /// both rack uplinks.
+    pub fn path(&self, from: NodeId, to: NodeId) -> Vec<ResourceId> {
+        if from == to {
+            return vec![];
+        }
+        let mut p = vec![self.nic_tx[from.0], self.nic_rx[to.0]];
+        let (rf, rt) = (self.rack_of(from), self.rack_of(to));
+        if rf != rt {
+            p.push(self.uplink_tx[rf.0]);
+            p.push(self.uplink_rx[rt.0]);
+        }
+        p
+    }
+
+    /// Path for traffic entering the cluster from an external resource
+    /// (e.g. the NFS server, which the paper places on a separate network).
+    pub fn path_from_external(&self, ext: ResourceId, to: NodeId) -> Vec<ResourceId> {
+        vec![ext, self.nic_rx[to.0]]
+    }
+}
+
+/// Per-resource byte counters, advanced by the fluid simulation.
+#[derive(Debug, Clone)]
+pub struct TrafficAccount {
+    pub bytes: Vec<f64>,
+}
+
+impl TrafficAccount {
+    pub fn new(num_resources: usize) -> Self {
+        TrafficAccount { bytes: vec![0.0; num_resources] }
+    }
+
+    /// Record `rate` bytes/s sustained for `dt` seconds over `path`.
+    pub fn record(&mut self, path: &[ResourceId], rate: f64, dt: f64) {
+        for r in path {
+            self.bytes[r.0] += rate * dt;
+        }
+    }
+
+    pub fn total(&self, ids: &[ResourceId]) -> f64 {
+        ids.iter().map(|r| self.bytes[r.0]).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rack_membership() {
+        let t = Topology::new(3, 4, 1.0, 1.0);
+        assert_eq!(t.num_nodes(), 12);
+        assert_eq!(t.rack_of(NodeId(0)), RackId(0));
+        assert_eq!(t.rack_of(NodeId(4)), RackId(1));
+        assert_eq!(t.rack_of(NodeId(11)), RackId(2));
+        let r1: Vec<_> = t.nodes_in_rack(RackId(1)).collect();
+        assert_eq!(r1, vec![NodeId(4), NodeId(5), NodeId(6), NodeId(7)]);
+    }
+
+    #[test]
+    fn local_path_is_empty() {
+        let t = Topology::new(1, 4, 1.0, 1.0);
+        assert!(t.path(NodeId(2), NodeId(2)).is_empty());
+    }
+
+    #[test]
+    fn intra_rack_path_two_hops() {
+        let t = Topology::new(2, 2, 1.0, 1.0);
+        let p = t.path(NodeId(0), NodeId(1));
+        assert_eq!(p.len(), 2);
+        assert_eq!(t.class_of(p[0]), LinkClass::NicTx(0));
+        assert_eq!(t.class_of(p[1]), LinkClass::NicRx(1));
+    }
+
+    #[test]
+    fn inter_rack_path_crosses_uplinks() {
+        let t = Topology::new(2, 2, 1.0, 1.0);
+        let p = t.path(NodeId(0), NodeId(3));
+        assert_eq!(p.len(), 4);
+        assert!(p.contains(&t.uplink_tx_of(RackId(0))));
+        assert!(p.contains(&t.uplink_rx_of(RackId(1))));
+    }
+
+    #[test]
+    fn external_resource_registered() {
+        let mut t = Topology::new(1, 2, 1.0, 1.0);
+        let nfs = t.add_external("nfs", 1.05e9);
+        assert_eq!(t.class_of(nfs), LinkClass::External);
+        let p = t.path_from_external(nfs, NodeId(1));
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[0], nfs);
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let t = Topology::new(1, 2, 1.0, 1.0);
+        let mut acc = TrafficAccount::new(t.resources().len());
+        let p = t.path(NodeId(0), NodeId(1));
+        acc.record(&p, 100.0, 2.5);
+        assert_eq!(acc.total(&p), 500.0);
+    }
+}

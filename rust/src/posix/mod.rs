@@ -1,0 +1,11 @@
+//! POSIX-style data path (paper Requirement 4): datasets are exposed to
+//! training code as plain files. Real mode backs this with actual
+//! directories — one per "node" cache volume plus a bandwidth-throttled
+//! "remote store" directory — so the e2e example moves real bytes through
+//! the same placement/miss logic the simulations model.
+
+pub mod realfs;
+pub mod throttle;
+
+pub use realfs::{HoardMount, LocalMount, Mount, RealCluster, RemoteMount};
+pub use throttle::TokenBucket;

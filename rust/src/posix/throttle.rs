@@ -1,0 +1,93 @@
+//! Token-bucket bandwidth throttling — stands in for the NFS server's
+//! limited read bandwidth (and `tc`-style throttling for the Figure 5
+//! sweep) in the real-mode pipeline.
+
+use std::time::{Duration, Instant};
+
+/// Classic token bucket: `rate` bytes/s refill, `burst` bytes capacity.
+/// `take(n)` blocks (sleeps) until n bytes of budget are available.
+#[derive(Debug)]
+pub struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    pub fn new(rate_bytes_per_s: f64, burst_bytes: f64) -> Self {
+        assert!(rate_bytes_per_s > 0.0);
+        TokenBucket {
+            rate: rate_bytes_per_s,
+            burst: burst_bytes.max(1.0),
+            tokens: burst_bytes.max(1.0),
+            last: Instant::now(),
+        }
+    }
+
+    fn refill(&mut self) {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+    }
+
+    /// Duration we'd need to wait before `n` bytes are available.
+    pub fn wait_needed(&mut self, n: u64) -> Duration {
+        self.refill();
+        let deficit = n as f64 - self.tokens;
+        if deficit <= 0.0 {
+            Duration::ZERO
+        } else {
+            Duration::from_secs_f64(deficit / self.rate)
+        }
+    }
+
+    /// Consume `n` bytes of budget, sleeping as required.
+    pub fn take(&mut self, n: u64) {
+        let wait = self.wait_needed(n);
+        if !wait.is_zero() {
+            std::thread::sleep(wait);
+            self.refill();
+        }
+        self.tokens -= n as f64; // may go briefly negative on rounding
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_passes_instantly() {
+        let mut tb = TokenBucket::new(1000.0, 4096.0);
+        let t0 = Instant::now();
+        tb.take(4096);
+        assert!(t0.elapsed() < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn sustained_rate_enforced() {
+        let mut tb = TokenBucket::new(100_000.0, 1000.0);
+        let t0 = Instant::now();
+        // 11 KB over a 100 KB/s bucket with 1 KB burst ⇒ ≥ ~0.1 s.
+        for _ in 0..11 {
+            tb.take(1000);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt >= 0.08, "took {dt}s, throttle too lax");
+        assert!(dt < 0.5, "took {dt}s, throttle too strict");
+    }
+
+    #[test]
+    fn wait_needed_scales() {
+        let mut tb = TokenBucket::new(1000.0, 10.0);
+        tb.take(10); // drain burst
+        let w = tb.wait_needed(1000);
+        assert!(w >= Duration::from_millis(900), "{w:?}");
+    }
+}

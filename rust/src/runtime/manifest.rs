@@ -1,0 +1,200 @@
+//! Parse `artifacts/manifest.json` — the positional calling convention the
+//! AOT step (python/compile/aot.py) emits alongside the HLO artifacts.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    U8,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "float32" => Dtype::F32,
+            "uint8" => Dtype::U8,
+            "int32" => Dtype::I32,
+            other => bail!("unsupported dtype '{other}'"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::U8 => 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> u64 {
+        self.shape.iter().map(|&d| d as u64).product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.elements() as usize * self.dtype.size_bytes()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .context("spec missing shape")?
+            .iter()
+            .map(|d| d.as_u64().map(|v| v as usize).context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(j.get("dtype").and_then(|d| d.as_str()).context("missing dtype")?)?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One entrypoint's positional signature.
+#[derive(Debug, Clone)]
+pub struct EntrySig {
+    pub doc: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The full artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub batch: usize,
+    pub image: Vec<usize>,
+    pub num_classes: usize,
+    pub lr: f64,
+    pub momentum: f64,
+    pub param_names: Vec<String>,
+    pub param_specs: Vec<TensorSpec>,
+    pub entrypoints: BTreeMap<String, EntrySig>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("manifest is not valid json")?;
+        let batch = j.get("batch").and_then(|v| v.as_u64()).context("batch")? as usize;
+        let image = j
+            .get("image")
+            .and_then(|v| v.as_arr())
+            .context("image")?
+            .iter()
+            .map(|d| d.as_u64().unwrap_or(0) as usize)
+            .collect();
+        let num_classes =
+            j.get("num_classes").and_then(|v| v.as_u64()).context("num_classes")? as usize;
+        let lr = j.get("lr").and_then(|v| v.as_f64()).context("lr")?;
+        let momentum = j.get("momentum").and_then(|v| v.as_f64()).context("momentum")?;
+
+        let mut param_names = vec![];
+        let mut param_specs = vec![];
+        for p in j.get("param_specs").and_then(|v| v.as_arr()).context("param_specs")? {
+            param_names.push(p.get("name").and_then(|n| n.as_str()).context("param name")?.into());
+            param_specs.push(TensorSpec::from_json(p)?);
+        }
+
+        let mut entrypoints = BTreeMap::new();
+        for (name, e) in j.get("entrypoints").and_then(|v| v.as_obj()).context("entrypoints")? {
+            let sig = EntrySig {
+                doc: e.get("doc").and_then(|d| d.as_str()).unwrap_or("").to_string(),
+                inputs: e
+                    .get("inputs")
+                    .and_then(|v| v.as_arr())
+                    .context("inputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+                outputs: e
+                    .get("outputs")
+                    .and_then(|v| v.as_arr())
+                    .context("outputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+            };
+            entrypoints.insert(name.clone(), sig);
+        }
+        Ok(Manifest { batch, image, num_classes, lr, momentum, param_names, param_specs, entrypoints })
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.param_specs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "batch": 64, "image": [32, 32, 3], "num_classes": 10,
+      "lr": 0.05, "momentum": 0.9,
+      "param_specs": [
+        {"name": "w", "shape": [3, 3], "dtype": "float32"},
+        {"name": "b", "shape": [3], "dtype": "float32"}
+      ],
+      "entrypoints": {
+        "f": {"doc": "d",
+              "inputs": [{"shape": [64, 32, 32, 3], "dtype": "uint8"}],
+              "outputs": [{"shape": [], "dtype": "float32"}]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch, 64);
+        assert_eq!(m.param_names, vec!["w", "b"]);
+        assert_eq!(m.num_params(), 2);
+        let f = &m.entrypoints["f"];
+        assert_eq!(f.inputs[0].dtype, Dtype::U8);
+        assert_eq!(f.inputs[0].elements(), 64 * 32 * 32 * 3);
+        assert_eq!(f.outputs[0].elements(), 1); // scalar
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Exercised fully in integration tests; here just tolerate absence.
+        let p = Path::new("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(p).unwrap();
+            assert!(m.entrypoints.contains_key("train_step"));
+            assert_eq!(m.num_params(), 8);
+            let ts = &m.entrypoints["train_step"];
+            assert_eq!(ts.inputs.len(), 2 * 8 + 2);
+            assert_eq!(ts.outputs.len(), 2 * 8 + 1);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        assert!(Dtype::parse("complex64").is_err());
+        let bad = SAMPLE.replace("uint8", "complex64");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn byte_len() {
+        let t = TensorSpec { shape: vec![2, 3], dtype: Dtype::F32 };
+        assert_eq!(t.byte_len(), 24);
+        let t = TensorSpec { shape: vec![], dtype: Dtype::I32 };
+        assert_eq!(t.byte_len(), 4);
+    }
+}

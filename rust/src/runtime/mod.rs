@@ -1,0 +1,141 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the CPU PJRT client, and
+//! executes them from the Rust data path. Python never runs here.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §8).
+
+pub mod manifest;
+pub mod trainer;
+
+pub use manifest::{Dtype, EntrySig, Manifest, TensorSpec};
+pub use trainer::TrainerSession;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// A compiled-artifact registry bound to one PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Load `manifest.json` from `dir` and connect the CPU PJRT client.
+    /// Executables are compiled lazily per entrypoint (`prepare`/`execute`).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let manifest = Manifest::load(&manifest_path)
+            .with_context(|| format!("loading {}", manifest_path.display()))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, dir, executables: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) the named entrypoint from its HLO text.
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        if !self.manifest.entrypoints.contains_key(name) {
+            bail!("entrypoint '{name}' not in manifest");
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an entrypoint. Inputs must match the manifest signature
+    /// (checked); the jax side lowers with `return_tuple=True`, so the
+    /// single tuple output is unpacked into one literal per output spec.
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.prepare(name)?;
+        let sig = &self.manifest.entrypoints[name];
+        if inputs.len() != sig.inputs.len() {
+            bail!("{name}: {} inputs given, signature wants {}", inputs.len(), sig.inputs.len());
+        }
+        for (i, (lit, spec)) in inputs.iter().zip(&sig.inputs).enumerate() {
+            let n = lit.element_count();
+            if n as u64 != spec.elements() {
+                bail!("{name}: input {i} has {n} elements, spec {:?} wants {}", spec, spec.elements());
+            }
+        }
+        let exe = &self.executables[name];
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != sig.outputs.len() {
+            bail!("{name}: got {} outputs, manifest says {}", outs.len(), sig.outputs.len());
+        }
+        Ok(outs)
+    }
+}
+
+/// Build a literal from raw f32 data + dims.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)?)
+}
+
+/// Build a literal from raw u8 data + dims.
+pub fn literal_u8(data: &[u8], dims: &[usize]) -> Result<xla::Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, dims, bytes_of(data))?)
+}
+
+/// Build a literal from i32 data + dims.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)?)
+}
+
+/// Scalar i32 literal (e.g. the init seed).
+pub fn literal_i32_scalar(v: i32) -> Result<xla::Literal> {
+    literal_i32(&[v], &[])
+}
+
+fn bytes_of(data: &[u8]) -> &[u8] {
+    data
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(lit.element_count(), 4);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_roundtrip_u8_i32() {
+        let lit = literal_u8(&[7, 8, 9], &[3]).unwrap();
+        assert_eq!(lit.to_vec::<u8>().unwrap(), vec![7, 8, 9]);
+        let lit = literal_i32(&[-1, 5], &[2]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![-1, 5]);
+    }
+
+    #[test]
+    fn wrong_size_rejected() {
+        assert!(literal_f32(&[1.0], &[2, 2]).is_err());
+    }
+}

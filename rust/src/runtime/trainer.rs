@@ -1,0 +1,120 @@
+//! Training session: owns the model/optimizer state as PJRT literals and
+//! drives the AOT `init` / `train_step` / `predict` entrypoints. This is the
+//! "GPU" of the real-mode pipeline — the consumer Hoard feeds.
+
+use anyhow::{bail, Context, Result};
+
+use super::{literal_i32, literal_i32_scalar, literal_u8, Engine};
+
+pub struct TrainerSession {
+    engine: Engine,
+    /// 8 params followed by 8 momenta, in manifest order.
+    state: Vec<xla::Literal>,
+    pub steps_done: u64,
+}
+
+impl TrainerSession {
+    /// Create a session and initialize parameters with the AOT `init`
+    /// computation (deterministic given `seed`); momenta start at zero.
+    pub fn new(artifacts_dir: &str, seed: i32) -> Result<Self> {
+        let mut engine = Engine::new(artifacts_dir)?;
+        let params = engine.execute("init", &[literal_i32_scalar(seed)?])?;
+        let n = engine.manifest.num_params();
+        if params.len() != n {
+            bail!("init returned {} params, manifest says {n}", params.len());
+        }
+        // Zero momenta with the same shapes.
+        let mut state = params;
+        for i in 0..n {
+            let spec = engine.manifest.param_specs[i].clone();
+            let zeros = vec![0f32; spec.elements() as usize];
+            state.push(super::literal_f32(&zeros, &spec.shape)?);
+        }
+        Ok(TrainerSession { engine, state, steps_done: 0 })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.engine.manifest.batch
+    }
+
+    pub fn image_dims(&self) -> &[usize] {
+        &self.engine.manifest.image
+    }
+
+    /// One SGD-momentum step on a raw uint8 NHWC batch. Returns the loss.
+    pub fn step(&mut self, images_u8: &[u8], labels: &[i32]) -> Result<f32> {
+        let b = self.batch_size();
+        let dims = self.image_dims();
+        let img_elems = b * dims.iter().product::<usize>();
+        if images_u8.len() != img_elems {
+            bail!("batch has {} pixels, want {img_elems}", images_u8.len());
+        }
+        if labels.len() != b {
+            bail!("batch has {} labels, want {b}", labels.len());
+        }
+        let mut full_dims = vec![b];
+        full_dims.extend_from_slice(dims);
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.state.len() + 2);
+        inputs.append(&mut self.state);
+        inputs.push(literal_u8(images_u8, &full_dims)?);
+        inputs.push(literal_i32(labels, &[b])?);
+
+        let mut outs = self.engine.execute("train_step", &inputs)?;
+        let loss = outs
+            .pop()
+            .context("train_step returned nothing")?
+            .to_vec::<f32>()?
+            .first()
+            .copied()
+            .context("empty loss literal")?;
+        self.state = outs; // 8 params + 8 momenta, updated
+        self.steps_done += 1;
+        Ok(loss)
+    }
+
+    /// Inference logits for a raw uint8 NHWC batch: (batch, num_classes)
+    /// row-major.
+    pub fn predict(&mut self, images_u8: &[u8]) -> Result<Vec<f32>> {
+        let b = self.batch_size();
+        let dims = self.image_dims();
+        let mut full_dims = vec![b];
+        full_dims.extend_from_slice(dims);
+        let n = self.engine.manifest.num_params();
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(n + 1);
+        // Clone param literals by serializing through host vectors is
+        // wasteful; instead pass borrowed literals: execute takes Borrow.
+        // Our Engine::execute takes &[Literal], so temporarily move params
+        // out and restore after.
+        let momenta = self.state.split_off(n);
+        inputs.append(&mut self.state);
+        inputs.push(literal_u8(images_u8, &full_dims)?);
+        let result = self.engine.execute("predict", &inputs);
+        // Restore state (params back from inputs, momenta appended).
+        inputs.pop();
+        self.state = inputs;
+        self.state.extend(momenta);
+        let outs = result?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    /// Argmax accuracy of `predict` against labels.
+    pub fn accuracy(&mut self, images_u8: &[u8], labels: &[i32]) -> Result<f64> {
+        let logits = self.predict(images_u8)?;
+        let b = self.batch_size();
+        let c = self.engine.manifest.num_classes;
+        let mut correct = 0;
+        for i in 0..b {
+            let row = &logits[i * c..(i + 1) * c];
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if argmax as i32 == labels[i] {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / b as f64)
+    }
+}

@@ -1,0 +1,279 @@
+//! Storage device models: capacity accounting plus service-rate parameters
+//! consumed by the fluid simulation. Presets match the paper's testbed
+//! (Table 2: Samsung NVMe SSD 960 Pro, 4 × 512 GB per node, 2 used for the
+//! Hoard cache).
+
+use crate::util::fmt::{GB, MB};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    /// PCIe NVMe flash (960 Pro class).
+    Nvme,
+    /// SATA SSD.
+    Ssd,
+    /// 7.2k spinning disk.
+    Hdd,
+    /// DRAM-backed (pagepool / buffer cache).
+    Ram,
+}
+
+impl DeviceKind {
+    /// Sequential read bandwidth, bytes/s.
+    pub fn read_bw(self) -> f64 {
+        match self {
+            DeviceKind::Nvme => 3.2e9, // 960 Pro datasheet ~3.2 GB/s
+            DeviceKind::Ssd => 0.55e9,
+            DeviceKind::Hdd => 0.18e9,
+            DeviceKind::Ram => 20e9,
+        }
+    }
+
+    /// Sequential write bandwidth, bytes/s.
+    pub fn write_bw(self) -> f64 {
+        match self {
+            DeviceKind::Nvme => 1.8e9,
+            DeviceKind::Ssd => 0.50e9,
+            DeviceKind::Hdd => 0.16e9,
+            DeviceKind::Ram => 20e9,
+        }
+    }
+
+    /// Random-access degradation factor for small-file reads (the DL
+    /// training pattern: ~112 KB images in random order). NVMe barely
+    /// cares; spinning disks collapse.
+    pub fn random_read_factor(self) -> f64 {
+        match self {
+            DeviceKind::Nvme => 0.85,
+            DeviceKind::Ssd => 0.75,
+            DeviceKind::Hdd => 0.15,
+            DeviceKind::Ram => 1.0,
+        }
+    }
+}
+
+/// A device with capacity accounting.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub kind: DeviceKind,
+    pub capacity: u64,
+    pub used: u64,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum StorageError {
+    #[error("device full: need {need} bytes, {free} free")]
+    Full { need: u64, free: u64 },
+    #[error("releasing {release} bytes but only {used} used")]
+    Underflow { release: u64, used: u64 },
+}
+
+impl Device {
+    pub fn new(kind: DeviceKind, capacity: u64) -> Self {
+        Device { kind, capacity, used: 0 }
+    }
+
+    /// Paper cache device: one 512 GB 960 Pro.
+    pub fn nvme_960pro() -> Self {
+        Device::new(DeviceKind::Nvme, 512 * GB)
+    }
+
+    pub fn free(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    pub fn allocate(&mut self, bytes: u64) -> Result<(), StorageError> {
+        if bytes > self.free() {
+            return Err(StorageError::Full { need: bytes, free: self.free() });
+        }
+        self.used += bytes;
+        Ok(())
+    }
+
+    pub fn release(&mut self, bytes: u64) -> Result<(), StorageError> {
+        if bytes > self.used {
+            return Err(StorageError::Underflow { release: bytes, used: self.used });
+        }
+        self.used -= bytes;
+        Ok(())
+    }
+
+    /// Effective read bandwidth for the DL access pattern.
+    pub fn effective_read_bw(&self) -> f64 {
+        self.kind.read_bw() * self.kind.random_read_factor()
+    }
+}
+
+/// A node's cache volume: several devices treated as one striped pool
+/// (Spectrum Scale stripes across local NSDs; 2 NVMe per node in Table 2).
+#[derive(Debug, Clone)]
+pub struct Volume {
+    pub devices: Vec<Device>,
+}
+
+impl Volume {
+    pub fn new(devices: Vec<Device>) -> Self {
+        Volume { devices }
+    }
+
+    /// The paper's per-node cache: 2 × 512 GB NVMe.
+    pub fn paper_cache_volume() -> Self {
+        Volume::new(vec![Device::nvme_960pro(), Device::nvme_960pro()])
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.devices.iter().map(|d| d.capacity).sum()
+    }
+
+    pub fn used(&self) -> u64 {
+        self.devices.iter().map(|d| d.used).sum()
+    }
+
+    pub fn free(&self) -> u64 {
+        self.capacity() - self.used()
+    }
+
+    /// Aggregate effective read bandwidth (devices striped ⇒ additive).
+    pub fn read_bw(&self) -> f64 {
+        self.devices.iter().map(|d| d.effective_read_bw()).sum()
+    }
+
+    pub fn write_bw(&self) -> f64 {
+        self.devices.iter().map(|d| d.kind.write_bw()).sum()
+    }
+
+    /// Spread an allocation across devices proportionally to free space.
+    pub fn allocate(&mut self, bytes: u64) -> Result<(), StorageError> {
+        if bytes > self.free() {
+            return Err(StorageError::Full { need: bytes, free: self.free() });
+        }
+        let mut remaining = bytes;
+        let n = self.devices.len();
+        for (i, d) in self.devices.iter_mut().enumerate() {
+            let share = if i == n - 1 { remaining } else { (remaining / (n - i) as u64).min(d.free()) };
+            let share = share.min(d.free()).min(remaining);
+            d.allocate(share).expect("bounded by free");
+            remaining -= share;
+        }
+        if remaining > 0 {
+            // Pack leftovers anywhere with room.
+            for d in &mut self.devices {
+                let take = remaining.min(d.free());
+                d.allocate(take).expect("bounded by free");
+                remaining -= take;
+                if remaining == 0 {
+                    break;
+                }
+            }
+        }
+        debug_assert_eq!(remaining, 0);
+        Ok(())
+    }
+
+    pub fn release(&mut self, bytes: u64) -> Result<(), StorageError> {
+        if bytes > self.used() {
+            return Err(StorageError::Underflow { release: bytes, used: self.used() });
+        }
+        let mut remaining = bytes;
+        for d in &mut self.devices {
+            let take = remaining.min(d.used);
+            d.release(take).expect("bounded by used");
+            remaining -= take;
+            if remaining == 0 {
+                break;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[allow(dead_code)]
+const _SMALL_FILE: u64 = 112 * MB / 1000; // ~112 KB avg ImageNet JPEG
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fmt::GB;
+
+    #[test]
+    fn device_allocate_release() {
+        let mut d = Device::new(DeviceKind::Nvme, 100);
+        d.allocate(60).unwrap();
+        assert_eq!(d.free(), 40);
+        assert!(matches!(d.allocate(50), Err(StorageError::Full { .. })));
+        d.release(60).unwrap();
+        assert_eq!(d.used, 0);
+        assert!(matches!(d.release(1), Err(StorageError::Underflow { .. })));
+    }
+
+    #[test]
+    fn paper_volume_capacity() {
+        let v = Volume::paper_cache_volume();
+        assert_eq!(v.capacity(), 1024 * GB); // 1 TB cache per node
+        assert!(v.read_bw() > 5e9); // 2 NVMe striped
+    }
+
+    #[test]
+    fn volume_spreads_and_releases() {
+        let mut v = Volume::new(vec![
+            Device::new(DeviceKind::Nvme, 100),
+            Device::new(DeviceKind::Nvme, 100),
+        ]);
+        v.allocate(150).unwrap();
+        assert_eq!(v.used(), 150);
+        assert!(v.devices.iter().all(|d| d.used > 0), "should stripe: {v:?}");
+        v.release(150).unwrap();
+        assert_eq!(v.used(), 0);
+    }
+
+    #[test]
+    fn volume_full() {
+        let mut v = Volume::new(vec![Device::new(DeviceKind::Ssd, 10)]);
+        assert!(v.allocate(11).is_err());
+        v.allocate(10).unwrap();
+        assert_eq!(v.free(), 0);
+    }
+
+    #[test]
+    fn hdd_random_read_collapses() {
+        let hdd = Device::new(DeviceKind::Hdd, GB);
+        let nvme = Device::new(DeviceKind::Nvme, GB);
+        assert!(hdd.effective_read_bw() < 0.05 * nvme.effective_read_bw());
+    }
+
+    #[test]
+    fn prop_volume_alloc_release_conserves() {
+        use crate::util::{prop::forall, Rng};
+        forall(
+            200,
+            |rng: &mut Rng| {
+                let ops: Vec<(bool, u64)> = (0..rng.gen_range(20) + 1)
+                    .map(|_| (rng.bool(0.6), rng.gen_range(64) + 1))
+                    .collect();
+                ops
+            },
+            |ops| {
+                let mut v = Volume::new(vec![
+                    Device::new(DeviceKind::Nvme, 200),
+                    Device::new(DeviceKind::Nvme, 100),
+                ]);
+                let mut expect: u64 = 0;
+                for &(alloc, n) in ops {
+                    if alloc {
+                        if v.allocate(n).is_ok() {
+                            expect += n;
+                        }
+                    } else if v.release(n).is_ok() {
+                        expect -= n;
+                    }
+                    if v.used() != expect {
+                        return Err(format!("used {} != expected {}", v.used(), expect));
+                    }
+                    if v.used() > v.capacity() {
+                        return Err("over capacity".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

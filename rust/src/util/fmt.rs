@@ -1,0 +1,133 @@
+//! Human-readable byte/throughput/duration formatting and parsing.
+
+/// 2^k byte constants.
+pub const KIB: u64 = 1 << 10;
+pub const MIB: u64 = 1 << 20;
+pub const GIB: u64 = 1 << 30;
+pub const TIB: u64 = 1 << 40;
+
+/// Decimal (storage vendor / network) constants.
+pub const KB: u64 = 1_000;
+pub const MB: u64 = 1_000_000;
+pub const GB: u64 = 1_000_000_000;
+pub const TB: u64 = 1_000_000_000_000;
+
+/// "1.34 GiB"-style rendering of a byte count.
+pub fn bytes(n: u64) -> String {
+    let nf = n as f64;
+    if n >= TIB {
+        format!("{:.2} TiB", nf / TIB as f64)
+    } else if n >= GIB {
+        format!("{:.2} GiB", nf / GIB as f64)
+    } else if n >= MIB {
+        format!("{:.2} MiB", nf / MIB as f64)
+    } else if n >= KIB {
+        format!("{:.2} KiB", nf / KIB as f64)
+    } else {
+        format!("{n} B")
+    }
+}
+
+/// Bytes/second as "x.xx GB/s" (decimal, matching the paper's units).
+pub fn rate(bytes_per_s: f64) -> String {
+    if bytes_per_s >= GB as f64 {
+        format!("{:.2} GB/s", bytes_per_s / GB as f64)
+    } else if bytes_per_s >= MB as f64 {
+        format!("{:.1} MB/s", bytes_per_s / MB as f64)
+    } else if bytes_per_s >= KB as f64 {
+        format!("{:.1} KB/s", bytes_per_s / KB as f64)
+    } else {
+        format!("{bytes_per_s:.0} B/s")
+    }
+}
+
+/// Bits/second as "x.xx Gb/s" (network convention, Table 4/5 units).
+pub fn bitrate(bits_per_s: f64) -> String {
+    if bits_per_s >= 1e9 {
+        format!("{:.2} Gb/s", bits_per_s / 1e9)
+    } else if bits_per_s >= 1e6 {
+        format!("{:.1} Mb/s", bits_per_s / 1e6)
+    } else {
+        format!("{:.0} b/s", bits_per_s)
+    }
+}
+
+/// Seconds as "1h 23m 45s" / "12m 3s" / "4.20s".
+pub fn duration(secs: f64) -> String {
+    if secs >= 3600.0 {
+        let h = (secs / 3600.0).floor();
+        let m = ((secs - h * 3600.0) / 60.0).floor();
+        format!("{h:.0}h {m:.0}m")
+    } else if secs >= 60.0 {
+        let m = (secs / 60.0).floor();
+        format!("{m:.0}m {:.0}s", secs - m * 60.0)
+    } else {
+        format!("{secs:.2}s")
+    }
+}
+
+/// Parse "150GB", "1.5 GiB", "512MB", "4096" (bytes) etc.
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let split = s
+        .find(|c: char| !(c.is_ascii_digit() || c == '.'))
+        .unwrap_or(s.len());
+    if split == 0 {
+        return None;
+    }
+    let (num, unit) = s.split_at(split);
+    let num: f64 = num.parse().ok()?;
+    let mult = match unit.trim().to_ascii_lowercase().as_str() {
+        "b" | "" => 1,
+        "kb" => KB,
+        "mb" => MB,
+        "gb" => GB,
+        "tb" => TB,
+        "kib" => KIB,
+        "mib" => MIB,
+        "gib" => GIB,
+        "tib" => TIB,
+        _ => return None,
+    };
+    Some((num * mult as f64).round() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_rendering() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(2 * KIB), "2.00 KiB");
+        assert_eq!(bytes(3 * GIB + GIB / 2), "3.50 GiB");
+    }
+
+    #[test]
+    fn rate_rendering() {
+        assert_eq!(rate(1.05e9), "1.05 GB/s");
+        assert_eq!(rate(616e6), "616.0 MB/s");
+    }
+
+    #[test]
+    fn bitrate_rendering() {
+        assert_eq!(bitrate(2.7e9), "2.70 Gb/s");
+    }
+
+    #[test]
+    fn duration_rendering() {
+        assert_eq!(duration(14.9 * 3600.0), "14h 54m");
+        assert_eq!(duration(150.0), "2m 30s");
+        assert_eq!(duration(4.2), "4.20s");
+    }
+
+    #[test]
+    fn parse_roundtrips() {
+        assert_eq!(parse_bytes("150GB"), Some(150 * GB));
+        assert_eq!(parse_bytes("1.5 GiB"), Some(GIB + GIB / 2));
+        assert_eq!(parse_bytes("4096"), Some(4096));
+        assert_eq!(parse_bytes("512MB"), Some(512 * MB));
+        assert_eq!(parse_bytes("xyz"), None);
+        assert_eq!(parse_bytes(""), None);
+    }
+}

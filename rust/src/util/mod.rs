@@ -1,0 +1,11 @@
+//! Shared utilities: deterministic RNG, JSON codec, formatting, and the
+//! property-testing micro-harness. All hand-rolled because the offline build
+//! has no access to rand/serde/proptest (DESIGN.md §8).
+
+pub mod fmt;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,83 @@
+//! Training workload models: dataset specs, per-epoch random sampling, and
+//! the DL-job descriptions the simulations and the real-mode driver share.
+
+pub mod datagen;
+pub mod sampler;
+pub mod trainsim;
+
+pub use sampler::EpochSampler;
+pub use trainsim::{JobOutcome, ReadMode, TrainJobSim, TrainSim};
+
+use crate::cluster::GpuDemand;
+use crate::util::fmt::GB;
+
+/// A training dataset as the storage layer sees it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetSpec {
+    pub name: String,
+    pub num_items: u64,
+    pub total_bytes: u64,
+}
+
+impl DatasetSpec {
+    pub fn new(name: impl Into<String>, num_items: u64, total_bytes: u64) -> Self {
+        assert!(num_items > 0, "dataset must have items");
+        DatasetSpec { name: name.into(), num_items, total_bytes }
+    }
+
+    /// The paper's workload: ImageNet ILSVRC-2012 train split, ~144 GB on
+    /// disk, 1.28 M images ⇒ ~112.5 KB average.
+    pub fn imagenet() -> Self {
+        DatasetSpec::new("imagenet", 1_281_167, 144 * GB)
+    }
+
+    pub fn avg_item_bytes(&self) -> f64 {
+        self.total_bytes as f64 / self.num_items as f64
+    }
+}
+
+/// A DL training job description (what a `DlJob` custom resource carries).
+#[derive(Debug, Clone)]
+pub struct TrainJobSpec {
+    pub name: String,
+    pub dataset: DatasetSpec,
+    pub demand: GpuDemand,
+    pub epochs: u32,
+}
+
+impl TrainJobSpec {
+    /// The paper's evaluation job: AlexNet BS=1536 on 4 P100s over ImageNet.
+    pub fn paper_job(name: impl Into<String>, epochs: u32) -> Self {
+        TrainJobSpec {
+            name: name.into(),
+            dataset: DatasetSpec::imagenet(),
+            demand: GpuDemand::paper_alexnet_job(),
+            epochs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imagenet_item_size() {
+        let ds = DatasetSpec::imagenet();
+        let avg = ds.avg_item_bytes();
+        assert!((avg - 120e3).abs() < 10e3, "avg = {avg}"); // ~112.5 KB (GiB-based)
+    }
+
+    #[test]
+    #[should_panic(expected = "dataset must have items")]
+    fn zero_items_rejected() {
+        DatasetSpec::new("empty", 0, 0);
+    }
+
+    #[test]
+    fn paper_job_shape() {
+        let j = TrainJobSpec::paper_job("j0", 90);
+        assert_eq!(j.demand.gpus, 4);
+        assert_eq!(j.epochs, 90);
+    }
+}

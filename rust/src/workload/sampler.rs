@@ -1,0 +1,138 @@
+//! Per-epoch random-permutation sampling — the DL access pattern that
+//! motivates dataset-granular caching (paper §2, Requirement 2): every epoch
+//! touches the *entire* dataset exactly once, in fresh random order.
+
+use crate::util::Rng;
+
+/// Iterates item indices epoch by epoch; each epoch is a fresh Fisher–Yates
+/// permutation of `0..n`.
+#[derive(Debug)]
+pub struct EpochSampler {
+    n: u64,
+    order: Vec<u64>,
+    pos: usize,
+    pub epoch: u32,
+    rng: Rng,
+}
+
+impl EpochSampler {
+    pub fn new(n: u64, seed: u64) -> Self {
+        assert!(n > 0);
+        let mut s = EpochSampler {
+            n,
+            order: (0..n).collect(),
+            pos: 0,
+            epoch: 0,
+            rng: Rng::new(seed),
+        };
+        s.reshuffle();
+        s
+    }
+
+    fn reshuffle(&mut self) {
+        self.rng.shuffle(&mut self.order);
+        self.pos = 0;
+    }
+
+    /// Next item index; rolls into the next epoch transparently and reports
+    /// whether this call crossed an epoch boundary.
+    pub fn next(&mut self) -> (u64, bool) {
+        if self.pos == self.order.len() {
+            self.epoch += 1;
+            self.reshuffle();
+            let item = self.order[self.pos];
+            self.pos += 1;
+            return (item, true);
+        }
+        let item = self.order[self.pos];
+        self.pos += 1;
+        (item, false)
+    }
+
+    /// Next `k` items as a batch (may cross an epoch boundary).
+    pub fn next_batch(&mut self, k: usize) -> Vec<u64> {
+        (0..k).map(|_| self.next().0).collect()
+    }
+
+    pub fn items_per_epoch(&self) -> u64 {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn epoch_covers_every_item_once() {
+        let mut s = EpochSampler::new(100, 1);
+        let items: HashSet<u64> = (0..100).map(|_| s.next().0).collect();
+        assert_eq!(items.len(), 100);
+    }
+
+    #[test]
+    fn epoch_boundary_flag() {
+        let mut s = EpochSampler::new(10, 2);
+        for _ in 0..10 {
+            let (_, boundary) = s.next();
+            assert!(!boundary);
+        }
+        let (_, boundary) = s.next();
+        assert!(boundary);
+        assert_eq!(s.epoch, 1);
+    }
+
+    #[test]
+    fn epochs_are_different_permutations() {
+        let mut s = EpochSampler::new(50, 3);
+        let e0: Vec<u64> = (0..50).map(|_| s.next().0).collect();
+        let e1: Vec<u64> = (0..50).map(|_| s.next().0).collect();
+        assert_ne!(e0, e1);
+        let h0: HashSet<_> = e0.iter().collect();
+        let h1: HashSet<_> = e1.iter().collect();
+        assert_eq!(h0, h1);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = EpochSampler::new(20, 9);
+        let mut b = EpochSampler::new(20, 9);
+        for _ in 0..60 {
+            assert_eq!(a.next(), b.next());
+        }
+    }
+
+    #[test]
+    fn batch_spans_boundary() {
+        let mut s = EpochSampler::new(8, 4);
+        let batch = s.next_batch(12);
+        assert_eq!(batch.len(), 12);
+        assert_eq!(s.epoch, 1);
+    }
+
+    #[test]
+    fn prop_every_epoch_is_permutation() {
+        use crate::util::{prop::forall, Rng};
+        forall(
+            50,
+            |rng: &mut Rng| (1 + rng.gen_range(200), rng.next_u64()),
+            |&(n, seed)| {
+                let mut s = EpochSampler::new(n, seed);
+                for _ in 0..3 {
+                    let mut seen = HashSet::new();
+                    for _ in 0..n {
+                        let (item, _) = s.next();
+                        if item >= n {
+                            return Err(format!("item {item} out of range {n}"));
+                        }
+                        if !seen.insert(item) {
+                            return Err(format!("item {item} repeated within epoch"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,118 @@
+//! Integration tests for the REST API over real TCP: concurrent tenants,
+//! error paths, stats consistency.
+
+use std::sync::{Arc, Mutex};
+
+use hoard::api::{request, serve};
+use hoard::coordinator::Hoard;
+use hoard::util::Json;
+
+fn server() -> (hoard::api::Server, std::net::SocketAddr) {
+    let hoard = Arc::new(Mutex::new(Hoard::paper_testbed()));
+    let srv = serve("127.0.0.1:0", hoard).unwrap();
+    let addr = srv.addr;
+    (srv, addr)
+}
+
+#[test]
+fn concurrent_tenants_register_datasets() {
+    let (_srv, addr) = server();
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let body = format!(
+                    r#"{{"name":"ds{i}","url":"nfs://s/ds{i}","total_bytes":1000000,
+                        "num_items":100,"prefetch":true}}"#
+                );
+                request(addr, "POST", "/api/v1/datasets", &body).unwrap().0
+            })
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), 201);
+    }
+    let (_, body) = request(addr, "GET", "/api/v1/datasets", "").unwrap();
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("items").unwrap().as_arr().unwrap().len(), 6);
+}
+
+#[test]
+fn stats_reflect_cache_state() {
+    let (_srv, addr) = server();
+    let (_, before) = request(addr, "GET", "/api/v1/stats", "").unwrap();
+    let jb = Json::parse(&before).unwrap();
+    assert_eq!(jb.get("cache_resident_bytes").unwrap().as_f64(), Some(0.0));
+
+    request(
+        addr,
+        "POST",
+        "/api/v1/datasets",
+        r#"{"name":"d","url":"nfs://s/d","total_bytes":4000000000,"num_items":1000,"prefetch":true}"#,
+    )
+    .unwrap();
+    let (_, after) = request(addr, "GET", "/api/v1/stats", "").unwrap();
+    let ja = Json::parse(&after).unwrap();
+    assert_eq!(ja.get("cache_resident_bytes").unwrap().as_f64(), Some(4000000000.0));
+    // Striped over 4 nodes: each holds ~1 GB (±1 chunk of 64 MiB).
+    for n in ja.get("nodes").unwrap().as_arr().unwrap() {
+        let used = n.get("cache_used").unwrap().as_f64().unwrap();
+        assert!((used - 1e9).abs() <= (64 << 20) as f64, "used {used}");
+    }
+}
+
+#[test]
+fn error_paths() {
+    let (_srv, addr) = server();
+    // Invalid URL scheme syntax.
+    let (st, _) = request(
+        addr,
+        "POST",
+        "/api/v1/datasets",
+        r#"{"name":"x","url":"not-a-url","total_bytes":1,"num_items":1}"#,
+    )
+    .unwrap();
+    assert_eq!(st, 400);
+    // Missing fields.
+    let (st, _) = request(addr, "POST", "/api/v1/jobs", r#"{"name":"nojob"}"#).unwrap();
+    assert_eq!(st, 400);
+    // Unknown job completion.
+    let (st, _) = request(addr, "POST", "/api/v1/jobs/ghost/complete", "").unwrap();
+    assert_eq!(st, 404);
+    // Duplicate job.
+    request(
+        addr,
+        "POST",
+        "/api/v1/datasets",
+        r#"{"name":"d","url":"nfs://s/d","total_bytes":1000,"num_items":10,"prefetch":true}"#,
+    )
+    .unwrap();
+    let job = r#"{"name":"j","dataset":"d","gpus":4,"replicas":1,"epochs":1}"#;
+    assert_eq!(request(addr, "POST", "/api/v1/jobs", job).unwrap().0, 201);
+    assert_eq!(request(addr, "POST", "/api/v1/jobs", job).unwrap().0, 409);
+}
+
+#[test]
+fn full_tenant_workflow_twice_reuses_cache() {
+    let (_srv, addr) = server();
+    request(
+        addr,
+        "POST",
+        "/api/v1/datasets",
+        r#"{"name":"d","url":"nfs://s/d","total_bytes":8000000000,"num_items":1000,"prefetch":true}"#,
+    )
+    .unwrap();
+    for round in 0..2 {
+        let name = format!("run{round}");
+        let body =
+            format!(r#"{{"name":"{name}","dataset":"d","gpus":4,"replicas":1,"epochs":5}}"#);
+        let (st, resp) = request(addr, "POST", "/api/v1/jobs", &body).unwrap();
+        assert_eq!(st, 201, "{resp}");
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("phase").unwrap().as_str(), Some("Running"));
+        request(addr, "POST", &format!("/api/v1/jobs/{name}/complete"), "").unwrap();
+    }
+    // Dataset remained resident across runs.
+    let (_, body) = request(addr, "GET", "/api/v1/datasets/d", "").unwrap();
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("resident_bytes").unwrap().as_f64(), Some(8000000000.0));
+}

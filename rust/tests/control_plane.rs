@@ -1,0 +1,263 @@
+//! Integration tests over the full control plane: datasets + jobs +
+//! scheduler + provisioner + cache, including failure injection and
+//! rack-aware placement on a multi-rack cluster.
+
+use hoard::cache::EvictionPolicy;
+use hoard::cluster::NodeSpec;
+use hoard::config::ClusterConfig;
+use hoard::coordinator::{job_controller, Hoard};
+use hoard::k8s::{Dataset, DatasetPhase, DlJob, JobPhase, ObjectMeta, PodPhase};
+use hoard::netsim::{NodeId, Topology};
+
+fn dataset(name: &str, bytes: u64, prefetch: bool) -> Dataset {
+    Dataset {
+        meta: ObjectMeta::named(name),
+        url: format!("nfs://storage1/{name}"),
+        total_bytes: bytes,
+        num_items: 1_000_000,
+        prefetch,
+        stripe_width: 0,
+        status: DatasetPhase::Pending,
+    }
+}
+
+fn dljob(name: &str, ds: &str, replicas: u32, gpus: u32, epochs: u32) -> DlJob {
+    DlJob {
+        meta: ObjectMeta::named(name),
+        dataset: ds.into(),
+        gpus,
+        replicas,
+        container_image: "tf-cnn-benchmarks".into(),
+        mount_path: "/data".into(),
+        epochs,
+        status: JobPhase::Pending,
+    }
+}
+
+#[test]
+fn full_lifecycle_with_pvc_binding() {
+    let mut h = Hoard::paper_testbed();
+    h.datasets.create(dataset("imagenet", 144_000_000_000, true)).unwrap();
+    h.jobs.create(dljob("j0", "imagenet", 1, 4, 2)).unwrap();
+    h.reconcile_to_fixpoint().unwrap();
+
+    assert_eq!(h.datasets.get("imagenet").unwrap().status, DatasetPhase::Ready);
+    assert_eq!(h.jobs.get("j0").unwrap().status, JobPhase::Running);
+    assert!(h.pvcs.get("pvc-imagenet").unwrap().bound);
+    assert_eq!(h.pods.get("j0-0").unwrap().phase, PodPhase::Running);
+
+    job_controller::complete_job(&mut h, "j0").unwrap();
+    h.reconcile_to_fixpoint().unwrap();
+    assert_eq!(h.jobs.get("j0").unwrap().status, JobPhase::Succeeded);
+    // Data outlives the job; deleting the resource evicts it.
+    assert!(h.cache.registry.get("imagenet").unwrap().stripe.is_some());
+    h.datasets.delete("imagenet").unwrap();
+    h.reconcile_to_fixpoint().unwrap();
+    assert!(h.cache.registry.get("imagenet").is_none());
+    assert!(h.pvcs.get("pvc-imagenet").is_none(), "orphan PVC must be GC'd");
+}
+
+#[test]
+fn distributed_job_multiple_replicas_colocated() {
+    let mut h = Hoard::paper_testbed();
+    h.datasets.create(dataset("d", 16_000_000_000, true)).unwrap();
+    h.jobs.create(dljob("dist", "d", 4, 4, 1)).unwrap();
+    h.reconcile_to_fixpoint().unwrap();
+    assert_eq!(h.jobs.get("dist").unwrap().status, JobPhase::Running);
+    let mut nodes: Vec<usize> = (0..4)
+        .map(|i| h.pods.get(&format!("dist-{i}")).unwrap().assigned_node.unwrap())
+        .collect();
+    nodes.sort_unstable();
+    assert_eq!(nodes, vec![0, 1, 2, 3], "4×4-GPU replicas spread over all nodes");
+    // Every replica node holds a stripe (node-local reads).
+    let rec = h.cache.registry.get("d").unwrap();
+    for n in nodes {
+        assert!(rec.stripe.as_ref().unwrap().contains(NodeId(n)));
+    }
+}
+
+#[test]
+fn rack_aware_cache_and_compute_placement() {
+    // 2 racks × 4 nodes: the dataset packs into one rack and the job
+    // follows it there.
+    let cfg = ClusterConfig::table5_datacenter(2, 4);
+    let mut h = cfg.build();
+    h.datasets.create(dataset("d", 100_000_000_000, true)).unwrap();
+    h.jobs.create(dljob("j", "d", 2, 4, 1)).unwrap();
+    h.reconcile_to_fixpoint().unwrap();
+
+    let rec = h.cache.registry.get("d").unwrap();
+    let stripe_racks: std::collections::HashSet<_> = rec
+        .stripe
+        .as_ref()
+        .unwrap()
+        .nodes()
+        .iter()
+        .map(|&n| h.topology.rack_of(n))
+        .collect();
+    assert_eq!(stripe_racks.len(), 1, "stripes pack one rack");
+    for i in 0..2 {
+        let node = h.pods.get(&format!("j-{i}")).unwrap().assigned_node.unwrap();
+        assert!(
+            rec.stripe.as_ref().unwrap().contains(NodeId(node)),
+            "replica {i} must be node-local"
+        );
+    }
+}
+
+#[test]
+fn job_survives_dataset_arriving_late() {
+    let mut h = Hoard::paper_testbed();
+    h.jobs.create(dljob("early", "late-ds", 1, 4, 1)).unwrap();
+    h.reconcile_to_fixpoint().unwrap();
+    assert_eq!(h.jobs.get("early").unwrap().status, JobPhase::Pending);
+    h.datasets.create(dataset("late-ds", 1_000_000_000, true)).unwrap();
+    h.reconcile_to_fixpoint().unwrap();
+    assert_eq!(h.jobs.get("early").unwrap().status, JobPhase::Running);
+}
+
+#[test]
+fn failure_injection_oversized_dataset_and_gpu_exhaustion() {
+    let mut h = Hoard::paper_testbed();
+    // 5 TB > 4 TB aggregate.
+    h.datasets.create(dataset("huge", 5_000_000_000_000, true)).unwrap();
+    h.reconcile_to_fixpoint().unwrap();
+    assert_eq!(h.datasets.get("huge").unwrap().status, DatasetPhase::Failed);
+
+    // A job against the failed dataset stays pending (no stripe to co-locate
+    // against), never crashes the control plane.
+    h.jobs.create(dljob("doomed", "huge", 1, 4, 1)).unwrap();
+    h.reconcile_to_fixpoint().unwrap();
+    assert_eq!(h.jobs.get("doomed").unwrap().status, JobPhase::Pending);
+
+    // GPU exhaustion: 16 GPUs total; a 5th 4-GPU job must fail cleanly.
+    h.datasets.create(dataset("ok", 1_000_000_000, true)).unwrap();
+    h.reconcile_to_fixpoint().unwrap();
+    for i in 0..4 {
+        h.jobs.create(dljob(&format!("g{i}"), "ok", 1, 4, 1)).unwrap();
+    }
+    h.reconcile_to_fixpoint().unwrap();
+    h.jobs.create(dljob("g-extra", "ok", 1, 4, 1)).unwrap();
+    h.reconcile_to_fixpoint().unwrap();
+    assert!(matches!(h.jobs.get("g-extra").unwrap().status, JobPhase::Failed(_)));
+    // Completing one frees capacity for a retry.
+    job_controller::complete_job(&mut h, "g0").unwrap();
+    h.jobs.create(dljob("g-retry", "ok", 1, 4, 1)).unwrap();
+    h.reconcile_to_fixpoint().unwrap();
+    assert_eq!(h.jobs.get("g-retry").unwrap().status, JobPhase::Running);
+}
+
+#[test]
+fn space_sharing_multi_tenant_gpus() {
+    // The §1 motivating problem: space-shared nodes. Two 2-GPU jobs land on
+    // one node; both datasets fit because the cache is striped, not
+    // replicated per job.
+    let mut h = Hoard::paper_testbed();
+    h.datasets.create(dataset("d1", 200_000_000_000, true)).unwrap();
+    h.datasets.create(dataset("d2", 200_000_000_000, true)).unwrap();
+    h.jobs.create(dljob("t1", "d1", 1, 2, 1)).unwrap();
+    h.jobs.create(dljob("t2", "d2", 1, 2, 1)).unwrap();
+    h.reconcile_to_fixpoint().unwrap();
+    assert_eq!(h.jobs.get("t1").unwrap().status, JobPhase::Running);
+    assert_eq!(h.jobs.get("t2").unwrap().status, JobPhase::Running);
+    // Both datasets resident simultaneously (would need 400 GB/node if
+    // replicated; striped they take 50 GB/node each).
+    assert_eq!(h.cache.registry.resident_bytes(), 400_000_000_000);
+}
+
+#[test]
+fn reconcile_is_idempotent_at_fixpoint() {
+    let mut h = Hoard::paper_testbed();
+    h.datasets.create(dataset("d", 1_000_000_000, true)).unwrap();
+    h.jobs.create(dljob("j", "d", 1, 4, 1)).unwrap();
+    let ticks = h.reconcile_to_fixpoint().unwrap();
+    assert!(ticks > 0);
+    // Further reconciles change nothing.
+    let (dr, jr, pr) = (h.datasets.revision(), h.jobs.revision(), h.pods.revision());
+    for _ in 0..5 {
+        h.reconcile().unwrap();
+    }
+    assert_eq!((dr, jr, pr), (h.datasets.revision(), h.jobs.revision(), h.pods.revision()));
+}
+
+#[test]
+fn cache_node_failure_triggers_replacement() {
+    let mut h = Hoard::paper_testbed();
+    h.datasets.create(dataset("d", 100_000_000_000, true)).unwrap();
+    h.reconcile_to_fixpoint().unwrap();
+    assert_eq!(h.datasets.get("d").unwrap().status, DatasetPhase::Ready);
+    assert_eq!(h.cache.registry.get("d").unwrap().stripe.as_ref().unwrap().width(), 4);
+
+    // Node 2's cache dies.
+    let lost = h.cache.fail_node(NodeId(2));
+    assert_eq!(lost, vec!["d".to_string()]);
+    assert!(h.cache.registry.get("d").unwrap().stripe.is_none());
+
+    // Repair loop: re-placed on the 3 healthy nodes, re-fetched.
+    h.reconcile_to_fixpoint().unwrap();
+    let rec = h.cache.registry.get("d").unwrap();
+    let stripe = rec.stripe.as_ref().expect("re-placed");
+    assert_eq!(stripe.width(), 3);
+    assert!(!stripe.contains(NodeId(2)));
+    assert_eq!(h.datasets.get("d").unwrap().status, DatasetPhase::Ready);
+    // No capacity leaked on the failed node.
+    assert_eq!(h.cache.node_used(NodeId(2)), 0);
+
+    // Recovery: the node is eligible again for the next dataset.
+    h.cache.recover_node(NodeId(2));
+    h.datasets.create(dataset("d2", 100_000_000_000, true)).unwrap();
+    h.reconcile_to_fixpoint().unwrap();
+    assert_eq!(h.datasets.get("d2").unwrap().status, DatasetPhase::Ready);
+}
+
+#[test]
+fn node_failure_with_running_job_repairs_under_pin() {
+    let mut h = Hoard::paper_testbed();
+    h.datasets.create(dataset("d", 50_000_000_000, true)).unwrap();
+    h.jobs.create(dljob("j", "d", 1, 4, 5)).unwrap();
+    h.reconcile_to_fixpoint().unwrap();
+    assert_eq!(h.jobs.get("j").unwrap().status, JobPhase::Running);
+
+    h.cache.fail_node(NodeId(3));
+    h.reconcile_to_fixpoint().unwrap();
+    // Dataset re-placed while still pinned by the running job.
+    let rec = h.cache.registry.get("d").unwrap();
+    assert_eq!(rec.pin_count, 1);
+    assert!(rec.stripe.is_some());
+    assert!(!rec.stripe.as_ref().unwrap().contains(NodeId(3)));
+    // The job keeps running and completes normally.
+    job_controller::complete_job(&mut h, "j").unwrap();
+    assert_eq!(h.jobs.get("j").unwrap().status, JobPhase::Succeeded);
+}
+
+#[test]
+fn total_failure_marks_dataset_failed() {
+    let mut h = Hoard::paper_testbed();
+    h.datasets.create(dataset("d", 3_000_000_000_000, true)).unwrap();
+    h.reconcile_to_fixpoint().unwrap();
+    // 3 TB needs the full 4 TB aggregate; lose two nodes (2 TB left).
+    h.cache.fail_node(NodeId(0));
+    h.cache.fail_node(NodeId(1));
+    h.reconcile_to_fixpoint().unwrap();
+    assert_eq!(h.datasets.get("d").unwrap().status, DatasetPhase::Failed);
+}
+
+#[test]
+fn heterogeneous_cluster_placement_prefers_free_cache() {
+    // Nodes with asymmetric cache sizes: the stripe set should prefer the
+    // big-cache nodes.
+    let mut specs: Vec<NodeSpec> = (0..4).map(|i| NodeSpec::paper_node(format!("n{i}"))).collect();
+    specs[0].cache_volume = hoard::storage::Volume::new(vec![hoard::storage::Device::new(
+        hoard::storage::DeviceKind::Nvme,
+        1_000_000_000, // 1 GB only
+    )]);
+    let mut h = Hoard::new(specs, Topology::paper_testbed(), EvictionPolicy::Manual);
+    let mut ds = dataset("d", 600_000_000_000, true);
+    ds.stripe_width = 3;
+    h.datasets.create(ds).unwrap();
+    h.reconcile_to_fixpoint().unwrap();
+    let rec = h.cache.registry.get("d").unwrap();
+    let nodes = rec.stripe.as_ref().unwrap().nodes();
+    assert!(!nodes.contains(&NodeId(0)), "tiny-cache node skipped: {nodes:?}");
+    assert_eq!(nodes.len(), 3);
+}

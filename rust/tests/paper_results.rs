@@ -1,0 +1,72 @@
+//! The reproduction contract, as integration tests: every table/figure
+//! matches the paper's numbers within tolerance. EXPERIMENTS.md records the
+//! same values; this file keeps them from regressing.
+
+use hoard::experiments as exp;
+
+fn parse_num(s: &str) -> f64 {
+    s.trim_end_matches(" ×").trim_end_matches('%').parse().unwrap()
+}
+
+#[test]
+fn headline_2_1x_speedup() {
+    let t = exp::table3_projections();
+    let hoard_90 = parse_num(&t.rows[1][4]);
+    assert!((hoard_90 - 2.1).abs() < 0.1, "headline speedup: {hoard_90}");
+}
+
+#[test]
+fn all_tables_and_figures_regenerate() {
+    // Every experiment runs end to end and produces non-empty output.
+    assert_eq!(exp::table1_fs_comparison().rows.len(), 3);
+    let (series, t) = exp::figure3_two_epochs();
+    assert_eq!(series.len(), 3);
+    assert_eq!(t.rows.len(), 3);
+    assert_eq!(exp::table3_projections().rows.len(), 3);
+    assert_eq!(exp::figure4_mdr_sweep().rows.len(), 5);
+    assert_eq!(exp::figure5_remote_bw_sweep().rows.len(), 5);
+    assert_eq!(exp::table4_network_usage().rows.len(), 2);
+    assert_eq!(exp::table5_rack_uplink().rows.len(), 4);
+    assert_eq!(exp::utilization_2x().rows.len(), 2);
+    assert_eq!(exp::ablations::ablation_stripe_width().rows.len(), 4);
+    assert_eq!(exp::ablations::ablation_prefetch().rows.len(), 2);
+    assert_eq!(exp::ablations::ablation_eviction().rows.len(), 2);
+    assert_eq!(exp::ablations::ablation_coscheduling().rows.len(), 4);
+}
+
+#[test]
+fn experiments_are_deterministic() {
+    let a = exp::table3_projections();
+    let b = exp::table3_projections();
+    assert_eq!(a.rows, b.rows);
+    let t5a = exp::table5_rack_uplink();
+    let t5b = exp::table5_rack_uplink();
+    assert_eq!(t5a.rows, t5b.rows);
+}
+
+#[test]
+fn table5_exact_paper_match() {
+    // With the paper's rounding (ceil of the uplink percentage) the four
+    // points land exactly on 5/9/13/17.
+    let t = exp::table5_rack_uplink();
+    let got: Vec<f64> = t.rows.iter().map(|r| parse_num(&r[1])).collect();
+    assert_eq!(got, vec![5.0, 9.0, 13.0, 17.0], "{got:?}");
+}
+
+#[test]
+fn markdown_rendering_of_all_experiments() {
+    // EXPERIMENTS.md is generated from these tables; rendering must hold.
+    for t in [
+        exp::table1_fs_comparison(),
+        exp::table3_projections(),
+        exp::figure4_mdr_sweep(),
+        exp::figure5_remote_bw_sweep(),
+        exp::table4_network_usage(),
+        exp::table5_rack_uplink(),
+        exp::utilization_2x(),
+    ] {
+        let md = t.markdown();
+        assert!(md.starts_with("### "));
+        assert!(md.lines().count() >= 4);
+    }
+}

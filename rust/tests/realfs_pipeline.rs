@@ -1,0 +1,178 @@
+//! Integration tests for the real-mode data path: datagen → throttled
+//! remote store → Hoard cache dirs → mounts, including multi-epoch access
+//! patterns and eviction while data is on disk.
+
+use std::fs;
+use std::path::PathBuf;
+
+use hoard::cache::{CacheManager, EvictionPolicy};
+use hoard::netsim::NodeId;
+use hoard::posix::realfs::{HoardMount, LocalMount, Mount, RealCluster, RemoteMount};
+use hoard::storage::{Device, DeviceKind, Volume};
+use hoard::workload::datagen::{self, DataGenConfig};
+use hoard::workload::{DatasetSpec, EpochSampler};
+
+struct Fixture {
+    root: PathBuf,
+    cluster: RealCluster,
+    cfg: DataGenConfig,
+    total: u64,
+}
+
+impl Fixture {
+    fn new(tag: &str, items: u64) -> Self {
+        let root =
+            std::env::temp_dir().join(format!("hoard-it-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&root);
+        let cluster = RealCluster::create(&root, 4, 500e6).unwrap();
+        let cfg = DataGenConfig { num_items: items, files_per_dir: 64, ..Default::default() };
+        let total = datagen::generate(&cluster.remote_dir, &cfg).unwrap();
+        Fixture { root, cluster, cfg, total }
+    }
+
+    fn cache(&self) -> CacheManager {
+        let vols = (0..4)
+            .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 30)]))
+            .collect();
+        let mut cache = CacheManager::new(vols, EvictionPolicy::Manual);
+        cache
+            .register(
+                DatasetSpec::new("d", self.cfg.num_items, self.total),
+                "nfs://remote/d".into(),
+            )
+            .unwrap();
+        cache.place("d", (0..4).map(NodeId).collect()).unwrap();
+        cache
+    }
+}
+
+impl Drop for Fixture {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.root);
+    }
+}
+
+#[test]
+fn three_epoch_random_access_through_hoard() {
+    let fx = Fixture::new("epochs", 96);
+    let mut cache = fx.cache();
+    let mut mount =
+        HoardMount { cluster: &fx.cluster, cache: &mut cache, dataset: "d".into(), cfg: fx.cfg.clone() };
+    let mut sampler = EpochSampler::new(fx.cfg.num_items, 11);
+    for epoch in 0..3u32 {
+        for _ in 0..fx.cfg.num_items {
+            let (i, _) = sampler.next();
+            let rec = mount.read_item(i, NodeId((i % 4) as usize)).unwrap();
+            let (label, px) = datagen::parse_record(&fx.cfg, &rec).unwrap();
+            assert!(label < fx.cfg.num_classes);
+            assert_eq!(px.len(), 32 * 32 * 3);
+        }
+        let stats = fx.cluster.take_stats();
+        if epoch == 0 {
+            assert_eq!(stats.remote_reads, fx.cfg.num_items, "cold epoch: fetch-once");
+        } else {
+            assert_eq!(stats.remote_reads, 0, "epoch {epoch} must be warm");
+            assert!(stats.local_reads > 0, "striping gives some local reads");
+        }
+    }
+    // Cache registry observed the full fill.
+    assert_eq!(
+        cache.registry.get("d").unwrap().state,
+        hoard::cache::DatasetState::Cached
+    );
+}
+
+#[test]
+fn readers_on_every_node_share_one_fill() {
+    let fx = Fixture::new("share", 64);
+    let mut cache = fx.cache();
+    let mut mount =
+        HoardMount { cluster: &fx.cluster, cache: &mut cache, dataset: "d".into(), cfg: fx.cfg.clone() };
+    // 4 readers interleave over the same items (4 concurrent jobs pattern).
+    for i in 0..fx.cfg.num_items {
+        for reader in 0..4 {
+            mount.read_item(i, NodeId(reader)).unwrap();
+        }
+    }
+    let stats = fx.cluster.take_stats();
+    assert_eq!(stats.remote_reads, fx.cfg.num_items, "one fill total, not per reader");
+    assert_eq!(
+        stats.local_reads + stats.peer_reads,
+        fx.cfg.num_items * 3,
+        "remaining reads served by the cache"
+    );
+}
+
+#[test]
+fn remote_and_local_mounts_behave_like_baselines() {
+    let fx = Fixture::new("base", 48);
+    // REM: every epoch hits remote.
+    let mut rem = RemoteMount { cluster: &fx.cluster, cfg: fx.cfg.clone() };
+    for _ in 0..2 {
+        for i in 0..fx.cfg.num_items {
+            rem.read_item(i, NodeId(0)).unwrap();
+        }
+    }
+    let s = fx.cluster.take_stats();
+    assert_eq!(s.remote_reads, 2 * fx.cfg.num_items);
+
+    // NVMe: after precopy, zero remote.
+    let mut local = LocalMount { cluster: &fx.cluster, cfg: fx.cfg.clone() };
+    let copied = local.precopy(NodeId(2)).unwrap();
+    assert_eq!(copied, fx.total);
+    fx.cluster.take_stats();
+    for i in 0..fx.cfg.num_items {
+        local.read_item(i, NodeId(2)).unwrap();
+    }
+    let s = fx.cluster.take_stats();
+    assert_eq!(s.remote_reads, 0);
+    assert_eq!(s.local_reads, fx.cfg.num_items);
+}
+
+#[test]
+fn eviction_mid_stream_falls_back_to_remote() {
+    let fx = Fixture::new("evict", 32);
+    let mut cache = fx.cache();
+    {
+        let mut mount = HoardMount {
+            cluster: &fx.cluster,
+            cache: &mut cache,
+            dataset: "d".into(),
+            cfg: fx.cfg.clone(),
+        };
+        for i in 0..fx.cfg.num_items {
+            mount.read_item(i, NodeId(0)).unwrap();
+        }
+    }
+    // Operator evicts the dataset (capacity pressure).
+    cache.evict("d").unwrap();
+    assert!(cache.registry.get("d").unwrap().stripe.is_none());
+    // Reads now fail fast with NotPlaced — the coordinator must re-place
+    // before the next job mounts (life-cycle contract).
+    let mut mount =
+        HoardMount { cluster: &fx.cluster, cache: &mut cache, dataset: "d".into(), cfg: fx.cfg.clone() };
+    let err = mount.read_item(0, NodeId(0)).unwrap_err();
+    assert!(err.to_string().contains("no stripe placement"), "{err}");
+    // Re-place: the cache warms again from remote.
+    mount.cache.place("d", vec![NodeId(1)]).unwrap();
+    let stats_before = fx.cluster.take_stats();
+    let _ = stats_before;
+    mount.read_item(0, NodeId(0)).unwrap();
+    let s = fx.cluster.take_stats();
+    // Item may still be on old node dirs, but the stripe map now points at
+    // node 1, which is empty ⇒ remote fill again.
+    assert_eq!(s.remote_reads, 1);
+}
+
+#[test]
+fn corrupted_record_detected() {
+    let fx = Fixture::new("corrupt", 8);
+    let rel = fx.cfg.item_rel_path(3);
+    let path = fx.cluster.remote_dir.join(&rel);
+    let mut data = fs::read(&path).unwrap();
+    data[0] ^= 0xFF;
+    fs::write(&path, &data).unwrap();
+    let mut rem = RemoteMount { cluster: &fx.cluster, cfg: fx.cfg.clone() };
+    let rec = rem.read_item(3, NodeId(0)).unwrap();
+    assert!(datagen::parse_record(&fx.cfg, &rec).is_err());
+}

@@ -1,0 +1,127 @@
+//! Integration tests for the PJRT runtime against the real AOT artifacts.
+//! These require `make artifacts` to have run; they are skipped (cleanly)
+//! when artifacts/ is absent so `cargo test` works on a fresh checkout.
+
+use hoard::runtime::{literal_u8, Engine, TrainerSession};
+use hoard::workload::datagen::{self, DataGenConfig};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+/// Deterministic batch from the datagen substrate.
+fn batch(trainer: &TrainerSession, seed: u64) -> (Vec<u8>, Vec<i32>) {
+    let cfg = DataGenConfig::default();
+    let b = trainer.batch_size();
+    let px: usize = trainer.image_dims().iter().product();
+    let mut images = Vec::with_capacity(b * px);
+    let mut labels = Vec::with_capacity(b);
+    for i in 0..b as u64 {
+        let (label, rec) = datagen::make_record(&cfg, seed * 10_000 + i);
+        labels.push(label as i32);
+        images.extend_from_slice(&rec[8..]);
+    }
+    (images, labels)
+}
+
+#[test]
+fn manifest_and_compile_all_entrypoints() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let mut engine = Engine::new("artifacts").unwrap();
+    assert_eq!(engine.platform().to_lowercase(), "cpu");
+    for name in ["init", "train_step", "predict", "preprocess"] {
+        assert!(engine.manifest.entrypoints.contains_key(name), "{name}");
+        engine.prepare(name).unwrap();
+    }
+}
+
+#[test]
+fn preprocess_matches_rust_reference() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::new("artifacts").unwrap();
+    let m = engine.manifest.clone();
+    let b = m.batch;
+    let dims = &m.image;
+    let n = b * dims.iter().product::<usize>();
+    let data: Vec<u8> = (0..n).map(|i| (i * 37 % 256) as u8).collect();
+    let mut full = vec![b];
+    full.extend_from_slice(dims);
+    let lit = literal_u8(&data, &full).unwrap();
+    let out = engine.execute("preprocess", &[lit]).unwrap();
+    let got = out[0].to_vec::<f32>().unwrap();
+    // Rust-side oracle of the L1 kernel's math.
+    const MEAN: [f32; 3] = [0.4914, 0.4822, 0.4465];
+    const STD: [f32; 3] = [0.2470, 0.2435, 0.2616];
+    for (i, (&raw, &o)) in data.iter().zip(&got).enumerate() {
+        let c = i % 3;
+        let want = (raw as f32 / 255.0 - MEAN[c]) / STD[c];
+        assert!((want - o).abs() < 1e-4, "pixel {i}: want {want}, got {o}");
+    }
+}
+
+#[test]
+fn init_is_deterministic_and_seed_sensitive() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::new("artifacts").unwrap();
+    let mut seed = |s: i32| {
+        let lit = hoard::runtime::literal_i32_scalar(s).unwrap();
+        engine
+            .execute("init", &[lit])
+            .unwrap()
+            .iter()
+            .map(|l| l.to_vec::<f32>().unwrap())
+            .collect::<Vec<_>>()
+    };
+    let a = seed(1);
+    let b = seed(1);
+    let c = seed(2);
+    assert_eq!(a, b, "same seed ⇒ same params");
+    assert_ne!(a, c, "different seed ⇒ different params");
+    // He-init sanity: conv1 weights finite, non-degenerate.
+    let w0 = &a[0];
+    assert!(w0.iter().all(|x| x.is_finite()));
+    let std = (w0.iter().map(|x| x * x).sum::<f32>() / w0.len() as f32).sqrt();
+    assert!(std > 0.05 && std < 1.0, "conv1 std {std}");
+}
+
+#[test]
+fn train_step_reduces_loss_and_predict_learns() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut trainer = TrainerSession::new("artifacts", 0).unwrap();
+    let (images, labels) = batch(&trainer, 1);
+    let mut losses = vec![];
+    for _ in 0..10 {
+        losses.push(trainer.step(&images, &labels).unwrap());
+    }
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert!(
+        losses.last().unwrap() < &(0.8 * losses[0]),
+        "loss must drop on a fixed batch: {losses:?}"
+    );
+    let acc = trainer.accuracy(&images, &labels).unwrap();
+    assert!(acc > 0.5, "memorizing one batch should exceed 50%: {acc}");
+}
+
+#[test]
+fn execute_rejects_wrong_arity_and_shape() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::new("artifacts").unwrap();
+    // Wrong arity.
+    assert!(engine.execute("preprocess", &[]).is_err());
+    // Wrong element count.
+    let lit = literal_u8(&[0u8; 16], &[16]).unwrap();
+    assert!(engine.execute("preprocess", &[lit]).is_err());
+    // Unknown entrypoint.
+    assert!(engine.prepare("nonexistent").is_err());
+}
