@@ -1,0 +1,60 @@
+//! §Perf — concurrent reader scaling on the real-mode data plane: epoch
+//! throughput of `posix::ReaderPool` at 1 vs 4 reader threads over a
+//! 4-node striped dataset.
+//!
+//! What must hold (the PR's acceptance bar): warm-epoch throughput grows
+//! ≥ 1.5× from 1 → 4 readers, because warm reads hit four *independent*
+//! per-node buckets (and overlap per-request NVMe service time), while
+//! cold epochs stay pinned to the one shared remote bucket — parallel
+//! readers cannot make the NFS server faster, only the cache layout can.
+//! Exactly the Table 3 asymmetry, measured on real files.
+
+mod common;
+
+use std::time::Duration;
+
+use hoard::experiments::realmode::reader_scaling_run;
+
+const ITEMS: u64 = 512;
+/// Per-request NVMe/FS-client service time the readers overlap.
+const NODE_LATENCY: Duration = Duration::from_micros(500);
+
+fn best_warm_of(reps: usize, readers: usize) -> (f64, f64) {
+    let mut best_warm = f64::INFINITY;
+    let mut best_cold = f64::INFINITY;
+    for _ in 0..reps {
+        let p = reader_scaling_run(readers, ITEMS, NODE_LATENCY)
+            .expect("scaling run needs a writable temp dir");
+        assert_eq!(p.cold.remote_reads, ITEMS, "fetch-once violated at {readers} readers");
+        assert_eq!(p.warm.remote_reads, 0, "warm epoch touched remote at {readers} readers");
+        best_warm = best_warm.min(p.warm_s);
+        best_cold = best_cold.min(p.cold_s);
+    }
+    (best_cold, best_warm)
+}
+
+fn main() {
+    let (cold1, warm1) = common::bench("perf_readers_1", || best_warm_of(3, 1));
+    let (cold4, warm4) = common::bench("perf_readers_4", || best_warm_of(3, 4));
+
+    let warm_speedup = warm1 / warm4.max(1e-9);
+    let cold_speedup = cold1 / cold4.max(1e-9);
+    println!(
+        "warm epoch: 1 reader {:.3}s ({:.0} img/s) → 4 readers {:.3}s ({:.0} img/s)  ⇒ {:.2}×",
+        warm1,
+        ITEMS as f64 / warm1,
+        warm4,
+        ITEMS as f64 / warm4,
+        warm_speedup
+    );
+    println!(
+        "cold epoch: 1 reader {:.3}s → 4 readers {:.3}s  ⇒ {:.2}× (shared remote bucket — expected ~1×)",
+        cold1, cold4, cold_speedup
+    );
+    println!("BENCH perf_concurrent_readers warm_speedup={warm_speedup:.2} cold_speedup={cold_speedup:.2}");
+
+    assert!(
+        warm_speedup >= 1.5,
+        "1→4 readers must deliver ≥ 1.5× warm-epoch throughput, got {warm_speedup:.2}×"
+    );
+}

@@ -35,16 +35,43 @@ pub enum ReadLocation {
     RemoteFill { fill_node: NodeId },
 }
 
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum CacheError {
-    #[error(transparent)]
-    Registry(#[from] RegistryError),
-    #[error("dataset '{0}' has no stripe placement yet")]
+    Registry(RegistryError),
     NotPlaced(String),
-    #[error("cache admission rejected: need {need} bytes, reclaimable {reclaimable}")]
     Full { need: u64, reclaimable: u64 },
-    #[error("node {0} is not a cache member for dataset '{1}'")]
     NotAMember(usize, String),
+}
+
+impl std::fmt::Display for CacheError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            // Transparent: delegate to the registry error.
+            CacheError::Registry(e) => write!(f, "{e}"),
+            CacheError::NotPlaced(n) => write!(f, "dataset '{n}' has no stripe placement yet"),
+            CacheError::Full { need, reclaimable } => {
+                write!(f, "cache admission rejected: need {need} bytes, reclaimable {reclaimable}")
+            }
+            CacheError::NotAMember(node, ds) => {
+                write!(f, "node {node} is not a cache member for dataset '{ds}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CacheError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CacheError::Registry(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<RegistryError> for CacheError {
+    fn from(e: RegistryError) -> Self {
+        CacheError::Registry(e)
+    }
 }
 
 /// Cache-layer events, for observability and tests.
@@ -313,6 +340,59 @@ impl CacheManager {
     }
 }
 
+/// Thread-safe handle over a [`CacheManager`] for the concurrent real-mode
+/// data plane: reads (`read_location`) take a shared lock so N reader
+/// threads resolve placements in parallel; fill bookkeeping
+/// (`prefetch_tick`) takes the exclusive lock briefly. Clone freely —
+/// clones share the one manager.
+#[derive(Debug, Clone)]
+pub struct SharedCache {
+    inner: std::sync::Arc<std::sync::RwLock<CacheManager>>,
+}
+
+impl SharedCache {
+    pub fn new(manager: CacheManager) -> Self {
+        SharedCache { inner: std::sync::Arc::new(std::sync::RwLock::new(manager)) }
+    }
+
+    /// Resolve where item `item` of `name` is served (shared lock).
+    pub fn read_location(
+        &self,
+        name: &str,
+        item: u64,
+        reader: NodeId,
+    ) -> Result<ReadLocation, CacheError> {
+        self.inner.read().unwrap().read_location(name, item, reader)
+    }
+
+    /// Record fill progress (exclusive lock, held only for the registry
+    /// update — never across I/O).
+    pub fn prefetch_tick(&self, name: &str, bytes: u64) -> Result<(), CacheError> {
+        self.inner.write().unwrap().prefetch_tick(name, bytes)
+    }
+
+    /// Is the dataset fully resident? (Used to skip the prefetcher.)
+    pub fn is_cached(&self, name: &str) -> bool {
+        self.inner
+            .read()
+            .unwrap()
+            .registry
+            .get(name)
+            .is_some_and(|r| r.state == DatasetState::Cached)
+    }
+
+    /// Run a read-only closure against the manager (shared lock).
+    pub fn with<R>(&self, f: impl FnOnce(&CacheManager) -> R) -> R {
+        f(&self.inner.read().unwrap())
+    }
+
+    /// Run a mutating closure against the manager (exclusive lock). Do
+    /// not perform I/O inside `f`.
+    pub fn with_mut<R>(&self, f: impl FnOnce(&mut CacheManager) -> R) -> R {
+        f(&mut self.inner.write().unwrap())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -430,6 +510,53 @@ mod tests {
         let high = m.read_location("a", 99, NodeId(0)).unwrap();
         assert!(matches!(low, ReadLocation::Local | ReadLocation::Peer(_)));
         assert!(matches!(high, ReadLocation::RemoteFill { .. }));
+    }
+
+    #[test]
+    fn shared_cache_parallel_readers_resolve_locations() {
+        let mut m = manager(4, 1000, EvictionPolicy::Manual);
+        m.register(ds("a", 100, 400), "nfs://s/a".into()).unwrap();
+        m.place("a", (0..4).map(NodeId).collect()).unwrap();
+        m.prefetch_tick("a", 400).unwrap();
+        let shared = SharedCache::new(m);
+        std::thread::scope(|s| {
+            for r in 0..4usize {
+                let shared = shared.clone();
+                s.spawn(move || {
+                    for i in 0..100u64 {
+                        let loc = shared.read_location("a", i, NodeId(r)).unwrap();
+                        match loc {
+                            ReadLocation::Local => assert_eq!(i % 4, r as u64),
+                            ReadLocation::Peer(p) => assert_eq!(p, NodeId((i % 4) as usize)),
+                            other => panic!("cached dataset gave {other:?}"),
+                        }
+                    }
+                });
+            }
+        });
+        assert!(shared.is_cached("a"));
+    }
+
+    #[test]
+    fn shared_cache_tick_flips_state_under_lock() {
+        let mut m = manager(2, 1000, EvictionPolicy::Manual);
+        m.register(ds("a", 10, 100), "nfs://s/a".into()).unwrap();
+        m.place("a", vec![NodeId(0), NodeId(1)]).unwrap();
+        let shared = SharedCache::new(m);
+        assert!(!shared.is_cached("a"));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let shared = shared.clone();
+                s.spawn(move || {
+                    for _ in 0..5 {
+                        shared.prefetch_tick("a", 5).unwrap();
+                    }
+                });
+            }
+        });
+        assert!(shared.is_cached("a"), "4 threads × 25 bytes ≥ 100-byte dataset");
+        let state = shared.with(|m| m.registry.get("a").unwrap().state.clone());
+        assert_eq!(state, DatasetState::Cached);
     }
 
     #[test]

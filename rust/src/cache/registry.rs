@@ -50,17 +50,28 @@ impl DatasetRecord {
     }
 }
 
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum RegistryError {
-    #[error("dataset '{0}' already registered")]
     Duplicate(String),
-    #[error("dataset '{0}' not found")]
     NotFound(String),
-    #[error("dataset '{0}' is pinned by {1} job(s)")]
     Pinned(String, u32),
-    #[error("invalid state transition for '{0}': {1}")]
     BadTransition(String, String),
 }
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::Duplicate(n) => write!(f, "dataset '{n}' already registered"),
+            RegistryError::NotFound(n) => write!(f, "dataset '{n}' not found"),
+            RegistryError::Pinned(n, c) => write!(f, "dataset '{n}' is pinned by {c} job(s)"),
+            RegistryError::BadTransition(n, why) => {
+                write!(f, "invalid state transition for '{n}': {why}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
 
 /// Name-keyed registry with a logical access clock.
 #[derive(Debug, Default)]

@@ -51,13 +51,26 @@ pub struct NodeState {
     pub pagepool: u64,
 }
 
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ClusterError {
-    #[error("not enough free GPUs: want {want}, free {free}")]
     NoGpus { want: u32, free: u32 },
-    #[error("not enough free memory: want {want}, free {free}")]
     NoMemory { want: u64, free: u64 },
 }
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::NoGpus { want, free } => {
+                write!(f, "not enough free GPUs: want {want}, free {free}")
+            }
+            ClusterError::NoMemory { want, free } => {
+                write!(f, "not enough free memory: want {want}, free {free}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
 
 impl NodeState {
     pub fn new(spec: NodeSpec) -> Self {

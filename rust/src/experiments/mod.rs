@@ -5,8 +5,10 @@
 
 pub mod ablations;
 pub mod paper;
+pub mod realmode;
 
 pub use paper::*;
+pub use realmode::{realmode_reader_scaling, reader_scaling_run};
 
 /// Calibration constants derived from the paper's own numbers; the deeper
 /// story for each lives next to its definition.

@@ -1,0 +1,146 @@
+//! Real-mode reader-scaling experiment: epoch times of the concurrent
+//! data plane (`posix::ReaderPool`) as the pool grows from 1 reader to
+//! one per node — the `readers=N` dimension of the epoch-time results.
+//!
+//! What it shows (and what the `perf_concurrent_readers` bench asserts):
+//! warm-epoch throughput scales with readers because each reader streams
+//! its stripe share from a *different* per-node bucket in parallel, while
+//! the cold epoch barely moves — every byte still funnels through the one
+//! shared remote bucket (the NFS server does not speed up, the cache
+//! layout does). That is exactly the paper's Table 3 asymmetry.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::cache::{CacheManager, EvictionPolicy, SharedCache};
+use crate::metrics::Table;
+use crate::netsim::NodeId;
+use crate::posix::realfs::{ReadStats, RealCluster};
+use crate::posix::reader_pool::ReaderPool;
+use crate::remote::NfsModel;
+use crate::storage::{Device, DeviceKind, Volume};
+use crate::workload::datagen::{self, DataGenConfig};
+use crate::workload::DatasetSpec;
+
+/// Nodes in the scaling testbed (matches the paper's 4-node cluster).
+pub const SCALING_NODES: usize = 4;
+
+/// One measured point of the scaling sweep.
+#[derive(Debug, Clone)]
+pub struct ScalingPoint {
+    pub readers: usize,
+    pub cold_s: f64,
+    pub warm_s: f64,
+    pub cold: ReadStats,
+    pub warm: ReadStats,
+}
+
+/// Run a cold + warm epoch through a fresh striped cluster with `readers`
+/// reader threads. `node_latency` models per-request NVMe/FS-client
+/// service time — the quantity parallel readers overlap.
+pub fn reader_scaling_run(
+    readers: usize,
+    items: u64,
+    node_latency: Duration,
+) -> Result<ScalingPoint> {
+    // Unique per process *and* per call: concurrent test threads must not
+    // share (or clobber) a scratch cluster.
+    static RUN_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = RUN_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let root: PathBuf = std::env::temp_dir().join(format!(
+        "hoard-scaling-r{readers}-{}-{seq}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    let cluster = RealCluster::create(&root, SCALING_NODES, 200e6)
+        .context("creating scaling cluster")?
+        .with_remote_model(Box::new(NfsModel::new(200e6)));
+    cluster.set_node_read_latency(node_latency);
+    let cfg = DataGenConfig { num_items: items, files_per_dir: 64, ..Default::default() };
+    let total = datagen::generate(&cluster.remote_dir, &cfg).context("generating dataset")?;
+
+    let vols = (0..SCALING_NODES)
+        .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 30)]))
+        .collect();
+    let mut manager = CacheManager::new(vols, EvictionPolicy::Manual);
+    manager.register(DatasetSpec::new("scale", items, total), "nfs://remote/scale".into())?;
+    manager.place("scale", (0..SCALING_NODES).map(NodeId).collect())?;
+
+    let pool = ReaderPool::new(&cluster, SharedCache::new(manager), "scale", cfg, readers);
+    let cold_report = pool.run_epoch(&pool.epoch_order(0xC01D, 0))?;
+    cluster.take_stats();
+    let warm_report = pool.run_epoch(&pool.epoch_order(0xC01D, 1))?;
+
+    let point = ScalingPoint {
+        readers,
+        cold_s: cold_report.wall.as_secs_f64(),
+        warm_s: warm_report.wall.as_secs_f64(),
+        cold: cold_report.merged,
+        warm: warm_report.merged,
+    };
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(point)
+}
+
+/// The `readers=N` epoch-time table (real bytes, wall-clock — unlike the
+/// fluid tables this one is hardware-dependent and not byte-stable).
+pub fn realmode_reader_scaling(readers_list: &[usize], items: u64) -> Table {
+    let mut t = Table::new(
+        "Real mode — epoch time vs reader threads (striped over 4 nodes, shared remote bucket)",
+        &[
+            "readers",
+            "cold epoch (s)",
+            "warm epoch (s)",
+            "warm img/s",
+            "warm speedup",
+            "remote reads",
+            "local/peer reads",
+        ],
+    );
+    let mut base_warm = None;
+    for &n in readers_list {
+        match reader_scaling_run(n, items, Duration::from_micros(400)) {
+            Ok(p) => {
+                let base = *base_warm.get_or_insert(p.warm_s);
+                t.row(vec![
+                    format!("{n}"),
+                    format!("{:.3}", p.cold_s),
+                    format!("{:.3}", p.warm_s),
+                    format!("{:.0}", items as f64 / p.warm_s.max(1e-9)),
+                    format!("{:.2} ×", base / p.warm_s.max(1e-9)),
+                    format!("{}", p.cold.remote_reads),
+                    format!("{}", p.warm.local_reads + p.warm.peer_reads),
+                ]);
+            }
+            Err(e) => {
+                let mut cells = vec![format!("{n}"), format!("failed: {e:#}")];
+                cells.resize(7, String::new());
+                t.row(cells);
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaling_run_fetches_once_and_warms() {
+        let p = reader_scaling_run(2, 32, Duration::ZERO).unwrap();
+        assert_eq!(p.cold.remote_reads, 32, "cold epoch fetch-once");
+        assert_eq!(p.warm.remote_reads, 0, "warm epoch fully cached");
+        assert_eq!(p.warm.local_reads + p.warm.peer_reads, 32);
+    }
+
+    #[test]
+    fn scaling_table_has_one_row_per_pool_size() {
+        let t = realmode_reader_scaling(&[1, 2], 24);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][0], "1");
+        assert_eq!(t.rows[1][0], "2");
+    }
+}

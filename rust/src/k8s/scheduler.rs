@@ -8,11 +8,22 @@ use std::collections::BTreeMap;
 use super::resources::{labels, Labels, Pod, PodPhase};
 use crate::cluster::NodeState;
 
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ScheduleError {
-    #[error("no node satisfies selector {0:?} with {1} free GPUs")]
     Unschedulable(Labels, u32),
 }
+
+impl std::fmt::Display for ScheduleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScheduleError::Unschedulable(sel, gpus) => {
+                write!(f, "no node satisfies selector {sel:?} with {gpus} free GPUs")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ScheduleError {}
 
 /// Node facts the default scheduler consults.
 #[derive(Debug, Clone)]

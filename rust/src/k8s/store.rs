@@ -22,15 +22,27 @@ impl<T> WatchEvent<T> {
     }
 }
 
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum StoreError {
-    #[error("{kind} '{name}' already exists")]
     AlreadyExists { kind: &'static str, name: String },
-    #[error("{kind} '{name}' not found")]
     NotFound { kind: &'static str, name: String },
-    #[error("{kind} '{name}' conflict: stored version {stored}, update based on {given}")]
     Conflict { kind: &'static str, name: String, stored: u64, given: u64 },
 }
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::AlreadyExists { kind, name } => write!(f, "{kind} '{name}' already exists"),
+            StoreError::NotFound { kind, name } => write!(f, "{kind} '{name}' not found"),
+            StoreError::Conflict { kind, name, stored, given } => write!(
+                f,
+                "{kind} '{name}' conflict: stored version {stored}, update based on {given}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
 
 /// One kind's storage: objects + ordered event log.
 #[derive(Debug)]

@@ -41,10 +41,10 @@ fn main() {
 fn print_usage() {
     eprintln!(
         "hoard — distributed data caching for DL training (paper reproduction)\n\n\
-         USAGE:\n  hoard exp <t1|f3|t3|f4|f5|t4|t5|util|ablations|all>\n  \
+         USAGE:\n  hoard exp <t1|f3|t3|f4|f5|t4|t5|util|readers|ablations|all>\n  \
          hoard serve [--addr 127.0.0.1:7070] [--config FILE]\n  \
          hoard datagen --out DIR [--items N]\n  \
-         hoard sim --mode <rem|nvme|hoard> [--epochs N]\n  \
+         hoard sim --mode <rem|nvme|hoard> [--epochs N] [--readers N]\n  \
          hoard info"
     );
 }
@@ -75,6 +75,10 @@ fn cmd_exp(args: &[String]) -> i32 {
             "t4" => println!("{}", experiments::table4_network_usage().console()),
             "t5" => println!("{}", experiments::table5_rack_uplink().console()),
             "util" => println!("{}", experiments::utilization_2x().console()),
+            "readers" => println!(
+                "{}",
+                experiments::realmode_reader_scaling(&[1, 2, 4], 256).console()
+            ),
             "ablations" => {
                 println!("{}", ablations::ablation_stripe_width().console());
                 println!("{}", ablations::ablation_prefetch().console());
@@ -86,7 +90,7 @@ fn cmd_exp(args: &[String]) -> i32 {
         true
     };
     if which == "all" {
-        for id in ["t1", "f3", "t3", "f4", "f5", "t4", "t5", "util", "ablations"] {
+        for id in ["t1", "f3", "t3", "f4", "f5", "t4", "t5", "util", "readers", "ablations"] {
             run(id);
         }
         return 0;
@@ -160,9 +164,14 @@ fn cmd_sim(args: &[String]) -> i32 {
         }
     };
     let epochs: u32 = flag(args, "--epochs").and_then(|s| s.parse().ok()).unwrap_or(2);
+    let readers: usize = flag(args, "--readers").and_then(|s| s.parse().ok()).unwrap_or(1);
     let mut sim = paper_scenario(mode, epochs);
+    sim.reader_threads = readers;
     let res = sim.run();
-    println!("4 jobs × 4 GPUs, AlexNet BS=1536, ImageNet, {epochs} epochs, mode {mode:?}");
+    println!(
+        "4 jobs × 4 GPUs, AlexNet BS=1536, ImageNet, {epochs} epochs, mode {mode:?}, \
+         reader threads (real-mode hint) {readers}"
+    );
     for j in &res.jobs {
         println!(
             "  {}: total {}  epochs [{}]",

@@ -4,8 +4,10 @@
 //! "remote store" directory — so the e2e example moves real bytes through
 //! the same placement/miss logic the simulations model.
 
+pub mod reader_pool;
 pub mod realfs;
 pub mod throttle;
 
-pub use realfs::{HoardMount, LocalMount, Mount, RealCluster, RemoteMount};
-pub use throttle::TokenBucket;
+pub use reader_pool::{EpochReport, FillTable, ReaderPool, SharedMount};
+pub use realfs::{HoardMount, LocalMount, Mount, ReadStats, RealCluster, RemoteMount};
+pub use throttle::{SharedTokenBucket, TokenBucket};

@@ -10,18 +10,43 @@
 //!    `CacheManager` (local stripe / peer / AFM remote-fill) and misses
 //!    populate the cache, exactly the transparent-caching behaviour of
 //!    §3.2 but with real bytes.
+//!
+//! Concurrency model (the Hoard claim under test — many GPUs streaming
+//! from striped local disks in parallel, §3.2/Table 3):
+//!
+//!  * one [`SharedTokenBucket`] **per node** models that node's NVMe
+//!    bandwidth — parallel readers on different stripes never contend on a
+//!    shared lock;
+//!  * one shared remote bucket models the NFS server, optionally re-rated
+//!    per concurrent reader through a [`RemoteStore`] concurrency curve
+//!    (`effective_bw`), so piling readers onto remote degrades aggregate
+//!    bandwidth exactly like the fluid model;
+//!  * all token waits sleep **outside** any lock ([`SharedTokenBucket`]);
+//!  * stats are sharded: threaded readers record into their own
+//!    [`ReadStats`] and merge on epoch end ([`RealCluster::merge_stats`]),
+//!    while the single-threaded mounts keep the old behaviour of recording
+//!    into the cluster-wide accumulator per read.
 
 use std::fs;
 use std::io::Read as _;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::throttle::TokenBucket;
+use super::throttle::SharedTokenBucket;
 use crate::cache::{CacheManager, ReadLocation};
 use crate::netsim::NodeId;
+use crate::remote::{RemoteReaderGauge, RemoteStore};
 use crate::workload::datagen::DataGenConfig;
+
+/// Default per-node cache-volume bandwidth (NVMe class). High enough to be
+/// invisible to the existing correctness tests; benches lower it (or add
+/// per-read latency) to surface the scaling behaviour.
+const DEFAULT_NODE_BW: f64 = 2e9;
+const DEFAULT_NODE_BURST: f64 = 64e6;
 
 /// On-disk layout for a real-mode cluster.
 #[derive(Debug)]
@@ -29,13 +54,27 @@ pub struct RealCluster {
     pub root: PathBuf,
     pub remote_dir: PathBuf,
     pub node_dirs: Vec<PathBuf>,
-    /// Shared remote-store bandwidth (the "NFS server").
-    pub remote_bw: Mutex<TokenBucket>,
-    /// Bytes served per source, for the e2e report.
+    /// Shared remote-store bandwidth (the "NFS server"), fair-shared by
+    /// every concurrent reader and the background prefetcher.
+    pub remote_bw: SharedTokenBucket,
+    /// Per-node cache-volume bandwidth (one bucket per NVMe volume).
+    pub node_bw: Vec<SharedTokenBucket>,
+    /// Concurrency model for the remote store: when set, the remote
+    /// bucket's aggregate rate follows `effective_bw(active_readers)`.
+    remote_model: Option<Box<dyn RemoteStore>>,
+    /// Live count of in-flight remote readers (per-reader accounting).
+    pub remote_readers: RemoteReaderGauge,
+    /// Simulated per-request service time on node reads, microseconds
+    /// (seek + syscall + FS client overhead). Zero by default.
+    node_read_latency_us: AtomicU64,
+    /// Simulated per-request service time on remote reads, microseconds.
+    remote_read_latency_us: AtomicU64,
+    /// Bytes served per source, for the e2e report (the cluster-wide
+    /// accumulator; threaded readers merge their shards into it).
     pub stats: Mutex<ReadStats>,
 }
 
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
 pub struct ReadStats {
     pub remote_bytes: u64,
     pub local_bytes: u64,
@@ -43,6 +82,29 @@ pub struct ReadStats {
     pub remote_reads: u64,
     pub local_reads: u64,
     pub peer_reads: u64,
+    /// Seconds spent waiting on the shared remote bucket.
+    pub remote_wait_s: f64,
+}
+
+impl ReadStats {
+    /// Fold another shard into this one (epoch-end merge).
+    pub fn merge(&mut self, other: &ReadStats) {
+        self.remote_bytes += other.remote_bytes;
+        self.local_bytes += other.local_bytes;
+        self.peer_bytes += other.peer_bytes;
+        self.remote_reads += other.remote_reads;
+        self.local_reads += other.local_reads;
+        self.peer_reads += other.peer_reads;
+        self.remote_wait_s += other.remote_wait_s;
+    }
+
+    pub fn total_reads(&self) -> u64 {
+        self.remote_reads + self.local_reads + self.peer_reads
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.remote_bytes + self.local_bytes + self.peer_bytes
+    }
 }
 
 impl RealCluster {
@@ -57,47 +119,127 @@ impl RealCluster {
             fs::create_dir_all(&d)?;
             node_dirs.push(d);
         }
+        let node_bw = (0..nodes)
+            .map(|_| SharedTokenBucket::new(DEFAULT_NODE_BW, DEFAULT_NODE_BURST))
+            .collect();
         Ok(RealCluster {
             root,
             remote_dir,
             node_dirs,
-            remote_bw: Mutex::new(TokenBucket::new(remote_bw, remote_bw / 4.0)),
+            remote_bw: SharedTokenBucket::new(remote_bw, remote_bw / 4.0),
+            node_bw,
+            remote_model: None,
+            remote_readers: RemoteReaderGauge::default(),
+            node_read_latency_us: AtomicU64::new(0),
+            remote_read_latency_us: AtomicU64::new(0),
             stats: Mutex::new(ReadStats::default()),
         })
+    }
+
+    /// Attach a remote-store concurrency model: the shared remote bucket's
+    /// rate is re-derived from `effective_bw(active_readers)` on every
+    /// remote read, giving per-reader effective-bandwidth accounting.
+    pub fn with_remote_model(mut self, model: Box<dyn RemoteStore>) -> Self {
+        self.remote_bw.set_rate(model.peak_bw());
+        self.remote_model = Some(model);
+        self
+    }
+
+    /// Set per-request service time for node (NVMe) reads.
+    pub fn set_node_read_latency(&self, d: Duration) {
+        self.node_read_latency_us.store(d.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    /// Set per-request service time for remote reads.
+    pub fn set_remote_read_latency(&self, d: Duration) {
+        self.remote_read_latency_us.store(d.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    /// Re-rate every per-node bucket (e.g. to model slower cache volumes).
+    pub fn set_node_bandwidth(&self, bytes_per_s: f64) {
+        for b in &self.node_bw {
+            b.set_rate(bytes_per_s);
+        }
     }
 
     pub fn num_nodes(&self) -> usize {
         self.node_dirs.len()
     }
 
-    /// Throttled read from the remote store.
+    /// Throttled read from the remote store, recording into the
+    /// cluster-wide stats (single-threaded callers).
     pub fn read_remote(&self, rel: &Path) -> Result<Vec<u8>> {
+        let mut shard = ReadStats::default();
+        let data = self.read_remote_sharded(rel, &mut shard)?;
+        self.merge_stats(&shard);
+        Ok(data)
+    }
+
+    /// Throttled read from the remote store, recording into the caller's
+    /// own stats shard (concurrent readers; no shared-stats lock taken).
+    pub fn read_remote_sharded(&self, rel: &Path, stats: &mut ReadStats) -> Result<Vec<u8>> {
         let path = self.remote_dir.join(rel);
         let mut buf = Vec::new();
         fs::File::open(&path)
             .with_context(|| format!("remote open {}", path.display()))?
             .read_to_end(&mut buf)?;
-        self.remote_bw.lock().unwrap().take(buf.len() as u64);
-        let mut s = self.stats.lock().unwrap();
-        s.remote_bytes += buf.len() as u64;
-        s.remote_reads += 1;
+        let active = self.remote_readers.enter();
+        if let Some(model) = &self.remote_model {
+            // Aggregate NFS bandwidth degrades with concurrent seeky
+            // readers; every in-flight reader shares the degraded rate
+            // through the one bucket.
+            self.remote_bw.set_rate(model.effective_bw(active));
+        }
+        let waited = self.remote_bw.acquire(buf.len() as u64);
+        self.remote_readers.exit();
+        if let Some(model) = &self.remote_model {
+            // Re-rate for the remaining concurrency so idle-period refill
+            // does not keep accruing at this burst's degraded rate.
+            self.remote_bw.set_rate(model.effective_bw(self.remote_readers.active().max(1)));
+        }
+        let lat = self.remote_read_latency_us.load(Ordering::Relaxed);
+        if lat > 0 {
+            std::thread::sleep(Duration::from_micros(lat));
+        }
+        stats.remote_bytes += buf.len() as u64;
+        stats.remote_reads += 1;
+        stats.remote_wait_s += waited.as_secs_f64();
         Ok(buf)
     }
 
-    /// Unthrottled read from a node cache dir (NVMe-class local storage).
+    /// Read from a node cache dir (NVMe-class local storage), through that
+    /// node's own token bucket, recording into the cluster-wide stats.
     pub fn read_node(&self, node: NodeId, rel: &Path, reader: NodeId) -> Result<Vec<u8>> {
+        let mut shard = ReadStats::default();
+        let data = self.read_node_sharded(node, rel, reader, &mut shard)?;
+        self.merge_stats(&shard);
+        Ok(data)
+    }
+
+    /// Node read recording into the caller's own stats shard.
+    pub fn read_node_sharded(
+        &self,
+        node: NodeId,
+        rel: &Path,
+        reader: NodeId,
+        stats: &mut ReadStats,
+    ) -> Result<Vec<u8>> {
         let path = self.node_dirs[node.0].join(rel);
         let mut buf = Vec::new();
         fs::File::open(&path)
             .with_context(|| format!("node{} open {}", node.0, path.display()))?
             .read_to_end(&mut buf)?;
-        let mut s = self.stats.lock().unwrap();
+        self.node_bw[node.0].acquire(buf.len() as u64);
+        let lat = self.node_read_latency_us.load(Ordering::Relaxed);
+        if lat > 0 {
+            std::thread::sleep(Duration::from_micros(lat));
+        }
         if node == reader {
-            s.local_bytes += buf.len() as u64;
-            s.local_reads += 1;
+            stats.local_bytes += buf.len() as u64;
+            stats.local_reads += 1;
         } else {
-            s.peer_bytes += buf.len() as u64;
-            s.peer_reads += 1;
+            stats.peer_bytes += buf.len() as u64;
+            stats.peer_reads += 1;
         }
         Ok(buf)
     }
@@ -113,6 +255,11 @@ impl RealCluster {
 
     pub fn node_has(&self, node: NodeId, rel: &Path) -> bool {
         self.node_dirs[node.0].join(rel).exists()
+    }
+
+    /// Fold a per-thread shard into the cluster-wide accumulator.
+    pub fn merge_stats(&self, shard: &ReadStats) {
+        self.stats.lock().unwrap().merge(shard);
     }
 
     pub fn take_stats(&self) -> ReadStats {
@@ -177,7 +324,9 @@ impl Mount for LocalMount<'_> {
 }
 
 /// The Hoard mount: placement and residency decisions come from the
-/// `CacheManager`; misses fill the cache (AFM behaviour).
+/// `CacheManager`; misses fill the cache (AFM behaviour). Single-threaded
+/// (`&mut CacheManager`); the concurrent equivalent is
+/// [`crate::posix::reader_pool::SharedMount`].
 pub struct HoardMount<'a> {
     pub cluster: &'a RealCluster,
     pub cache: &'a mut CacheManager,
@@ -281,7 +430,12 @@ mod tests {
             .unwrap();
         cache.place("d", (0..4).map(NodeId).collect()).unwrap();
 
-        let mut m = HoardMount { cluster: &cluster, cache: &mut cache, dataset: "d".into(), cfg: cfg.clone() };
+        let mut m = HoardMount {
+            cluster: &cluster,
+            cache: &mut cache,
+            dataset: "d".into(),
+            cfg: cfg.clone(),
+        };
         // Epoch 1: cold — every item comes from remote exactly once.
         for i in 0..cfg.num_items {
             m.read_item(i, NodeId(0)).unwrap();
@@ -315,7 +469,12 @@ mod tests {
             .register(DatasetSpec::new("d", cfg.num_items, total), "nfs://r/d".into())
             .unwrap();
         cache.place("d", (0..4).map(NodeId).collect()).unwrap();
-        let mut m = HoardMount { cluster: &cluster, cache: &mut cache, dataset: "d".into(), cfg: cfg.clone() };
+        let mut m = HoardMount {
+            cluster: &cluster,
+            cache: &mut cache,
+            dataset: "d".into(),
+            cfg: cfg.clone(),
+        };
         for i in 0..cfg.num_items {
             m.read_item(i, NodeId(0)).unwrap();
             m.read_item(i, NodeId(1)).unwrap();
@@ -327,6 +486,34 @@ mod tests {
             s.remote_reads,
             cfg.num_items
         );
+        fs::remove_dir_all(&cluster.root).unwrap();
+    }
+
+    #[test]
+    fn sharded_reads_do_not_touch_global_stats_until_merged() {
+        let cfg = small_cfg();
+        let (cluster, _) = setup("shard", &cfg);
+        let mut shard = ReadStats::default();
+        cluster.read_remote_sharded(&cfg.item_rel_path(0), &mut shard).unwrap();
+        assert_eq!(shard.remote_reads, 1);
+        assert_eq!(cluster.take_stats(), ReadStats::default(), "global untouched");
+        cluster.merge_stats(&shard);
+        assert_eq!(cluster.take_stats().remote_reads, 1);
+        fs::remove_dir_all(&cluster.root).unwrap();
+    }
+
+    #[test]
+    fn remote_model_degrades_bucket_rate() {
+        use crate::remote::NfsModel;
+        let cfg = small_cfg();
+        let root = tmpdir("model");
+        let cluster = RealCluster::create(&root, 2, 1.0e9)
+            .unwrap()
+            .with_remote_model(Box::new(NfsModel::new(1.0e9)));
+        datagen::generate(&cluster.remote_dir, &cfg).unwrap();
+        // A single reader sees the peak rate.
+        cluster.read_remote(&cfg.item_rel_path(0)).unwrap();
+        assert!((cluster.remote_bw.rate() - 1.0e9).abs() < 1.0, "single reader ⇒ peak");
         fs::remove_dir_all(&cluster.root).unwrap();
     }
 }

@@ -1,11 +1,21 @@
 //! Token-bucket bandwidth throttling — stands in for the NFS server's
 //! limited read bandwidth (and `tc`-style throttling for the Figure 5
 //! sweep) in the real-mode pipeline.
+//!
+//! Two layers:
+//!  * [`TokenBucket`] — the raw single-owner bucket. The concurrency-safe
+//!    primitive is [`TokenBucket::try_take`], which never sleeps; callers
+//!    that hold a lock around the bucket use it plus the returned wait hint
+//!    so no thread ever sleeps while holding the lock.
+//!  * [`SharedTokenBucket`] — `Arc<Mutex<TokenBucket>>` with an acquire
+//!    loop that always **sleeps outside the lock**; this is what the
+//!    concurrent data plane (per-node NVMe buckets, the shared remote
+//!    bucket) hands to reader/prefetcher threads.
 
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Classic token bucket: `rate` bytes/s refill, `burst` bytes capacity.
-/// `take(n)` blocks (sleeps) until n bytes of budget are available.
 #[derive(Debug)]
 pub struct TokenBucket {
     rate: f64,
@@ -43,18 +53,138 @@ impl TokenBucket {
         }
     }
 
-    /// Consume `n` bytes of budget, sleeping as required.
-    pub fn take(&mut self, n: u64) {
-        let wait = self.wait_needed(n);
-        if !wait.is_zero() {
-            std::thread::sleep(wait);
-            self.refill();
+    /// Non-blocking take: consume `n` bytes of budget if available right
+    /// now, otherwise report how long the caller should wait (outside any
+    /// lock) before retrying. Never sleeps.
+    pub fn try_take(&mut self, n: u64) -> Result<(), Duration> {
+        self.refill();
+        let need = n as f64;
+        if self.tokens >= need {
+            self.tokens -= need;
+            Ok(())
+        } else {
+            Err(Duration::from_secs_f64((need - self.tokens) / self.rate))
         }
-        self.tokens -= n as f64; // may go briefly negative on rounding
+    }
+
+    /// Consume `n` bytes of budget, sleeping as required. Single-owner
+    /// convenience; concurrent callers must go through
+    /// [`SharedTokenBucket::acquire`] instead so the sleep happens outside
+    /// the shared lock. Requests larger than the burst are granted in
+    /// burst-sized chunks, so the bucket never goes into debt.
+    pub fn take(&mut self, n: u64) {
+        let mut remaining = n;
+        while remaining > 0 {
+            let chunk = remaining.min(self.burst as u64).max(1);
+            loop {
+                match self.try_take(chunk) {
+                    Ok(()) => break,
+                    Err(wait) => std::thread::sleep(wait),
+                }
+            }
+            remaining -= chunk;
+        }
     }
 
     pub fn rate(&self) -> f64 {
         self.rate
+    }
+
+    pub fn burst(&self) -> f64 {
+        self.burst
+    }
+
+    /// Re-rate the bucket (effective-bandwidth accounting: the remote
+    /// store's aggregate rate degrades as concurrent readers pile up).
+    /// Accrual up to now is settled at the old rate first.
+    pub fn set_rate(&mut self, rate_bytes_per_s: f64) {
+        assert!(rate_bytes_per_s > 0.0);
+        self.refill();
+        self.rate = rate_bytes_per_s;
+    }
+}
+
+/// A token bucket shared between threads. All sleeping happens *outside*
+/// the internal mutex: contenders only hold the lock for a `try_take`, so
+/// a waiting reader never blocks the others from draining their budget.
+#[derive(Debug, Clone)]
+pub struct SharedTokenBucket {
+    inner: Arc<Mutex<TokenBucket>>,
+}
+
+impl SharedTokenBucket {
+    pub fn new(rate_bytes_per_s: f64, burst_bytes: f64) -> Self {
+        let bucket = TokenBucket::new(rate_bytes_per_s, burst_bytes);
+        SharedTokenBucket { inner: Arc::new(Mutex::new(bucket)) }
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.inner.lock().unwrap().rate()
+    }
+
+    pub fn burst(&self) -> f64 {
+        self.inner.lock().unwrap().burst()
+    }
+
+    pub fn set_rate(&self, rate_bytes_per_s: f64) {
+        self.inner.lock().unwrap().set_rate(rate_bytes_per_s);
+    }
+
+    /// Consume `n` bytes, sleeping (outside the lock) until granted.
+    /// Returns the total time slept, so callers can account stall time.
+    /// Grants happen in burst-sized chunks: total grant never exceeds
+    /// `burst + rate × elapsed`, the invariant the stress tests assert.
+    pub fn acquire(&self, n: u64) -> Duration {
+        self.acquire_inner(n, None).expect("acquire without deadline cannot give up")
+    }
+
+    /// Non-blocking acquire: `true` if the whole request fit right now.
+    /// Requests above the burst can never succeed atomically and return
+    /// `false` without consuming anything.
+    pub fn try_acquire(&self, n: u64) -> bool {
+        let mut b = self.inner.lock().unwrap();
+        if (n as f64) > b.burst() {
+            return false;
+        }
+        b.try_take(n).is_ok()
+    }
+
+    /// Deadline acquire: like [`Self::acquire`] but gives up (returning
+    /// `false`) once waiting any longer would pass `deadline`. A `false`
+    /// return means the tail of the request was abandoned; the portion
+    /// already granted stays consumed (callers treat this as best-effort
+    /// budget, e.g. the background prefetcher backing off).
+    pub fn acquire_until(&self, n: u64, deadline: Instant) -> bool {
+        self.acquire_inner(n, Some(deadline)).is_ok()
+    }
+
+    /// The one pacing loop both acquire flavours share. `Ok(slept)` when
+    /// fully granted; `Err(())` when the deadline cut the request short.
+    /// Burst is immutable after construction, so it is read once — each
+    /// grant then costs a single lock round-trip.
+    fn acquire_inner(&self, n: u64, deadline: Option<Instant>) -> Result<Duration, ()> {
+        let burst = self.inner.lock().unwrap().burst() as u64;
+        let mut slept = Duration::ZERO;
+        let mut remaining = n;
+        while remaining > 0 {
+            let chunk = remaining.min(burst).max(1);
+            loop {
+                let wait = match self.inner.lock().unwrap().try_take(chunk) {
+                    Ok(()) => break,
+                    Err(wait) => wait,
+                };
+                if let Some(d) = deadline {
+                    if Instant::now() + wait > d {
+                        return Err(());
+                    }
+                }
+                // Lock released — sleep without blocking other readers.
+                std::thread::sleep(wait);
+                slept += wait;
+            }
+            remaining -= chunk;
+        }
+        Ok(slept)
     }
 }
 
@@ -89,5 +219,54 @@ mod tests {
         tb.take(10); // drain burst
         let w = tb.wait_needed(1000);
         assert!(w >= Duration::from_millis(900), "{w:?}");
+    }
+
+    #[test]
+    fn try_take_never_sleeps() {
+        let mut tb = TokenBucket::new(1000.0, 100.0);
+        let t0 = Instant::now();
+        assert!(tb.try_take(100).is_ok());
+        let wait = tb.try_take(500).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_millis(20), "try_take must not block");
+        assert!(wait >= Duration::from_millis(400), "{wait:?}");
+        // Nothing was consumed by the failed attempt.
+        assert!(tb.wait_needed(500) >= Duration::from_millis(400));
+    }
+
+    #[test]
+    fn take_larger_than_burst_chunks() {
+        let mut tb = TokenBucket::new(1_000_000.0, 1000.0);
+        let t0 = Instant::now();
+        tb.take(5000); // 5× the burst: must still terminate, paced at rate
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt >= 0.003, "5 KB minus 1 KB burst at 1 MB/s ⇒ ≥ 4 ms, got {dt}s");
+        assert!(dt < 0.5);
+    }
+
+    #[test]
+    fn set_rate_applies_forward() {
+        let mut tb = TokenBucket::new(1000.0, 10.0);
+        tb.take(10);
+        tb.set_rate(1_000_000.0);
+        let w = tb.wait_needed(1000);
+        assert!(w < Duration::from_millis(50), "new rate must apply: {w:?}");
+    }
+
+    #[test]
+    fn shared_bucket_deadline_gives_up() {
+        let b = SharedTokenBucket::new(1000.0, 10.0);
+        b.acquire(10); // drain
+        let t0 = Instant::now();
+        let ok = b.acquire_until(5000, Instant::now() + Duration::from_millis(50));
+        assert!(!ok, "5 KB at 1 KB/s cannot fit a 50 ms deadline");
+        assert!(t0.elapsed() < Duration::from_millis(300), "must give up promptly");
+    }
+
+    #[test]
+    fn shared_bucket_try_acquire() {
+        let b = SharedTokenBucket::new(1000.0, 100.0);
+        assert!(b.try_acquire(100));
+        assert!(!b.try_acquire(100), "drained bucket must refuse");
+        assert!(!b.try_acquire(1000), "above-burst requests refuse without blocking");
     }
 }

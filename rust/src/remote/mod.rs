@@ -110,6 +110,56 @@ impl RemoteStore for S3Model {
     }
 }
 
+/// Live gauge of concurrent remote readers — the accounting hook the
+/// real-mode data plane uses to re-rate the shared remote bucket per
+/// reader (`effective_bw(active)`), and to report fairness after the run.
+#[derive(Debug, Default)]
+pub struct RemoteReaderGauge {
+    active: std::sync::atomic::AtomicU32,
+    peak: std::sync::atomic::AtomicU32,
+    sessions: std::sync::atomic::AtomicU64,
+}
+
+impl RemoteReaderGauge {
+    /// A reader entered the remote path. Returns the active count
+    /// *including* this reader.
+    pub fn enter(&self) -> u32 {
+        use std::sync::atomic::Ordering::SeqCst;
+        let now = self.active.fetch_add(1, SeqCst) + 1;
+        self.peak.fetch_max(now, SeqCst);
+        self.sessions.fetch_add(1, SeqCst);
+        now
+    }
+
+    pub fn exit(&self) {
+        use std::sync::atomic::Ordering::SeqCst;
+        let prev = self.active.fetch_sub(1, SeqCst);
+        debug_assert!(prev > 0, "gauge exit without enter");
+    }
+
+    pub fn active(&self) -> u32 {
+        self.active.load(std::sync::atomic::Ordering::SeqCst)
+    }
+
+    /// High-water mark of concurrent remote readers.
+    pub fn peak(&self) -> u32 {
+        self.peak.load(std::sync::atomic::Ordering::SeqCst)
+    }
+
+    /// Total remote read sessions since creation.
+    pub fn sessions(&self) -> u64 {
+        self.sessions.load(std::sync::atomic::Ordering::SeqCst)
+    }
+}
+
+/// Bandwidth one of `readers` concurrent readers can expect from `model`
+/// under fair sharing of the degraded aggregate (the per-reader view of
+/// the Table 4 calibration).
+pub fn fair_reader_bw(model: &dyn RemoteStore, readers: u32) -> f64 {
+    let readers = readers.max(1);
+    model.effective_bw(readers) / readers as f64
+}
+
 /// Parse a dataset URL like "nfs://server/path" or "s3://bucket/key".
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct DatasetUrl {
@@ -118,9 +168,16 @@ pub struct DatasetUrl {
     pub path: String,
 }
 
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("invalid dataset url '{0}' (expected scheme://host/path)")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct UrlError(pub String);
+
+impl std::fmt::Display for UrlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid dataset url '{}' (expected scheme://host/path)", self.0)
+    }
+}
+
+impl std::error::Error for UrlError {}
 
 impl DatasetUrl {
     pub fn parse(s: &str) -> Result<Self, UrlError> {
@@ -184,6 +241,37 @@ mod tests {
     fn throttled_scales_peak() {
         let t = NfsModel::throttled(0.4);
         assert!((t.peak_bw() - 0.42e9).abs() < 1e3);
+    }
+
+    #[test]
+    fn reader_gauge_tracks_active_and_peak() {
+        let g = RemoteReaderGauge::default();
+        assert_eq!(g.enter(), 1);
+        assert_eq!(g.enter(), 2);
+        g.exit();
+        assert_eq!(g.enter(), 2);
+        g.exit();
+        g.exit();
+        assert_eq!(g.active(), 0);
+        assert_eq!(g.peak(), 2);
+        assert_eq!(g.sessions(), 3);
+    }
+
+    #[test]
+    fn fair_reader_bw_splits_degraded_aggregate() {
+        let n = NfsModel::paper_nfs();
+        let one = fair_reader_bw(&n, 1);
+        let sixteen = fair_reader_bw(&n, 16);
+        assert_eq!(one, 1.05e9);
+        // 16 readers share ~644 MB/s ⇒ ~40 MB/s each.
+        assert!((sixteen - 644e6 / 16.0).abs() / sixteen < 0.03, "{sixteen}");
+        // Per-reader share is monotone decreasing.
+        let mut last = f64::INFINITY;
+        for r in [1u32, 2, 4, 8, 16] {
+            let bw = fair_reader_bw(&n, r);
+            assert!(bw < last);
+            last = bw;
+        }
     }
 
     #[test]

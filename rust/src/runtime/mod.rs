@@ -6,18 +6,29 @@
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §8).
 
+//! The engine/trainer half requires the out-of-tree `xla` PJRT bindings
+//! and is gated behind the `pjrt` cargo feature (off by default, so the
+//! offline build compiles without them); the artifact [`manifest`] is
+//! plain JSON and always available.
+
 pub mod manifest;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
 pub use manifest::{Dtype, EntrySig, Manifest, TensorSpec};
+#[cfg(feature = "pjrt")]
 pub use trainer::TrainerSession;
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::{Path, PathBuf};
 
+#[cfg(feature = "pjrt")]
 use anyhow::{bail, Context, Result};
 
 /// A compiled-artifact registry bound to one PJRT client.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     pub manifest: Manifest,
@@ -25,6 +36,7 @@ pub struct Engine {
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Load `manifest.json` from `dir` and connect the CPU PJRT client.
     /// Executables are compiled lazily per entrypoint (`prepare`/`execute`).
@@ -86,6 +98,7 @@ impl Engine {
 }
 
 /// Build a literal from raw f32 data + dims.
+#[cfg(feature = "pjrt")]
 pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
@@ -94,11 +107,13 @@ pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
 }
 
 /// Build a literal from raw u8 data + dims.
+#[cfg(feature = "pjrt")]
 pub fn literal_u8(data: &[u8], dims: &[usize]) -> Result<xla::Literal> {
     Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, dims, bytes_of(data))?)
 }
 
 /// Build a literal from i32 data + dims.
+#[cfg(feature = "pjrt")]
 pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
@@ -107,15 +122,17 @@ pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
 }
 
 /// Scalar i32 literal (e.g. the init seed).
+#[cfg(feature = "pjrt")]
 pub fn literal_i32_scalar(v: i32) -> Result<xla::Literal> {
     literal_i32(&[v], &[])
 }
 
+#[cfg(feature = "pjrt")]
 fn bytes_of(data: &[u8]) -> &[u8] {
     data
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 

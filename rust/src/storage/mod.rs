@@ -59,13 +59,26 @@ pub struct Device {
     pub used: u64,
 }
 
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum StorageError {
-    #[error("device full: need {need} bytes, {free} free")]
     Full { need: u64, free: u64 },
-    #[error("releasing {release} bytes but only {used} used")]
     Underflow { release: u64, used: u64 },
 }
+
+impl std::fmt::Display for StorageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StorageError::Full { need, free } => {
+                write!(f, "device full: need {need} bytes, {free} free")
+            }
+            StorageError::Underflow { release, used } => {
+                write!(f, "releasing {release} bytes but only {used} used")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StorageError {}
 
 impl Device {
     pub fn new(kind: DeviceKind, capacity: u64) -> Self {

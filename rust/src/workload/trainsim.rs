@@ -172,6 +172,12 @@ pub struct TrainSim {
     nfs_res: ResourceId,
     /// Seconds between fps samples (0 disables series collection).
     pub sample_interval: f64,
+    /// Reader threads per job in the *real-mode* data plane this scenario
+    /// maps to (`posix::ReaderPool`). The fluid model already aggregates
+    /// per-GPU streams through `demand.gpus`, so this is an execution hint
+    /// only: every simulated quantity is invariant to it — asserted by the
+    /// determinism regression tests. Only the real-file path is threaded.
+    pub reader_threads: usize,
 }
 
 impl TrainSim {
@@ -183,7 +189,15 @@ impl TrainSim {
             .enumerate()
             .map(|(i, v)| topology.add_external(format!("node{i}.cachevol"), v.read_bw()))
             .collect();
-        TrainSim { topology, remote, jobs: vec![], volume_res, nfs_res, sample_interval: 0.0 }
+        TrainSim {
+            topology,
+            remote,
+            jobs: vec![],
+            volume_res,
+            nfs_res,
+            sample_interval: 0.0,
+            reader_threads: 1,
+        }
     }
 
     pub fn add_job(&mut self, job: TrainJobSim) {

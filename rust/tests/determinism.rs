@@ -1,0 +1,84 @@
+//! Determinism regression: the fluid simulation (and every table derived
+//! from it) is byte-identical regardless of the reader-pool size hint —
+//! threading lives exclusively in the real-file data plane
+//! (`posix::ReaderPool`); the simulator's numbers may never depend on it.
+//!
+//! Coverage deliberately skips the heaviest tables (t3/t4/util run 60–90
+//! epoch sims and are exercised once already by `paper_results.rs`); the
+//! fluid engine they share is pinned here via `SimResult` bit-equality.
+
+use hoard::experiments as exp;
+use hoard::workload::trainsim::{paper_scenario, ReadMode, SimResult};
+
+/// Bit-exact fingerprint of a simulation result.
+fn digest(res: &SimResult) -> Vec<u64> {
+    let mut d = vec![res.makespan.to_bits()];
+    for j in &res.jobs {
+        d.push(j.total_duration.to_bits());
+        d.push(j.bytes_from_remote.to_bits());
+        d.push(j.bytes_from_local.to_bits());
+        d.push(j.bytes_from_peers.to_bits());
+        d.push(j.bytes_from_ram.to_bits());
+        d.extend(j.epoch_durations.iter().map(|e| e.to_bits()));
+        d.extend(j.fps_series.iter().flat_map(|(t, v)| [t.to_bits(), v.to_bits()]));
+    }
+    d.extend(res.traffic.bytes.iter().map(|b| b.to_bits()));
+    d
+}
+
+fn run_with_readers(mode: ReadMode, epochs: u32, readers: usize) -> Vec<u64> {
+    let mut sim = paper_scenario(mode, epochs);
+    sim.reader_threads = readers;
+    sim.sample_interval = 60.0;
+    digest(&sim.run())
+}
+
+#[test]
+fn sim_result_invariant_to_reader_pool_size() {
+    for mode in [ReadMode::Remote, ReadMode::LocalNvme, ReadMode::Hoard] {
+        let one = run_with_readers(mode, 2, 1);
+        let four = run_with_readers(mode, 2, 4);
+        let sixteen = run_with_readers(mode, 2, 16);
+        assert_eq!(one, four, "{mode:?}: readers=4 perturbed the fluid sim");
+        assert_eq!(one, sixteen, "{mode:?}: readers=16 perturbed the fluid sim");
+    }
+}
+
+#[test]
+fn sim_result_bit_stable_across_repeated_runs() {
+    let a = run_with_readers(ReadMode::Hoard, 3, 1);
+    let b = run_with_readers(ReadMode::Hoard, 3, 8);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn table1_byte_identical_across_runs() {
+    assert_eq!(exp::table1_fs_comparison().console(), exp::table1_fs_comparison().console());
+}
+
+#[test]
+fn figure3_byte_identical_across_runs() {
+    let (s1, t1) = exp::figure3_two_epochs();
+    let (s2, t2) = exp::figure3_two_epochs();
+    assert_eq!(t1.console(), t2.console());
+    assert_eq!(s1.len(), s2.len());
+    for ((n1, pts1), (n2, pts2)) in s1.iter().zip(&s2) {
+        assert_eq!(n1, n2);
+        let b1: Vec<[u64; 2]> = pts1.iter().map(|(t, v)| [t.to_bits(), v.to_bits()]).collect();
+        let b2: Vec<[u64; 2]> = pts2.iter().map(|(t, v)| [t.to_bits(), v.to_bits()]).collect();
+        assert_eq!(b1, b2, "series {n1} not bit-stable");
+    }
+}
+
+#[test]
+fn figure5_byte_identical_across_runs() {
+    assert_eq!(
+        exp::figure5_remote_bw_sweep().console(),
+        exp::figure5_remote_bw_sweep().console()
+    );
+}
+
+#[test]
+fn table5_byte_identical_across_runs() {
+    assert_eq!(exp::table5_rack_uplink().console(), exp::table5_rack_uplink().console());
+}

@@ -1,6 +1,9 @@
 //! Integration tests for the PJRT runtime against the real AOT artifacts.
-//! These require `make artifacts` to have run; they are skipped (cleanly)
-//! when artifacts/ is absent so `cargo test` works on a fresh checkout.
+//! These require the `pjrt` feature (the out-of-tree `xla` bindings) and
+//! `make artifacts` to have run; they are skipped (cleanly) when
+//! artifacts/ is absent so `cargo test` works on a fresh checkout.
+
+#![cfg(feature = "pjrt")]
 
 use hoard::runtime::{literal_u8, Engine, TrainerSession};
 use hoard::workload::datagen::{self, DataGenConfig};

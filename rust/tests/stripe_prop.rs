@@ -1,0 +1,202 @@
+//! Property tests for `StripeMap` (and the placement life cycle around
+//! node failure/recovery), using the in-tree `util::prop` harness:
+//!
+//!  * every chunk/item maps to exactly one *member* node, and the
+//!    byte-accounting partition covers the dataset exactly;
+//!  * coverage is preserved across node failure + recovery + re-placement;
+//!  * chunk→node assignment is a pure function of the (seeded) member
+//!    list — deterministic across constructions.
+
+use std::collections::HashMap;
+
+use hoard::cache::{CacheManager, DatasetState, EvictionPolicy, StripeMap};
+use hoard::netsim::NodeId;
+use hoard::storage::{Device, DeviceKind, Volume};
+use hoard::util::prop::forall;
+use hoard::util::Rng;
+use hoard::workload::DatasetSpec;
+
+fn gen_nodes(rng: &mut Rng) -> Vec<NodeId> {
+    let k = 1 + rng.gen_range(8) as usize;
+    let mut ids: Vec<usize> = (0..16).collect();
+    rng.shuffle(&mut ids);
+    ids.truncate(k);
+    ids.into_iter().map(NodeId).collect()
+}
+
+#[test]
+fn prop_every_chunk_maps_to_exactly_one_member() {
+    forall(
+        150,
+        |rng| {
+            let nodes = gen_nodes(rng);
+            let chunk = 1 + rng.gen_range(1000);
+            let total = rng.gen_range(50_000);
+            (nodes, chunk, total)
+        },
+        |(nodes, chunk, total)| {
+            let s = StripeMap::new(nodes.clone(), *chunk);
+            // Walk every chunk of a `total`-byte dataset: each must land on
+            // one member, and per-node chunk totals must equal the map's
+            // own byte accounting (cross-validation of two code paths).
+            let mut per_node: HashMap<NodeId, u64> = HashMap::new();
+            let mut off = 0u64;
+            while off < *total {
+                let n = s.node_of_offset(off);
+                if !s.contains(n) {
+                    return Err(format!("offset {off} maps to non-member {n:?}"));
+                }
+                let len = (*total - off).min(*chunk);
+                *per_node.entry(n).or_insert(0) += len;
+                off += len;
+            }
+            let mut covered = 0u64;
+            for &n in s.nodes() {
+                let want = s.bytes_on_node(n, *total);
+                let got = per_node.get(&n).copied().unwrap_or(0);
+                if want != got {
+                    return Err(format!(
+                        "node {n:?}: bytes_on_node says {want}, chunk walk says {got}"
+                    ));
+                }
+                covered += got;
+            }
+            if covered != *total {
+                return Err(format!("partition covers {covered} of {total} bytes"));
+            }
+            // Non-members hold nothing.
+            for i in 0..16 {
+                let n = NodeId(i);
+                if !s.contains(n) && s.bytes_on_node(n, *total) != 0 {
+                    return Err(format!("non-member {n:?} reports bytes"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_item_mapping_deterministic_for_fixed_seed() {
+    forall(
+        100,
+        |rng| (rng.next_u64(), 1 + rng.gen_range(5000)),
+        |&(seed, items)| {
+            // Two independent derivations from the same seed must agree on
+            // every assignment (chunk→node is a pure function of the
+            // member list, and the member list is a pure function of the
+            // seed).
+            let mut r1 = Rng::new(seed);
+            let mut r2 = Rng::new(seed);
+            let (n1, n2) = (gen_nodes(&mut r1), gen_nodes(&mut r2));
+            if n1 != n2 {
+                return Err(format!("seeded member list not deterministic: {n1:?} vs {n2:?}"));
+            }
+            let s1 = StripeMap::new(n1, 1 << 16);
+            let s2 = StripeMap::new(n2, 1 << 16);
+            for i in 0..items {
+                if s1.node_of_item(i) != s2.node_of_item(i) {
+                    return Err(format!("item {i} assignment differs across constructions"));
+                }
+                if s1.node_of_offset(i * 1000) != s2.node_of_offset(i * 1000) {
+                    return Err(format!("offset {} assignment differs", i * 1000));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_coverage_preserved_across_failure_and_recovery() {
+    forall(
+        60,
+        |rng| {
+            let nodes = 3 + rng.gen_range(6) as usize; // 3..=8 nodes
+            let width = 2 + rng.gen_range((nodes - 1) as u64) as usize; // 2..=nodes
+            let items = 10 + rng.gen_range(500);
+            let victim = rng.gen_range(width as u64) as usize;
+            (nodes, width, items, victim)
+        },
+        |&(nodes, width, items, victim)| {
+            let vols: Vec<Volume> = (0..nodes)
+                .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 20)]))
+                .collect();
+            let mut m = CacheManager::new(vols, EvictionPolicy::Manual);
+            m.register(DatasetSpec::new("d", items, 10 * items), "nfs://s/d".into())
+                .map_err(|e| e.to_string())?;
+            let members: Vec<NodeId> = (0..width).map(NodeId).collect();
+            m.place("d", members.clone()).map_err(|e| e.to_string())?;
+
+            // Before failure: every item maps onto a member.
+            {
+                let rec = m.registry.get("d").unwrap();
+                let stripe = rec.stripe.as_ref().unwrap();
+                for i in 0..items {
+                    if !stripe.contains(stripe.node_of_item(i)) {
+                        return Err(format!("item {i} on non-member before failure"));
+                    }
+                }
+            }
+
+            // Fail a member: the dataset loses its placement (striping
+            // without replication), capacity is released everywhere.
+            let lost = m.fail_node(NodeId(victim));
+            if lost != vec!["d".to_string()] {
+                return Err(format!("failure should invalidate the dataset, got {lost:?}"));
+            }
+            if m.registry.get("d").unwrap().stripe.is_some() {
+                return Err("stripe must be gone after member failure".into());
+            }
+            let used: u64 = (0..nodes).map(|i| m.node_used(NodeId(i))).sum();
+            if used != 0 {
+                return Err(format!("{used} bytes still reserved after failure"));
+            }
+
+            // Recover + re-place on the healthy survivors ∪ recovered:
+            // full coverage again, all members healthy.
+            m.recover_node(NodeId(victim));
+            m.place("d", members.clone()).map_err(|e| e.to_string())?;
+            let rec = m.registry.get("d").unwrap();
+            if rec.state == DatasetState::Cached {
+                return Err("re-placed dataset cannot be instantly cached".into());
+            }
+            let stripe = rec.stripe.as_ref().unwrap();
+            let mut hit: HashMap<NodeId, u64> = HashMap::new();
+            for i in 0..items {
+                let n = stripe.node_of_item(i);
+                if !stripe.contains(n) || !m.node_healthy(n) {
+                    return Err(format!("item {i} on bad node {n:?} after recovery"));
+                }
+                *hit.entry(n).or_insert(0) += 1;
+            }
+            // Round-robin balance: max/min differ by ≤ 1.
+            let max = hit.values().max().copied().unwrap_or(0);
+            let min =
+                stripe.nodes().iter().map(|n| hit.get(n).copied().unwrap_or(0)).min().unwrap();
+            if max - min > 1 {
+                return Err(format!("imbalance after recovery: {max} vs {min}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_local_fraction_matches_width() {
+    forall(
+        100,
+        |rng| gen_nodes(rng),
+        |nodes| {
+            let s = StripeMap::new(nodes.clone(), 1 << 20);
+            for &n in nodes {
+                let f = s.local_fraction(n);
+                let want = 1.0 / nodes.len() as f64;
+                if (f - want).abs() > 1e-12 {
+                    return Err(format!("local fraction {f} ≠ 1/{}", nodes.len()));
+                }
+            }
+            Ok(())
+        },
+    );
+}

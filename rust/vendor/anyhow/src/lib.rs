@@ -1,0 +1,252 @@
+//! Offline, dependency-free subset of the `anyhow` API, vendored so the
+//! Hoard build never touches a crate registry. Implements exactly the
+//! surface this repository uses:
+//!
+//!  * [`Error`] — an erased error with a context chain; `Display` prints the
+//!    outermost message, `{:#}` prints the whole chain, `Debug` prints the
+//!    chain anyhow-style ("Caused by:").
+//!  * [`Result`] — `Result<T, Error>` alias.
+//!  * [`Context`] — `.context(..)` / `.with_context(|| ..)` on `Result` and
+//!    `Option`.
+//!  * [`anyhow!`] / [`bail!`] / [`ensure!`] macros.
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error`; that is what makes the blanket
+//! `From<E: std::error::Error>` conversion coherent.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An erased error: zero or more layers of context wrapped around an
+/// optional source error.
+pub struct Error {
+    /// Context messages, outermost first.
+    context: Vec<String>,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Create an error from a plain message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { context: vec![message.to_string()], source: None }
+    }
+
+    /// Wrap `source` (any std error) without extra context.
+    pub fn new<E: StdError + Send + Sync + 'static>(source: E) -> Self {
+        Error { context: Vec::new(), source: Some(Box::new(source)) }
+    }
+
+    fn wrap<C: fmt::Display>(mut self, ctx: C) -> Self {
+        self.context.insert(0, ctx.to_string());
+        self
+    }
+
+    /// Every layer of the error, outermost first: context messages, then
+    /// the source chain.
+    pub fn chain(&self) -> Vec<String> {
+        let mut layers = self.context.clone();
+        let mut src: Option<&(dyn StdError + 'static)> =
+            self.source.as_ref().map(|s| s.as_ref() as &(dyn StdError + 'static));
+        while let Some(s) = src {
+            layers.push(s.to_string());
+            src = s.source();
+        }
+        layers
+    }
+
+    /// The innermost error message (the original cause).
+    pub fn root_cause(&self) -> String {
+        self.chain().pop().unwrap_or_else(|| "unknown error".to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the whole chain, colon-separated (anyhow behaviour).
+            return write!(f, "{}", self.chain().join(": "));
+        }
+        match (self.context.first(), &self.source) {
+            (Some(c), _) => write!(f, "{c}"),
+            (None, Some(s)) => write!(f, "{s}"),
+            (None, None) => write!(f, "unknown error"),
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let layers = self.chain();
+        match layers.split_first() {
+            None => write!(f, "unknown error"),
+            Some((first, rest)) => {
+                write!(f, "{first}")?;
+                if !rest.is_empty() {
+                    write!(f, "\n\nCaused by:")?;
+                    for (i, layer) in rest.iter().enumerate() {
+                        write!(f, "\n    {i}: {layer}")?;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+// Coherent because `Error` itself does not implement `std::error::Error`
+// (the standard anyhow trick).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::new(e)
+    }
+}
+
+/// Conversion into [`Error`] — implemented for std errors *and* for
+/// [`Error`] itself so `.context(..)` chains on both.
+pub trait IntoError {
+    fn into_error(self) -> Error;
+}
+
+impl<E: StdError + Send + Sync + 'static> IntoError for E {
+    fn into_error(self) -> Error {
+        Error::new(self)
+    }
+}
+
+impl IntoError for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+/// `.context(..)` / `.with_context(|| ..)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into_error().wrap(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// `if !cond { bail!(..) }`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn from_std_error_and_display() {
+        let e: Error = io_err().into();
+        assert_eq!(e.to_string(), "file missing");
+    }
+
+    #[test]
+    fn context_layers_and_alternate() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening config").unwrap_err();
+        assert_eq!(e.to_string(), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: file missing");
+        let e2 = Err::<(), Error>(e).with_context(|| format!("loading {}", "x")).unwrap_err();
+        assert_eq!(e2.to_string(), "loading x");
+        assert_eq!(format!("{e2:#}"), "loading x: opening config: file missing");
+        assert_eq!(e2.root_cause(), "file missing");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing field").unwrap_err().to_string(), "missing field");
+        assert_eq!(Some(7u32).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros() {
+        fn fails(n: u32) -> Result<()> {
+            ensure!(n < 10, "n too big: {n}");
+            if n == 3 {
+                bail!("unlucky {}", n);
+            }
+            Ok(())
+        }
+        assert!(fails(1).is_ok());
+        assert_eq!(fails(3).unwrap_err().to_string(), "unlucky 3");
+        assert_eq!(fails(11).unwrap_err().to_string(), "n too big: 11");
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn debug_prints_cause_chain() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("outer"), "{dbg}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("file missing"), "{dbg}");
+    }
+}
