@@ -4,7 +4,22 @@
 
 use std::time::Instant;
 
+/// Smoke mode (`HOARD_BENCH_SMOKE=1`, used by CI): one measured run, no
+/// warm-up — catches bench bit-rot on every PR without paying for real
+/// measurements. Timing assertions should be skipped under smoke.
+#[allow(dead_code)]
+pub fn smoke() -> bool {
+    std::env::var("HOARD_BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
 pub fn bench<T>(name: &str, mut f: impl FnMut() -> T) -> T {
+    if smoke() {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_secs_f64();
+        println!("BENCH {name} best={dt:.4}s mean={dt:.4}s runs=1 (smoke)");
+        return out;
+    }
     // Warm-up + 3 measured repetitions (the experiments are deterministic;
     // repetitions measure harness cost, not noise).
     let _ = f();

@@ -19,13 +19,13 @@ const ITEMS: u64 = 512;
 /// Per-request NVMe/FS-client service time the readers overlap.
 const NODE_LATENCY: Duration = Duration::from_micros(500);
 
-fn best_warm_of(reps: usize, readers: usize) -> (f64, f64) {
+fn best_warm_of(reps: usize, readers: usize, items: u64) -> (f64, f64) {
     let mut best_warm = f64::INFINITY;
     let mut best_cold = f64::INFINITY;
     for _ in 0..reps {
-        let p = reader_scaling_run(readers, ITEMS, NODE_LATENCY)
+        let p = reader_scaling_run(readers, items, NODE_LATENCY)
             .expect("scaling run needs a writable temp dir");
-        assert_eq!(p.cold.remote_reads, ITEMS, "fetch-once violated at {readers} readers");
+        assert_eq!(p.cold.remote_reads, items, "fetch-once violated at {readers} readers");
         assert_eq!(p.warm.remote_reads, 0, "warm epoch touched remote at {readers} readers");
         best_warm = best_warm.min(p.warm_s);
         best_cold = best_cold.min(p.cold_s);
@@ -34,17 +34,22 @@ fn best_warm_of(reps: usize, readers: usize) -> (f64, f64) {
 }
 
 fn main() {
-    let (cold1, warm1) = common::bench("perf_readers_1", || best_warm_of(3, 1));
-    let (cold4, warm4) = common::bench("perf_readers_4", || best_warm_of(3, 4));
+    // Smoke mode (CI): one repetition over a small dataset — exercises the
+    // whole pipeline and the fetch-once correctness asserts, but skips the
+    // timing assertion (shared runners are too noisy for it).
+    let smoke = common::smoke();
+    let (reps, items) = if smoke { (1, 64) } else { (3, ITEMS) };
+    let (cold1, warm1) = common::bench("perf_readers_1", || best_warm_of(reps, 1, items));
+    let (cold4, warm4) = common::bench("perf_readers_4", || best_warm_of(reps, 4, items));
 
     let warm_speedup = warm1 / warm4.max(1e-9);
     let cold_speedup = cold1 / cold4.max(1e-9);
     println!(
         "warm epoch: 1 reader {:.3}s ({:.0} img/s) → 4 readers {:.3}s ({:.0} img/s)  ⇒ {:.2}×",
         warm1,
-        ITEMS as f64 / warm1,
+        items as f64 / warm1,
         warm4,
-        ITEMS as f64 / warm4,
+        items as f64 / warm4,
         warm_speedup
     );
     println!(
@@ -53,6 +58,10 @@ fn main() {
     );
     println!("BENCH perf_concurrent_readers warm_speedup={warm_speedup:.2} cold_speedup={cold_speedup:.2}");
 
+    if smoke {
+        println!("smoke mode: warm-speedup assertion skipped");
+        return;
+    }
     assert!(
         warm_speedup >= 1.5,
         "1→4 readers must deliver ≥ 1.5× warm-epoch throughput, got {warm_speedup:.2}×"

@@ -16,7 +16,7 @@ pub mod stripe;
 
 pub use eviction::{plan_admission, Admission, EvictionPolicy};
 pub use registry::{DatasetRecord, DatasetState, Registry, RegistryError};
-pub use stripe::StripeMap;
+pub use stripe::{item_range, ChunkSet, StripeMap};
 
 use crate::netsim::NodeId;
 use crate::storage::Volume;
@@ -33,6 +33,101 @@ pub enum ReadLocation {
     /// Not cached (yet): fetch from the remote store via the AFM gateway,
     /// then it will live on `fill_node`.
     RemoteFill { fill_node: NodeId },
+}
+
+/// Chunk-granular answer to "where do I read item `i` from?": one
+/// `(item-local byte range, location)` segment per chunk the item
+/// overlaps. A partially cached item yields *mixed* segments — resident
+/// chunks served local/peer, missing chunks remote-filled — which is what
+/// lets a reader blocked on chunk `k` proceed with every other chunk.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReadPlan {
+    pub segments: Vec<(std::ops::Range<u64>, ReadLocation)>,
+}
+
+impl ReadPlan {
+    /// No segment needs a remote fill.
+    pub fn fully_resident(&self) -> bool {
+        self.segments.iter().all(|(_, l)| !matches!(l, ReadLocation::RemoteFill { .. }))
+    }
+
+    /// Total bytes covered by the plan (== the item's length).
+    pub fn len_bytes(&self) -> u64 {
+        self.segments.iter().map(|(r, _)| r.end - r.start).sum()
+    }
+}
+
+/// Immutable snapshot of one placed dataset's chunk addressing: the
+/// dataset's own [`StripeMap`] (cloned — chunk grid and node round-robin
+/// come from the single implementation in [`stripe`]) plus its item
+/// dimensions. Shared by the cache manager, the reader pool and the
+/// chunked mounts so control plane and data plane agree on the grid by
+/// construction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkGeometry {
+    stripe: StripeMap,
+    pub total_bytes: u64,
+    pub num_items: u64,
+}
+
+impl ChunkGeometry {
+    pub fn chunk_bytes(&self) -> u64 {
+        self.stripe.chunk_bytes
+    }
+
+    pub fn num_chunks(&self) -> u64 {
+        self.stripe.num_chunks(self.total_bytes)
+    }
+
+    pub fn nodes(&self) -> &[NodeId] {
+        self.stripe.nodes()
+    }
+
+    /// Home node of chunk `c`.
+    pub fn node_of_chunk(&self, c: u64) -> NodeId {
+        self.stripe.node_of_chunk(c)
+    }
+
+    /// Global byte range `[start, end)` of chunk `c` (tail may be short).
+    pub fn chunk_range(&self, c: u64) -> (u64, u64) {
+        self.stripe.chunk_range(c, self.total_bytes)
+    }
+
+    /// Global byte range of item `i` (the [`item_range`] partition).
+    pub fn item_range(&self, i: u64) -> (u64, u64) {
+        item_range(i, self.num_items, self.total_bytes)
+    }
+
+    /// Chunk IDs overlapping item `i`.
+    pub fn chunks_of_item(&self, i: u64) -> std::ops::Range<u64> {
+        self.stripe.chunks_of_item(i, self.num_items, self.total_bytes)
+    }
+
+    /// Item holding global byte `off` (the unique non-empty item whose
+    /// range contains it).
+    pub fn item_of_offset(&self, off: u64) -> u64 {
+        debug_assert!(off < self.total_bytes);
+        let (mut lo, mut hi) = (0u64, self.num_items - 1);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if item_range(mid, self.num_items, self.total_bytes).1 > off {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        lo
+    }
+
+    /// Item IDs overlapping chunk `c` — what a chunk fill must fetch from
+    /// the per-item remote files.
+    pub fn items_of_chunk(&self, c: u64) -> std::ops::Range<u64> {
+        let (cs, ce) = self.chunk_range(c);
+        if cs >= ce {
+            return 0..0;
+        }
+        self.item_of_offset(cs)..self.item_of_offset(ce - 1) + 1
+    }
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -224,9 +319,10 @@ impl CacheManager {
                 .allocate(share)
                 .map_err(|_| CacheError::Full { need: share, reclaimable: 0 })?;
         }
+        let chunks = ChunkSet::new(need, chunk);
         let rec = self.registry.get_mut(name)?;
         rec.stripe = Some(stripe);
-        rec.state = DatasetState::Caching { fetched_bytes: 0 };
+        rec.state = DatasetState::Caching { chunks };
         self.events.push(CacheEvent::Placed {
             dataset: name.to_string(),
             nodes: nodes.iter().map(|n| n.0).collect(),
@@ -234,14 +330,16 @@ impl CacheManager {
         Ok(())
     }
 
-    /// Record `bytes` of remote fetch progress (AFM fill or prefetch).
+    /// Record `bytes` of *sequential* remote fetch progress (the modelled
+    /// AFM prefetch walking the stripe in order): advances the chunk fill
+    /// front, marking every chunk it fully covers and skipping chunks that
+    /// already landed out of order.
     pub fn prefetch_tick(&mut self, name: &str, bytes: u64) -> Result<(), CacheError> {
         let rec = self.registry.get_mut(name)?;
-        let total = rec.spec.total_bytes;
         match &mut rec.state {
-            DatasetState::Caching { fetched_bytes } => {
-                *fetched_bytes = (*fetched_bytes + bytes).min(total);
-                if *fetched_bytes >= total {
+            DatasetState::Caching { chunks } => {
+                chunks.advance(bytes);
+                if chunks.is_full() {
                     rec.state = DatasetState::Cached;
                     self.events.push(CacheEvent::FullyCached(name.to_string()));
                 }
@@ -255,39 +353,158 @@ impl CacheManager {
         }
     }
 
+    /// Mark specific chunks resident (real-mode fills land out of order —
+    /// this is the exact counterpart of the sequential `prefetch_tick`).
+    pub fn mark_chunks(
+        &mut self,
+        name: &str,
+        chunk_ids: impl IntoIterator<Item = u64>,
+    ) -> Result<(), CacheError> {
+        let rec = self.registry.get_mut(name)?;
+        match &mut rec.state {
+            DatasetState::Caching { chunks } => {
+                for c in chunk_ids {
+                    chunks.mark(c);
+                }
+                if chunks.is_full() {
+                    rec.state = DatasetState::Cached;
+                    self.events.push(CacheEvent::FullyCached(name.to_string()));
+                }
+                Ok(())
+            }
+            DatasetState::Cached => Ok(()),
+            s => Err(CacheError::Registry(RegistryError::BadTransition(
+                name.into(),
+                format!("chunk mark in state {s:?}"),
+            ))),
+        }
+    }
+
+    /// Record a whole-*item* fill: credit each overlapped chunk with
+    /// exactly the bytes the item contributes to it, keyed by the item ID
+    /// (idempotent — racing observers reporting the same fill twice never
+    /// double-count). A chunk (which may span many items) is marked
+    /// resident only once every one of its bytes has been credited — so
+    /// coarse chunks never over-report residency after a few item fills.
+    pub fn mark_item(&mut self, name: &str, item: u64) -> Result<(), CacheError> {
+        let overlaps: Vec<(u64, u64)> = {
+            let rec = self
+                .registry
+                .get(name)
+                .ok_or_else(|| CacheError::Registry(RegistryError::NotFound(name.to_string())))?;
+            let stripe =
+                rec.stripe.as_ref().ok_or_else(|| CacheError::NotPlaced(name.into()))?;
+            let total = rec.spec.total_bytes;
+            let (s, e) = item_range(item, rec.spec.num_items, total);
+            stripe
+                .chunks_of_item(item, rec.spec.num_items, total)
+                .map(|c| {
+                    let (cs, ce) = stripe.chunk_range(c, total);
+                    (c, e.min(ce) - s.max(cs))
+                })
+                .collect()
+        };
+        let rec = self.registry.get_mut(name)?;
+        match &mut rec.state {
+            DatasetState::Caching { chunks } => {
+                for (c, bytes) in overlaps {
+                    chunks.credit_unit(c, item, bytes);
+                }
+                if chunks.is_full() {
+                    rec.state = DatasetState::Cached;
+                    self.events.push(CacheEvent::FullyCached(name.to_string()));
+                }
+                Ok(())
+            }
+            DatasetState::Cached => Ok(()),
+            s => Err(CacheError::Registry(RegistryError::BadTransition(
+                name.into(),
+                format!("item mark in state {s:?}"),
+            ))),
+        }
+    }
+
+    /// Chunk-addressing snapshot for a placed dataset (what the real-mode
+    /// chunked data plane keys its fill table and on-disk layout by).
+    pub fn geometry(&self, name: &str) -> Result<ChunkGeometry, CacheError> {
+        let rec = self
+            .registry
+            .get(name)
+            .ok_or_else(|| CacheError::Registry(RegistryError::NotFound(name.to_string())))?;
+        let stripe = rec.stripe.as_ref().ok_or_else(|| CacheError::NotPlaced(name.into()))?;
+        Ok(ChunkGeometry {
+            stripe: stripe.clone(),
+            total_bytes: rec.spec.total_bytes,
+            num_items: rec.spec.num_items,
+        })
+    }
+
     /// Resolve where item `item` of `name` is served for a reader on
-    /// `reader` — the transparent-caching decision point.
+    /// `reader` — the transparent-caching decision point, summarised at
+    /// item granularity (the serving home is the item's round-robin home;
+    /// see [`CacheManager::read_plan`] for the per-chunk answer).
+    ///
+    /// Exact: while caching, an item is resident iff **every** chunk it
+    /// overlaps is marked in the residency bitmap. The old scalar fill
+    /// front approximated this through an f64 item fraction, which could
+    /// report `RemoteFill` for the last items of a fully fetched dataset
+    /// before the state flipped; a full bitmap can never do that.
     pub fn read_location(&self, name: &str, item: u64, reader: NodeId) -> Result<ReadLocation, CacheError> {
         let rec = self.registry.get(name).ok_or_else(|| {
             CacheError::Registry(RegistryError::NotFound(name.to_string()))
         })?;
         let stripe = rec.stripe.as_ref().ok_or_else(|| CacheError::NotPlaced(name.into()))?;
         let home = stripe.node_of_item(item);
-        match rec.state {
-            DatasetState::Cached => {
-                if home == reader {
-                    Ok(ReadLocation::Local)
-                } else {
-                    Ok(ReadLocation::Peer(home))
-                }
+        let resident = match &rec.state {
+            DatasetState::Cached => true,
+            DatasetState::Caching { chunks } => stripe
+                .chunks_of_item(item, rec.spec.num_items, rec.spec.total_bytes)
+                .all(|c| chunks.contains(c)),
+            _ => false,
+        };
+        if resident {
+            if home == reader {
+                Ok(ReadLocation::Local)
+            } else {
+                Ok(ReadLocation::Peer(home))
             }
-            DatasetState::Caching { fetched_bytes } => {
-                // Approximate fill front: items below the fetched fraction
-                // are resident (AFM fills in stripe order under prefetch).
-                let frac = fetched_bytes as f64 / rec.spec.total_bytes.max(1) as f64;
-                let resident = (frac * rec.spec.num_items as f64) as u64;
-                if item < resident {
-                    if home == reader {
-                        Ok(ReadLocation::Local)
-                    } else {
-                        Ok(ReadLocation::Peer(home))
-                    }
-                } else {
-                    Ok(ReadLocation::RemoteFill { fill_node: home })
-                }
-            }
-            _ => Ok(ReadLocation::RemoteFill { fill_node: home }),
+        } else {
+            Ok(ReadLocation::RemoteFill { fill_node: home })
         }
+    }
+
+    /// Chunk-granular read plan for one item: one segment per overlapped
+    /// chunk, each with its own location. Resident chunks are served from
+    /// their chunk home (`node_of_chunk`); missing chunks are remote
+    /// fills homed the same way — a single item can mix all three.
+    pub fn read_plan(&self, name: &str, item: u64, reader: NodeId) -> Result<ReadPlan, CacheError> {
+        let rec = self.registry.get(name).ok_or_else(|| {
+            CacheError::Registry(RegistryError::NotFound(name.to_string()))
+        })?;
+        let stripe = rec.stripe.as_ref().ok_or_else(|| CacheError::NotPlaced(name.into()))?;
+        let (s, e) = item_range(item, rec.spec.num_items, rec.spec.total_bytes);
+        let mut segments = Vec::new();
+        for c in stripe.chunks_of_item(item, rec.spec.num_items, rec.spec.total_bytes) {
+            let (cs, ce) = stripe.chunk_range(c, rec.spec.total_bytes);
+            let seg = s.max(cs) - s..e.min(ce) - s;
+            let home = stripe.node_of_chunk(c);
+            let resident = match &rec.state {
+                DatasetState::Cached => true,
+                DatasetState::Caching { chunks } => chunks.contains(c),
+                _ => false,
+            };
+            let loc = if resident {
+                if home == reader {
+                    ReadLocation::Local
+                } else {
+                    ReadLocation::Peer(home)
+                }
+            } else {
+                ReadLocation::RemoteFill { fill_node: home }
+            };
+            segments.push((seg, loc));
+        }
+        Ok(ReadPlan { segments })
     }
 
     /// Evict a dataset's bytes (keeps the registration, per §3.1: the
@@ -365,10 +582,30 @@ impl SharedCache {
         self.inner.read().unwrap().read_location(name, item, reader)
     }
 
+    /// Chunk-granular read plan for one item (shared lock).
+    pub fn read_plan(&self, name: &str, item: u64, reader: NodeId) -> Result<ReadPlan, CacheError> {
+        self.inner.read().unwrap().read_plan(name, item, reader)
+    }
+
+    /// Chunk-addressing snapshot for a placed dataset (shared lock).
+    pub fn geometry(&self, name: &str) -> Result<ChunkGeometry, CacheError> {
+        self.inner.read().unwrap().geometry(name)
+    }
+
     /// Record fill progress (exclusive lock, held only for the registry
     /// update — never across I/O).
     pub fn prefetch_tick(&self, name: &str, bytes: u64) -> Result<(), CacheError> {
         self.inner.write().unwrap().prefetch_tick(name, bytes)
+    }
+
+    /// Mark specific chunks resident (exclusive lock, registry-only).
+    pub fn mark_chunks(&self, name: &str, chunk_ids: &[u64]) -> Result<(), CacheError> {
+        self.inner.write().unwrap().mark_chunks(name, chunk_ids.iter().copied())
+    }
+
+    /// Mark every chunk of one item resident (whole-file fill landed).
+    pub fn mark_item(&self, name: &str, item: u64) -> Result<(), CacheError> {
+        self.inner.write().unwrap().mark_item(name, item)
     }
 
     /// Is the dataset fully resident? (Used to skip the prefetcher.)
@@ -510,6 +747,91 @@ mod tests {
         let high = m.read_location("a", 99, NodeId(0)).unwrap();
         assert!(matches!(low, ReadLocation::Local | ReadLocation::Peer(_)));
         assert!(matches!(high, ReadLocation::RemoteFill { .. }));
+    }
+
+    #[test]
+    fn full_bitmap_never_yields_remote_fill() {
+        // Regression for the old f64 fill-front rounding hazard: a dataset
+        // whose every chunk is resident must never answer `RemoteFill`,
+        // even before `prefetch_tick` flips the state to `Cached`.
+        let mut m = manager(3, 10_000, EvictionPolicy::Manual);
+        m.register(ds("a", 101, 9_999), "nfs://s/a".into()).unwrap();
+        m.place("a", vec![NodeId(0), NodeId(1), NodeId(2)]).unwrap();
+        // Mark every chunk directly (no state flip happens mid-loop since
+        // mark_chunks flips only when full — so check the moment after).
+        let n_chunks = m.geometry("a").unwrap().num_chunks();
+        {
+            // Force a full bitmap while *staying* in Caching state.
+            let rec = m.registry.get_mut("a").unwrap();
+            if let DatasetState::Caching { chunks } = &mut rec.state {
+                for c in 0..n_chunks {
+                    chunks.mark(c);
+                }
+                assert!(chunks.is_full());
+            } else {
+                panic!("expected Caching state after place");
+            }
+        }
+        for item in [0u64, 50, 99, 100] {
+            for reader in 0..3 {
+                let loc = m.read_location("a", item, NodeId(reader)).unwrap();
+                assert!(
+                    !matches!(loc, ReadLocation::RemoteFill { .. }),
+                    "item {item} reader {reader}: full bitmap gave {loc:?}"
+                );
+                assert!(m.read_plan("a", item, NodeId(reader)).unwrap().fully_resident());
+            }
+        }
+    }
+
+    #[test]
+    fn read_plan_mixes_locations_within_one_item() {
+        // 1 item of 1000 bytes over 2 nodes ⇒ chunk = 500, the single item
+        // spans both chunks. Mark only chunk 0: the plan must mix a
+        // resident segment and a remote-fill segment for the same item.
+        let mut m = manager(2, 10_000, EvictionPolicy::Manual);
+        m.register(ds("a", 1, 1000), "nfs://s/a".into()).unwrap();
+        m.place("a", vec![NodeId(0), NodeId(1)]).unwrap();
+        m.mark_chunks("a", [0u64]).unwrap();
+        let plan = m.read_plan("a", 0, NodeId(0)).unwrap();
+        assert_eq!(plan.segments.len(), 2);
+        assert_eq!(plan.segments[0], (0..500, ReadLocation::Local));
+        assert_eq!(
+            plan.segments[1],
+            (500..1000, ReadLocation::RemoteFill { fill_node: NodeId(1) })
+        );
+        assert!(!plan.fully_resident());
+        assert_eq!(plan.len_bytes(), 1000);
+        // Summary view agrees: not all chunks resident ⇒ RemoteFill.
+        assert!(matches!(
+            m.read_location("a", 0, NodeId(0)).unwrap(),
+            ReadLocation::RemoteFill { .. }
+        ));
+        // Marking the missing chunk flips the dataset to Cached.
+        m.mark_chunks("a", [1u64]).unwrap();
+        assert_eq!(m.registry.get("a").unwrap().state, DatasetState::Cached);
+        assert!(m.read_plan("a", 0, NodeId(0)).unwrap().fully_resident());
+    }
+
+    #[test]
+    fn geometry_maps_items_and_chunks_both_ways() {
+        let mut m = manager(2, 10_000, EvictionPolicy::Manual);
+        m.register(ds("a", 10, 1000), "nfs://s/a".into()).unwrap();
+        m.place("a", vec![NodeId(0), NodeId(1)]).unwrap();
+        let g = m.geometry("a").unwrap();
+        assert_eq!(g.chunk_bytes(), 500);
+        assert_eq!(g.num_chunks(), 2);
+        // Items are 100 bytes each: items 0..5 in chunk 0, 5..10 in chunk 1.
+        assert_eq!(g.items_of_chunk(0), 0..5);
+        assert_eq!(g.items_of_chunk(1), 5..10);
+        for i in 0..10u64 {
+            let (s, e) = g.item_range(i);
+            assert_eq!(g.item_of_offset(s), i);
+            assert_eq!(g.item_of_offset(e - 1), i);
+            for c in g.chunks_of_item(i) {
+                assert!(g.items_of_chunk(c).contains(&i), "item {i} chunk {c}");
+            }
+        }
     }
 
     #[test]

@@ -5,7 +5,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::cache::stripe::StripeMap;
+use crate::cache::stripe::{ChunkSet, StripeMap};
 use crate::workload::DatasetSpec;
 
 /// Life-cycle states (§3.1/§3.2).
@@ -14,7 +14,10 @@ pub enum DatasetState {
     /// Custom resource created; nothing placed yet.
     Registered,
     /// Cache nodes selected, fetch in progress (on-demand or prefetch).
-    Caching { fetched_bytes: u64 },
+    /// Residency is chunk-granular: `chunks` records exactly which chunks
+    /// of the stripe have landed (replacing the old `fetched_bytes`
+    /// scalar; byte progress is derived via [`ChunkSet::fetched_bytes`]).
+    Caching { chunks: ChunkSet },
     /// Fully resident on its stripe set.
     Cached,
     /// Being removed from the cache.
@@ -40,12 +43,32 @@ impl DatasetRecord {
         self.pin_count == 0 && !matches!(self.state, DatasetState::Evicting)
     }
 
-    /// Bytes currently occupying cache space.
+    /// Bytes currently occupying cache space (sum of resident chunk
+    /// sizes, tail chunk included, while caching).
     pub fn resident_bytes(&self) -> u64 {
-        match self.state {
+        match &self.state {
             DatasetState::Registered => 0,
-            DatasetState::Caching { fetched_bytes } => fetched_bytes,
+            DatasetState::Caching { chunks } => chunks.resident_bytes(),
             DatasetState::Cached | DatasetState::Evicting => self.spec.total_bytes,
+        }
+    }
+
+    /// Total fetch progress in bytes — the derived accessor replacing the
+    /// old `Caching { fetched_bytes }` scalar (resident chunks plus the
+    /// sequential front's partial progress).
+    pub fn fetched_bytes(&self) -> u64 {
+        match &self.state {
+            DatasetState::Registered => 0,
+            DatasetState::Caching { chunks } => chunks.fetched_bytes(),
+            DatasetState::Cached | DatasetState::Evicting => self.spec.total_bytes,
+        }
+    }
+
+    /// Chunk residency bitmap while the dataset is filling.
+    pub fn chunk_set(&self) -> Option<&ChunkSet> {
+        match &self.state {
+            DatasetState::Caching { chunks } => Some(chunks),
+            _ => None,
         }
     }
 }
@@ -231,9 +254,13 @@ mod tests {
     fn resident_bytes_by_state() {
         let mut r = reg_with(&[("a", 100), ("b", 50)]);
         assert_eq!(r.resident_bytes(), 0);
-        r.get_mut("a").unwrap().state = DatasetState::Caching { fetched_bytes: 30 };
+        let mut chunks = ChunkSet::new(100, 10);
+        chunks.advance(30); // 3 of 10 chunks resident
+        r.get_mut("a").unwrap().state = DatasetState::Caching { chunks };
         r.get_mut("b").unwrap().state = DatasetState::Cached;
         assert_eq!(r.resident_bytes(), 80);
+        assert_eq!(r.get("a").unwrap().fetched_bytes(), 30);
+        assert_eq!(r.get("a").unwrap().chunk_set().unwrap().marked_chunks(), 3);
     }
 
     #[test]

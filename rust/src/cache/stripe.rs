@@ -1,8 +1,31 @@
 //! Stripe placement: how a dataset's items/bytes spread over the selected
 //! cache nodes (paper Requirement 1: aggregate the capacity of a *subset*
-//! of nodes; the subset is chosen by the coordinator, not the FS).
+//! of nodes; the subset is chosen by the coordinator, not the FS), plus
+//! the chunk-granular residency bitmap ([`ChunkSet`]) every layer above
+//! uses to answer "which bytes are cached?" exactly.
+//!
+//! Chunk addressing: a dataset is one logical byte stream (items
+//! concatenated in index order, partitioned by [`item_range`]); chunk `c`
+//! covers bytes `[c·B, (c+1)·B)` of that stream (`B = chunk_bytes`), the
+//! last chunk may be short. Chunk `c` homes on `nodes[c mod k]`
+//! ([`StripeMap::node_of_chunk`]); residency is tracked per chunk, not per
+//! file, so partial hits are servable and prefetch order is precise
+//! (FanStore / NoPFS-style block granularity).
 
 use crate::netsim::NodeId;
+
+/// Byte range `[start, end)` of item `i` within the dataset's logical byte
+/// stream: the unique monotone partition `start = ⌊i·total/n⌋`. For
+/// real-mode datasets with uniform records this is exactly
+/// `i × record_bytes`; for fluid-mode specs it is the average-size model.
+pub fn item_range(i: u64, num_items: u64, total: u64) -> (u64, u64) {
+    assert!(i < num_items, "item {i} out of range {num_items}");
+    let n = num_items as u128;
+    let t = total as u128;
+    let start = (i as u128 * t / n) as u64;
+    let end = ((i as u128 + 1) * t / n) as u64;
+    (start, end)
+}
 
 /// Deterministic mapping of dataset items and byte ranges onto a fixed,
 /// ordered set of cache nodes. Items are round-robined (file-granular
@@ -40,11 +63,46 @@ impl StripeMap {
 
     /// Cache node holding byte `offset` (chunk-granular placement).
     pub fn node_of_offset(&self, offset: u64) -> NodeId {
-        let chunk = offset / self.chunk_bytes;
-        self.nodes[(chunk % self.nodes.len() as u64) as usize]
+        self.node_of_chunk(self.chunk_of_offset(offset))
     }
 
-    /// Bytes of a `total`-byte dataset stored on node `n` (± one chunk).
+    /// Chunk ID covering byte `offset`.
+    pub fn chunk_of_offset(&self, offset: u64) -> u64 {
+        offset / self.chunk_bytes
+    }
+
+    /// Cache node holding chunk `c` (round-robin over the member list —
+    /// the AFM-fileset-style fixed assignment).
+    pub fn node_of_chunk(&self, c: u64) -> NodeId {
+        self.nodes[(c % self.nodes.len() as u64) as usize]
+    }
+
+    /// Number of chunks in a `total`-byte dataset (the last may be short).
+    pub fn num_chunks(&self, total: u64) -> u64 {
+        total.div_ceil(self.chunk_bytes)
+    }
+
+    /// Global byte range `[start, end)` of chunk `c` in a `total`-byte
+    /// dataset (the tail chunk may be short) — the one place the
+    /// tail-clamped range is derived.
+    pub fn chunk_range(&self, c: u64, total: u64) -> (u64, u64) {
+        let s = c * self.chunk_bytes;
+        (s, s.saturating_add(self.chunk_bytes).min(total))
+    }
+
+    /// Chunk IDs overlapping item `i` of an `(num_items, total)` dataset,
+    /// per the [`item_range`] byte partition. Empty for zero-length items.
+    pub fn chunks_of_item(&self, i: u64, num_items: u64, total: u64) -> std::ops::Range<u64> {
+        let (start, end) = item_range(i, num_items, total);
+        if start == end {
+            return 0..0;
+        }
+        self.chunk_of_offset(start)..self.chunk_of_offset(end - 1) + 1
+    }
+
+    /// Bytes of a `total`-byte dataset stored on node `n` — **exact**,
+    /// including the short tail chunk (the remainder is distributed
+    /// chunk-by-chunk in node order, matching `node_of_chunk`).
     pub fn bytes_on_node(&self, n: NodeId, total: u64) -> u64 {
         if !self.contains(n) {
             return 0;
@@ -74,6 +132,237 @@ impl StripeMap {
         } else {
             0.0
         }
+    }
+}
+
+/// Chunk-granular residency bitmap: which chunks of a dataset are resident
+/// on its stripe set. This replaces the old scalar fill front
+/// (`fetched_bytes`) everywhere residency is asked about — the registry,
+/// `read_location`/`read_plan`, the reader pool, and the fluid sim all
+/// answer from the same bitmap, so partial hits are exact by construction.
+///
+/// Three ways to make progress coexist:
+///  * [`ChunkSet::mark`] — a whole chunk landed (chunked real-mode fill);
+///  * [`ChunkSet::credit_unit`] — one *sub-unit* of a chunk landed (a
+///    whole-item fill whose item is finer than the chunk grid credits each
+///    overlapped chunk, keyed by item ID so duplicate reports of the same
+///    fill are idempotent; the chunk is marked only once every byte of it
+///    is credited, so coarse chunks never over-report residency);
+///  * [`ChunkSet::advance`] — the sequential AFM prefetch front moved by
+///    `n` bytes (control-plane `prefetch_tick`). Byte-exact: it credits
+///    the front chunk and skips chunks already marked out of order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkSet {
+    words: Vec<u64>,
+    num_chunks: u64,
+    chunk_bytes: u64,
+    total_bytes: u64,
+    /// Marked chunk count and their exact byte sum (tail-aware).
+    marked: u64,
+    marked_bytes: u64,
+    /// First unmarked chunk (== `num_chunks` when full) — the fill front.
+    front: u64,
+    /// Partial credits of in-progress chunks: `(chunk, unit) → bytes`,
+    /// where `unit` is the crediting sub-unit (item ID, or
+    /// [`FRONT_UNIT`] for the anonymous sequential front). Per-chunk
+    /// totals never exceed the chunk length; entries are purged on mark.
+    credits: std::collections::BTreeMap<(u64, u64), u64>,
+}
+
+/// Reserved [`ChunkSet::credit_unit`] unit for sequential-front progress
+/// (`advance`), which accumulates instead of being idempotent.
+pub const FRONT_UNIT: u64 = u64::MAX;
+
+impl ChunkSet {
+    pub fn new(total_bytes: u64, chunk_bytes: u64) -> Self {
+        assert!(chunk_bytes > 0);
+        let num_chunks = total_bytes.div_ceil(chunk_bytes);
+        ChunkSet {
+            words: vec![0u64; (num_chunks as usize).div_ceil(64)],
+            num_chunks,
+            chunk_bytes,
+            total_bytes,
+            marked: 0,
+            marked_bytes: 0,
+            front: 0,
+            credits: std::collections::BTreeMap::new(),
+        }
+    }
+
+    pub fn num_chunks(&self) -> u64 {
+        self.num_chunks
+    }
+
+    pub fn chunk_bytes(&self) -> u64 {
+        self.chunk_bytes
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes
+    }
+
+    /// Length of chunk `c` in bytes (the tail chunk may be short).
+    pub fn chunk_len(&self, c: u64) -> u64 {
+        assert!(c < self.num_chunks, "chunk {c} out of range {}", self.num_chunks);
+        if c + 1 == self.num_chunks {
+            self.total_bytes - c * self.chunk_bytes
+        } else {
+            self.chunk_bytes
+        }
+    }
+
+    pub fn contains(&self, c: u64) -> bool {
+        assert!(c < self.num_chunks, "chunk {c} out of range {}", self.num_chunks);
+        self.words[(c / 64) as usize] & (1u64 << (c % 64)) != 0
+    }
+
+    /// Mark chunk `c` resident. Returns `true` if newly marked.
+    pub fn mark(&mut self, c: u64) -> bool {
+        if self.contains(c) {
+            return false;
+        }
+        self.words[(c / 64) as usize] |= 1u64 << (c % 64);
+        self.marked += 1;
+        self.marked_bytes += self.chunk_len(c);
+        self.purge_credits(c);
+        if c == self.front {
+            self.reseek_front();
+        }
+        true
+    }
+
+    /// Bytes credited toward (unmarked) chunk `c` so far.
+    fn credited(&self, c: u64) -> u64 {
+        self.credits.range((c, 0)..=(c, u64::MAX)).map(|(_, b)| b).sum()
+    }
+
+    fn purge_credits(&mut self, c: u64) {
+        let keys: Vec<(u64, u64)> =
+            self.credits.range((c, 0)..=(c, u64::MAX)).map(|(&k, _)| k).collect();
+        for k in keys {
+            self.credits.remove(&k);
+        }
+    }
+
+    /// Credit `bytes` of chunk `c` as landed on behalf of sub-unit `unit`
+    /// (an item ID — a fill unit finer than the chunk). Idempotent per
+    /// `(c, unit)`: racing observers reporting the same item fill twice
+    /// never sum their overlapping bytes, so a chunk cannot be marked by
+    /// one item's bytes alone. ([`FRONT_UNIT`] is the reserved
+    /// accumulating unit used by `advance`.) The chunk is marked resident
+    /// only once its credited bytes reach its full length; until then they
+    /// count toward [`ChunkSet::fetched_bytes`] but not residency.
+    /// Returns `true` when this credit completed (marked) the chunk.
+    pub fn credit_unit(&mut self, c: u64, unit: u64, bytes: u64) -> bool {
+        if self.contains(c) {
+            return false;
+        }
+        let key = (c, unit);
+        if unit != FRONT_UNIT && self.credits.contains_key(&key) {
+            return false; // duplicate report of the same sub-unit
+        }
+        let len = self.chunk_len(c);
+        let have = self.credited(c);
+        let add = bytes.min(len - have); // cap: totals never exceed len
+        *self.credits.entry(key).or_insert(0) += add;
+        if have + add >= len {
+            self.mark(c) // purges the credit entries
+        } else {
+            false
+        }
+    }
+
+    /// Advance the sequential fill front by `bytes`, crediting (and so
+    /// marking, once complete) chunks in order. Chunks already marked out
+    /// of order are skipped without consuming budget. Surplus past the end
+    /// is dropped (the old `min(total)` saturation).
+    pub fn advance(&mut self, mut bytes: u64) {
+        while bytes > 0 && self.front < self.num_chunks {
+            let f = self.front;
+            let need = self.chunk_len(f) - self.credited(f);
+            let add = bytes.min(need);
+            self.credit_unit(f, FRONT_UNIT, add); // re-seeks when f completes
+            bytes -= add;
+        }
+    }
+
+    fn reseek_front(&mut self) {
+        while self.front < self.num_chunks && self.contains(self.front) {
+            self.front += 1;
+        }
+    }
+
+    /// All chunks resident?
+    pub fn is_full(&self) -> bool {
+        self.marked == self.num_chunks
+    }
+
+    pub fn marked_chunks(&self) -> u64 {
+        self.marked
+    }
+
+    /// Exact bytes resident: the sum of marked chunk sizes (tail-aware).
+    pub fn resident_bytes(&self) -> u64 {
+        self.marked_bytes
+    }
+
+    /// Total fetch progress: resident bytes plus partial chunk credits —
+    /// the derived replacement for the old scalar `fetched_bytes`
+    /// (byte-identical when only `advance`/`credit` record progress).
+    pub fn fetched_bytes(&self) -> u64 {
+        self.marked_bytes + self.credits.values().sum::<u64>()
+    }
+
+    /// Fraction of the dataset resident (0 ⇒ empty, 1 ⇒ full).
+    pub fn resident_fraction(&self) -> f64 {
+        if self.total_bytes == 0 {
+            1.0
+        } else {
+            self.marked_bytes as f64 / self.total_bytes as f64
+        }
+    }
+
+    /// Fold `other`'s residency into `self` (same geometry required).
+    /// Commutative and idempotent: marked sets are OR-ed; per-unit
+    /// credits merge by max per `(chunk, unit)` key (two observers of the
+    /// same sub-unit fill never sum their overlapping bytes, while
+    /// *different* units of one chunk combine), chunks whose merged
+    /// credits reach their length are marked, and credits of marked
+    /// chunks are dropped.
+    pub fn union(&mut self, other: &ChunkSet) {
+        assert_eq!(self.num_chunks, other.num_chunks, "chunk-set geometry mismatch");
+        assert_eq!(self.chunk_bytes, other.chunk_bytes, "chunk-set geometry mismatch");
+        assert_eq!(self.total_bytes, other.total_bytes, "chunk-set geometry mismatch");
+        for (w, o) in self.words.iter_mut().zip(&other.words) {
+            *w |= o;
+        }
+        // Recount exactly (popcount; tail chunk may be short).
+        self.marked = self.words.iter().map(|w| w.count_ones() as u64).sum();
+        self.marked_bytes = self.marked * self.chunk_bytes;
+        if self.num_chunks > 0 && self.contains(self.num_chunks - 1) {
+            self.marked_bytes -= self.chunk_bytes - self.chunk_len(self.num_chunks - 1);
+        }
+        for (&(c, u), &b) in &other.credits {
+            if !self.contains(c) {
+                let have = self.credits.entry((c, u)).or_insert(0);
+                *have = (*have).max(b);
+            }
+        }
+        // Purge credits of chunks marked by the merge, then mark any
+        // chunk whose combined credits now cover it entirely.
+        let candidates: Vec<u64> = {
+            let mut cs: Vec<u64> = self.credits.keys().map(|&(c, _)| c).collect();
+            cs.dedup();
+            cs
+        };
+        for c in candidates {
+            if self.contains(c) {
+                self.purge_credits(c);
+            } else if self.credited(c) >= self.chunk_len(c) {
+                self.mark(c);
+            }
+        }
+        self.reseek_front();
     }
 }
 
@@ -113,14 +402,161 @@ mod tests {
     }
 
     #[test]
-    fn bytes_on_node_balanced() {
+    fn bytes_on_node_exact_vs_chunk_walk() {
+        // `bytes_on_node` is exact (tail chunk included): it must equal an
+        // independent walk over every chunk of the dataset, not ±1 chunk.
         let s = StripeMap::new(nodes(&[0, 1, 2, 3]), 1 << 20);
         let total = 144_000_000_000u64;
-        for i in 0..4 {
-            let b = s.bytes_on_node(NodeId(i), total);
-            let want = total / 4;
-            assert!((b as i64 - want as i64).unsigned_abs() <= 1 << 20);
+        let mut per_node = [0u64; 4];
+        for c in 0..s.num_chunks(total) {
+            let start = c * s.chunk_bytes;
+            let len = (total - start).min(s.chunk_bytes);
+            per_node[s.node_of_chunk(c).0] += len;
         }
+        for i in 0..4 {
+            assert_eq!(s.bytes_on_node(NodeId(i), total), per_node[i], "node {i}");
+        }
+        assert_eq!(per_node.iter().sum::<u64>(), total);
+        let max = *per_node.iter().max().unwrap();
+        let min = *per_node.iter().min().unwrap();
+        assert!(max - min <= 1 << 20, "balance within one chunk");
+    }
+
+    #[test]
+    fn chunk_addressing_helpers() {
+        let s = StripeMap::new(nodes(&[0, 1, 2]), 100);
+        assert_eq!(s.chunk_of_offset(0), 0);
+        assert_eq!(s.chunk_of_offset(99), 0);
+        assert_eq!(s.chunk_of_offset(100), 1);
+        assert_eq!(s.node_of_chunk(0), NodeId(0));
+        assert_eq!(s.node_of_chunk(4), NodeId(1));
+        assert_eq!(s.num_chunks(0), 0);
+        assert_eq!(s.num_chunks(100), 1);
+        assert_eq!(s.num_chunks(101), 2);
+        // 10 items × 35 bytes: item 3 covers [105, 140) ⇒ chunks 1..2.
+        assert_eq!(s.chunks_of_item(3, 10, 350), 1..2);
+        // Item 2 covers [70, 105) ⇒ straddles chunks 0 and 1.
+        assert_eq!(s.chunks_of_item(2, 10, 350), 0..2);
+    }
+
+    #[test]
+    fn item_range_partitions_exactly() {
+        for (n, total) in [(10u64, 350u64), (7, 100), (3, 2), (1, 0), (5, 5)] {
+            let mut covered = 0u64;
+            let mut prev_end = 0u64;
+            for i in 0..n {
+                let (s, e) = item_range(i, n, total);
+                assert_eq!(s, prev_end, "contiguous at item {i}");
+                assert!(e >= s);
+                covered += e - s;
+                prev_end = e;
+            }
+            assert_eq!(covered, total, "n={n} total={total}");
+        }
+    }
+
+    #[test]
+    fn chunkset_mark_contains_roundtrip() {
+        let mut cs = ChunkSet::new(1050, 100); // 11 chunks, tail = 50
+        assert_eq!(cs.num_chunks(), 11);
+        assert_eq!(cs.chunk_len(10), 50);
+        assert!(!cs.contains(7));
+        assert!(cs.mark(7));
+        assert!(cs.contains(7));
+        assert!(!cs.mark(7), "re-mark is a no-op");
+        assert_eq!(cs.marked_chunks(), 1);
+        assert_eq!(cs.resident_bytes(), 100);
+        cs.mark(10);
+        assert_eq!(cs.resident_bytes(), 150, "tail chunk counts its short length");
+        assert!(!cs.is_full());
+    }
+
+    #[test]
+    fn chunkset_advance_matches_scalar_front() {
+        // Byte-exact compatibility with the old `fetched_bytes` scalar:
+        // sequential ticks accumulate exactly, chunk boundaries or not.
+        let mut cs = ChunkSet::new(1000, 64);
+        let mut scalar = 0u64;
+        for tick in [10u64, 54, 64, 1, 200, 500, 999] {
+            cs.advance(tick);
+            scalar = (scalar + tick).min(1000);
+            assert_eq!(cs.fetched_bytes(), scalar, "after tick {tick}");
+        }
+        assert!(cs.is_full());
+        assert_eq!(cs.resident_bytes(), 1000);
+    }
+
+    #[test]
+    fn chunkset_advance_skips_out_of_order_marks() {
+        let mut cs = ChunkSet::new(300, 100);
+        cs.mark(1); // a reader filled the middle chunk out of order
+        cs.advance(100); // front fills chunk 0…
+        assert!(cs.contains(0));
+        assert_eq!(cs.resident_bytes(), 200);
+        cs.advance(100); // …and the front skips marked chunk 1 ⇒ chunk 2
+        assert!(cs.is_full(), "front must skip already-marked chunks");
+    }
+
+    #[test]
+    fn chunkset_credit_marks_only_complete_chunks() {
+        // One 100-byte chunk covering several 30-byte "items": crediting
+        // item-sized pieces must not claim the chunk resident early.
+        let mut cs = ChunkSet::new(300, 100);
+        assert!(!cs.credit_unit(0, 1, 30));
+        assert!(!cs.credit_unit(0, 2, 30));
+        assert!(!cs.contains(0), "60/100 credited is not resident");
+        assert_eq!(cs.resident_bytes(), 0);
+        assert_eq!(cs.fetched_bytes(), 60, "credits count as fetch progress");
+        // Idempotent per unit: a racing duplicate report of item 2's fill
+        // adds nothing — the chunk cannot fill up from one item's bytes.
+        assert!(!cs.credit_unit(0, 2, 30));
+        assert!(!cs.credit_unit(0, 2, 50));
+        assert_eq!(cs.fetched_bytes(), 60, "duplicate unit credits ignored");
+        assert!(cs.credit_unit(0, 3, 40), "completing credit marks the chunk");
+        assert!(cs.contains(0));
+        assert_eq!(cs.resident_bytes(), 100);
+        assert!(!cs.credit_unit(0, 4, 10), "credit on a marked chunk is a no-op");
+        assert_eq!(cs.fetched_bytes(), 100);
+        // Over-credit saturates at the chunk length.
+        cs.credit_unit(2, 7, 1_000_000);
+        assert!(cs.contains(2));
+        assert_eq!(cs.resident_bytes(), 200);
+    }
+
+    #[test]
+    fn chunkset_union_combines_distinct_unit_credits() {
+        // Observer A credited item 1, observer B credited item 2 — their
+        // union covers the whole chunk and must mark it.
+        let mut a = ChunkSet::new(100, 100);
+        let mut b = ChunkSet::new(100, 100);
+        a.credit_unit(0, 1, 60);
+        b.credit_unit(0, 2, 40);
+        a.union(&b);
+        assert!(a.contains(0), "combined units cover the chunk");
+        assert!(a.is_full());
+        // Same-unit credits merge by max, not sum.
+        let mut c = ChunkSet::new(100, 100);
+        let mut d = ChunkSet::new(100, 100);
+        c.credit_unit(0, 1, 60);
+        d.credit_unit(0, 1, 60);
+        c.union(&d);
+        assert!(!c.contains(0), "duplicate unit must not double-count");
+        assert_eq!(c.fetched_bytes(), 60);
+    }
+
+    #[test]
+    fn chunkset_union_and_empty_dataset() {
+        let mut a = ChunkSet::new(500, 100);
+        let mut b = ChunkSet::new(500, 100);
+        a.mark(0);
+        b.mark(3);
+        b.mark(0);
+        a.union(&b);
+        assert_eq!(a.marked_chunks(), 2);
+        assert_eq!(a.resident_bytes(), 200);
+        let empty = ChunkSet::new(0, 100);
+        assert!(empty.is_full(), "zero-byte dataset is trivially resident");
+        assert_eq!(empty.resident_bytes(), 0);
     }
 
     #[test]

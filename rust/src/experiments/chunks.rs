@@ -1,0 +1,218 @@
+//! Chunk-size sweep on the real-mode data plane (`hoard exp chunks`):
+//! cold/warm epoch time as `chunk_bytes` shrinks from whole-file fills
+//! down to sub-item chunks — the knob the chunk-granular refactor added.
+//!
+//! What it shows: warm epochs are insensitive to chunk size (all bytes
+//! stream from per-node NVMe buckets either way), while the cold path
+//! with chunked fills is no worse than whole-file fills — every byte
+//! still crosses the one shared remote bucket exactly once — and gains
+//! partial-hit serving plus per-chunk (instead of per-file) fetch-once
+//! blocking. Emits the same JSON table format as `exp readers`
+//! (`metrics::Table::json`).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::cache::{CacheManager, EvictionPolicy, SharedCache};
+use crate::metrics::Table;
+use crate::netsim::NodeId;
+use crate::posix::reader_pool::ReaderPool;
+use crate::posix::realfs::{ReadStats, RealCluster};
+use crate::remote::NfsModel;
+use crate::storage::{Device, DeviceKind, Volume};
+use crate::util::fmt;
+use crate::workload::datagen::{self, DataGenConfig};
+use crate::workload::DatasetSpec;
+
+/// Nodes in the sweep testbed (matches the paper's 4-node cluster).
+pub const CHUNK_NODES: usize = 4;
+
+/// The default sweep: sub-item chunks up to whole-file fills
+/// (`None` ⇒ whole-file mode, today's degenerate behaviour).
+pub const CHUNK_SWEEP: [Option<u64>; 4] = [Some(256 << 10), Some(1 << 20), Some(4 << 20), None];
+
+/// Records big enough that every swept chunk size is sub-item:
+/// 1024×1024×4 px + 8 B header = 4 MiB + 8 B per item.
+pub fn chunk_sweep_cfg(items: u64) -> DataGenConfig {
+    DataGenConfig {
+        num_items: items,
+        height: 1024,
+        width: 1024,
+        channels: 4,
+        files_per_dir: 16,
+        ..Default::default()
+    }
+}
+
+/// One measured point of the chunk-size sweep.
+#[derive(Debug, Clone)]
+pub struct ChunkPoint {
+    /// `None` ⇒ whole-file fills.
+    pub chunk_bytes: Option<u64>,
+    pub cold_s: f64,
+    pub warm_s: f64,
+    pub cold: ReadStats,
+    pub warm: ReadStats,
+}
+
+/// Run a cold + warm epoch through a fresh striped cluster with the given
+/// chunk size (`None` ⇒ the whole-file `ReaderPool`), `readers` reader
+/// threads and a per-request NVMe service time of `node_latency`.
+pub fn chunk_scaling_run(
+    chunk_bytes: Option<u64>,
+    cfg: &DataGenConfig,
+    readers: usize,
+    node_latency: Duration,
+) -> Result<ChunkPoint> {
+    chunk_scaling_run_with_remote(chunk_bytes, cfg, readers, node_latency, None)
+}
+
+/// Like [`chunk_scaling_run`], but serving the remote store from a
+/// pre-generated `shared_remote` directory when given — the dataset
+/// depends only on `cfg`, not on the chunk size, so a sweep generates it
+/// once and every point reuses it (fresh node cache dirs per point).
+pub fn chunk_scaling_run_with_remote(
+    chunk_bytes: Option<u64>,
+    cfg: &DataGenConfig,
+    readers: usize,
+    node_latency: Duration,
+    shared_remote: Option<&std::path::Path>,
+) -> Result<ChunkPoint> {
+    static RUN_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = RUN_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let root: PathBuf = std::env::temp_dir().join(format!(
+        "hoard-chunks-{}-{}-{seq}",
+        chunk_bytes.map_or("whole".to_string(), |b| b.to_string()),
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    let mut cluster = RealCluster::create(&root, CHUNK_NODES, 200e6)
+        .context("creating chunk-sweep cluster")?
+        .with_remote_model(Box::new(NfsModel::new(200e6)));
+    cluster.set_node_read_latency(node_latency);
+    let total = match shared_remote {
+        Some(dir) => {
+            cluster.remote_dir = dir.to_path_buf();
+            cfg.num_items * cfg.record_bytes() as u64
+        }
+        None => datagen::generate(&cluster.remote_dir, cfg).context("generating dataset")?,
+    };
+
+    let vols = (0..CHUNK_NODES)
+        .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 30)]))
+        .collect();
+    let mut manager = CacheManager::new(vols, EvictionPolicy::Manual);
+    if let Some(cb) = chunk_bytes {
+        manager.chunk_bytes = cb;
+    }
+    manager.register(
+        DatasetSpec::new("sweep", cfg.num_items, total),
+        "nfs://remote/sweep".into(),
+    )?;
+    manager.place("sweep", (0..CHUNK_NODES).map(NodeId).collect())?;
+    let cache = SharedCache::new(manager);
+
+    let pool = match chunk_bytes {
+        Some(_) => ReaderPool::new_chunked(&cluster, cache, "sweep", cfg.clone(), readers)?,
+        None => ReaderPool::new(&cluster, cache, "sweep", cfg.clone(), readers),
+    };
+    let cold_report = pool.run_epoch(&pool.epoch_order(0xC4AB, 0))?;
+    cluster.take_stats();
+    let warm_report = pool.run_epoch(&pool.epoch_order(0xC4AB, 1))?;
+
+    let point = ChunkPoint {
+        chunk_bytes,
+        cold_s: cold_report.wall.as_secs_f64(),
+        warm_s: warm_report.wall.as_secs_f64(),
+        cold: cold_report.merged,
+        warm: warm_report.merged,
+    };
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(point)
+}
+
+/// The `chunk_bytes` epoch-time table over an explicit sweep and dataset
+/// shape (tests use small records; the CLI uses [`chunk_sweep_cfg`]).
+pub fn chunk_size_table_with(sweep: &[Option<u64>], cfg: &DataGenConfig, readers: usize) -> Table {
+    let mut t = Table::new(
+        "Real mode — epoch time vs chunk size (striped over 4 nodes, shared remote bucket)",
+        &[
+            "chunk",
+            "cold epoch (s)",
+            "warm epoch (s)",
+            "warm img/s",
+            "cold remote reads",
+            "cold remote bytes",
+            "warm local/peer reads",
+        ],
+    );
+    // Generate the dataset once for the whole sweep; every point reuses
+    // the same remote store and only the node cache dirs are fresh.
+    let src: PathBuf = std::env::temp_dir()
+        .join(format!("hoard-chunks-src-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&src);
+    let shared = datagen::generate(&src, cfg).ok().map(|_| src.clone());
+    for &chunk in sweep {
+        match chunk_scaling_run_with_remote(
+            chunk,
+            cfg,
+            readers,
+            Duration::from_micros(400),
+            shared.as_deref(),
+        ) {
+            Ok(p) => t.row(vec![
+                chunk.map_or("whole-file".to_string(), fmt::bytes),
+                format!("{:.3}", p.cold_s),
+                format!("{:.3}", p.warm_s),
+                format!("{:.0}", cfg.num_items as f64 / p.warm_s.max(1e-9)),
+                format!("{}", p.cold.remote_reads),
+                format!("{}", p.cold.remote_bytes),
+                format!("{}", p.warm.local_reads + p.warm.peer_reads),
+            ]),
+            Err(e) => {
+                let mut cells = vec![
+                    chunk.map_or("whole-file".to_string(), fmt::bytes),
+                    format!("failed: {e:#}"),
+                ];
+                cells.resize(7, String::new());
+                t.row(cells);
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&src);
+    t
+}
+
+/// The default `hoard exp chunks` table: 4 MiB records, the
+/// {256 KiB, 1 MiB, 4 MiB, whole-file} sweep, 4 readers.
+pub fn chunk_size_table(items: u64) -> Table {
+    chunk_size_table_with(&CHUNK_SWEEP, &chunk_sweep_cfg(items), 4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn whole_file_and_chunked_runs_agree_on_bytes() {
+        let cfg = DataGenConfig { num_items: 12, files_per_dir: 32, ..Default::default() };
+        let total = cfg.num_items * cfg.record_bytes() as u64;
+        let whole = chunk_scaling_run(None, &cfg, 2, Duration::ZERO).unwrap();
+        let chunked = chunk_scaling_run(Some(1000), &cfg, 2, Duration::ZERO).unwrap();
+        assert_eq!(whole.cold.remote_bytes, total, "whole-file cold fetch-once");
+        assert_eq!(chunked.cold.remote_bytes, total, "chunked cold fetch-once (by bytes)");
+        assert_eq!(whole.warm.remote_reads, 0);
+        assert_eq!(chunked.warm.remote_reads, 0, "chunked warm epoch fully cached");
+    }
+
+    #[test]
+    fn chunk_table_has_one_row_per_size() {
+        let cfg = DataGenConfig { num_items: 8, files_per_dir: 32, ..Default::default() };
+        let t = chunk_size_table_with(&[Some(1500), None], &cfg, 2);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][0], "1.46 KiB");
+        assert_eq!(t.rows[1][0], "whole-file");
+    }
+}

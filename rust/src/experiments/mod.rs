@@ -4,9 +4,11 @@
 //! console, markdown, or CSV.
 
 pub mod ablations;
+pub mod chunks;
 pub mod paper;
 pub mod realmode;
 
+pub use chunks::{chunk_scaling_run, chunk_size_table};
 pub use paper::*;
 pub use realmode::{realmode_reader_scaling, reader_scaling_run};
 

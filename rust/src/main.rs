@@ -41,7 +41,7 @@ fn main() {
 fn print_usage() {
     eprintln!(
         "hoard — distributed data caching for DL training (paper reproduction)\n\n\
-         USAGE:\n  hoard exp <t1|f3|t3|f4|f5|t4|t5|util|readers|ablations|all>\n  \
+         USAGE:\n  hoard exp <t1|f3|t3|f4|f5|t4|t5|util|readers|chunks|ablations|all> [--json]\n  \
          hoard serve [--addr 127.0.0.1:7070] [--config FILE]\n  \
          hoard datagen --out DIR [--items N]\n  \
          hoard sim --mode <rem|nvme|hoard> [--epochs N] [--readers N]\n  \
@@ -58,39 +58,52 @@ fn flag<'a>(args: &'a [String], key: &str) -> Option<&'a str> {
 }
 
 fn cmd_exp(args: &[String]) -> i32 {
-    let which = args.first().map(String::as_str).unwrap_or("all");
+    let json = args.iter().any(|a| a == "--json");
+    let which = args
+        .iter()
+        .map(String::as_str)
+        .find(|a| !a.starts_with("--"))
+        .unwrap_or("all");
+    // Every experiment table shares one machine-readable form
+    // (`metrics::Table::json`), so `readers`, `chunks` and the paper
+    // tables all emit the same JSON shape under --json.
+    let emit = |t: hoard::metrics::Table| {
+        println!("{}", if json { t.json() } else { t.console() })
+    };
     let run = |id: &str| -> bool {
         match id {
-            "t1" => println!("{}", experiments::table1_fs_comparison().console()),
+            "t1" => emit(experiments::table1_fs_comparison()),
             "f3" => {
                 let (series, table) = experiments::figure3_two_epochs();
-                let refs: Vec<(&str, &[(f64, f64)])> =
-                    series.iter().map(|(n, s)| (n.as_str(), s.as_slice())).collect();
-                println!("{}", ascii_plot("Figure 3 — img/s over time", &refs, 72, 16));
-                println!("{}", table.console());
+                if !json {
+                    let refs: Vec<(&str, &[(f64, f64)])> =
+                        series.iter().map(|(n, s)| (n.as_str(), s.as_slice())).collect();
+                    println!("{}", ascii_plot("Figure 3 — img/s over time", &refs, 72, 16));
+                }
+                emit(table);
             }
-            "t3" => println!("{}", experiments::table3_projections().console()),
-            "f4" => println!("{}", experiments::figure4_mdr_sweep().console()),
-            "f5" => println!("{}", experiments::figure5_remote_bw_sweep().console()),
-            "t4" => println!("{}", experiments::table4_network_usage().console()),
-            "t5" => println!("{}", experiments::table5_rack_uplink().console()),
-            "util" => println!("{}", experiments::utilization_2x().console()),
-            "readers" => println!(
-                "{}",
-                experiments::realmode_reader_scaling(&[1, 2, 4], 256).console()
-            ),
+            "t3" => emit(experiments::table3_projections()),
+            "f4" => emit(experiments::figure4_mdr_sweep()),
+            "f5" => emit(experiments::figure5_remote_bw_sweep()),
+            "t4" => emit(experiments::table4_network_usage()),
+            "t5" => emit(experiments::table5_rack_uplink()),
+            "util" => emit(experiments::utilization_2x()),
+            "readers" => emit(experiments::realmode_reader_scaling(&[1, 2, 4], 256)),
+            "chunks" => emit(experiments::chunk_size_table(24)),
             "ablations" => {
-                println!("{}", ablations::ablation_stripe_width().console());
-                println!("{}", ablations::ablation_prefetch().console());
-                println!("{}", ablations::ablation_eviction().console());
-                println!("{}", ablations::ablation_coscheduling().console());
+                emit(ablations::ablation_stripe_width());
+                emit(ablations::ablation_prefetch());
+                emit(ablations::ablation_eviction());
+                emit(ablations::ablation_coscheduling());
             }
             _ => return false,
         }
         true
     };
     if which == "all" {
-        for id in ["t1", "f3", "t3", "f4", "f5", "t4", "t5", "util", "readers", "ablations"] {
+        for id in
+            ["t1", "f3", "t3", "f4", "f5", "t4", "t5", "util", "readers", "chunks", "ablations"]
+        {
             run(id);
         }
         return 0;

@@ -145,6 +145,30 @@ impl Table {
         out
     }
 
+    /// Machine-readable JSON — the one format every `hoard exp` table
+    /// shares (`hoard exp <id> --json`):
+    /// `{"title": …, "headers": […], "rows": [[…], …]}`.
+    pub fn json(&self) -> String {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            (
+                "headers",
+                Json::arr(self.headers.iter().map(|h| Json::str(h.clone())).collect()),
+            ),
+            (
+                "rows",
+                Json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::arr(r.iter().map(|c| Json::str(c.clone())).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+        .to_string()
+    }
+
     /// Fixed-width console rendering.
     pub fn console(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
@@ -245,6 +269,20 @@ mod tests {
         assert!(md.contains("| 1 | x |"));
         let con = t.console();
         assert!(con.contains("Demo"));
+    }
+
+    #[test]
+    fn table_json_roundtrips() {
+        use crate::util::json::Json;
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "x".into()]);
+        t.row(vec!["2".into(), "y".into()]);
+        let v = Json::parse(&t.json()).unwrap();
+        assert_eq!(v.get("title").unwrap().as_str(), Some("Demo"));
+        assert_eq!(v.get("headers").unwrap().as_arr().unwrap().len(), 2);
+        let rows = v.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].idx(1).unwrap().as_str(), Some("y"));
     }
 
     #[test]

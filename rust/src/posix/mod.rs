@@ -9,5 +9,8 @@ pub mod realfs;
 pub mod throttle;
 
 pub use reader_pool::{EpochReport, FillTable, ReaderPool, SharedMount};
-pub use realfs::{HoardMount, LocalMount, Mount, ReadStats, RealCluster, RemoteMount};
+pub use realfs::{
+    chunk_rel_path, ChunkedMount, HoardMount, LocalMount, Mount, ReadStats, RealCluster,
+    RemoteMount,
+};
 pub use throttle::{SharedTokenBucket, TokenBucket};

@@ -28,7 +28,7 @@
 //!    into the cluster-wide accumulator per read.
 
 use std::fs;
-use std::io::Read as _;
+use std::io::{Read as _, Seek as _, SeekFrom};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -37,10 +37,49 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use super::throttle::SharedTokenBucket;
-use crate::cache::{CacheManager, ReadLocation};
+use crate::cache::{CacheManager, ChunkGeometry, ReadLocation};
 use crate::netsim::NodeId;
 use crate::remote::{RemoteReaderGauge, RemoteStore};
 use crate::workload::datagen::DataGenConfig;
+
+/// On-node path of chunk `c`'s payload under the `chunk_bytes` grid.
+/// Chunk-granular striping stores one file per chunk, so presence-on-disk
+/// stays authoritative per chunk exactly like per-item files are in
+/// whole-file mode. The grid's chunk size is part of the path: a dataset
+/// re-placed with a different `chunk_bytes` misses cleanly instead of
+/// adopting stale chunk files whose byte ranges no longer line up.
+pub fn chunk_rel_path(chunk_bytes: u64, c: u64) -> PathBuf {
+    PathBuf::from(format!("chunks/b{chunk_bytes}/c{c:07}.bin"))
+}
+
+/// Fetch chunk `c`'s payload from the remote store — one ranged read per
+/// overlapped item file — and persist it on the chunk's home node.
+/// Recording residency (SharedCache vs `&mut CacheManager`) is the
+/// caller's job; this is the single implementation of chunk assembly both
+/// the concurrent pool and [`ChunkedMount`] share.
+pub fn fetch_chunk_payload(
+    cluster: &RealCluster,
+    cfg: &DataGenConfig,
+    geom: &ChunkGeometry,
+    c: u64,
+    stats: &mut ReadStats,
+) -> Result<Vec<u8>> {
+    let (cs, ce) = geom.chunk_range(c);
+    let mut buf = Vec::with_capacity((ce - cs) as usize);
+    for i in geom.items_of_chunk(c) {
+        let (is_, ie) = geom.item_range(i);
+        if is_ == ie {
+            continue;
+        }
+        let lo = cs.max(is_);
+        let hi = ce.min(ie);
+        let part =
+            cluster.read_remote_range_sharded(&cfg.item_rel_path(i), lo - is_, hi - lo, stats)?;
+        buf.extend_from_slice(&part);
+    }
+    cluster.write_node(geom.node_of_chunk(c), &chunk_rel_path(geom.chunk_bytes(), c), &buf)?;
+    Ok(buf)
+}
 
 /// Default per-node cache-volume bandwidth (NVMe class). High enough to be
 /// invisible to the existing correctness tests; benches lower it (or add
@@ -175,14 +214,9 @@ impl RealCluster {
         Ok(data)
     }
 
-    /// Throttled read from the remote store, recording into the caller's
-    /// own stats shard (concurrent readers; no shared-stats lock taken).
-    pub fn read_remote_sharded(&self, rel: &Path, stats: &mut ReadStats) -> Result<Vec<u8>> {
-        let path = self.remote_dir.join(rel);
-        let mut buf = Vec::new();
-        fs::File::open(&path)
-            .with_context(|| format!("remote open {}", path.display()))?
-            .read_to_end(&mut buf)?;
+    /// Throttle + account one remote request of `n` bytes (shared bucket,
+    /// concurrency-degraded rate, per-request latency, caller's shard).
+    fn remote_account(&self, n: u64, stats: &mut ReadStats) {
         let active = self.remote_readers.enter();
         if let Some(model) = &self.remote_model {
             // Aggregate NFS bandwidth degrades with concurrent seeky
@@ -190,7 +224,7 @@ impl RealCluster {
             // through the one bucket.
             self.remote_bw.set_rate(model.effective_bw(active));
         }
-        let waited = self.remote_bw.acquire(buf.len() as u64);
+        let waited = self.remote_bw.acquire(n);
         self.remote_readers.exit();
         if let Some(model) = &self.remote_model {
             // Re-rate for the remaining concurrency so idle-period refill
@@ -201,10 +235,49 @@ impl RealCluster {
         if lat > 0 {
             std::thread::sleep(Duration::from_micros(lat));
         }
-        stats.remote_bytes += buf.len() as u64;
+        stats.remote_bytes += n;
         stats.remote_reads += 1;
         stats.remote_wait_s += waited.as_secs_f64();
+    }
+
+    /// Throttled read from the remote store, recording into the caller's
+    /// own stats shard (concurrent readers; no shared-stats lock taken).
+    pub fn read_remote_sharded(&self, rel: &Path, stats: &mut ReadStats) -> Result<Vec<u8>> {
+        let path = self.remote_dir.join(rel);
+        let mut buf = Vec::new();
+        fs::File::open(&path)
+            .with_context(|| format!("remote open {}", path.display()))?
+            .read_to_end(&mut buf)?;
+        self.remote_account(buf.len() as u64, stats);
         Ok(buf)
+    }
+
+    /// Ranged remote read: exactly `len` bytes at `offset` of `rel` (the
+    /// chunk-fill path fetches per-item sub-ranges, not whole files).
+    pub fn read_remote_range_sharded(
+        &self,
+        rel: &Path,
+        offset: u64,
+        len: u64,
+        stats: &mut ReadStats,
+    ) -> Result<Vec<u8>> {
+        let path = self.remote_dir.join(rel);
+        let mut f = fs::File::open(&path)
+            .with_context(|| format!("remote open {}", path.display()))?;
+        f.seek(SeekFrom::Start(offset))?;
+        let mut buf = vec![0u8; len as usize];
+        f.read_exact(&mut buf)
+            .with_context(|| format!("remote short read {}+{len} {}", offset, path.display()))?;
+        self.remote_account(len, stats);
+        Ok(buf)
+    }
+
+    /// Ranged remote read recording into the cluster-wide stats.
+    pub fn read_remote_range(&self, rel: &Path, offset: u64, len: u64) -> Result<Vec<u8>> {
+        let mut shard = ReadStats::default();
+        let data = self.read_remote_range_sharded(rel, offset, len, &mut shard)?;
+        self.merge_stats(&shard);
+        Ok(data)
     }
 
     /// Read from a node cache dir (NVMe-class local storage), through that
@@ -214,6 +287,22 @@ impl RealCluster {
         let data = self.read_node_sharded(node, rel, reader, &mut shard)?;
         self.merge_stats(&shard);
         Ok(data)
+    }
+
+    /// Throttle + account one node (NVMe) request of `n` bytes.
+    fn node_account(&self, node: NodeId, n: u64, reader: NodeId, stats: &mut ReadStats) {
+        self.node_bw[node.0].acquire(n);
+        let lat = self.node_read_latency_us.load(Ordering::Relaxed);
+        if lat > 0 {
+            std::thread::sleep(Duration::from_micros(lat));
+        }
+        if node == reader {
+            stats.local_bytes += n;
+            stats.local_reads += 1;
+        } else {
+            stats.peer_bytes += n;
+            stats.peer_reads += 1;
+        }
     }
 
     /// Node read recording into the caller's own stats shard.
@@ -229,19 +318,46 @@ impl RealCluster {
         fs::File::open(&path)
             .with_context(|| format!("node{} open {}", node.0, path.display()))?
             .read_to_end(&mut buf)?;
-        self.node_bw[node.0].acquire(buf.len() as u64);
-        let lat = self.node_read_latency_us.load(Ordering::Relaxed);
-        if lat > 0 {
-            std::thread::sleep(Duration::from_micros(lat));
-        }
-        if node == reader {
-            stats.local_bytes += buf.len() as u64;
-            stats.local_reads += 1;
-        } else {
-            stats.peer_bytes += buf.len() as u64;
-            stats.peer_reads += 1;
-        }
+        self.node_account(node, buf.len() as u64, reader, stats);
         Ok(buf)
+    }
+
+    /// Ranged node read: exactly `len` bytes at `offset` of `rel` on
+    /// `node` — how mounts serve one chunk-aligned segment of an item.
+    pub fn read_node_range_sharded(
+        &self,
+        node: NodeId,
+        rel: &Path,
+        offset: u64,
+        len: u64,
+        reader: NodeId,
+        stats: &mut ReadStats,
+    ) -> Result<Vec<u8>> {
+        let path = self.node_dirs[node.0].join(rel);
+        let mut f = fs::File::open(&path)
+            .with_context(|| format!("node{} open {}", node.0, path.display()))?;
+        f.seek(SeekFrom::Start(offset))?;
+        let mut buf = vec![0u8; len as usize];
+        f.read_exact(&mut buf).with_context(|| {
+            format!("node{} short read {offset}+{len} {}", node.0, path.display())
+        })?;
+        self.node_account(node, len, reader, stats);
+        Ok(buf)
+    }
+
+    /// Ranged node read recording into the cluster-wide stats.
+    pub fn read_node_range(
+        &self,
+        node: NodeId,
+        rel: &Path,
+        offset: u64,
+        len: u64,
+        reader: NodeId,
+    ) -> Result<Vec<u8>> {
+        let mut shard = ReadStats::default();
+        let data = self.read_node_range_sharded(node, rel, offset, len, reader, &mut shard)?;
+        self.merge_stats(&shard);
+        Ok(data)
     }
 
     pub fn write_node(&self, node: NodeId, rel: &Path, data: &[u8]) -> Result<()> {
@@ -337,10 +453,10 @@ pub struct HoardMount<'a> {
 impl Mount for HoardMount<'_> {
     fn read_item(&mut self, i: u64, reader: NodeId) -> Result<Vec<u8>> {
         let rel = self.cfg.item_rel_path(i);
-        // The control-plane fill front is an *estimate* (it models AFM's
-        // sequential prefetch); real fills happen in the job's random read
-        // order, so actual file presence on the home node is authoritative
-        // — exactly how AFM consults its inode cache state.
+        // The residency bitmap tracks real fills exactly, but fills happen
+        // in the job's random read order across *processes* too, so actual
+        // file presence on the home node stays authoritative — exactly how
+        // AFM consults its inode cache state.
         let home = match self.cache.read_location(&self.dataset, i, reader)? {
             ReadLocation::Local => reader,
             ReadLocation::Peer(p) => p,
@@ -351,8 +467,87 @@ impl Mount for HoardMount<'_> {
         }
         let data = self.cluster.read_remote(&rel)?;
         self.cluster.write_node(home, &rel, &data)?;
-        self.cache.prefetch_tick(&self.dataset, data.len() as u64)?;
+        // Mark the item's exact chunks (not a sequential front): the
+        // registry's bitmap now mirrors what is really on disk.
+        self.cache.mark_item(&self.dataset, i)?;
         Ok(data)
+    }
+
+    fn num_items(&self) -> u64 {
+        self.cfg.num_items
+    }
+}
+
+/// Chunk-granular Hoard mount: items are assembled from chunk files, each
+/// chunk homed by `node_of_chunk` and fetched from the remote store as a
+/// byte *range* spanning the items it overlaps. One item can therefore be
+/// served from a mix of local, peer and remote-fill segments in a single
+/// `read_item` — the partial-hit behaviour whole-file caching cannot give.
+/// Single-threaded (`&mut CacheManager`); the concurrent equivalent is the
+/// chunked mode of [`crate::posix::reader_pool::ReaderPool`].
+pub struct ChunkedMount<'a> {
+    pub cluster: &'a RealCluster,
+    pub cache: &'a mut CacheManager,
+    pub dataset: String,
+    pub cfg: DataGenConfig,
+    geom: ChunkGeometry,
+}
+
+impl<'a> ChunkedMount<'a> {
+    pub fn new(
+        cluster: &'a RealCluster,
+        cache: &'a mut CacheManager,
+        dataset: impl Into<String>,
+        cfg: DataGenConfig,
+    ) -> Result<Self> {
+        let dataset = dataset.into();
+        let geom = cache.geometry(&dataset)?;
+        Ok(ChunkedMount { cluster, cache, dataset, cfg, geom })
+    }
+
+    pub fn geometry(&self) -> &ChunkGeometry {
+        &self.geom
+    }
+
+    /// Fetch + persist chunk `c` (shared [`fetch_chunk_payload`] path) and
+    /// mark it in the residency bitmap. Returns the chunk payload.
+    fn fetch_chunk(&mut self, c: u64) -> Result<Vec<u8>> {
+        let mut shard = ReadStats::default();
+        let buf = fetch_chunk_payload(self.cluster, &self.cfg, &self.geom, c, &mut shard)?;
+        self.cluster.merge_stats(&shard);
+        self.cache.mark_chunks(&self.dataset, std::iter::once(c))?;
+        Ok(buf)
+    }
+}
+
+impl Mount for ChunkedMount<'_> {
+    fn read_item(&mut self, i: u64, reader: NodeId) -> Result<Vec<u8>> {
+        let plan = self.cache.read_plan(&self.dataset, i, reader)?;
+        let (s, e) = self.geom.item_range(i);
+        let mut out = Vec::with_capacity((e - s) as usize);
+        let chunks: Vec<u64> = self.geom.chunks_of_item(i).collect();
+        debug_assert_eq!(chunks.len(), plan.segments.len());
+        for (c, (seg, loc)) in chunks.into_iter().zip(plan.segments) {
+            let crel = chunk_rel_path(self.geom.chunk_bytes(), c);
+            let home = self.geom.node_of_chunk(c);
+            let (cs, _) = self.geom.chunk_range(c);
+            let off = s + seg.start - cs; // segment offset within the chunk
+            let len = seg.end - seg.start;
+            if self.cluster.node_has(home, &crel) {
+                if matches!(loc, ReadLocation::RemoteFill { .. }) {
+                    // On-disk chunk the bitmap missed (e.g. another mount
+                    // filled it): adopt it.
+                    self.cache.mark_chunks(&self.dataset, std::iter::once(c))?;
+                }
+                out.extend_from_slice(&self.cluster.read_node_range(
+                    home, &crel, off, len, reader,
+                )?);
+            } else {
+                let chunk_buf = self.fetch_chunk(c)?;
+                out.extend_from_slice(&chunk_buf[off as usize..(off + len) as usize]);
+            }
+        }
+        Ok(out)
     }
 
     fn num_items(&self) -> u64 {
@@ -486,6 +681,69 @@ mod tests {
             s.remote_reads,
             cfg.num_items
         );
+        fs::remove_dir_all(&cluster.root).unwrap();
+    }
+
+    #[test]
+    fn chunked_mount_assembles_items_byte_correct() {
+        let cfg = DataGenConfig { num_items: 8, files_per_dir: 10, ..Default::default() };
+        let (cluster, total) = setup("chunked", &cfg);
+        let vols = (0..4)
+            .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 10 << 20)]))
+            .collect();
+        let mut cache = CacheManager::new(vols, EvictionPolicy::Manual);
+        cache.chunk_bytes = 1000; // record is 3080 B ⇒ each item spans 4–5 chunks
+        cache
+            .register(DatasetSpec::new("d", cfg.num_items, total), "nfs://r/d".into())
+            .unwrap();
+        cache.place("d", (0..4).map(NodeId).collect()).unwrap();
+        let mut m = ChunkedMount::new(&cluster, &mut cache, "d", cfg.clone()).unwrap();
+        assert_eq!(m.geometry().chunk_bytes(), 1000);
+        // Cold epoch: items assemble byte-correct from ranged chunk fills,
+        // and the remote store supplies every byte exactly once.
+        for i in 0..cfg.num_items {
+            let rec = m.read_item(i, NodeId(0)).unwrap();
+            let (_, want) = datagen::make_record(&cfg, i);
+            assert_eq!(rec, want, "item {i}");
+        }
+        let s1 = cluster.take_stats();
+        assert_eq!(s1.remote_bytes, total, "chunk fetch-once: remote bytes == dataset");
+        assert_eq!(
+            cache.registry.get("d").unwrap().state,
+            crate::cache::DatasetState::Cached,
+            "all chunks marked ⇒ Cached"
+        );
+        // Warm epoch: zero remote, mixed local/peer segments, still correct.
+        let mut m = ChunkedMount::new(&cluster, &mut cache, "d", cfg.clone()).unwrap();
+        for i in 0..cfg.num_items {
+            let rec = m.read_item(i, NodeId(0)).unwrap();
+            let (_, want) = datagen::make_record(&cfg, i);
+            assert_eq!(rec, want, "warm item {i}");
+        }
+        let s2 = cluster.take_stats();
+        assert_eq!(s2.remote_reads, 0, "warm chunked epoch must not touch remote");
+        assert!(s2.local_reads > 0 && s2.peer_reads > 0, "{s2:?}");
+        fs::remove_dir_all(&cluster.root).unwrap();
+    }
+
+    #[test]
+    fn ranged_reads_slice_exactly() {
+        let cfg = small_cfg();
+        let (cluster, _) = setup("range", &cfg);
+        let rel = cfg.item_rel_path(5);
+        let whole = cluster.read_remote(&rel).unwrap();
+        let mid = cluster.read_remote_range(&rel, 10, 100).unwrap();
+        assert_eq!(mid, whole[10..110]);
+        cluster.write_node(NodeId(2), &rel, &whole).unwrap();
+        let tail_off = whole.len() as u64 - 7;
+        let tail = cluster.read_node_range(NodeId(2), &rel, tail_off, 7, NodeId(0)).unwrap();
+        assert_eq!(tail, whole[whole.len() - 7..]);
+        // Past-EOF ranges fail loudly instead of returning short data.
+        assert!(cluster.read_remote_range(&rel, whole.len() as u64 - 3, 10).is_err());
+        let s = cluster.take_stats();
+        assert_eq!(s.remote_reads, 2, "failed range read is not accounted");
+        assert_eq!(s.peer_reads, 1);
+        assert_eq!(s.peer_bytes, 7);
         fs::remove_dir_all(&cluster.root).unwrap();
     }
 

@@ -23,6 +23,7 @@
 //! Calibration constants are derived from the paper's own numbers
 //! (DESIGN.md §5) and asserted in tests below.
 
+use crate::cache::ChunkSet;
 use crate::cluster::epoch_hit_rate;
 use crate::netsim::{fair_share, Flow, NodeId, Resource, ResourceId, Topology, TrafficAccount};
 use crate::remote::RemoteStore;
@@ -65,6 +66,12 @@ pub struct TrainJobSim {
     /// Dataset already resident when the job starts (returning job /
     /// hyper-parameter sweep round ≥ 2): every epoch is a warm epoch.
     warm_start: bool,
+    /// Chunk-granular residency at job start: the *same* accounting the
+    /// cache registry keeps ([`ChunkSet`]), so a partially filled dataset
+    /// yields a partially warm first epoch — resident chunks stream from
+    /// the stripe, missing chunks from the AFM cold path — and sim and
+    /// real mode agree by construction.
+    residency: Option<ChunkSet>,
     // --- run state ---
     epoch: u32,
     images_done: f64,
@@ -81,6 +88,7 @@ impl TrainJobSim {
             buffer_cache_bytes: 0.0,
             pagepool_bytes: 0.0,
             warm_start: false,
+            residency: None,
             epoch: 0,
             images_done: 0.0,
             finished: false,
@@ -90,6 +98,19 @@ impl TrainJobSim {
     /// Mark the dataset as already cached before the job starts.
     pub fn set_warm(&mut self) {
         self.warm_start = true;
+    }
+
+    /// Seed the job with the cache's chunk residency bitmap. A full
+    /// bitmap is exactly a warm start; a partial one makes the first
+    /// epoch a *mixed* epoch (resident fraction from the stripe, the rest
+    /// through the AFM cold path).
+    pub fn set_residency(&mut self, chunks: ChunkSet) {
+        if chunks.is_full() {
+            self.warm_start = true;
+            self.residency = None;
+        } else {
+            self.residency = Some(chunks);
+        }
     }
 
     /// Is the job currently in its cold (cache-filling) epoch?
@@ -281,13 +302,48 @@ impl TrainSim {
                         })
                         .count()
                         .max(1);
-                    vec![SourceClass {
-                        frac: 1.0,
-                        path: self.topology.path_from_external(self.nfs_res, job.node),
-                        cap: AFM_COLD_BW_PER_JOB,
-                        remote_draw: 1.0 / sharers as f64,
-                        kind: SourceKind::Remote,
-                    }]
+                    // Chunk-granular partial warmth: the resident fraction
+                    // of the bitmap streams from the stripe (1/k local,
+                    // rest peers), only the missing chunks pay the AFM
+                    // cold path. `None` ⇒ fully cold (the classic path).
+                    let rf = job.residency.as_ref().map_or(0.0, |cs| cs.resident_fraction());
+                    let k = job.cache_nodes.len() as f64;
+                    let mut v = vec![];
+                    for &cn in &job.cache_nodes {
+                        let frac = rf / k;
+                        if frac <= 0.0 {
+                            continue;
+                        }
+                        if cn == job.node {
+                            v.push(SourceClass {
+                                frac,
+                                path: vec![self.volume_res[cn.0]],
+                                cap: f64::INFINITY,
+                                remote_draw: 0.0,
+                                kind: SourceKind::Local,
+                            });
+                        } else {
+                            let mut path = vec![self.volume_res[cn.0]];
+                            path.extend(self.topology.path(cn, job.node));
+                            v.push(SourceClass {
+                                frac,
+                                path,
+                                cap: f64::INFINITY,
+                                remote_draw: 0.0,
+                                kind: SourceKind::Peer,
+                            });
+                        }
+                    }
+                    if rf < 1.0 {
+                        v.push(SourceClass {
+                            frac: 1.0 - rf,
+                            path: self.topology.path_from_external(self.nfs_res, job.node),
+                            cap: AFM_COLD_BW_PER_JOB,
+                            remote_draw: 1.0 / sharers as f64,
+                            kind: SourceKind::Remote,
+                        });
+                    }
+                    v
                 } else {
                     let h = epoch_hit_rate(job.pagepool_bytes, ds_bytes);
                     let k = job.cache_nodes.len() as f64;
@@ -334,9 +390,14 @@ impl TrainSim {
     }
 
     /// Per-job image rate cap from the GPUs (Spectrum client overhead
-    /// applies in Hoard warm epochs, including warm starts).
+    /// applies whenever reads go through the cache client: warm epochs,
+    /// warm starts, and the resident part of a partially-warm first epoch
+    /// — so epoch time stays monotone in residency up to the full-bitmap
+    /// endpoint, which is exactly the warm path).
     fn gpu_cap_bytes(&self, job: &TrainJobSim) -> f64 {
-        let eff = if job.mode == ReadMode::Hoard && !job.is_cold_epoch() {
+        let partially_warm =
+            job.residency.as_ref().is_some_and(|cs| cs.resident_bytes() > 0);
+        let eff = if job.mode == ReadMode::Hoard && (!job.is_cold_epoch() || partially_warm) {
             SPECTRUM_CLIENT_EFF
         } else {
             1.0
@@ -674,6 +735,77 @@ mod tests {
         let first = res.jobs[0].fps_series.first().unwrap().1;
         let last = res.jobs[0].fps_series.last().unwrap().1;
         assert!(last > 2.0 * first, "cold {first} vs warm {last}");
+    }
+
+    fn residency(frac: f64) -> ChunkSet {
+        let mut cs = ChunkSet::new(144_000_000_000, 64 << 20);
+        let n = (cs.num_chunks() as f64 * frac).round() as u64;
+        for c in 0..n {
+            cs.mark(c);
+        }
+        cs
+    }
+
+    #[test]
+    fn partial_residency_interpolates_cold_epoch() {
+        let first_epoch = |frac: f64| {
+            let mut sim = paper_scenario(ReadMode::Hoard, 2);
+            for j in &mut sim.jobs {
+                if frac > 0.0 {
+                    j.set_residency(residency(frac));
+                }
+            }
+            sim.run().jobs[0].epoch_durations[0]
+        };
+        let cold = first_epoch(0.0);
+        let half = first_epoch(0.5);
+        let almost = first_epoch(0.99);
+        let full = first_epoch(1.0);
+        assert!(
+            half < cold * 0.75,
+            "half-resident first epoch should be much faster: {half:.0}s vs {cold:.0}s"
+        );
+        assert!(full < half, "fully resident beats half: {full:.0}s vs {half:.0}s");
+        // Monotone through the top end: the resident fraction pays the
+        // Spectrum client overhead, so 99% residency cannot be modeled
+        // *faster* than the fully-warm endpoint.
+        assert!(
+            almost < half && full <= almost * 1.001,
+            "monotone near full residency: full {full:.0}s, 99% {almost:.0}s, half {half:.0}s"
+        );
+    }
+
+    #[test]
+    fn full_residency_bit_identical_to_warm_start() {
+        // A full bitmap is *exactly* the warm-start path — sim and real
+        // mode agree on what "fully cached" means by construction.
+        let run = |via_chunks: bool| {
+            let mut sim = paper_scenario(ReadMode::Hoard, 2);
+            for j in &mut sim.jobs {
+                if via_chunks {
+                    j.set_residency(residency(1.0));
+                } else {
+                    j.set_warm();
+                }
+            }
+            let res = sim.run();
+            (res.makespan.to_bits(), res.jobs[0].epoch_durations[0].to_bits())
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn empty_residency_bit_identical_to_cold_start() {
+        let run = |with_empty_bitmap: bool| {
+            let mut sim = paper_scenario(ReadMode::Hoard, 2);
+            if with_empty_bitmap {
+                for j in &mut sim.jobs {
+                    j.set_residency(residency(0.0));
+                }
+            }
+            sim.run().makespan.to_bits()
+        };
+        assert_eq!(run(true), run(false), "empty bitmap must be the classic cold path");
     }
 
     #[test]

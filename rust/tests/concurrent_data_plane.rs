@@ -172,6 +172,117 @@ fn racing_readers_still_fetch_once() {
     std::fs::remove_dir_all(&cluster.root).unwrap();
 }
 
+fn chunked_fixture(
+    tag: &str,
+    items: u64,
+    chunk_bytes: u64,
+) -> (RealCluster, SharedCache, DataGenConfig) {
+    let root = std::env::temp_dir().join(format!("hoard-cdp-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let cluster = RealCluster::create(&root, 4, 500e6).unwrap();
+    let cfg = DataGenConfig { num_items: items, files_per_dir: 64, ..Default::default() };
+    let total = datagen::generate(&cluster.remote_dir, &cfg).unwrap();
+    let vols = (0..4).map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 30)])).collect();
+    let mut manager = CacheManager::new(vols, EvictionPolicy::Manual);
+    manager.chunk_bytes = chunk_bytes;
+    manager.register(DatasetSpec::new("d", items, total), "nfs://r/d".into()).unwrap();
+    manager.place("d", (0..4).map(NodeId).collect()).unwrap();
+    (cluster, SharedCache::new(manager), cfg)
+}
+
+/// No whole-file serialization: while chunk 0's fill is in flight, a
+/// second reader claims chunk 1 of the *same item* and proceeds as its
+/// filler immediately — the fill table keyed by (dataset, chunk) blocks
+/// per chunk, never per file.
+#[test]
+fn readers_racing_on_different_chunks_both_make_progress() {
+    use hoard::posix::reader_pool::Claim;
+    let fill = hoard::posix::FillTable::new(2);
+    assert_eq!(fill.claim_or_wait(0), Claim::Filler, "reader A owns chunk 0's fill");
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        let f = &fill;
+        let h = s.spawn(move || f.claim_or_wait(1));
+        assert_eq!(h.join().unwrap(), Claim::Filler, "reader B owns chunk 1 concurrently");
+    });
+    assert!(
+        t0.elapsed() < Duration::from_secs(2),
+        "chunk-1 claim must not wait for chunk 0's in-flight fill"
+    );
+    fill.complete(1);
+    fill.complete(0);
+    assert_eq!(fill.done_count(), 2);
+}
+
+/// Chunk-granular fetch-once under maximum contention: 8 threads all walk
+/// the same item sequence over sub-item chunks (most chunks straddle two
+/// items). The remote store must supply every byte exactly once, and every
+/// assembled item must be byte-correct.
+#[test]
+fn chunked_fetch_once_holds_under_8_threads() {
+    let (cluster, cache, cfg) = chunked_fixture("chunk8", 24, 777);
+    let geom = cache.geometry("d").unwrap();
+    let fill = hoard::posix::FillTable::new(geom.num_chunks());
+    let total = cfg.num_items * cfg.record_bytes() as u64;
+    let remote_bytes = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for r in 0..8usize {
+            let cluster = &cluster;
+            let cache = cache.clone();
+            let fill = &fill;
+            let cfg = cfg.clone();
+            let geom = geom.clone();
+            let remote_bytes = &remote_bytes;
+            s.spawn(move || {
+                let mut stats = ReadStats::default();
+                for i in 0..cfg.num_items {
+                    let data = hoard::posix::reader_pool::read_item_chunked(
+                        cluster,
+                        &cache,
+                        fill,
+                        "d",
+                        &cfg,
+                        &geom,
+                        i,
+                        NodeId(r % 4),
+                        &mut stats,
+                    )
+                    .unwrap();
+                    let (_, want) = datagen::make_record(&cfg, i);
+                    assert_eq!(data, want, "item {i} reassembled wrong");
+                }
+                remote_bytes.fetch_add(stats.remote_bytes, Ordering::SeqCst);
+            });
+        }
+    });
+    assert_eq!(
+        remote_bytes.load(Ordering::SeqCst),
+        total,
+        "8 racing readers must fetch each chunk exactly once (by bytes)"
+    );
+    assert_eq!(fill.done_count(), geom.num_chunks(), "every chunk filled");
+    assert!(cache.is_cached("d"), "bitmap full ⇒ dataset Cached");
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
+
+/// The chunked reader pool end-to-end under contention: cold epoch with 8
+/// threads, then a warm epoch that must not touch remote at all.
+#[test]
+fn chunked_pool_8_threads_cold_then_warm() {
+    let (cluster, cache, cfg) = chunked_fixture("cpool8", 32, 1000);
+    let total = cfg.num_items * cfg.record_bytes() as u64;
+    let pool =
+        hoard::posix::reader_pool::ReaderPool::new_chunked(&cluster, cache, "d", cfg.clone(), 8)
+            .unwrap();
+    let cold = pool.run_epoch(&pool.epoch_order(77, 0)).unwrap();
+    assert_eq!(cold.merged.remote_bytes, total, "cold chunked epoch fetch-once");
+    cluster.take_stats();
+    let warm = pool.run_epoch(&pool.epoch_order(77, 1)).unwrap();
+    assert_eq!(warm.merged.remote_reads, 0, "warm chunked epoch hit remote");
+    assert_eq!(warm.per_reader.len(), 8);
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
+
 /// The data read through the concurrent plane is byte-correct: every
 /// record parses and matches the deterministic generator.
 #[test]

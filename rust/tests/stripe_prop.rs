@@ -182,6 +182,211 @@ fn prop_coverage_preserved_across_failure_and_recovery() {
     );
 }
 
+// ---------------------------------------------------------------------------
+// ChunkSet properties: the residency bitmap every layer answers from.
+// ---------------------------------------------------------------------------
+
+use hoard::cache::ChunkSet;
+
+/// Random (chunk_bytes, total_bytes, random marks) instances.
+fn gen_chunkset_case(rng: &mut Rng) -> (u64, u64, Vec<u64>) {
+    let chunk = 1 + rng.gen_range(500);
+    let total = 1 + rng.gen_range(100_000);
+    let n_chunks = total.div_ceil(chunk);
+    let marks = (0..rng.gen_range(80)).map(|_| rng.gen_range(n_chunks)).collect();
+    (chunk, total, marks)
+}
+
+#[test]
+fn prop_chunkset_mark_contains_roundtrip() {
+    forall(
+        150,
+        gen_chunkset_case,
+        |(chunk, total, marks)| {
+            let mut cs = ChunkSet::new(*total, *chunk);
+            let mut mirror = std::collections::HashSet::new();
+            for &c in marks {
+                let newly = cs.mark(c);
+                if newly != mirror.insert(c) {
+                    return Err(format!("mark({c}) newly={newly} disagrees with mirror"));
+                }
+            }
+            for c in 0..cs.num_chunks() {
+                if cs.contains(c) != mirror.contains(&c) {
+                    return Err(format!("contains({c}) disagrees with mirror"));
+                }
+            }
+            if cs.marked_chunks() != mirror.len() as u64 {
+                return Err(format!(
+                    "marked count {} ≠ mirror {}",
+                    cs.marked_chunks(),
+                    mirror.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_chunkset_resident_bytes_is_sum_of_marked_chunks() {
+    forall(
+        150,
+        gen_chunkset_case,
+        |(chunk, total, marks)| {
+            let mut cs = ChunkSet::new(*total, *chunk);
+            for &c in marks {
+                cs.mark(c);
+            }
+            // Independent accounting: chunk c is `chunk` bytes except the
+            // tail, which is whatever remains of `total`.
+            let mut want = 0u64;
+            for c in 0..cs.num_chunks() {
+                if cs.contains(c) {
+                    want += (*total - c * *chunk).min(*chunk);
+                }
+            }
+            if cs.resident_bytes() != want {
+                return Err(format!(
+                    "resident_bytes {} ≠ marked-chunk sum {want} (tail-aware)",
+                    cs.resident_bytes()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_chunkset_union_commutative_idempotent() {
+    forall(
+        100,
+        |rng: &mut Rng| {
+            let chunk = 1 + rng.gen_range(200);
+            let total = 1 + rng.gen_range(20_000);
+            let n_chunks = total.div_ceil(chunk);
+            let a: Vec<u64> = (0..rng.gen_range(40)).map(|_| rng.gen_range(n_chunks)).collect();
+            let b: Vec<u64> = (0..rng.gen_range(40)).map(|_| rng.gen_range(n_chunks)).collect();
+            (chunk, total, a, b)
+        },
+        |(chunk, total, a, b)| {
+            let build = |marks: &[u64]| {
+                let mut cs = ChunkSet::new(*total, *chunk);
+                for &c in marks {
+                    cs.mark(c);
+                }
+                cs
+            };
+            let (sa, sb) = (build(a), build(b));
+            let mut ab = sa.clone();
+            ab.union(&sb);
+            let mut ba = sb.clone();
+            ba.union(&sa);
+            // Commutative on the marked set and its byte accounting.
+            for c in 0..ab.num_chunks() {
+                if ab.contains(c) != ba.contains(c) {
+                    return Err(format!("a∪b and b∪a disagree on chunk {c}"));
+                }
+            }
+            if ab.resident_bytes() != ba.resident_bytes() {
+                return Err("a∪b and b∪a disagree on resident bytes".into());
+            }
+            // Idempotent: a ∪ a == a (full state, partial included).
+            let mut aa = sa.clone();
+            aa.union(&sa);
+            if aa != sa {
+                return Err("a∪a changed the set".into());
+            }
+            // Monotone: the union contains both inputs.
+            for c in 0..ab.num_chunks() {
+                if (sa.contains(c) || sb.contains(c)) != ab.contains(c) {
+                    return Err(format!("union wrong at chunk {c}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_chunkset_full_iff_all_marked() {
+    forall(
+        100,
+        |rng: &mut Rng| {
+            let chunk = 1 + rng.gen_range(100);
+            let total = 1 + rng.gen_range(10_000);
+            let skip = rng.gen_range(total.div_ceil(chunk));
+            (chunk, total, skip)
+        },
+        |(chunk, total, skip)| {
+            let mut cs = ChunkSet::new(*total, *chunk);
+            // Mark everything except `skip`: must not be full.
+            for c in 0..cs.num_chunks() {
+                if c != *skip {
+                    cs.mark(c);
+                }
+            }
+            if cs.is_full() {
+                return Err(format!("full with chunk {skip} missing"));
+            }
+            cs.mark(*skip);
+            if !cs.is_full() {
+                return Err("all chunks marked but not full".into());
+            }
+            if cs.resident_bytes() != *total || cs.fetched_bytes() != *total {
+                return Err("full set must account exactly total bytes".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The fill-front regression, property form: however a dataset reaches a
+/// fully marked bitmap (sequential ticks, out-of-order marks, or both),
+/// `read_location` must never answer `RemoteFill` for any item.
+#[test]
+fn prop_full_residency_never_remote_fill() {
+    forall(
+        60,
+        |rng| {
+            let nodes = 1 + rng.gen_range(6) as usize;
+            let items = 1 + rng.gen_range(300);
+            let total = items + rng.gen_range(50_000);
+            let sequential = rng.bool(0.5);
+            (nodes, items, total, sequential)
+        },
+        |&(nodes, items, total, sequential)| {
+            let vols: Vec<Volume> = (0..nodes)
+                .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 40)]))
+                .collect();
+            let mut m = CacheManager::new(vols, EvictionPolicy::Manual);
+            m.register(DatasetSpec::new("d", items, total), "nfs://s/d".into())
+                .map_err(|e| e.to_string())?;
+            m.place("d", (0..nodes).map(NodeId).collect()).map_err(|e| e.to_string())?;
+            let n_chunks = m.geometry("d").map_err(|e| e.to_string())?.num_chunks();
+            if sequential {
+                m.prefetch_tick("d", total).map_err(|e| e.to_string())?;
+            } else {
+                // Reverse order: worst case for any front-based shortcut.
+                m.mark_chunks("d", (0..n_chunks).rev()).map_err(|e| e.to_string())?;
+            }
+            for i in 0..items {
+                for r in 0..nodes {
+                    let loc = m.read_location("d", i, NodeId(r)).map_err(|e| e.to_string())?;
+                    if matches!(loc, hoard::cache::ReadLocation::RemoteFill { .. }) {
+                        return Err(format!("item {i} reader {r}: RemoteFill when fully resident"));
+                    }
+                    let plan = m.read_plan("d", i, NodeId(r)).map_err(|e| e.to_string())?;
+                    if !plan.fully_resident() {
+                        return Err(format!("item {i}: plan not fully resident"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_local_fraction_matches_width() {
     forall(
