@@ -1,0 +1,69 @@
+//! §Perf — peer transport comparison: warm-epoch throughput of the
+//! chunked reader pool over the same-FS `DirTransport` vs the TCP
+//! `SocketTransport` (loopback `PeerServer` per node, pooled
+//! `PeerClient`).
+//!
+//! What must hold (correctness, asserted in every mode): both transports
+//! keep cold-epoch fetch-once (remote supplies every byte exactly once)
+//! and warm epochs off the remote store entirely; the socket run moves
+//! its non-local warm bytes across the wire (`peer_net_bytes > 0`) and
+//! none through peer directories. Timing is reported, not raced: loopback
+//! TCP pays per-chunk frame round-trips that the same-FS read does not,
+//! so the interesting number is the ratio, with only a loose sanity bound
+//! (catching pathological per-request reconnect regressions) outside
+//! smoke mode.
+
+mod common;
+
+use hoard::experiments::peers::peer_transport_run;
+
+fn main() {
+    let smoke = common::smoke();
+    let (items, chunk_bytes, readers) = if smoke { (16u64, 1000u64, 2) } else { (192, 4096, 4) };
+
+    let dir = common::bench("peer_dir", || {
+        peer_transport_run(false, items, chunk_bytes, readers).expect("dir transport run")
+    });
+    let socket = common::bench("peer_socket", || {
+        peer_transport_run(true, items, chunk_bytes, readers).expect("socket transport run")
+    });
+
+    // Correctness bar — cheap enough to keep in smoke mode.
+    assert_eq!(dir.cold.remote_bytes, dir.total_bytes, "dir cold fetch-once");
+    assert_eq!(socket.cold.remote_bytes, socket.total_bytes, "socket cold fetch-once");
+    assert_eq!(dir.warm.remote_reads, 0, "dir warm epoch touched remote");
+    assert_eq!(socket.warm.remote_reads, 0, "socket warm epoch touched remote");
+    assert!(socket.warm.peer_net_bytes > 0, "socket warm epoch moved no wire bytes");
+    assert_eq!(socket.warm.peer_reads, 0, "socket transport read a peer directory");
+    assert_eq!(dir.warm.peer_net_reads, 0, "dir transport touched the wire");
+
+    let ratio = dir.warm_s / socket.warm_s.max(1e-9);
+    println!(
+        "warm epoch: dir {:.3}s ({:.0} img/s) vs socket {:.3}s ({:.0} img/s)  ⇒ socket/dir {:.2}×",
+        dir.warm_s,
+        items as f64 / dir.warm_s.max(1e-9),
+        socket.warm_s,
+        items as f64 / socket.warm_s.max(1e-9),
+        ratio
+    );
+    println!(
+        "socket warm wire traffic: {} requests, {} bytes",
+        socket.warm.peer_net_reads, socket.warm.peer_net_bytes
+    );
+    println!(
+        "BENCH perf_peer_transport dir_warm={:.4}s socket_warm={:.4}s ratio={ratio:.2}",
+        dir.warm_s, socket.warm_s
+    );
+
+    if smoke {
+        println!("smoke mode: timing sanity bound skipped");
+        return;
+    }
+    assert!(
+        ratio > 0.02,
+        "socket warm epoch {:.3}s is >50× slower than dir {:.3}s — \
+         per-request dial/reconnect regression?",
+        socket.warm_s,
+        dir.warm_s
+    );
+}

@@ -6,8 +6,14 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
+
+/// Socket read/write timeout on accepted connections: a client that
+/// connects and sends nothing (or stalls mid-request) is dropped instead
+/// of pinning its handler thread forever.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(10);
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Request {
@@ -103,8 +109,18 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind `addr` (e.g. "127.0.0.1:0") and serve until dropped/stopped.
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve until dropped/stopped,
+    /// with the default per-connection I/O timeout.
     pub fn start<F>(addr: &str, handler: F) -> Result<Server>
+    where
+        F: Fn(&Request) -> Response + Send + Sync + 'static,
+    {
+        Self::start_with_timeout(addr, DEFAULT_IO_TIMEOUT, handler)
+    }
+
+    /// Like [`Server::start`], with an explicit per-connection read/write
+    /// timeout (tests use short ones to exercise the silent-client path).
+    pub fn start_with_timeout<F>(addr: &str, io_timeout: Duration, handler: F) -> Result<Server>
     where
         F: Fn(&Request) -> Response + Send + Sync + 'static,
     {
@@ -118,6 +134,11 @@ impl Server {
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((mut sock, _peer)) => {
+                        // A silent or stalled client hits the timeout, the
+                        // parse fails, and its handler thread exits — no
+                        // connection can pin a thread forever.
+                        let _ = sock.set_read_timeout(Some(io_timeout));
+                        let _ = sock.set_write_timeout(Some(io_timeout));
                         let h = handler.clone();
                         std::thread::spawn(move || {
                             let resp = match parse_request(&mut sock) {
@@ -131,6 +152,11 @@ impl Server {
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(std::time::Duration::from_millis(5));
                     }
+                    // Client-aborted handshakes are transient — keep
+                    // accepting instead of killing the server.
+                    Err(ref e)
+                        if e.kind() == std::io::ErrorKind::ConnectionAborted
+                            || e.kind() == std::io::ErrorKind::Interrupted => {}
                     Err(_) => break,
                 }
             }
@@ -214,6 +240,30 @@ mod tests {
         let (status, body) = request(srv.addr, "GET", "/hello", "").unwrap();
         assert_eq!(status, 200);
         assert_eq!(body, "GET /hello");
+    }
+
+    #[test]
+    fn silent_connection_is_dropped_not_pinned() {
+        use std::time::Instant;
+        let srv = Server::start_with_timeout("127.0.0.1:0", Duration::from_millis(120), |_| {
+            Response::text(200, "ok")
+        })
+        .unwrap();
+        // A client that connects and sends nothing…
+        let mut idle = TcpStream::connect(srv.addr).unwrap();
+        idle.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        // …does not block real requests…
+        assert_eq!(request(srv.addr, "GET", "/", "").unwrap().0, 200);
+        // …and its handler gives up at the read timeout: the server sends
+        // its 400 (parse failure) and closes, so the client reaches EOF
+        // well before our own 5 s guard.
+        let t0 = Instant::now();
+        let mut buf = Vec::new();
+        let _ = idle.read_to_end(&mut buf);
+        assert!(
+            t0.elapsed() < Duration::from_secs(4),
+            "idle connection still open after the server timeout"
+        );
     }
 
     #[test]

@@ -68,6 +68,11 @@ pub struct ChunkGeometry {
     stripe: StripeMap,
     pub total_bytes: u64,
     pub num_items: u64,
+    /// Stable registry-assigned dataset ID: the wire address of the peer
+    /// chunk protocol (`GetChunk { dataset_id, chunk, grid_bytes }`) and
+    /// the namespace of the on-disk chunk files, so two datasets sharing
+    /// a grid can never serve each other's chunks.
+    pub dataset_id: u64,
 }
 
 impl ChunkGeometry {
@@ -436,7 +441,17 @@ impl CacheManager {
             stripe: stripe.clone(),
             total_bytes: rec.spec.total_bytes,
             num_items: rec.spec.num_items,
+            dataset_id: rec.id,
         })
+    }
+
+    /// Stable numeric ID of a registered dataset (the peer protocol's
+    /// wire address for it; valid even before placement).
+    pub fn dataset_id(&self, name: &str) -> Result<u64, CacheError> {
+        self.registry
+            .get(name)
+            .map(|r| r.id)
+            .ok_or_else(|| CacheError::Registry(RegistryError::NotFound(name.to_string())))
     }
 
     /// Resolve where item `item` of `name` is served for a reader on
@@ -590,6 +605,11 @@ impl SharedCache {
     /// Chunk-addressing snapshot for a placed dataset (shared lock).
     pub fn geometry(&self, name: &str) -> Result<ChunkGeometry, CacheError> {
         self.inner.read().unwrap().geometry(name)
+    }
+
+    /// Stable numeric dataset ID (shared lock).
+    pub fn dataset_id(&self, name: &str) -> Result<u64, CacheError> {
+        self.inner.read().unwrap().dataset_id(name)
     }
 
     /// Record fill progress (exclusive lock, held only for the registry

@@ -27,6 +27,10 @@ pub enum DatasetState {
 /// One cached (or cacheable) dataset.
 #[derive(Debug, Clone)]
 pub struct DatasetRecord {
+    /// Stable numeric ID assigned at registration (unique per registry,
+    /// never reused) — the wire address of the peer chunk protocol and
+    /// the namespace of the on-disk chunk files.
+    pub id: u64,
     pub spec: DatasetSpec,
     /// Remote source, e.g. "nfs://storage1/exports/imagenet".
     pub url: String,
@@ -114,6 +118,7 @@ impl Registry {
         }
         self.clock += 1;
         let rec = DatasetRecord {
+            id: self.clock,
             url,
             state: DatasetState::Registered,
             stripe: None,
@@ -205,6 +210,22 @@ mod tests {
             r.register(spec(n, *b), format!("nfs://x/{n}")).unwrap();
         }
         r
+    }
+
+    #[test]
+    fn register_assigns_stable_unique_ids() {
+        let mut r = reg_with(&[("a", 10), ("b", 10)]);
+        let (ida, idb) = (r.get("a").unwrap().id, r.get("b").unwrap().id);
+        assert_ne!(ida, idb, "ids are unique");
+        // Ids survive unrelated registry activity (they are stable
+        // addresses, not positions).
+        r.pin("a").unwrap();
+        r.unpin("a").unwrap();
+        r.register(spec("c", 10), "nfs://x/c".into()).unwrap();
+        assert_eq!(r.get("a").unwrap().id, ida);
+        assert_eq!(r.get("b").unwrap().id, idb);
+        assert_ne!(r.get("c").unwrap().id, ida);
+        assert_ne!(r.get("c").unwrap().id, idb);
     }
 
     #[test]

@@ -6,10 +6,12 @@
 pub mod ablations;
 pub mod chunks;
 pub mod paper;
+pub mod peers;
 pub mod realmode;
 
 pub use chunks::{chunk_scaling_run, chunk_size_table};
 pub use paper::*;
+pub use peers::{peer_transport_run, peer_transport_table};
 pub use realmode::{realmode_reader_scaling, reader_scaling_run};
 
 /// Calibration constants derived from the paper's own numbers; the deeper

@@ -41,7 +41,7 @@ fn main() {
 fn print_usage() {
     eprintln!(
         "hoard — distributed data caching for DL training (paper reproduction)\n\n\
-         USAGE:\n  hoard exp <t1|f3|t3|f4|f5|t4|t5|util|readers|chunks|ablations|all> [--json]\n  \
+         USAGE:\n  hoard exp <t1|f3|t3|f4|f5|t4|t5|util|readers|chunks|peers|ablations|all> [--json]\n  \
          hoard serve [--addr 127.0.0.1:7070] [--config FILE]\n  \
          hoard datagen --out DIR [--items N]\n  \
          hoard sim --mode <rem|nvme|hoard> [--epochs N] [--readers N]\n  \
@@ -90,6 +90,7 @@ fn cmd_exp(args: &[String]) -> i32 {
             "util" => emit(experiments::utilization_2x()),
             "readers" => emit(experiments::realmode_reader_scaling(&[1, 2, 4], 256)),
             "chunks" => emit(experiments::chunk_size_table(24)),
+            "peers" => emit(experiments::peer_transport_table(24)),
             "ablations" => {
                 emit(ablations::ablation_stripe_width());
                 emit(ablations::ablation_prefetch());
@@ -101,9 +102,10 @@ fn cmd_exp(args: &[String]) -> i32 {
         true
     };
     if which == "all" {
-        for id in
-            ["t1", "f3", "t3", "f4", "f5", "t4", "t5", "util", "readers", "chunks", "ablations"]
-        {
+        for id in [
+            "t1", "f3", "t3", "f4", "f5", "t4", "t5", "util", "readers", "chunks", "peers",
+            "ablations",
+        ] {
             run(id);
         }
         return 0;

@@ -1,0 +1,336 @@
+//! `PeerClient` — the reader side of the peer data plane: one connection
+//! pool per peer node, speaking the [`super::proto`] frame protocol, with
+//! optional per-link NIC throttling.
+//!
+//!  * **Connection pooling** — requests check a socket out of the target
+//!    peer's pool (dialing lazily when empty) and return it on success, so
+//!    a warm epoch reuses a handful of long-lived connections per link
+//!    instead of one dial per chunk. A stale pooled connection (the server
+//!    idle-closed it) is detected by the failed round-trip and retried
+//!    once on a fresh dial.
+//!  * **NIC throttling** — [`PeerClient::with_nic_bw`] attaches one
+//!    [`SharedTokenBucket`] per peer link; every received payload is
+//!    charged to its link's bucket, modelling the node interconnect the
+//!    same way `RealCluster` models NVMe and NFS bandwidth.
+//!  * **Timeouts** — every socket carries read/write timeouts, so a hung
+//!    peer turns into an error instead of a stuck reader thread.
+
+use std::collections::VecDeque;
+use std::net::{SocketAddr, TcpStream};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::proto::{self, Frame, ITEM_GRID};
+use super::ChunkTransport;
+use crate::cache::ChunkGeometry;
+use crate::netsim::NodeId;
+use crate::posix::realfs::{ReadStats, RealCluster};
+use crate::posix::throttle::SharedTokenBucket;
+
+/// Idle connections kept per peer; extras are dropped on check-in.
+const POOL_CAP: usize = 4;
+
+/// Chunk client with a per-peer connection pool.
+pub struct PeerClient {
+    peers: Vec<SocketAddr>,
+    pool: Vec<Mutex<Vec<TcpStream>>>,
+    /// One bucket per peer link when NIC throttling is on.
+    nic: Option<Vec<SharedTokenBucket>>,
+    io_timeout: Duration,
+}
+
+impl PeerClient {
+    /// Address book: `peers[n]` is node `n`'s [`super::PeerServer`].
+    /// Connections are dialed lazily on first use.
+    pub fn connect(peers: Vec<SocketAddr>) -> Self {
+        let pool = peers.iter().map(|_| Mutex::new(Vec::new())).collect();
+        PeerClient { peers, pool, nic: None, io_timeout: super::server::DEFAULT_IO_TIMEOUT }
+    }
+
+    /// Throttle every peer link to `bytes_per_s` (one token bucket per
+    /// link, shared by all reader threads using this client).
+    pub fn with_nic_bw(mut self, bytes_per_s: f64) -> Self {
+        self.nic = Some(
+            self.peers
+                .iter()
+                .map(|_| SharedTokenBucket::new(bytes_per_s, (bytes_per_s / 8.0).max(1.0)))
+                .collect(),
+        );
+        self
+    }
+
+    /// Socket read/write timeout for subsequently dialed connections.
+    pub fn with_io_timeout(mut self, d: Duration) -> Self {
+        self.io_timeout = d;
+        self
+    }
+
+    pub fn num_peers(&self) -> usize {
+        self.peers.len()
+    }
+
+    fn dial(&self, peer: NodeId) -> Result<TcpStream> {
+        let addr = self
+            .peers
+            .get(peer.0)
+            .copied()
+            .with_context(|| format!("no peer address for node{}", peer.0))?;
+        let sock = TcpStream::connect(addr)
+            .with_context(|| format!("connect peer node{} at {addr}", peer.0))?;
+        let _ = sock.set_nodelay(true);
+        sock.set_read_timeout(Some(self.io_timeout))?;
+        sock.set_write_timeout(Some(self.io_timeout))?;
+        Ok(sock)
+    }
+
+    fn roundtrip(sock: &mut TcpStream, req: &Frame) -> Result<Frame> {
+        proto::write_frame(sock, req)?;
+        proto::read_frame(sock)?.context("peer closed the connection mid-request")
+    }
+
+    fn checkin(&self, peer: NodeId, sock: TcpStream) {
+        let mut pool = self.pool[peer.0].lock().unwrap();
+        if pool.len() < POOL_CAP {
+            pool.push(sock);
+        }
+    }
+
+    /// Request one chunk (`grid_bytes > 0`) or one item file
+    /// (`grid_bytes == 0`, `chunk` = item index) from `peer`.
+    /// `Ok(None)` ⇔ the peer answered `NotResident`.
+    pub fn get_chunk(
+        &self,
+        peer: NodeId,
+        dataset_id: u64,
+        grid_bytes: u64,
+        chunk: u64,
+    ) -> Result<Option<Vec<u8>>> {
+        if peer.0 >= self.peers.len() {
+            bail!("no peer address for node{}", peer.0);
+        }
+        let req = Frame::GetChunk { dataset_id, chunk, grid_bytes };
+        let pooled = self.pool[peer.0].lock().unwrap().pop();
+        let (sock, resp) = match pooled {
+            Some(mut s) => match Self::roundtrip(&mut s, &req) {
+                Ok(r) => (s, r),
+                Err(_) => {
+                    // The pooled connection went stale (server idle-closed
+                    // it under its read timeout): one retry on a fresh dial.
+                    let mut fresh = self.dial(peer)?;
+                    let r = Self::roundtrip(&mut fresh, &req)?;
+                    (fresh, r)
+                }
+            },
+            None => {
+                let mut fresh = self.dial(peer)?;
+                let r = Self::roundtrip(&mut fresh, &req)?;
+                (fresh, r)
+            }
+        };
+        match resp {
+            Frame::ChunkData(bytes) => {
+                if let Some(nic) = &self.nic {
+                    nic[peer.0].acquire(bytes.len() as u64);
+                }
+                self.checkin(peer, sock);
+                Ok(Some(bytes))
+            }
+            Frame::NotResident => {
+                self.checkin(peer, sock);
+                Ok(None)
+            }
+            Frame::Error(msg) => {
+                // Request-level error: a complete frame was read, so the
+                // connection's framing is intact — keep it pooled.
+                self.checkin(peer, sock);
+                bail!("peer node{} error: {msg}", peer.0)
+            }
+            Frame::GetChunk { .. } => bail!("peer node{} answered with a request frame", peer.0),
+        }
+    }
+}
+
+/// Byte-bounded FIFO cache of fetched chunk payloads, keyed by the wire
+/// address `(dataset_id, grid_bytes, chunk)`. Chunk payloads are
+/// immutable content, so hits are always valid; the bound evicts oldest
+/// first and payloads larger than the bound are simply not cached.
+struct ChunkCache {
+    max_bytes: usize,
+    /// (fifo of entries, current byte total).
+    inner: Mutex<(VecDeque<((u64, u64, u64), Arc<Vec<u8>>)>, usize)>,
+}
+
+impl ChunkCache {
+    fn new(max_bytes: usize) -> Self {
+        ChunkCache { max_bytes, inner: Mutex::new((VecDeque::new(), 0)) }
+    }
+
+    fn get(&self, key: &(u64, u64, u64)) -> Option<Arc<Vec<u8>>> {
+        let guard = self.inner.lock().unwrap();
+        guard.0.iter().find(|(k, _)| k == key).map(|(_, v)| v.clone())
+    }
+
+    fn put(&self, key: (u64, u64, u64), value: Arc<Vec<u8>>) {
+        if value.len() > self.max_bytes {
+            return;
+        }
+        let mut guard = self.inner.lock().unwrap();
+        let (fifo, total) = &mut *guard;
+        if fifo.iter().any(|(k, _)| *k == key) {
+            return;
+        }
+        *total += value.len();
+        fifo.push_back((key, value));
+        while *total > self.max_bytes {
+            match fifo.pop_front() {
+                Some((_, old)) => *total -= old.len(),
+                None => break,
+            }
+        }
+    }
+}
+
+/// The TCP implementation of [`ChunkTransport`]: every non-local byte
+/// crosses a socket at chunk granularity — ranged reads fetch the whole
+/// chunk over the wire and slice locally (the wire unit is the chunk, per
+/// the `(dataset, chunk)` addressing), and payloads are accounted as
+/// `peer_net_bytes`/`peer_net_reads`, split from the same-FS disk-peer
+/// counters.
+///
+/// With a chunk grid coarser than items, whole-chunk wire fetches amplify
+/// warm-epoch traffic (every item of a chunk re-transfers the chunk).
+/// [`SocketTransport::with_chunk_cache`] bounds that: recently fetched
+/// chunks are served from a local byte-bounded cache (cache hits move no
+/// wire bytes and are not accounted as `peer_net_*`). Off by default, so
+/// the default transport's wire accounting stays exact.
+pub struct SocketTransport {
+    client: PeerClient,
+    cache: Option<ChunkCache>,
+}
+
+impl SocketTransport {
+    pub fn new(client: PeerClient) -> Self {
+        SocketTransport { client, cache: None }
+    }
+
+    /// Cache up to `max_bytes` of fetched chunk payloads client-side.
+    pub fn with_chunk_cache(mut self, max_bytes: usize) -> Self {
+        self.cache = Some(ChunkCache::new(max_bytes));
+        self
+    }
+
+    pub fn client(&self) -> &PeerClient {
+        &self.client
+    }
+
+    fn account(stats: &mut ReadStats, bytes: &[u8]) {
+        stats.peer_net_bytes += bytes.len() as u64;
+        stats.peer_net_reads += 1;
+    }
+}
+
+impl ChunkTransport for SocketTransport {
+    fn name(&self) -> &'static str {
+        "socket"
+    }
+
+    fn fetch_chunk(
+        &self,
+        _cluster: &RealCluster,
+        geom: &ChunkGeometry,
+        c: u64,
+        _reader: NodeId,
+        stats: &mut ReadStats,
+    ) -> Result<Option<Vec<u8>>> {
+        let key = (geom.dataset_id, geom.chunk_bytes(), c);
+        if let Some(cache) = &self.cache {
+            if let Some(hit) = cache.get(&key) {
+                // No wire traffic: not accounted as peer_net_*.
+                return Ok(Some(hit.as_ref().clone()));
+            }
+        }
+        let home = geom.node_of_chunk(c);
+        match self.client.get_chunk(home, geom.dataset_id, geom.chunk_bytes(), c)? {
+            Some(bytes) => {
+                Self::account(stats, &bytes);
+                if let Some(cache) = &self.cache {
+                    cache.put(key, Arc::new(bytes.clone()));
+                }
+                Ok(Some(bytes))
+            }
+            None => Ok(None),
+        }
+    }
+
+    fn fetch_item(
+        &self,
+        _cluster: &RealCluster,
+        dataset_id: u64,
+        _rel: &Path,
+        item: u64,
+        node: NodeId,
+        _reader: NodeId,
+        stats: &mut ReadStats,
+    ) -> Result<Option<Vec<u8>>> {
+        match self.client.get_chunk(node, dataset_id, ITEM_GRID, item)? {
+            Some(bytes) => {
+                Self::account(stats, &bytes);
+                Ok(Some(bytes))
+            }
+            None => Ok(None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posix::realfs::chunk_rel_path;
+    use crate::peer::PeerServer;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("hoard-peer-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn get_chunk_roundtrip_pool_reuse_and_not_resident() {
+        let dir = tmpdir("client");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(5000).collect();
+        let rel = chunk_rel_path(7, 100, 3);
+        let path = dir.join(&rel);
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &payload).unwrap();
+
+        let mut srv = PeerServer::start("127.0.0.1:0", dir.clone()).unwrap();
+        let client = PeerClient::connect(vec![srv.addr]);
+        assert_eq!(client.get_chunk(NodeId(0), 7, 100, 3).unwrap(), Some(payload.clone()));
+        // Second request reuses the pooled connection.
+        assert_eq!(client.get_chunk(NodeId(0), 7, 100, 3).unwrap(), Some(payload));
+        // Missing chunk ⇒ NotResident ⇒ None (not an error).
+        assert_eq!(client.get_chunk(NodeId(0), 7, 100, 4).unwrap(), None);
+        // Item requests without an export are request-level errors.
+        assert!(client.get_chunk(NodeId(0), 7, 0, 0).is_err());
+        // Registering an export makes item requests servable.
+        srv.register_item_paths(7, |i| PathBuf::from(format!("items/i{i}.bin")));
+        std::fs::create_dir_all(dir.join("items")).unwrap();
+        std::fs::write(dir.join("items/i5.bin"), b"hello").unwrap();
+        assert_eq!(client.get_chunk(NodeId(0), 7, 0, 5).unwrap(), Some(b"hello".to_vec()));
+        srv.stop();
+        // A stopped server is a hard error, not a silent None.
+        assert!(client.get_chunk(NodeId(0), 7, 100, 3).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unknown_peer_is_an_error() {
+        let client = PeerClient::connect(vec![]);
+        assert!(client.get_chunk(NodeId(0), 1, 100, 0).is_err());
+    }
+}

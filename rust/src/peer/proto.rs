@@ -1,0 +1,254 @@
+//! Wire protocol for the peer data plane: a length-prefixed binary frame
+//! codec over TCP (std::net only, like `api::http`).
+//!
+//! Frame layout (little-endian):
+//!
+//! ```text
+//! [u32 body_len][u8 tag][payload…]          body_len = 1 + payload length
+//! ```
+//!
+//! | tag | frame         | payload                                        |
+//! |-----|---------------|------------------------------------------------|
+//! | 1   | `GetChunk`    | `u64 dataset_id`, `u64 chunk`, `u64 grid_bytes`|
+//! | 2   | `ChunkData`   | the raw chunk (or item-file) bytes             |
+//! | 3   | `NotResident` | empty                                          |
+//! | 4   | `Error`       | UTF-8 message                                  |
+//!
+//! `GetChunk { grid_bytes: 0 }` ([`ITEM_GRID`]) addresses a whole *item
+//! file* instead of a stripe chunk — `chunk` is then the item index and
+//! the server resolves the path through a registered item export. Any
+//! `grid_bytes > 0` addresses chunk `chunk` of that grid, exactly the
+//! `(dataset, chunk)` IDs the residency bitmap is keyed by.
+//!
+//! Decoding is hardened: a length prefix above [`MAX_FRAME`] is rejected
+//! *before* any allocation, truncated frames (header or body) error out,
+//! and unknown tags / malformed payloads never panic.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+/// Hard cap on one frame's body. Chunk payloads are bounded by the stripe
+/// grid (64 MiB default, and the cache clamps grids to the dataset size),
+/// so anything past this is a corrupt or hostile length prefix — reject it
+/// before allocating.
+pub const MAX_FRAME: usize = 256 << 20;
+
+/// `grid_bytes` sentinel addressing whole item files (whole-file striping
+/// mode); `chunk` is then the item index.
+pub const ITEM_GRID: u64 = 0;
+
+const TAG_GET_CHUNK: u8 = 1;
+const TAG_CHUNK_DATA: u8 = 2;
+const TAG_NOT_RESIDENT: u8 = 3;
+const TAG_ERROR: u8 = 4;
+
+/// One protocol frame. Requests are always `GetChunk`; the other three are
+/// responses.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Frame {
+    /// "Send me chunk `chunk` of dataset `dataset_id` under the
+    /// `grid_bytes` chunk grid" (or item `chunk` when `grid_bytes` is
+    /// [`ITEM_GRID`]).
+    GetChunk { dataset_id: u64, chunk: u64, grid_bytes: u64 },
+    /// The full requested payload.
+    ChunkData(Vec<u8>),
+    /// The serving node does not hold that chunk — the caller falls back
+    /// to a remote fill.
+    NotResident,
+    /// Request-level failure (bad request, local I/O error).
+    Error(String),
+}
+
+/// Encode a frame (header + body).
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let mut body = Vec::new();
+    match frame {
+        Frame::GetChunk { dataset_id, chunk, grid_bytes } => {
+            body.push(TAG_GET_CHUNK);
+            body.extend_from_slice(&dataset_id.to_le_bytes());
+            body.extend_from_slice(&chunk.to_le_bytes());
+            body.extend_from_slice(&grid_bytes.to_le_bytes());
+        }
+        Frame::ChunkData(bytes) => {
+            body.push(TAG_CHUNK_DATA);
+            body.extend_from_slice(bytes);
+        }
+        Frame::NotResident => body.push(TAG_NOT_RESIDENT),
+        Frame::Error(msg) => {
+            body.push(TAG_ERROR);
+            body.extend_from_slice(msg.as_bytes());
+        }
+    }
+    assert!(body.len() <= MAX_FRAME, "frame body {} exceeds MAX_FRAME", body.len());
+    let mut out = Vec::with_capacity(4 + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Write one frame and flush it.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<()> {
+    w.write_all(&encode(frame)).context("writing frame")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Decode a frame body (tag + payload, the bytes after the length prefix).
+pub fn decode(body: &[u8]) -> Result<Frame> {
+    let (&tag, payload) = body.split_first().context("empty frame body")?;
+    match tag {
+        TAG_GET_CHUNK => {
+            if payload.len() != 24 {
+                bail!("GetChunk payload must be 24 bytes, got {}", payload.len());
+            }
+            let word = |i: usize| u64::from_le_bytes(payload[i..i + 8].try_into().unwrap());
+            Ok(Frame::GetChunk { dataset_id: word(0), chunk: word(8), grid_bytes: word(16) })
+        }
+        TAG_CHUNK_DATA => Ok(Frame::ChunkData(payload.to_vec())),
+        TAG_NOT_RESIDENT => {
+            if !payload.is_empty() {
+                bail!("NotResident carries no payload, got {} bytes", payload.len());
+            }
+            Ok(Frame::NotResident)
+        }
+        TAG_ERROR => Ok(Frame::Error(String::from_utf8_lossy(payload).into_owned())),
+        t => bail!("unknown frame tag {t}"),
+    }
+}
+
+/// Read one frame. `Ok(None)` ⇔ the stream closed cleanly before any byte
+/// of a new frame (a client hanging up between requests). Everything else
+/// partial — a truncated header, a truncated body, a read timeout — is an
+/// error: framing sync is lost, so the connection must be dropped.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>> {
+    let mut hdr = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut hdr[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                bail!("truncated frame header ({got}/4 bytes)");
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading frame header"),
+        }
+    }
+    let len = u32::from_le_bytes(hdr) as usize;
+    if len == 0 {
+        bail!("zero-length frame body");
+    }
+    if len > MAX_FRAME {
+        // Reject before the allocation: a corrupt length prefix must never
+        // turn into a multi-GiB Vec.
+        bail!("frame length {len} exceeds cap {MAX_FRAME}");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("truncated frame body")?;
+    decode(&body).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop::forall, Rng};
+
+    fn arbitrary_frame(rng: &mut Rng) -> Frame {
+        match rng.gen_range(4) {
+            0 => Frame::GetChunk {
+                dataset_id: rng.next_u64(),
+                chunk: rng.next_u64(),
+                grid_bytes: rng.next_u64(),
+            },
+            1 => {
+                let n = rng.gen_range(2048) as usize;
+                let mut bytes = vec![0u8; n];
+                for b in &mut bytes {
+                    *b = rng.next_u64() as u8;
+                }
+                Frame::ChunkData(bytes)
+            }
+            2 => Frame::NotResident,
+            _ => {
+                let n = rng.gen_range(64);
+                let msg: String =
+                    (0..n).map(|_| (b'a' + (rng.gen_range(26) as u8)) as char).collect();
+                Frame::Error(msg)
+            }
+        }
+    }
+
+    #[test]
+    fn prop_encode_decode_roundtrip() {
+        forall(200, arbitrary_frame, |frame| {
+            let buf = encode(frame);
+            match read_frame(&mut buf.as_slice()) {
+                Ok(Some(back)) if back == *frame => Ok(()),
+                Ok(other) => Err(format!("decoded {other:?} != {frame:?}")),
+                Err(e) => Err(format!("decode failed: {e:#}")),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_truncated_frames_rejected_never_panic() {
+        forall(100, arbitrary_frame, |frame| {
+            let buf = encode(frame);
+            for k in 0..buf.len() {
+                match read_frame(&mut &buf[..k]) {
+                    Ok(None) if k == 0 => {}
+                    Ok(None) => return Err(format!("prefix {k} read as clean EOF")),
+                    Ok(Some(f)) => return Err(format!("prefix {k} decoded as {f:?}")),
+                    Err(_) if k > 0 => {}
+                    Err(e) => return Err(format!("empty stream must be clean EOF: {e:#}")),
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn absurd_length_prefix_rejected_before_allocation() {
+        // u32::MAX and anything past MAX_FRAME must error out without a
+        // matching allocation (the cap check precedes the Vec).
+        for len in [u32::MAX, (MAX_FRAME as u32) + 1] {
+            let mut buf = len.to_le_bytes().to_vec();
+            buf.push(TAG_CHUNK_DATA);
+            let err = read_frame(&mut buf.as_slice()).unwrap_err();
+            assert!(format!("{err:#}").contains("exceeds cap"), "{err:#}");
+        }
+    }
+
+    #[test]
+    fn zero_length_and_unknown_tag_rejected() {
+        let buf = 0u32.to_le_bytes().to_vec();
+        assert!(read_frame(&mut buf.as_slice()).is_err(), "zero-length body");
+        let mut buf = 1u32.to_le_bytes().to_vec();
+        buf.push(99);
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown frame tag"), "{err:#}");
+    }
+
+    #[test]
+    fn get_chunk_payload_size_enforced() {
+        let mut body = vec![TAG_GET_CHUNK];
+        body.extend_from_slice(&[0u8; 23]); // one byte short
+        let err = decode(&body).unwrap_err();
+        assert!(format!("{err:#}").contains("24 bytes"), "{err:#}");
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        assert_eq!(read_frame(&mut &[][..]).unwrap(), None);
+    }
+
+    #[test]
+    fn empty_chunk_data_roundtrips() {
+        let f = Frame::ChunkData(vec![]);
+        let buf = encode(&f);
+        assert_eq!(read_frame(&mut buf.as_slice()).unwrap(), Some(f));
+    }
+}

@@ -1,0 +1,218 @@
+//! `PeerServer` — the per-node user-level chunk server (FanStore-style):
+//! one threaded TCP listener per cache node serving `GetChunk` requests
+//! straight out of that node's cache directory.
+//!
+//! Concurrency and robustness model (mirrors `api::http::Server`):
+//!  * non-blocking accept loop on its own thread, one handler thread per
+//!    connection, connections are persistent (many frames per socket);
+//!  * read/write timeouts on every accepted socket — a client that
+//!    connects and sends nothing is dropped after `io_timeout` instead of
+//!    pinning its handler thread forever (the same hardening applied to
+//!    the HTTP API server);
+//!  * graceful shutdown: [`PeerServer::stop`] flips the stop flag, shuts
+//!    down every live connection and joins the accept thread, so handler
+//!    threads unwind promptly;
+//!  * malformed frames (lost sync, oversized length prefix) close the
+//!    connection — the codec guarantees no panic and no unbounded
+//!    allocation on hostile input.
+//!
+//! Disk modelling: an optional [`SharedTokenBucket`] (the node's NVMe
+//! bucket) is charged for every payload served, so loopback peer serving
+//! consumes the same simulated node bandwidth a local read would.
+
+use std::collections::HashMap;
+use std::fs;
+use std::io;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::proto::{self, Frame};
+use crate::posix::realfs::chunk_rel_path;
+use crate::posix::throttle::SharedTokenBucket;
+
+/// Default socket read/write timeout: long enough for any real request,
+/// short enough that silent clients cannot pin handler threads.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Resolver from item index to on-disk relative path, registered per
+/// dataset for whole-file (item-granular) serving.
+type ItemPathFn = Arc<dyn Fn(u64) -> PathBuf + Send + Sync>;
+
+/// A running per-node chunk server.
+pub struct PeerServer {
+    /// Bound address (bind to port 0 and read this back for ephemeral
+    /// port discovery).
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+    /// Live connections only: each handler prunes its own entry on exit,
+    /// so churn never accumulates file descriptors.
+    conns: Arc<Mutex<Vec<(u64, TcpStream)>>>,
+    exports: Arc<RwLock<HashMap<u64, ItemPathFn>>>,
+}
+
+impl PeerServer {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve `node_dir` with default
+    /// timeouts and no disk throttle.
+    pub fn start(addr: &str, node_dir: impl Into<PathBuf>) -> Result<PeerServer> {
+        Self::start_with(addr, node_dir, None, DEFAULT_IO_TIMEOUT)
+    }
+
+    /// Full-control constructor: `disk_bucket` is charged per served
+    /// payload (pass the node's NVMe bucket so peer serving and local
+    /// reads share one bandwidth model), `io_timeout` bounds how long a
+    /// silent or stuck connection may hold a handler thread.
+    pub fn start_with(
+        addr: &str,
+        node_dir: impl Into<PathBuf>,
+        disk_bucket: Option<SharedTokenBucket>,
+        io_timeout: Duration,
+    ) -> Result<PeerServer> {
+        let node_dir = node_dir.into();
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<(u64, TcpStream)>>> = Arc::new(Mutex::new(Vec::new()));
+        let exports: Arc<RwLock<HashMap<u64, ItemPathFn>>> =
+            Arc::new(RwLock::new(HashMap::new()));
+        let (stop2, conns2, exports2) = (stop.clone(), conns.clone(), exports.clone());
+        let join = std::thread::spawn(move || {
+            let mut next_id = 0u64;
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((sock, _peer)) => {
+                        let _ = sock.set_read_timeout(Some(io_timeout));
+                        let _ = sock.set_write_timeout(Some(io_timeout));
+                        let _ = sock.set_nodelay(true);
+                        let id = next_id;
+                        next_id += 1;
+                        if let Ok(clone) = sock.try_clone() {
+                            conns2.lock().unwrap().push((id, clone));
+                        }
+                        let node_dir = node_dir.clone();
+                        let exports = exports2.clone();
+                        let bucket = disk_bucket.clone();
+                        let stop = stop2.clone();
+                        let conns = conns2.clone();
+                        std::thread::spawn(move || {
+                            let mut sock = sock;
+                            serve_conn(&mut sock, &node_dir, &exports, bucket.as_ref(), &stop);
+                            let _ = sock.shutdown(Shutdown::Both);
+                            // Prune this connection's registry entry so
+                            // churn never accumulates fds.
+                            conns.lock().unwrap().retain(|(i, _)| *i != id);
+                        });
+                    }
+                    Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    // A handshake aborted by the client (RST before
+                    // accept) is that connection's problem, not the
+                    // listener's — keep accepting.
+                    Err(ref e)
+                        if e.kind() == io::ErrorKind::ConnectionAborted
+                            || e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(PeerServer { addr: local, stop, join: Some(join), conns, exports })
+    }
+
+    /// Register an item-path resolver for `dataset_id`, enabling
+    /// whole-file requests (`grid_bytes == 0`) against this node. Chunk
+    /// requests need no registration — their paths derive from the
+    /// `(dataset_id, grid_bytes, chunk)` triple alone.
+    pub fn register_item_paths(
+        &self,
+        dataset_id: u64,
+        path_of: impl Fn(u64) -> PathBuf + Send + Sync + 'static,
+    ) {
+        self.exports.write().unwrap().insert(dataset_id, Arc::new(path_of));
+    }
+
+    /// Graceful shutdown: stop accepting, then sever live connections.
+    /// The accept thread is joined *before* the drain, so no connection
+    /// accepted during the race window can escape it. Idempotent (also
+    /// runs on drop).
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        for (_, c) in self.conns.lock().unwrap().drain(..) {
+            // Unblocks the handler's in-flight read immediately (the
+            // clone shares the underlying socket), so handlers exit
+            // promptly instead of sitting out their io_timeout.
+            let _ = c.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+impl Drop for PeerServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// One connection's serve loop: frames in, frames out, until EOF, timeout,
+/// lost framing sync, or server shutdown.
+fn serve_conn(
+    sock: &mut TcpStream,
+    node_dir: &Path,
+    exports: &RwLock<HashMap<u64, ItemPathFn>>,
+    bucket: Option<&SharedTokenBucket>,
+    stop: &AtomicBool,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        let frame = match proto::read_frame(sock) {
+            Ok(Some(f)) => f,
+            // Clean hang-up, idle timeout (the silent-client hardening),
+            // or a malformed frame: drop the connection. Clients treat a
+            // dead pooled connection as stale and redial.
+            Ok(None) | Err(_) => return,
+        };
+        let resp = match frame {
+            Frame::GetChunk { dataset_id, chunk, grid_bytes } => {
+                let rel = if grid_bytes > 0 {
+                    Some(chunk_rel_path(dataset_id, grid_bytes, chunk))
+                } else {
+                    exports.read().unwrap().get(&dataset_id).map(|f| f(chunk))
+                };
+                match rel {
+                    None => Frame::Error(format!(
+                        "dataset {dataset_id} has no item export on this node"
+                    )),
+                    Some(rel) => match fs::read(node_dir.join(&rel)) {
+                        // A payload the codec cannot frame is a request
+                        // error, never a handler panic (encode asserts).
+                        Ok(bytes) if bytes.len() >= proto::MAX_FRAME => Frame::Error(format!(
+                            "payload {} bytes exceeds the {} byte frame cap",
+                            bytes.len(),
+                            proto::MAX_FRAME
+                        )),
+                        Ok(bytes) => {
+                            if let Some(b) = bucket {
+                                b.acquire(bytes.len() as u64);
+                            }
+                            Frame::ChunkData(bytes)
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::NotFound => Frame::NotResident,
+                        Err(e) => Frame::Error(format!("read {}: {e}", rel.display())),
+                    },
+                }
+            }
+            // Only GetChunk is a valid request frame.
+            _ => Frame::Error("expected a GetChunk request".into()),
+        };
+        if proto::write_frame(sock, &resp).is_err() {
+            return;
+        }
+    }
+}

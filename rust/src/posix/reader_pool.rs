@@ -26,6 +26,16 @@
 //! Stats are sharded: every reader (and the prefetcher) accumulates its
 //! own [`ReadStats`] and the pool merges them on epoch end — no shared
 //! stats lock on the hot path.
+//!
+//! Every **non-local** byte moves through a
+//! [`ChunkTransport`](crate::peer::ChunkTransport)
+//! ([`ReaderPool::with_transport`]): the default
+//! [`DirTransport`](crate::peer::DirTransport) reads the peer's directory
+//! on the same filesystem (bit-identical to the pre-transport code), while
+//! [`SocketTransport`](crate::peer::SocketTransport) crosses a real TCP
+//! data plane at chunk granularity. A peer's `NotResident` answer falls
+//! back to a remote fill that re-records residency. The prefetcher is
+//! transport-free by design: it only moves remote→home bytes.
 
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -35,6 +45,7 @@ use anyhow::{anyhow, Result};
 use super::realfs::{chunk_rel_path, fetch_chunk_payload, ReadStats, RealCluster};
 use crate::cache::{ChunkGeometry, ReadLocation, SharedCache};
 use crate::netsim::NodeId;
+use crate::peer::{ChunkTransport, DirTransport};
 use crate::util::Rng;
 use crate::workload::datagen::DataGenConfig;
 
@@ -139,14 +150,50 @@ impl EpochReport {
     }
 }
 
-/// Read item `i` through the concurrent Hoard path: resolve the home node
-/// via the shared cache, consult the fill table, and either serve from the
-/// home node's directory or own the remote fill. `stats` is the caller's
-/// private shard.
+/// Read item `i` through the concurrent Hoard path with the default
+/// same-FS [`DirTransport`] (today's behaviour, unchanged call shape).
+/// Convenience path: resolves the dataset ID per read; [`ReaderPool`]
+/// hoists that lookup out of the loop (one per reader pass).
+#[allow(clippy::too_many_arguments)]
 pub fn read_item_concurrent(
     cluster: &RealCluster,
     cache: &SharedCache,
     fill: &FillTable,
+    dataset: &str,
+    cfg: &DataGenConfig,
+    i: u64,
+    reader: NodeId,
+    stats: &mut ReadStats,
+) -> Result<Vec<u8>> {
+    let dataset_id = cache.dataset_id(dataset)?;
+    read_item_concurrent_via(
+        cluster,
+        cache,
+        fill,
+        &DirTransport,
+        dataset_id,
+        dataset,
+        cfg,
+        i,
+        reader,
+        stats,
+    )
+}
+
+/// Read item `i` through the concurrent Hoard path: resolve the home node
+/// via the shared cache, consult the fill table, and either serve from the
+/// home node (local disk, or `transport` for non-local homes) or own the
+/// remote fill. A peer's `NotResident` answer (or a vanished local file)
+/// falls back to a remote fill that re-records residency. `stats` is the
+/// caller's private shard. `dataset_id` is `dataset`'s stable registry ID
+/// (the wire address) — callers resolve it once, not per read.
+#[allow(clippy::too_many_arguments)]
+pub fn read_item_concurrent_via(
+    cluster: &RealCluster,
+    cache: &SharedCache,
+    fill: &FillTable,
+    transport: &dyn ChunkTransport,
+    dataset_id: u64,
     dataset: &str,
     cfg: &DataGenConfig,
     i: u64,
@@ -159,23 +206,48 @@ pub fn read_item_concurrent(
         ReadLocation::Peer(p) => p,
         ReadLocation::RemoteFill { fill_node } => fill_node,
     };
+    // Serve from the home node: local homes read their own disk, non-local
+    // homes go through the transport (every non-local byte does).
+    let serve = |stats: &mut ReadStats| -> Result<Option<Vec<u8>>> {
+        if home == reader {
+            if cluster.node_has(home, &rel) {
+                return cluster.read_node_sharded(home, &rel, reader, stats).map(Some);
+            }
+            return Ok(None);
+        }
+        transport.fetch_item(cluster, dataset_id, &rel, i, home, reader, stats)
+    };
     match fill.claim_or_wait(i) {
-        Claim::Resident => cluster.read_node_sharded(home, &rel, reader, stats),
+        Claim::Resident => match serve(stats)? {
+            Some(data) => Ok(data),
+            // Resident per the ledger but gone at the source (peer lost
+            // it): re-fill from remote and record residency again.
+            None => fill_from_remote(cluster, cache, dataset, cfg, i, home, stats),
+        },
         Claim::Filler => {
             // File presence is authoritative (items may predate this pool,
             // e.g. a warm run over existing cache dirs): adopt it in both
             // the fill table and the residency bitmap (idempotent).
-            if cluster.node_has(home, &rel) {
-                fill.mark_resident(i);
-                cache.mark_item(dataset, i)?;
-                return cluster.read_node_sharded(home, &rel, reader, stats);
-            }
-            match fill_from_remote(cluster, cache, dataset, cfg, i, home, stats) {
-                Ok(data) => {
-                    fill.complete(i);
+            match serve(stats) {
+                Ok(Some(data)) => {
+                    fill.mark_resident(i);
+                    cache.mark_item(dataset, i)?;
                     Ok(data)
                 }
+                Ok(None) => match fill_from_remote(cluster, cache, dataset, cfg, i, home, stats)
+                {
+                    Ok(data) => {
+                        fill.complete(i);
+                        Ok(data)
+                    }
+                    Err(e) => {
+                        fill.abort(i);
+                        Err(e)
+                    }
+                },
                 Err(e) => {
+                    // The adoption probe failed mid-claim: roll the claim
+                    // back so another reader can retry, never deadlock.
                     fill.abort(i);
                     Err(e)
                 }
@@ -242,11 +314,8 @@ fn fill_from_remote(
     Ok(data)
 }
 
-/// Read item `i` through the chunk-granular path: every chunk the item
-/// overlaps is resolved independently against the per-chunk [`FillTable`],
-/// so racing readers serialize per *chunk*, not per file, and a partial
-/// hit serves its resident segments from cache while only the missing
-/// chunks go to remote.
+/// Read item `i` through the chunk-granular path with the default same-FS
+/// [`DirTransport`] (today's behaviour, unchanged call shape).
 #[allow(clippy::too_many_arguments)]
 pub fn read_item_chunked(
     cluster: &RealCluster,
@@ -259,40 +328,99 @@ pub fn read_item_chunked(
     reader: NodeId,
     stats: &mut ReadStats,
 ) -> Result<Vec<u8>> {
+    read_item_chunked_via(
+        cluster,
+        cache,
+        fill,
+        &DirTransport,
+        dataset,
+        cfg,
+        geom,
+        i,
+        reader,
+        stats,
+    )
+}
+
+/// Read item `i` through the chunk-granular path: every chunk the item
+/// overlaps is resolved independently against the per-chunk [`FillTable`],
+/// so racing readers serialize per *chunk*, not per file, and a partial
+/// hit serves its resident segments from cache while only the missing
+/// chunks go to remote. Local chunks come off this node's disk; every
+/// non-local byte moves through `transport`, and a peer's `NotResident`
+/// answer falls back to a remote fill that records residency.
+#[allow(clippy::too_many_arguments)]
+pub fn read_item_chunked_via(
+    cluster: &RealCluster,
+    cache: &SharedCache,
+    fill: &FillTable,
+    transport: &dyn ChunkTransport,
+    dataset: &str,
+    cfg: &DataGenConfig,
+    geom: &ChunkGeometry,
+    i: u64,
+    reader: NodeId,
+    stats: &mut ReadStats,
+) -> Result<Vec<u8>> {
     let (s, e) = geom.item_range(i);
     let mut out = Vec::with_capacity((e - s) as usize);
     for c in geom.chunks_of_item(i) {
-        let crel = chunk_rel_path(geom.chunk_bytes(), c);
+        let crel = chunk_rel_path(geom.dataset_id, geom.chunk_bytes(), c);
         let home = geom.node_of_chunk(c);
         let (cs, ce) = geom.chunk_range(c);
         let lo = s.max(cs);
         let hi = e.min(ce);
         let (off, len) = (lo - cs, hi - lo);
-        match fill.claim_or_wait(c) {
-            Claim::Resident => out.extend_from_slice(
-                &cluster.read_node_range_sharded(home, &crel, off, len, reader, stats)?,
-            ),
-            Claim::Filler => {
+        // One segment read off the chunk's home: local disk, or the
+        // transport for non-local homes. `None` ⇔ the home does not hold
+        // the chunk (peer said `NotResident`, or no local file).
+        let serve = |stats: &mut ReadStats| -> Result<Option<Vec<u8>>> {
+            if home == reader {
                 if cluster.node_has(home, &crel) {
+                    return cluster
+                        .read_node_range_sharded(home, &crel, off, len, reader, stats)
+                        .map(Some);
+                }
+                return Ok(None);
+            }
+            transport.fetch_chunk_range(cluster, geom, c, off, len, reader, stats)
+        };
+        match fill.claim_or_wait(c) {
+            Claim::Resident => match serve(stats)? {
+                Some(bytes) => out.extend_from_slice(&bytes),
+                None => {
+                    // Resident per the ledger but gone at the source:
+                    // re-fill from remote and re-record residency.
+                    let buf = fetch_chunk_concurrent(cluster, cache, dataset, cfg, geom, c, stats)?;
+                    out.extend_from_slice(&buf[off as usize..(off + len) as usize]);
+                }
+            },
+            Claim::Filler => match serve(stats) {
+                Ok(Some(bytes)) => {
                     // Chunk predates this pool (warm run): adopt it.
                     fill.mark_resident(c);
                     cache.mark_chunks(dataset, &[c])?;
-                    out.extend_from_slice(
-                        &cluster.read_node_range_sharded(home, &crel, off, len, reader, stats)?,
-                    );
-                    continue;
+                    out.extend_from_slice(&bytes);
                 }
-                match fetch_chunk_concurrent(cluster, cache, dataset, cfg, geom, c, stats) {
-                    Ok(buf) => {
-                        fill.complete(c);
-                        out.extend_from_slice(&buf[off as usize..(off + len) as usize]);
-                    }
-                    Err(err) => {
-                        fill.abort(c);
-                        return Err(err);
+                Ok(None) => {
+                    match fetch_chunk_concurrent(cluster, cache, dataset, cfg, geom, c, stats) {
+                        Ok(buf) => {
+                            fill.complete(c);
+                            out.extend_from_slice(&buf[off as usize..(off + len) as usize]);
+                        }
+                        Err(err) => {
+                            fill.abort(c);
+                            return Err(err);
+                        }
                     }
                 }
-            }
+                Err(err) => {
+                    // Adoption probe failed mid-claim: roll the claim back
+                    // so another reader can retry, never deadlock.
+                    fill.abort(c);
+                    return Err(err);
+                }
+            },
         }
     }
     Ok(out)
@@ -330,7 +458,7 @@ fn prefetch_chunks(
             continue;
         }
         let home = geom.node_of_chunk(c);
-        if cluster.node_has(home, &chunk_rel_path(geom.chunk_bytes(), c)) {
+        if cluster.node_has(home, &chunk_rel_path(geom.dataset_id, geom.chunk_bytes(), c)) {
             fill.mark_resident(c);
             cache.mark_chunks(dataset, &[c])?;
             continue;
@@ -368,6 +496,9 @@ pub struct ReaderPool<'a> {
     fill: FillTable,
     prefetch: bool,
     mode: PoolMode,
+    /// How reader threads fetch non-local bytes (defaults to the same-FS
+    /// [`DirTransport`]; swap in a `SocketTransport` for real peers).
+    transport: Box<dyn ChunkTransport>,
 }
 
 impl<'a> ReaderPool<'a> {
@@ -389,6 +520,7 @@ impl<'a> ReaderPool<'a> {
             fill,
             prefetch: true,
             mode: PoolMode::WholeFile,
+            transport: Box::new(DirTransport),
         }
     }
 
@@ -417,6 +549,7 @@ impl<'a> ReaderPool<'a> {
             fill,
             prefetch: true,
             mode: PoolMode::Chunked(geom),
+            transport: Box::new(DirTransport),
         })
     }
 
@@ -424,6 +557,19 @@ impl<'a> ReaderPool<'a> {
     pub fn with_prefetch(mut self, on: bool) -> Self {
         self.prefetch = on;
         self
+    }
+
+    /// Route every non-local read through `transport` (shared by all
+    /// reader threads). The prefetcher is unaffected: it only moves
+    /// remote→home bytes, never peer→reader bytes.
+    pub fn with_transport(mut self, transport: Box<dyn ChunkTransport>) -> Self {
+        self.transport = transport;
+        self
+    }
+
+    /// Tag of the active transport ("dir" / "socket").
+    pub fn transport_name(&self) -> &'static str {
+        self.transport.name()
     }
 
     pub fn readers(&self) -> usize {
@@ -492,13 +638,18 @@ impl<'a> ReaderPool<'a> {
     fn reader_pass(&self, r: usize, items: &[u64]) -> Result<ReadStats> {
         let reader = self.reader_node(r);
         let mut stats = ReadStats::default();
-        for &i in items {
-            match &self.mode {
-                PoolMode::WholeFile => {
-                    read_item_concurrent(
+        match &self.mode {
+            PoolMode::WholeFile => {
+                // Resolved once per pass, not per read: the ID is fixed
+                // for the pool's lifetime.
+                let dataset_id = self.cache.dataset_id(&self.dataset)?;
+                for &i in items {
+                    read_item_concurrent_via(
                         self.cluster,
                         &self.cache,
                         &self.fill,
+                        self.transport.as_ref(),
+                        dataset_id,
                         &self.dataset,
                         &self.cfg,
                         i,
@@ -506,11 +657,14 @@ impl<'a> ReaderPool<'a> {
                         &mut stats,
                     )?;
                 }
-                PoolMode::Chunked(geom) => {
-                    read_item_chunked(
+            }
+            PoolMode::Chunked(geom) => {
+                for &i in items {
+                    read_item_chunked_via(
                         self.cluster,
                         &self.cache,
                         &self.fill,
+                        self.transport.as_ref(),
                         &self.dataset,
                         &self.cfg,
                         geom,

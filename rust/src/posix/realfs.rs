@@ -25,7 +25,13 @@
 //!  * stats are sharded: threaded readers record into their own
 //!    [`ReadStats`] and merge on epoch end ([`RealCluster::merge_stats`]),
 //!    while the single-threaded mounts keep the old behaviour of recording
-//!    into the cluster-wide accumulator per read.
+//!    into the cluster-wide accumulator per read;
+//!  * non-local chunk segments move through a
+//!    [`ChunkTransport`](crate::peer::ChunkTransport)
+//!    ([`ChunkedMount::with_transport`]); the default
+//!    [`DirTransport`](crate::peer::DirTransport) is the same-FS peer-dir
+//!    read, the degenerate case. ([`HoardMount`] is the single-threaded
+//!    whole-file baseline and stays dir-based by construction.)
 
 use std::fs;
 use std::io::{Read as _, Seek as _, SeekFrom};
@@ -39,17 +45,22 @@ use anyhow::{Context, Result};
 use super::throttle::SharedTokenBucket;
 use crate::cache::{CacheManager, ChunkGeometry, ReadLocation};
 use crate::netsim::NodeId;
+use crate::peer::{ChunkTransport, DirTransport};
 use crate::remote::{RemoteReaderGauge, RemoteStore};
 use crate::workload::datagen::DataGenConfig;
 
-/// On-node path of chunk `c`'s payload under the `chunk_bytes` grid.
-/// Chunk-granular striping stores one file per chunk, so presence-on-disk
-/// stays authoritative per chunk exactly like per-item files are in
-/// whole-file mode. The grid's chunk size is part of the path: a dataset
-/// re-placed with a different `chunk_bytes` misses cleanly instead of
-/// adopting stale chunk files whose byte ranges no longer line up.
-pub fn chunk_rel_path(chunk_bytes: u64, c: u64) -> PathBuf {
-    PathBuf::from(format!("chunks/b{chunk_bytes}/c{c:07}.bin"))
+/// On-node path of chunk `c`'s payload for dataset `dataset_id` under the
+/// `chunk_bytes` grid. Chunk-granular striping stores one file per chunk,
+/// so presence-on-disk stays authoritative per chunk exactly like per-item
+/// files are in whole-file mode. The grid's chunk size is part of the
+/// path: a dataset re-placed with a different `chunk_bytes` misses cleanly
+/// instead of adopting stale chunk files whose byte ranges no longer line
+/// up. The dataset ID is part of the path too — it is the peer protocol's
+/// wire address (`GetChunk { dataset_id, chunk, grid_bytes }` resolves to
+/// exactly this path on the serving node), and it keeps two datasets that
+/// share a grid from adopting each other's chunks.
+pub fn chunk_rel_path(dataset_id: u64, chunk_bytes: u64, c: u64) -> PathBuf {
+    PathBuf::from(format!("chunks/d{dataset_id:04}/b{chunk_bytes}/c{c:07}.bin"))
 }
 
 /// Fetch chunk `c`'s payload from the remote store — one ranged read per
@@ -77,7 +88,11 @@ pub fn fetch_chunk_payload(
             cluster.read_remote_range_sharded(&cfg.item_rel_path(i), lo - is_, hi - lo, stats)?;
         buf.extend_from_slice(&part);
     }
-    cluster.write_node(geom.node_of_chunk(c), &chunk_rel_path(geom.chunk_bytes(), c), &buf)?;
+    cluster.write_node(
+        geom.node_of_chunk(c),
+        &chunk_rel_path(geom.dataset_id, geom.chunk_bytes(), c),
+        &buf,
+    )?;
     Ok(buf)
 }
 
@@ -117,10 +132,17 @@ pub struct RealCluster {
 pub struct ReadStats {
     pub remote_bytes: u64,
     pub local_bytes: u64,
+    /// Peer bytes served by reading the peer's directory on the same
+    /// filesystem (the `DirTransport` degenerate case).
     pub peer_bytes: u64,
+    /// Peer bytes that crossed the node interconnect (socket transport) —
+    /// split from `peer_bytes` so the network leg is visible on its own.
+    pub peer_net_bytes: u64,
     pub remote_reads: u64,
     pub local_reads: u64,
     pub peer_reads: u64,
+    /// Socket-peer requests, split from the disk-peer `peer_reads`.
+    pub peer_net_reads: u64,
     /// Seconds spent waiting on the shared remote bucket.
     pub remote_wait_s: f64,
 }
@@ -131,18 +153,20 @@ impl ReadStats {
         self.remote_bytes += other.remote_bytes;
         self.local_bytes += other.local_bytes;
         self.peer_bytes += other.peer_bytes;
+        self.peer_net_bytes += other.peer_net_bytes;
         self.remote_reads += other.remote_reads;
         self.local_reads += other.local_reads;
         self.peer_reads += other.peer_reads;
+        self.peer_net_reads += other.peer_net_reads;
         self.remote_wait_s += other.remote_wait_s;
     }
 
     pub fn total_reads(&self) -> u64 {
-        self.remote_reads + self.local_reads + self.peer_reads
+        self.remote_reads + self.local_reads + self.peer_reads + self.peer_net_reads
     }
 
     pub fn total_bytes(&self) -> u64 {
-        self.remote_bytes + self.local_bytes + self.peer_bytes
+        self.remote_bytes + self.local_bytes + self.peer_bytes + self.peer_net_bytes
     }
 }
 
@@ -491,6 +515,9 @@ pub struct ChunkedMount<'a> {
     pub dataset: String,
     pub cfg: DataGenConfig,
     geom: ChunkGeometry,
+    /// How non-local segments are fetched (defaults to the same-FS
+    /// [`DirTransport`]; swap in a `SocketTransport` for real peers).
+    transport: Box<dyn ChunkTransport>,
 }
 
 impl<'a> ChunkedMount<'a> {
@@ -502,7 +529,20 @@ impl<'a> ChunkedMount<'a> {
     ) -> Result<Self> {
         let dataset = dataset.into();
         let geom = cache.geometry(&dataset)?;
-        Ok(ChunkedMount { cluster, cache, dataset, cfg, geom })
+        Ok(ChunkedMount {
+            cluster,
+            cache,
+            dataset,
+            cfg,
+            geom,
+            transport: Box::new(DirTransport),
+        })
+    }
+
+    /// Route every non-local segment through `transport`.
+    pub fn with_transport(mut self, transport: Box<dyn ChunkTransport>) -> Self {
+        self.transport = transport;
+        self
     }
 
     pub fn geometry(&self) -> &ChunkGeometry {
@@ -528,23 +568,50 @@ impl Mount for ChunkedMount<'_> {
         let chunks: Vec<u64> = self.geom.chunks_of_item(i).collect();
         debug_assert_eq!(chunks.len(), plan.segments.len());
         for (c, (seg, loc)) in chunks.into_iter().zip(plan.segments) {
-            let crel = chunk_rel_path(self.geom.chunk_bytes(), c);
+            let crel = chunk_rel_path(self.geom.dataset_id, self.geom.chunk_bytes(), c);
             let home = self.geom.node_of_chunk(c);
             let (cs, _) = self.geom.chunk_range(c);
             let off = s + seg.start - cs; // segment offset within the chunk
             let len = seg.end - seg.start;
-            if self.cluster.node_has(home, &crel) {
-                if matches!(loc, ReadLocation::RemoteFill { .. }) {
-                    // On-disk chunk the bitmap missed (e.g. another mount
-                    // filled it): adopt it.
-                    self.cache.mark_chunks(&self.dataset, std::iter::once(c))?;
+            // Local segments come straight off this node's disk; every
+            // non-local byte moves through the transport.
+            let mut shard = ReadStats::default();
+            let got = if home == reader {
+                if self.cluster.node_has(home, &crel) {
+                    Some(self.cluster.read_node_range_sharded(
+                        home, &crel, off, len, reader, &mut shard,
+                    )?)
+                } else {
+                    None
                 }
-                out.extend_from_slice(&self.cluster.read_node_range(
-                    home, &crel, off, len, reader,
-                )?);
             } else {
-                let chunk_buf = self.fetch_chunk(c)?;
-                out.extend_from_slice(&chunk_buf[off as usize..(off + len) as usize]);
+                self.transport.fetch_chunk_range(
+                    self.cluster,
+                    &self.geom,
+                    c,
+                    off,
+                    len,
+                    reader,
+                    &mut shard,
+                )?
+            };
+            self.cluster.merge_stats(&shard);
+            match got {
+                Some(bytes) => {
+                    if matches!(loc, ReadLocation::RemoteFill { .. }) {
+                        // Resident chunk the bitmap missed (e.g. another
+                        // mount filled it): adopt it.
+                        self.cache.mark_chunks(&self.dataset, std::iter::once(c))?;
+                    }
+                    out.extend_from_slice(&bytes);
+                }
+                None => {
+                    // Missing on its home node (`NotResident` from a peer,
+                    // or no file locally): remote-fill and record
+                    // residency.
+                    let chunk_buf = self.fetch_chunk(c)?;
+                    out.extend_from_slice(&chunk_buf[off as usize..(off + len) as usize]);
+                }
             }
         }
         Ok(out)

@@ -1,0 +1,333 @@
+//! Integration tests for the socket peer data plane: a multi-node cluster
+//! on loopback (one `PeerServer` per node, ephemeral ports discovered by
+//! binding port 0) serving warm epochs over `SocketTransport`, with the
+//! `DirTransport` behaviour as the byte-identical reference.
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use hoard::cache::{CacheManager, EvictionPolicy, SharedCache};
+use hoard::netsim::NodeId;
+use hoard::peer::{DirTransport, PeerClient, PeerServer, SocketTransport};
+use hoard::posix::realfs::{chunk_rel_path, ReadStats, RealCluster};
+use hoard::posix::reader_pool::{
+    read_item_chunked_via, read_item_concurrent_via, FillTable, ReaderPool,
+};
+use hoard::storage::{Device, DeviceKind, Volume};
+use hoard::workload::datagen::{self, DataGenConfig};
+use hoard::workload::DatasetSpec;
+
+const NODES: usize = 4;
+
+fn fixture(
+    tag: &str,
+    items: u64,
+    chunk_bytes: Option<u64>,
+) -> (RealCluster, SharedCache, DataGenConfig) {
+    let root = std::env::temp_dir().join(format!("hoard-peer-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let cluster = RealCluster::create(&root, NODES, 500e6).unwrap();
+    let cfg = DataGenConfig { num_items: items, files_per_dir: 32, ..Default::default() };
+    let total = datagen::generate(&cluster.remote_dir, &cfg).unwrap();
+    let vols = (0..NODES)
+        .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 30)]))
+        .collect();
+    let mut manager = CacheManager::new(vols, EvictionPolicy::Manual);
+    if let Some(cb) = chunk_bytes {
+        manager.chunk_bytes = cb;
+    }
+    manager.register(DatasetSpec::new("d", items, total), "nfs://r/d".into()).unwrap();
+    manager.place("d", (0..NODES).map(NodeId).collect()).unwrap();
+    (cluster, SharedCache::new(manager), cfg)
+}
+
+/// One `PeerServer` per node, bound to port 0 (ephemeral), each charging
+/// its node's NVMe bucket for served payloads.
+fn start_servers(cluster: &RealCluster) -> Vec<PeerServer> {
+    (0..NODES)
+        .map(|n| {
+            PeerServer::start_with(
+                "127.0.0.1:0",
+                cluster.node_dirs[n].clone(),
+                Some(cluster.node_bw[n].clone()),
+                Duration::from_secs(5),
+            )
+            .unwrap()
+        })
+        .collect()
+}
+
+fn socket_transport(servers: &[PeerServer]) -> SocketTransport {
+    SocketTransport::new(PeerClient::connect(servers.iter().map(|s| s.addr).collect()))
+}
+
+/// The acceptance bar: a warm epoch run entirely over `SocketTransport`
+/// yields byte-identical item payloads to `DirTransport`, with zero
+/// remote reads and `peer_net_bytes > 0`.
+#[test]
+fn socket_warm_epoch_byte_identical_to_dir() {
+    let (cluster, cache, cfg) = fixture("warm", 16, Some(1000));
+    // Cold fill through the default dir transport (remote → home nodes).
+    let pool = ReaderPool::new_chunked(&cluster, cache.clone(), "d", cfg.clone(), 4).unwrap();
+    pool.run_epoch(&pool.epoch_order(3, 0)).unwrap();
+    assert!(cache.is_cached("d"));
+    cluster.take_stats();
+
+    // Warm epoch entirely over sockets.
+    let servers = start_servers(&cluster);
+    let spool = ReaderPool::new_chunked(&cluster, cache.clone(), "d", cfg.clone(), 4)
+        .unwrap()
+        .with_transport(Box::new(socket_transport(&servers)));
+    assert_eq!(spool.transport_name(), "socket");
+    let warm = spool.run_epoch(&spool.epoch_order(3, 1)).unwrap();
+    assert_eq!(warm.merged.remote_reads, 0, "socket warm epoch touched remote");
+    assert!(warm.merged.peer_net_bytes > 0, "no bytes crossed the wire");
+    assert_eq!(warm.merged.peer_reads, 0, "socket transport read a peer directory");
+    assert!(warm.merged.local_reads > 0, "local chunks still come off local disk");
+
+    // Byte-identical payloads: read every item through both transports and
+    // against the deterministic generator.
+    let geom = cache.geometry("d").unwrap();
+    let socket_t = socket_transport(&servers);
+    let dir_fill = FillTable::new(geom.num_chunks());
+    let sock_fill = FillTable::new(geom.num_chunks());
+    let mut stats = ReadStats::default();
+    for i in 0..cfg.num_items {
+        let via_dir = read_item_chunked_via(
+            &cluster, &cache, &dir_fill, &DirTransport, "d", &cfg, &geom, i, NodeId(0), &mut stats,
+        )
+        .unwrap();
+        let via_socket = read_item_chunked_via(
+            &cluster, &cache, &sock_fill, &socket_t, "d", &cfg, &geom, i, NodeId(0), &mut stats,
+        )
+        .unwrap();
+        let (_, want) = datagen::make_record(&cfg, i);
+        assert_eq!(via_dir, want, "dir payload item {i}");
+        assert_eq!(via_socket, want, "socket payload item {i}");
+    }
+    assert_eq!(stats.remote_reads, 0, "every byte served from cache either way");
+    drop(servers);
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
+
+/// Fetch-once under racing readers with the socket transport: 6 threads
+/// all walk the same item sequence cold; the remote store must still
+/// supply every byte exactly once, and every assembled item is correct.
+#[test]
+fn socket_cold_racing_readers_fetch_once() {
+    let (cluster, cache, cfg) = fixture("race", 16, Some(777));
+    let servers = start_servers(&cluster);
+    let transport = socket_transport(&servers);
+    let geom = cache.geometry("d").unwrap();
+    let fill = FillTable::new(geom.num_chunks());
+    let total = cfg.num_items * cfg.record_bytes() as u64;
+    let remote_bytes = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for r in 0..6usize {
+            let cluster = &cluster;
+            let cache = cache.clone();
+            let fill = &fill;
+            let transport = &transport;
+            let cfg = cfg.clone();
+            let geom = geom.clone();
+            let remote_bytes = &remote_bytes;
+            s.spawn(move || {
+                let mut stats = ReadStats::default();
+                for i in 0..cfg.num_items {
+                    let data = read_item_chunked_via(
+                        cluster,
+                        &cache,
+                        fill,
+                        transport,
+                        "d",
+                        &cfg,
+                        &geom,
+                        i,
+                        NodeId(r % NODES),
+                        &mut stats,
+                    )
+                    .unwrap();
+                    let (_, want) = datagen::make_record(&cfg, i);
+                    assert_eq!(data, want, "item {i} reassembled wrong");
+                }
+                remote_bytes.fetch_add(stats.remote_bytes, Ordering::SeqCst);
+            });
+        }
+    });
+    assert_eq!(
+        remote_bytes.load(Ordering::SeqCst),
+        total,
+        "racing readers over sockets must still fetch each chunk exactly once"
+    );
+    assert!(cache.is_cached("d"));
+    drop(servers);
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
+
+/// A peer answering `NotResident` (ledger says resident, file is gone)
+/// falls back to a remote fill that re-records residency; the next read
+/// is served from the cache again.
+#[test]
+fn socket_not_resident_falls_back_to_remote_fill() {
+    let (cluster, cache, cfg) = fixture("fallback", 8, Some(1000));
+    let servers = start_servers(&cluster);
+    let transport = socket_transport(&servers);
+    let geom = cache.geometry("d").unwrap();
+    // Lie to both ledgers: mark every chunk resident with nothing on disk.
+    let all: Vec<u64> = (0..geom.num_chunks()).collect();
+    cache.mark_chunks("d", &all).unwrap();
+    let fill = FillTable::new(geom.num_chunks());
+    for c in 0..geom.num_chunks() {
+        fill.mark_resident(c);
+    }
+    let mut stats = ReadStats::default();
+    let data = read_item_chunked_via(
+        &cluster, &cache, &fill, &transport, "d", &cfg, &geom, 0, NodeId(0), &mut stats,
+    )
+    .unwrap();
+    let (_, want) = datagen::make_record(&cfg, 0);
+    assert_eq!(data, want, "fallback payload wrong");
+    assert!(stats.remote_bytes > 0, "NotResident must trigger a remote fill");
+    // The fill landed on the home nodes: item 0's chunks are on disk now,
+    // and a second read stays off the remote store.
+    for c in geom.chunks_of_item(0) {
+        let crel = chunk_rel_path(geom.dataset_id, geom.chunk_bytes(), c);
+        assert!(cluster.node_has(geom.node_of_chunk(c), &crel), "chunk {c} not persisted");
+    }
+    let mut stats2 = ReadStats::default();
+    let again = read_item_chunked_via(
+        &cluster, &cache, &fill, &transport, "d", &cfg, &geom, 0, NodeId(0), &mut stats2,
+    )
+    .unwrap();
+    assert_eq!(again, want);
+    assert_eq!(stats2.remote_reads, 0, "second read must come from the cache");
+    drop(servers);
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
+
+/// Whole-file striping over the wire: item files served through the
+/// servers' registered item exports, byte-identical to the dir path.
+#[test]
+fn whole_file_items_over_socket() {
+    let (cluster, cache, cfg) = fixture("items", 12, None);
+    // Cold fill through the default whole-file pool.
+    let pool = ReaderPool::new(&cluster, cache.clone(), "d", cfg.clone(), 4);
+    pool.run_epoch(&pool.epoch_order(5, 0)).unwrap();
+    cluster.take_stats();
+
+    let servers = start_servers(&cluster);
+    let did = cache.dataset_id("d").unwrap();
+    for srv in &servers {
+        let cfg = cfg.clone();
+        srv.register_item_paths(did, move |i| cfg.item_rel_path(i));
+    }
+    // Warm epoch over sockets with the whole-file pool.
+    let spool = ReaderPool::new(&cluster, cache.clone(), "d", cfg.clone(), 4)
+        .with_transport(Box::new(socket_transport(&servers)));
+    let warm = spool.run_epoch(&spool.epoch_order(5, 1)).unwrap();
+    assert_eq!(warm.merged.remote_reads, 0, "warm epoch touched remote");
+    assert!(warm.merged.peer_net_reads > 0, "no item files crossed the wire");
+    assert_eq!(warm.merged.peer_reads, 0, "socket transport read a peer directory");
+
+    // Byte-identical payloads through the standalone read path.
+    let transport = socket_transport(&servers);
+    let fill = FillTable::new(cfg.num_items);
+    let mut stats = ReadStats::default();
+    for i in 0..cfg.num_items {
+        let data = read_item_concurrent_via(
+            &cluster, &cache, &fill, &transport, did, "d", &cfg, i, NodeId(1), &mut stats,
+        )
+        .unwrap();
+        let (_, want) = datagen::make_record(&cfg, i);
+        assert_eq!(data, want, "item {i}");
+    }
+    assert_eq!(stats.remote_reads, 0);
+    drop(servers);
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
+
+/// The opt-in client-side chunk cache bounds wire amplification: reading
+/// the same chunks again moves no new wire bytes, and payloads stay
+/// correct.
+#[test]
+fn chunk_cache_bounds_wire_amplification() {
+    let (cluster, cache, cfg) = fixture("cache", 8, Some(1000));
+    let pool = ReaderPool::new_chunked(&cluster, cache.clone(), "d", cfg.clone(), 2).unwrap();
+    pool.run_epoch(&pool.epoch_order(9, 0)).unwrap(); // cold fill (dir)
+    let servers = start_servers(&cluster);
+    let transport = SocketTransport::new(PeerClient::connect(
+        servers.iter().map(|s| s.addr).collect(),
+    ))
+    .with_chunk_cache(8 << 20);
+    let geom = cache.geometry("d").unwrap();
+    let fill = FillTable::new(geom.num_chunks());
+    for c in 0..geom.num_chunks() {
+        fill.mark_resident(c);
+    }
+    let mut stats = ReadStats::default();
+    let first = read_item_chunked_via(
+        &cluster, &cache, &fill, &transport, "d", &cfg, &geom, 0, NodeId(0), &mut stats,
+    )
+    .unwrap();
+    let wire_after_first = stats.peer_net_reads;
+    assert!(wire_after_first > 0, "first read must fetch over the wire");
+    let second = read_item_chunked_via(
+        &cluster, &cache, &fill, &transport, "d", &cfg, &geom, 0, NodeId(0), &mut stats,
+    )
+    .unwrap();
+    assert_eq!(
+        stats.peer_net_reads, wire_after_first,
+        "re-reading cached chunks must move no new wire bytes"
+    );
+    let (_, want) = datagen::make_record(&cfg, 0);
+    assert_eq!(first, want);
+    assert_eq!(second, want);
+    drop(servers);
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
+
+/// Server hardening: a client that connects and sends nothing is dropped
+/// at the read timeout instead of pinning a handler thread, and the
+/// server keeps serving; a hostile length prefix closes the connection
+/// without panic or allocation.
+#[test]
+fn server_drops_silent_and_hostile_connections() {
+    let dir = std::env::temp_dir().join(format!("hoard-peer-harden-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let payload = vec![7u8; 1234];
+    let rel = chunk_rel_path(1, 100, 0);
+    std::fs::create_dir_all(dir.join(&rel).parent().unwrap()).unwrap();
+    std::fs::write(dir.join(&rel), &payload).unwrap();
+    let mut srv =
+        PeerServer::start_with("127.0.0.1:0", dir.clone(), None, Duration::from_millis(150))
+            .unwrap();
+
+    // Silent connection: dropped at the read timeout.
+    let mut idle = TcpStream::connect(srv.addr).unwrap();
+    idle.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let t0 = Instant::now();
+    let mut buf = Vec::new();
+    let _ = std::io::Read::read_to_end(&mut idle, &mut buf);
+    assert!(
+        t0.elapsed() < Duration::from_secs(4),
+        "silent connection still open after the server timeout"
+    );
+    assert!(buf.is_empty(), "server must not respond to silence");
+
+    // Hostile length prefix: connection closed, no panic, server survives.
+    let mut hostile = TcpStream::connect(srv.addr).unwrap();
+    hostile.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    std::io::Write::write_all(&mut hostile, &u32::MAX.to_le_bytes()).unwrap();
+    std::io::Write::write_all(&mut hostile, &[1, 2, 3]).unwrap();
+    let mut buf = Vec::new();
+    let _ = std::io::Read::read_to_end(&mut hostile, &mut buf);
+    assert!(buf.is_empty(), "hostile frame must not get a response");
+
+    // The server still serves real requests afterwards.
+    let client = PeerClient::connect(vec![srv.addr]);
+    assert_eq!(client.get_chunk(NodeId(0), 1, 100, 0).unwrap(), Some(payload));
+    srv.stop();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
