@@ -1,14 +1,52 @@
 //! L3 hot-path micro-benchmarks (§Perf): the fair-share allocator, the
-//! fluid-sim inner loop, and the cache read-location resolution — the three
-//! code paths every experiment and the real-mode VFS lean on.
+//! fluid-sim inner loop, the cache read-location resolution, and the
+//! warm-path contention benches (RwLock lane vs lock-free residency
+//! snapshot at 8 reader threads, plus a real warm-epoch assembly run).
+//!
+//! Emits `BENCH_hotpath.json` (bench name → items/sec) so CI records the
+//! perf trajectory per PR. Honors `HOARD_BENCH_SMOKE=1` (one short run,
+//! timing assertions skipped).
 
 mod common;
 
-use hoard::cache::{CacheManager, EvictionPolicy};
+use std::time::{Duration, Instant};
+
+use hoard::cache::{CacheManager, EvictionPolicy, SharedCache};
+use hoard::experiments::realmode::reader_scaling_run;
 use hoard::netsim::{fair_share, Flow, NodeId, Resource, ResourceId};
 use hoard::storage::{Device, DeviceKind, Volume};
 use hoard::workload::trainsim::{paper_scenario, ReadMode};
 use hoard::workload::DatasetSpec;
+
+/// Run `f` on `threads` threads, `per_thread` iterations each; returns
+/// items/sec of the best repetition (1 rep under smoke, 3 otherwise).
+/// `f(thread, k)` must resolve one item.
+fn contention_bench(
+    name: &str,
+    threads: usize,
+    per_thread: u64,
+    f: impl Fn(usize, u64) + Sync,
+) -> f64 {
+    let reps = if common::smoke() { 1 } else { 3 };
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let f = &f;
+                s.spawn(move || {
+                    for k in 0..per_thread {
+                        f(t, k);
+                    }
+                });
+            }
+        });
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    let ips = (threads as u64 * per_thread) as f64 / best.max(1e-9);
+    println!("BENCH {name} best={best:.4}s items_per_sec={ips:.0} threads={threads}");
+    ips
+}
 
 fn main() {
     // 1. fair_share: 8 resources × 64 flows (bigger than any experiment).
@@ -58,4 +96,84 @@ fn main() {
         local
     });
     assert!(hits > 0);
+
+    // 4. Warm-path resolution under 8-reader contention: every reader
+    //    thread resolving read_plan/read_location against (a) the global
+    //    RwLock<CacheManager> — the old warm path — vs (b) the lock-free
+    //    ResidencySnapshot. Same dataset, same answers; only the lane
+    //    differs. Tentpole acceptance: the snapshot lane is ≥2× at 8
+    //    readers.
+    let smoke = common::smoke();
+    let items = 1_281_167u64;
+    let threads = 8usize;
+    let per: u64 = if smoke { 20_000 } else { 200_000 };
+    let shared = SharedCache::new(cache);
+    let snap = shared.snapshot("d").expect("dataset placed above");
+    assert!(snap.is_full(), "fully prefetched dataset must publish a full snapshot");
+
+    let lock_plan = contention_bench("perf_hotpath_resolve_rwlock_8t", threads, per, |t, k| {
+        let i = (t as u64 * per + k) % items;
+        let plan = shared.read_plan("d", i, NodeId(t % 4)).unwrap();
+        assert!(!plan.segments.is_empty());
+    });
+    let snap_plan = contention_bench("perf_hotpath_resolve_snapshot_8t", threads, per, |t, k| {
+        let i = (t as u64 * per + k) % items;
+        let plan = snap.read_plan(i, NodeId(t % 4)).expect("live snapshot");
+        // The run view a consumer would drive ranged requests from.
+        let runs = plan.coalesced();
+        assert!(!runs.is_empty() && runs.len() <= plan.segments.len());
+    });
+    let lock_loc = contention_bench("perf_hotpath_location_rwlock_8t", threads, per, |t, k| {
+        let i = (t as u64 * per + k) % items;
+        shared.read_location("d", i, NodeId(t % 4)).unwrap();
+    });
+    let snap_loc = contention_bench("perf_hotpath_location_snapshot_8t", threads, per, |t, k| {
+        let i = (t as u64 * per + k) % items;
+        snap.read_location(i, NodeId(t % 4)).expect("live snapshot");
+    });
+    let plan_speedup = snap_plan / lock_plan.max(1e-9);
+    let loc_speedup = snap_loc / lock_loc.max(1e-9);
+    println!(
+        "resolution at {threads} readers: read_plan {plan_speedup:.2}× \
+         read_location {loc_speedup:.2}× (snapshot vs RwLock)"
+    );
+
+    // 5. Warm-epoch chunk assembly end-to-end: a real 8-reader ReaderPool
+    //    epoch over real files (cold fill + warm epoch; warm items/sec is
+    //    the recorded number).
+    let epoch_items: u64 = if smoke { 48 } else { 256 };
+    let point = reader_scaling_run(8, epoch_items, Duration::ZERO)
+        .expect("warm-epoch run needs a writable temp dir");
+    assert_eq!(point.warm.remote_reads, 0, "warm epoch touched remote");
+    let warm_ips = epoch_items as f64 / point.warm_s.max(1e-9);
+    println!(
+        "BENCH perf_hotpath_warm_epoch_8r best={:.4}s items_per_sec={warm_ips:.0}",
+        point.warm_s
+    );
+
+    // Machine-readable trajectory point (bench name → items/sec).
+    let json = format!(
+        "{{\n  \"resolve_plan_rwlock_8t\": {lock_plan:.1},\n  \
+         \"resolve_plan_snapshot_8t\": {snap_plan:.1},\n  \
+         \"resolve_location_rwlock_8t\": {lock_loc:.1},\n  \
+         \"resolve_location_snapshot_8t\": {snap_loc:.1},\n  \
+         \"warm_epoch_8r\": {warm_ips:.1}\n}}\n"
+    );
+    std::fs::write("BENCH_hotpath.json", &json).expect("writing BENCH_hotpath.json");
+    println!("BENCH_hotpath.json written:\n{json}");
+
+    if smoke {
+        println!("smoke mode: fast-lane speedup assertion skipped");
+        return;
+    }
+    assert!(
+        plan_speedup >= 2.0,
+        "snapshot lane must be ≥2× the RwLock lane for read_plan at {threads} readers, \
+         got {plan_speedup:.2}×"
+    );
+    assert!(
+        loc_speedup >= 2.0,
+        "snapshot lane must be ≥2× the RwLock lane for read_location at {threads} readers, \
+         got {loc_speedup:.2}×"
+    );
 }

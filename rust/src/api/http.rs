@@ -4,7 +4,7 @@
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -14,6 +14,21 @@ use anyhow::{bail, Context, Result};
 /// connects and sends nothing (or stalls mid-request) is dropped instead
 /// of pinning its handler thread forever.
 pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Default cap on concurrent handler threads; connections over the cap
+/// are answered `503` and closed, so a connection flood cannot spawn
+/// unbounded threads.
+pub const DEFAULT_MAX_CONNS: usize = 128;
+
+/// Counting gate over live handler threads (decrements on drop, so every
+/// handler exit path releases its slot).
+struct HandlerSlot(Arc<AtomicUsize>);
+
+impl Drop for HandlerSlot {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Request {
@@ -51,6 +66,7 @@ impl Response {
             404 => "404 Not Found",
             409 => "409 Conflict",
             500 => "500 Internal Server Error",
+            503 => "503 Service Unavailable",
             _ => "200 OK",
         }
     }
@@ -120,7 +136,25 @@ impl Server {
 
     /// Like [`Server::start`], with an explicit per-connection read/write
     /// timeout (tests use short ones to exercise the silent-client path).
+    /// Handler threads are capped at [`DEFAULT_MAX_CONNS`]
+    /// ([`Server::start_with_limits`] to tune).
     pub fn start_with_timeout<F>(addr: &str, io_timeout: Duration, handler: F) -> Result<Server>
+    where
+        F: Fn(&Request) -> Response + Send + Sync + 'static,
+    {
+        Self::start_with_limits(addr, io_timeout, DEFAULT_MAX_CONNS, handler)
+    }
+
+    /// [`Server::start_with_timeout`] plus an explicit cap on concurrent
+    /// handler threads: once `max_conns` handlers are live, further
+    /// connections get a best-effort `503` and are closed instead of
+    /// spawning a thread.
+    pub fn start_with_limits<F>(
+        addr: &str,
+        io_timeout: Duration,
+        max_conns: usize,
+        handler: F,
+    ) -> Result<Server>
     where
         F: Fn(&Request) -> Response + Send + Sync + 'static,
     {
@@ -130,6 +164,7 @@ impl Server {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let handler = Arc::new(handler);
+        let active: Arc<AtomicUsize> = Arc::new(AtomicUsize::new(0));
         let join = std::thread::spawn(move || {
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
@@ -139,8 +174,21 @@ impl Server {
                         // connection can pin a thread forever.
                         let _ = sock.set_read_timeout(Some(io_timeout));
                         let _ = sock.set_write_timeout(Some(io_timeout));
+                        if active.load(Ordering::Acquire) >= max_conns {
+                            // Over the gate: 503 (best effort) and close —
+                            // never spawn.
+                            let _ = write_response(
+                                &mut sock,
+                                &Response::json(503, r#"{"error":"server busy"}"#.to_string()),
+                            );
+                            let _ = sock.shutdown(std::net::Shutdown::Both);
+                            continue;
+                        }
+                        active.fetch_add(1, Ordering::AcqRel);
+                        let slot = HandlerSlot(active.clone());
                         let h = handler.clone();
                         std::thread::spawn(move || {
+                            let _slot = slot;
                             let resp = match parse_request(&mut sock) {
                                 Ok(req) => h(&req),
                                 Err(e) => Response::json(400, format!(r#"{{"error":"{e}"}}"#)),
@@ -264,6 +312,42 @@ mod tests {
             t0.elapsed() < Duration::from_secs(4),
             "idle connection still open after the server timeout"
         );
+    }
+
+    #[test]
+    fn connection_flood_is_gated_not_unbounded() {
+        // Cap 1: one parked silent connection occupies the only handler
+        // slot, so the next request is answered 503 instead of spawning
+        // another thread. Once the occupant leaves, service resumes.
+        let srv = Server::start_with_limits(
+            "127.0.0.1:0",
+            Duration::from_millis(400),
+            1,
+            |_| Response::text(200, "ok"),
+        )
+        .unwrap();
+        let idle = TcpStream::connect(srv.addr).unwrap();
+        // Let the accept loop register the occupant before probing.
+        std::thread::sleep(Duration::from_millis(100));
+        // Depending on timing the over-cap client reads the best-effort
+        // 503 or hits the reset — it must never be served a 200.
+        match request(srv.addr, "GET", "/", "") {
+            Ok((status, _)) => assert_eq!(status, 503, "over-cap connection must get 503"),
+            Err(_) => {} // connection reset before the 503 was read — still gated
+        }
+        drop(idle);
+        // The occupant's handler exits at its read timeout; the slot
+        // frees and requests succeed again.
+        let t0 = std::time::Instant::now();
+        loop {
+            match request(srv.addr, "GET", "/", "") {
+                Ok((200, _)) => break,
+                _ if t0.elapsed() > Duration::from_secs(5) => {
+                    panic!("gate never released its slot")
+                }
+                _ => std::thread::sleep(Duration::from_millis(50)),
+            }
+        }
     }
 
     #[test]

@@ -55,6 +55,35 @@ impl ReadPlan {
     pub fn len_bytes(&self) -> u64 {
         self.segments.iter().map(|(r, _)| r.end - r.start).sum()
     }
+
+    /// Merge adjacent segments served from the same location into one
+    /// ranged segment, so a consumer issues one request per *location
+    /// run* instead of one per chunk (e.g. the two halves of an item
+    /// whose chunks both home on the same peer, or a run of missing
+    /// chunks all remote-filling to the same node). Preserves order and
+    /// total bytes.
+    ///
+    /// Note the limits of a run: on-disk chunks are one *file each*, so a
+    /// local run cannot become one `pread` — the hot path's equivalent is
+    /// the per-peer **batched** fetch
+    /// ([`ChunkTransport::fetch_chunk_ranges`](crate::peer::ChunkTransport::fetch_chunk_ranges)),
+    /// which groups every resident chunk homed on one peer (a superset of
+    /// adjacent runs) into a single wire round trip. `coalesced()` is the
+    /// plan-level view of those runs for consumers that reason about
+    /// location spans (benches, planners, future eviction-aware serving).
+    pub fn coalesced(&self) -> Vec<(std::ops::Range<u64>, ReadLocation)> {
+        let mut out: Vec<(std::ops::Range<u64>, ReadLocation)> = Vec::new();
+        for (r, l) in &self.segments {
+            if let Some((last_r, last_l)) = out.last_mut() {
+                if last_r.end == r.start && last_l == l {
+                    last_r.end = r.end;
+                    continue;
+                }
+            }
+            out.push((r.clone(), *l));
+        }
+        out
+    }
 }
 
 /// Immutable snapshot of one placed dataset's chunk addressing: the
@@ -91,6 +120,12 @@ impl ChunkGeometry {
     /// Home node of chunk `c`.
     pub fn node_of_chunk(&self, c: u64) -> NodeId {
         self.stripe.node_of_chunk(c)
+    }
+
+    /// Home node of item `i` (file-granular round robin — the serving
+    /// home `read_location` summarises an item by).
+    pub fn node_of_item(&self, i: u64) -> NodeId {
+        self.stripe.node_of_item(i)
     }
 
     /// Global byte range `[start, end)` of chunk `c` (tail may be short).
@@ -132,6 +167,159 @@ impl ChunkGeometry {
             return 0..0;
         }
         self.item_of_offset(cs)..self.item_of_offset(ce - 1) + 1
+    }
+}
+
+/// Lock-free view of one placed dataset's residency: the chunk grid
+/// ([`ChunkGeometry`]) plus an atomic mirror of the registry's [`ChunkSet`]
+/// bitmap. Published by [`CacheManager::place`] and updated (under the
+/// manager's exclusive lock) by every path that marks chunks —
+/// `mark_chunks`, `mark_item`, `prefetch_tick` — so readers holding the
+/// `Arc` resolve [`ResidencySnapshot::read_plan`] /
+/// [`ResidencySnapshot::read_location`] with plain atomic loads and **zero**
+/// `RwLock` acquisitions. The locked [`CacheManager`] lane stays the
+/// authoritative slow path (and the differential-testing oracle).
+///
+/// Publication rules:
+///  * bits are **monotone** while the placement lives — writers only set
+///    them, and only *after* the payload landed (the write lock orders the
+///    store after the filesystem write), so a reader observing a set bit
+///    (`Acquire`) sees the chunk's bytes;
+///  * a cleared bit may be stale (a fill can land between load and use);
+///    readers already treat "resident but gone at the source" / "missing
+///    but present on disk" leniently, so staleness only costs a fallback,
+///    never correctness;
+///  * eviction / node failure **retires** the snapshot instead of clearing
+///    bits: `read_plan`/`read_location` answer `None` and callers fall
+///    back to the locked lane (which reports the placement as gone).
+#[derive(Debug)]
+pub struct ResidencySnapshot {
+    geom: ChunkGeometry,
+    words: Vec<std::sync::atomic::AtomicU64>,
+    marked: std::sync::atomic::AtomicU64,
+    full: std::sync::atomic::AtomicBool,
+    retired: std::sync::atomic::AtomicBool,
+}
+
+impl ResidencySnapshot {
+    fn new(geom: ChunkGeometry) -> std::sync::Arc<Self> {
+        use std::sync::atomic::{AtomicBool, AtomicU64};
+        let n = geom.num_chunks();
+        let words = (0..(n as usize).div_ceil(64).max(1)).map(|_| AtomicU64::new(0)).collect();
+        std::sync::Arc::new(ResidencySnapshot {
+            geom,
+            words,
+            marked: AtomicU64::new(0),
+            full: AtomicBool::new(n == 0),
+            retired: AtomicBool::new(false),
+        })
+    }
+
+    /// The dataset's chunk grid (shared with the locked lane by
+    /// construction — the snapshot embeds the placed stripe).
+    pub fn geometry(&self) -> &ChunkGeometry {
+        &self.geom
+    }
+
+    /// The placement this snapshot mirrors is gone (evicted / failed
+    /// node): fall back to the locked lane.
+    pub fn retired(&self) -> bool {
+        self.retired.load(std::sync::atomic::Ordering::Acquire)
+    }
+
+    fn retire(&self) {
+        self.retired.store(true, std::sync::atomic::Ordering::Release);
+    }
+
+    /// Every chunk resident (the `Cached` state, observed lock-free).
+    pub fn is_full(&self) -> bool {
+        self.full.load(std::sync::atomic::Ordering::Acquire)
+    }
+
+    pub fn marked_chunks(&self) -> u64 {
+        self.marked.load(std::sync::atomic::Ordering::Acquire)
+    }
+
+    /// Is chunk `c` resident? One or two atomic loads, no locks.
+    pub fn contains(&self, c: u64) -> bool {
+        debug_assert!(c < self.geom.num_chunks(), "chunk {c} out of range");
+        if self.is_full() {
+            return true;
+        }
+        let w = self.words[(c / 64) as usize].load(std::sync::atomic::Ordering::Acquire);
+        w & (1u64 << (c % 64)) != 0
+    }
+
+    /// Writer side — called only by the [`CacheManager`] under its
+    /// exclusive lock, after the corresponding [`ChunkSet`] mark.
+    fn set(&self, c: u64) {
+        use std::sync::atomic::Ordering;
+        let bit = 1u64 << (c % 64);
+        let prev = self.words[(c / 64) as usize].fetch_or(bit, Ordering::AcqRel);
+        if prev & bit == 0 {
+            let m = self.marked.fetch_add(1, Ordering::AcqRel) + 1;
+            if m == self.geom.num_chunks() {
+                self.full.store(true, Ordering::Release);
+            }
+        }
+    }
+
+    fn set_full(&self) {
+        self.full.store(true, std::sync::atomic::Ordering::Release);
+    }
+
+    /// Every chunk of `item` resident? `None` ⇔ retired.
+    pub fn item_resident(&self, item: u64) -> Option<bool> {
+        if self.retired() {
+            return None;
+        }
+        Some(self.is_full() || self.geom.chunks_of_item(item).all(|c| self.contains(c)))
+    }
+
+    /// Lock-free twin of [`CacheManager::read_location`]. `None` ⇔ the
+    /// snapshot is retired — resolve through the locked lane instead.
+    pub fn read_location(&self, item: u64, reader: NodeId) -> Option<ReadLocation> {
+        if self.retired() {
+            return None;
+        }
+        let home = self.geom.node_of_item(item);
+        let resident =
+            self.is_full() || self.geom.chunks_of_item(item).all(|c| self.contains(c));
+        Some(if resident {
+            if home == reader {
+                ReadLocation::Local
+            } else {
+                ReadLocation::Peer(home)
+            }
+        } else {
+            ReadLocation::RemoteFill { fill_node: home }
+        })
+    }
+
+    /// Lock-free twin of [`CacheManager::read_plan`]: identical segments
+    /// for identical residency. `None` ⇔ retired.
+    pub fn read_plan(&self, item: u64, reader: NodeId) -> Option<ReadPlan> {
+        if self.retired() {
+            return None;
+        }
+        let (s, e) = self.geom.item_range(item);
+        let mut segments = Vec::new();
+        for c in self.geom.chunks_of_item(item) {
+            let (cs, ce) = self.geom.chunk_range(c);
+            let seg = s.max(cs) - s..e.min(ce) - s;
+            let home = self.geom.node_of_chunk(c);
+            let loc = if self.contains(c) {
+                if home == reader {
+                    ReadLocation::Local
+                } else {
+                    ReadLocation::Peer(home)
+                }
+            } else {
+                ReadLocation::RemoteFill { fill_node: home }
+            };
+            segments.push((seg, loc));
+        }
+        Some(ReadPlan { segments })
     }
 }
 
@@ -240,6 +428,9 @@ impl CacheManager {
             let rec = self.registry.get_mut(name).expect("listed above");
             let total = rec.spec.total_bytes;
             let stripe = rec.stripe.take().expect("filtered on stripe");
+            if let Some(snap) = rec.snapshot.take() {
+                snap.retire();
+            }
             rec.state = DatasetState::Registered;
             for &sn in stripe.nodes() {
                 let share = stripe.bytes_on_node(sn, total);
@@ -326,6 +517,15 @@ impl CacheManager {
         }
         let chunks = ChunkSet::new(need, chunk);
         let rec = self.registry.get_mut(name)?;
+        // Publish the lock-free residency snapshot alongside the placement:
+        // same stripe, empty bitmap, bits set under this manager's
+        // exclusive lock as fills land.
+        rec.snapshot = Some(ResidencySnapshot::new(ChunkGeometry {
+            stripe: stripe.clone(),
+            total_bytes: need,
+            num_items: rec.spec.num_items,
+            dataset_id: rec.id,
+        }));
         rec.stripe = Some(stripe);
         rec.state = DatasetState::Caching { chunks };
         self.events.push(CacheEvent::Placed {
@@ -341,11 +541,23 @@ impl CacheManager {
     /// already landed out of order.
     pub fn prefetch_tick(&mut self, name: &str, bytes: u64) -> Result<(), CacheError> {
         let rec = self.registry.get_mut(name)?;
+        let snap = rec.snapshot.clone();
         match &mut rec.state {
             DatasetState::Caching { chunks } => {
+                let before = chunks.front();
                 chunks.advance(bytes);
+                if let Some(s) = &snap {
+                    // Every chunk below the front is marked; mirror the
+                    // advance as a contiguous range of bit sets.
+                    for c in before..chunks.front() {
+                        s.set(c);
+                    }
+                }
                 if chunks.is_full() {
                     rec.state = DatasetState::Cached;
+                    if let Some(s) = &snap {
+                        s.set_full();
+                    }
                     self.events.push(CacheEvent::FullyCached(name.to_string()));
                 }
                 Ok(())
@@ -366,13 +578,21 @@ impl CacheManager {
         chunk_ids: impl IntoIterator<Item = u64>,
     ) -> Result<(), CacheError> {
         let rec = self.registry.get_mut(name)?;
+        let snap = rec.snapshot.clone();
         match &mut rec.state {
             DatasetState::Caching { chunks } => {
                 for c in chunk_ids {
-                    chunks.mark(c);
+                    if chunks.mark(c) {
+                        if let Some(s) = &snap {
+                            s.set(c);
+                        }
+                    }
                 }
                 if chunks.is_full() {
                     rec.state = DatasetState::Cached;
+                    if let Some(s) = &snap {
+                        s.set_full();
+                    }
                     self.events.push(CacheEvent::FullyCached(name.to_string()));
                 }
                 Ok(())
@@ -410,13 +630,21 @@ impl CacheManager {
                 .collect()
         };
         let rec = self.registry.get_mut(name)?;
+        let snap = rec.snapshot.clone();
         match &mut rec.state {
             DatasetState::Caching { chunks } => {
                 for (c, bytes) in overlaps {
-                    chunks.credit_unit(c, item, bytes);
+                    if chunks.credit_unit(c, item, bytes) {
+                        if let Some(s) = &snap {
+                            s.set(c);
+                        }
+                    }
                 }
                 if chunks.is_full() {
                     rec.state = DatasetState::Cached;
+                    if let Some(s) = &snap {
+                        s.set_full();
+                    }
                     self.events.push(CacheEvent::FullyCached(name.to_string()));
                 }
                 Ok(())
@@ -443,6 +671,20 @@ impl CacheManager {
             num_items: rec.spec.num_items,
             dataset_id: rec.id,
         })
+    }
+
+    /// The lock-free residency snapshot of a placed dataset — the warm
+    /// path's fast lane. Hold the `Arc` and resolve reads without touching
+    /// this manager again; fall back to the locked lane when it retires.
+    pub fn residency_snapshot(
+        &self,
+        name: &str,
+    ) -> Result<std::sync::Arc<ResidencySnapshot>, CacheError> {
+        let rec = self
+            .registry
+            .get(name)
+            .ok_or_else(|| CacheError::Registry(RegistryError::NotFound(name.to_string())))?;
+        rec.snapshot.clone().ok_or_else(|| CacheError::NotPlaced(name.into()))
     }
 
     /// Stable numeric ID of a registered dataset (the peer protocol's
@@ -531,6 +773,10 @@ impl CacheManager {
         }
         let resident = rec.resident_bytes();
         let total = rec.spec.total_bytes;
+        if let Some(snap) = rec.snapshot.take() {
+            // Fast-lane readers fall back to the locked lane from here on.
+            snap.retire();
+        }
         if let Some(stripe) = rec.stripe.take() {
             rec.state = DatasetState::Registered;
             // Release per-node reservations (reservation was for the full
@@ -577,6 +823,13 @@ impl CacheManager {
 /// threads resolve placements in parallel; fill bookkeeping
 /// (`prefetch_tick`) takes the exclusive lock briefly. Clone freely —
 /// clones share the one manager.
+///
+/// This locked lane is the **slow/fallback** path: warm readers should
+/// fetch the per-dataset [`ResidencySnapshot`] once
+/// ([`SharedCache::snapshot`]) and resolve reads through it with zero lock
+/// acquisitions, falling back here only when the snapshot is absent or
+/// retired. Every mutation still goes through this handle, which keeps
+/// the snapshot coherent under the exclusive lock.
 #[derive(Debug, Clone)]
 pub struct SharedCache {
     inner: std::sync::Arc<std::sync::RwLock<CacheManager>>,
@@ -610,6 +863,13 @@ impl SharedCache {
     /// Stable numeric dataset ID (shared lock).
     pub fn dataset_id(&self, name: &str) -> Result<u64, CacheError> {
         self.inner.read().unwrap().dataset_id(name)
+    }
+
+    /// Lock-free residency snapshot of a placed dataset (one shared-lock
+    /// acquisition to fetch the `Arc`; every read resolved through it
+    /// afterwards takes zero locks).
+    pub fn snapshot(&self, name: &str) -> Result<std::sync::Arc<ResidencySnapshot>, CacheError> {
+        self.inner.read().unwrap().residency_snapshot(name)
     }
 
     /// Record fill progress (exclusive lock, held only for the registry
@@ -899,6 +1159,110 @@ mod tests {
         assert!(shared.is_cached("a"), "4 threads × 25 bytes ≥ 100-byte dataset");
         let state = shared.with(|m| m.registry.get("a").unwrap().state.clone());
         assert_eq!(state, DatasetState::Cached);
+    }
+
+    #[test]
+    fn snapshot_mirrors_every_mark_path() {
+        let mut m = manager(2, 10_000, EvictionPolicy::Manual);
+        m.register(ds("a", 10, 1000), "nfs://s/a".into()).unwrap();
+        assert!(m.residency_snapshot("a").is_err(), "no snapshot before placement");
+        m.place("a", vec![NodeId(0), NodeId(1)]).unwrap();
+        let snap = m.residency_snapshot("a").unwrap();
+        assert_eq!(snap.geometry().num_chunks(), 2);
+        assert_eq!(snap.marked_chunks(), 0);
+        assert!(!snap.is_full() && !snap.retired());
+
+        // mark_chunks path.
+        m.mark_chunks("a", [1u64]).unwrap();
+        assert!(snap.contains(1) && !snap.contains(0));
+        // mark_item path: items are 100 B, chunk 0 covers items 0..5 —
+        // crediting all five marks chunk 0 and flips the snapshot full.
+        for i in 0..5u64 {
+            m.mark_item("a", i).unwrap();
+        }
+        assert!(snap.contains(0));
+        assert!(snap.is_full(), "all chunks marked ⇒ snapshot full");
+        assert_eq!(m.registry.get("a").unwrap().state, DatasetState::Cached);
+
+        // prefetch_tick path, on a fresh dataset.
+        m.register(ds("b", 10, 1000), "nfs://s/b".into()).unwrap();
+        m.place("b", vec![NodeId(0), NodeId(1)]).unwrap();
+        let snap_b = m.residency_snapshot("b").unwrap();
+        m.prefetch_tick("b", 499).unwrap();
+        assert!(!snap_b.contains(0), "front mid-chunk: nothing marked yet");
+        m.prefetch_tick("b", 1).unwrap();
+        assert!(snap_b.contains(0), "front crossed the chunk boundary");
+        m.prefetch_tick("b", 500).unwrap();
+        assert!(snap_b.is_full());
+    }
+
+    #[test]
+    fn snapshot_agrees_with_locked_lane_and_retires_on_evict() {
+        let mut m = manager(3, 100_000, EvictionPolicy::Manual);
+        m.register(ds("a", 37, 10_007), "nfs://s/a".into()).unwrap();
+        m.place("a", vec![NodeId(0), NodeId(1), NodeId(2)]).unwrap();
+        m.mark_chunks("a", [0u64, 2]).unwrap();
+        m.mark_item("a", 17).unwrap();
+        let snap = m.residency_snapshot("a").unwrap();
+        for item in 0..37u64 {
+            for reader in 0..3 {
+                let r = NodeId(reader);
+                assert_eq!(
+                    snap.read_location(item, r),
+                    Some(m.read_location("a", item, r).unwrap()),
+                    "item {item} reader {reader}"
+                );
+                assert_eq!(
+                    snap.read_plan(item, r),
+                    Some(m.read_plan("a", item, r).unwrap()),
+                    "item {item} reader {reader}"
+                );
+            }
+        }
+        m.evict("a").unwrap();
+        assert!(snap.retired(), "evict must retire the published snapshot");
+        assert_eq!(snap.read_location(0, NodeId(0)), None, "retired ⇒ fall back");
+        assert_eq!(snap.read_plan(0, NodeId(0)), None);
+        assert!(m.residency_snapshot("a").is_err(), "placement gone");
+        // Re-placement publishes a fresh, empty snapshot.
+        m.place("a", vec![NodeId(0)]).unwrap();
+        let fresh = m.residency_snapshot("a").unwrap();
+        assert!(!fresh.retired());
+        assert_eq!(fresh.marked_chunks(), 0);
+    }
+
+    #[test]
+    fn snapshot_retired_on_node_failure() {
+        let mut m = manager(2, 10_000, EvictionPolicy::Manual);
+        m.register(ds("a", 10, 1000), "nfs://s/a".into()).unwrap();
+        m.place("a", vec![NodeId(0), NodeId(1)]).unwrap();
+        let snap = m.residency_snapshot("a").unwrap();
+        m.fail_node(NodeId(1));
+        assert!(snap.retired(), "losing a stripe member retires the snapshot");
+    }
+
+    #[test]
+    fn read_plan_coalesces_adjacent_same_location_runs() {
+        // 1 item of 1000 B over 1 node ⇒ chunk = 1000/1 … force several
+        // chunks on one node instead: single-node stripe, chunk 250 ⇒ all
+        // four chunks home on node 0 and coalesce into one run per
+        // residency class.
+        let mut m = manager(1, 10_000, EvictionPolicy::Manual);
+        m.chunk_bytes = 250;
+        m.register(ds("a", 1, 1000), "nfs://s/a".into()).unwrap();
+        m.place("a", vec![NodeId(0)]).unwrap();
+        m.mark_chunks("a", [0u64, 1]).unwrap();
+        let plan = m.read_plan("a", 0, NodeId(0)).unwrap();
+        assert_eq!(plan.segments.len(), 4);
+        let runs = plan.coalesced();
+        assert_eq!(
+            runs,
+            vec![
+                (0..500, ReadLocation::Local),
+                (500..1000, ReadLocation::RemoteFill { fill_node: NodeId(0) }),
+            ]
+        );
+        assert_eq!(runs.iter().map(|(r, _)| r.end - r.start).sum::<u64>(), plan.len_bytes());
     }
 
     #[test]

@@ -4,8 +4,10 @@
 //! hyper-parameter sweeps hit warm data.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::cache::stripe::{ChunkSet, StripeMap};
+use crate::cache::ResidencySnapshot;
 use crate::workload::DatasetSpec;
 
 /// Life-cycle states (§3.1/§3.2).
@@ -36,6 +38,10 @@ pub struct DatasetRecord {
     pub url: String,
     pub state: DatasetState,
     pub stripe: Option<StripeMap>,
+    /// Lock-free mirror of the `Caching` bitmap, published at placement
+    /// and retired on evict/failure — the warm path's fast lane
+    /// ([`ResidencySnapshot`]). `Some` ⇔ `stripe` is `Some`.
+    pub snapshot: Option<Arc<ResidencySnapshot>>,
     /// Logical clock of the last job access (drives dataset-granular LRU).
     pub last_access: u64,
     /// Jobs currently mounting this dataset (pinned ⇒ not evictable).
@@ -122,6 +128,7 @@ impl Registry {
             url,
             state: DatasetState::Registered,
             stripe: None,
+            snapshot: None,
             last_access: self.clock,
             pin_count: 0,
             spec,

@@ -297,6 +297,14 @@ impl ChunkSet {
         self.marked == self.num_chunks
     }
 
+    /// The sequential fill front: the first unmarked chunk (== `num_chunks`
+    /// when full). Every chunk below the front is marked, which is what
+    /// lets `prefetch_tick` mirror front advances into the lock-free
+    /// residency snapshot as a contiguous range.
+    pub fn front(&self) -> u64 {
+        self.front
+    }
+
     pub fn marked_chunks(&self) -> u64 {
         self.marked
     }

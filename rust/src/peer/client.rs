@@ -18,6 +18,7 @@
 use std::collections::VecDeque;
 use std::net::{SocketAddr, TcpStream};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -40,6 +41,10 @@ pub struct PeerClient {
     /// One bucket per peer link when NIC throttling is on.
     nic: Option<Vec<SharedTokenBucket>>,
     io_timeout: Duration,
+    /// Request/response round trips completed (batched or single) —
+    /// observability for the batching win: K chunks per batch move K
+    /// payloads over one round trip.
+    roundtrips: AtomicU64,
 }
 
 impl PeerClient {
@@ -47,7 +52,13 @@ impl PeerClient {
     /// Connections are dialed lazily on first use.
     pub fn connect(peers: Vec<SocketAddr>) -> Self {
         let pool = peers.iter().map(|_| Mutex::new(Vec::new())).collect();
-        PeerClient { peers, pool, nic: None, io_timeout: super::server::DEFAULT_IO_TIMEOUT }
+        PeerClient {
+            peers,
+            pool,
+            nic: None,
+            io_timeout: super::server::DEFAULT_IO_TIMEOUT,
+            roundtrips: AtomicU64::new(0),
+        }
     }
 
     /// Throttle every peer link to `bytes_per_s` (one token bucket per
@@ -70,6 +81,13 @@ impl PeerClient {
 
     pub fn num_peers(&self) -> usize {
         self.peers.len()
+    }
+
+    /// Wire request/response round trips completed so far (one per
+    /// `GetChunk` *or* per whole `GetChunkBatch` — the quantity batching
+    /// collapses).
+    pub fn wire_roundtrips(&self) -> u64 {
+        self.roundtrips.load(Ordering::Relaxed)
     }
 
     fn dial(&self, peer: NodeId) -> Result<TcpStream> {
@@ -98,6 +116,33 @@ impl PeerClient {
         }
     }
 
+    /// One request/response over a pooled connection (dialing lazily; a
+    /// stale pooled connection — the server idle-closed it — is detected
+    /// by the failed round trip and retried once on a fresh dial).
+    fn pooled_request(&self, peer: NodeId, req: &Frame) -> Result<(TcpStream, Frame)> {
+        if peer.0 >= self.peers.len() {
+            bail!("no peer address for node{}", peer.0);
+        }
+        let pooled = self.pool[peer.0].lock().unwrap().pop();
+        let out = match pooled {
+            Some(mut s) => match Self::roundtrip(&mut s, req) {
+                Ok(r) => (s, r),
+                Err(_) => {
+                    let mut fresh = self.dial(peer)?;
+                    let r = Self::roundtrip(&mut fresh, req)?;
+                    (fresh, r)
+                }
+            },
+            None => {
+                let mut fresh = self.dial(peer)?;
+                let r = Self::roundtrip(&mut fresh, req)?;
+                (fresh, r)
+            }
+        };
+        self.roundtrips.fetch_add(1, Ordering::Relaxed);
+        Ok(out)
+    }
+
     /// Request one chunk (`grid_bytes > 0`) or one item file
     /// (`grid_bytes == 0`, `chunk` = item index) from `peer`.
     /// `Ok(None)` ⇔ the peer answered `NotResident`.
@@ -108,28 +153,8 @@ impl PeerClient {
         grid_bytes: u64,
         chunk: u64,
     ) -> Result<Option<Vec<u8>>> {
-        if peer.0 >= self.peers.len() {
-            bail!("no peer address for node{}", peer.0);
-        }
         let req = Frame::GetChunk { dataset_id, chunk, grid_bytes };
-        let pooled = self.pool[peer.0].lock().unwrap().pop();
-        let (sock, resp) = match pooled {
-            Some(mut s) => match Self::roundtrip(&mut s, &req) {
-                Ok(r) => (s, r),
-                Err(_) => {
-                    // The pooled connection went stale (server idle-closed
-                    // it under its read timeout): one retry on a fresh dial.
-                    let mut fresh = self.dial(peer)?;
-                    let r = Self::roundtrip(&mut fresh, &req)?;
-                    (fresh, r)
-                }
-            },
-            None => {
-                let mut fresh = self.dial(peer)?;
-                let r = Self::roundtrip(&mut fresh, &req)?;
-                (fresh, r)
-            }
-        };
+        let (sock, resp) = self.pooled_request(peer, &req)?;
         match resp {
             Frame::ChunkData(bytes) => {
                 if let Some(nic) = &self.nic {
@@ -148,7 +173,53 @@ impl PeerClient {
                 self.checkin(peer, sock);
                 bail!("peer node{} error: {msg}", peer.0)
             }
-            Frame::GetChunk { .. } => bail!("peer node{} answered with a request frame", peer.0),
+            _ => bail!("peer node{} answered GetChunk with the wrong frame kind", peer.0),
+        }
+    }
+
+    /// Request `chunks.len()` chunks of one dataset from `peer` in a
+    /// single round of framing. Entry `i` answers `chunks[i]`; `None` ⇔
+    /// the peer does not hold that chunk. The whole batch costs one RTT
+    /// instead of `chunks.len()` serial `get_chunk` calls.
+    pub fn get_chunk_batch(
+        &self,
+        peer: NodeId,
+        dataset_id: u64,
+        grid_bytes: u64,
+        chunks: &[u64],
+    ) -> Result<Vec<Option<Vec<u8>>>> {
+        if chunks.is_empty() {
+            return Ok(vec![]);
+        }
+        if chunks.len() > proto::MAX_BATCH {
+            bail!("batch of {} chunks exceeds cap {}", chunks.len(), proto::MAX_BATCH);
+        }
+        let req = Frame::GetChunkBatch { dataset_id, grid_bytes, chunks: chunks.to_vec() };
+        let (sock, resp) = self.pooled_request(peer, &req)?;
+        match resp {
+            Frame::ChunkBatchData(entries) => {
+                if entries.len() != chunks.len() {
+                    // Entry misalignment is a protocol violation: drop the
+                    // connection rather than pool it.
+                    bail!(
+                        "peer node{} answered {} entries to a batch of {}",
+                        peer.0,
+                        entries.len(),
+                        chunks.len()
+                    );
+                }
+                if let Some(nic) = &self.nic {
+                    let total: u64 = entries.iter().flatten().map(|b| b.len() as u64).sum();
+                    nic[peer.0].acquire(total);
+                }
+                self.checkin(peer, sock);
+                Ok(entries)
+            }
+            Frame::Error(msg) => {
+                self.checkin(peer, sock);
+                bail!("peer node{} error: {msg}", peer.0)
+            }
+            _ => bail!("peer node{} answered GetChunkBatch with the wrong frame kind", peer.0),
         }
     }
 }
@@ -230,6 +301,15 @@ impl SocketTransport {
         stats.peer_net_bytes += bytes.len() as u64;
         stats.peer_net_reads += 1;
     }
+
+    /// Slice `offset..offset+len` out of a whole-chunk payload, erroring
+    /// (never panicking) on a short payload from a buggy/hostile peer.
+    fn slice_range(payload: &[u8], c: u64, offset: u64, len: u64) -> Result<Vec<u8>> {
+        if (payload.len() as u64) < offset + len {
+            bail!("chunk {c} payload is {} bytes, need {offset}+{len}", payload.len());
+        }
+        Ok(payload[offset as usize..(offset + len) as usize].to_vec())
+    }
 }
 
 impl ChunkTransport for SocketTransport {
@@ -263,6 +343,60 @@ impl ChunkTransport for SocketTransport {
             }
             None => Ok(None),
         }
+    }
+
+    /// One `GetChunkBatch` round trip for every cache-missing chunk of the
+    /// run (the wire unit stays the whole chunk; ranges are sliced
+    /// locally). Wire accounting stays exact: each transferred payload is
+    /// one `peer_net_read` of its full byte size, same as the unbatched
+    /// path — only the framing round trips collapse.
+    fn fetch_chunk_ranges(
+        &self,
+        _cluster: &RealCluster,
+        geom: &ChunkGeometry,
+        reqs: &[(u64, u64, u64)],
+        _reader: NodeId,
+        stats: &mut ReadStats,
+    ) -> Result<Vec<Option<Vec<u8>>>> {
+        if reqs.is_empty() {
+            return Ok(vec![]);
+        }
+        let home = geom.node_of_chunk(reqs[0].0);
+        debug_assert!(
+            reqs.iter().all(|&(c, _, _)| geom.node_of_chunk(c) == home),
+            "a batch must target one serving node"
+        );
+        let mut out: Vec<Option<Vec<u8>>> = Vec::with_capacity(reqs.len());
+        out.resize_with(reqs.len(), || None);
+        // Local chunk-cache hits first: no wire traffic, no accounting.
+        let mut miss_idx = Vec::with_capacity(reqs.len());
+        let mut miss_chunks = Vec::with_capacity(reqs.len());
+        for (k, &(c, off, len)) in reqs.iter().enumerate() {
+            if let Some(cache) = &self.cache {
+                if let Some(hit) = cache.get(&(geom.dataset_id, geom.chunk_bytes(), c)) {
+                    out[k] = Some(Self::slice_range(&hit, c, off, len)?);
+                    continue;
+                }
+            }
+            miss_idx.push(k);
+            miss_chunks.push(c);
+        }
+        if miss_chunks.is_empty() {
+            return Ok(out);
+        }
+        let got =
+            self.client.get_chunk_batch(home, geom.dataset_id, geom.chunk_bytes(), &miss_chunks)?;
+        for (k, payload) in miss_idx.into_iter().zip(got) {
+            let (c, off, len) = reqs[k];
+            if let Some(bytes) = payload {
+                Self::account(stats, &bytes);
+                out[k] = Some(Self::slice_range(&bytes, c, off, len)?);
+                if let Some(cache) = &self.cache {
+                    cache.put((geom.dataset_id, geom.chunk_bytes(), c), Arc::new(bytes));
+                }
+            }
+        }
+        Ok(out)
     }
 
     fn fetch_item(
@@ -332,5 +466,36 @@ mod tests {
     fn unknown_peer_is_an_error() {
         let client = PeerClient::connect(vec![]);
         assert!(client.get_chunk(NodeId(0), 1, 100, 0).is_err());
+        assert!(client.get_chunk_batch(NodeId(0), 1, 100, &[0]).is_err());
+        // Empty batches never touch the wire, even with no peers.
+        assert_eq!(client.get_chunk_batch(NodeId(0), 1, 100, &[]).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn get_chunk_batch_one_roundtrip_mixed_residency() {
+        let dir = tmpdir("batch");
+        let mk = |c: u64| -> Vec<u8> { (0..100 + c as usize).map(|b| (b % 251) as u8).collect() };
+        for c in [0u64, 2] {
+            let rel = chunk_rel_path(9, 64, c);
+            std::fs::create_dir_all(dir.join(&rel).parent().unwrap()).unwrap();
+            std::fs::write(dir.join(&rel), mk(c)).unwrap();
+        }
+        let mut srv = PeerServer::start("127.0.0.1:0", dir.clone()).unwrap();
+        let client = PeerClient::connect(vec![srv.addr]);
+        let before = client.wire_roundtrips();
+        let got = client.get_chunk_batch(NodeId(0), 9, 64, &[0, 1, 2]).unwrap();
+        assert_eq!(got, vec![Some(mk(0)), None, Some(mk(2))]);
+        assert_eq!(
+            client.wire_roundtrips(),
+            before + 1,
+            "three chunks, mixed residency, exactly one round trip"
+        );
+        // The connection stays pooled and serves singles afterwards.
+        assert_eq!(client.get_chunk(NodeId(0), 9, 64, 0).unwrap(), Some(mk(0)));
+        // Over-cap batches are client-side errors before any wire traffic.
+        let too_many: Vec<u64> = (0..=crate::peer::proto::MAX_BATCH as u64).collect();
+        assert!(client.get_chunk_batch(NodeId(0), 9, 64, &too_many).is_err());
+        srv.stop();
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

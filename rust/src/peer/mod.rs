@@ -28,7 +28,7 @@ pub mod server;
 
 pub use client::{PeerClient, SocketTransport};
 pub use proto::Frame;
-pub use server::{PeerServer, DEFAULT_IO_TIMEOUT};
+pub use server::{PeerServer, DEFAULT_IO_TIMEOUT, DEFAULT_MAX_CONNS};
 
 use std::path::Path;
 
@@ -85,6 +85,29 @@ pub trait ChunkTransport: Send + Sync {
             }
             None => Ok(None),
         }
+    }
+
+    /// Batched ranged reads, all from **one** serving node: every
+    /// `(chunk, offset, len)` request must be homed on the same node
+    /// (`geom.node_of_chunk`). Entry `i` of the result aligns with request
+    /// `i`; `None` ⇔ that chunk is not held by its home. The default runs
+    /// the requests serially through [`ChunkTransport::fetch_chunk_range`]
+    /// — bit-identical bytes and accounting for [`DirTransport`] — while
+    /// [`SocketTransport`](client::SocketTransport) overrides it with a
+    /// single `GetChunkBatch` wire round trip, so a reader pulling K
+    /// chunks from one peer pays one round of framing instead of K serial
+    /// RTTs.
+    fn fetch_chunk_ranges(
+        &self,
+        cluster: &RealCluster,
+        geom: &ChunkGeometry,
+        reqs: &[(u64, u64, u64)],
+        reader: NodeId,
+        stats: &mut ReadStats,
+    ) -> Result<Vec<Option<Vec<u8>>>> {
+        reqs.iter()
+            .map(|&(c, off, len)| self.fetch_chunk_range(cluster, geom, c, off, len, reader, stats))
+            .collect()
     }
 
     /// Fetch a whole peer *item file* (whole-file striping mode) from

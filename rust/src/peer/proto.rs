@@ -7,12 +7,22 @@
 //! [u32 body_len][u8 tag][payload…]          body_len = 1 + payload length
 //! ```
 //!
-//! | tag | frame         | payload                                        |
-//! |-----|---------------|------------------------------------------------|
-//! | 1   | `GetChunk`    | `u64 dataset_id`, `u64 chunk`, `u64 grid_bytes`|
-//! | 2   | `ChunkData`   | the raw chunk (or item-file) bytes             |
-//! | 3   | `NotResident` | empty                                          |
-//! | 4   | `Error`       | UTF-8 message                                  |
+//! | tag | frame            | payload                                            |
+//! |-----|------------------|----------------------------------------------------|
+//! | 1   | `GetChunk`       | `u64 dataset_id`, `u64 chunk`, `u64 grid_bytes`    |
+//! | 2   | `ChunkData`      | the raw chunk (or item-file) bytes                 |
+//! | 3   | `NotResident`    | empty                                              |
+//! | 4   | `Error`          | UTF-8 message                                      |
+//! | 5   | `GetChunkBatch`  | `u64 dataset_id`, `u64 grid_bytes`, `u32 n`, `n × u64 chunk` |
+//! | 6   | `ChunkBatchData` | `u32 n`, then per entry `u8 present` (+ `u64 len`, bytes when present) |
+//!
+//! The batch pair is the pipelined request path: a reader pulling K chunks
+//! from one peer sends one `GetChunkBatch` and gets one `ChunkBatchData`
+//! back — one round of framing instead of K serial request/response RTTs.
+//! Batch entries align with the request's chunk list; `present = 0` is the
+//! per-chunk `NotResident`. A batch response still obeys [`MAX_FRAME`]
+//! (the server answers `Error` when the combined payload would not fit),
+//! and batch sizes are capped at [`MAX_BATCH`] before any allocation.
 //!
 //! `GetChunk { grid_bytes: 0 }` ([`ITEM_GRID`]) addresses a whole *item
 //! file* instead of a stripe chunk — `chunk` is then the item index and
@@ -38,10 +48,17 @@ pub const MAX_FRAME: usize = 256 << 20;
 /// mode); `chunk` is then the item index.
 pub const ITEM_GRID: u64 = 0;
 
+/// Hard cap on chunks per batch frame: enough for any item's chunk span,
+/// small enough that a hostile count prefix cannot force a large
+/// allocation before validation.
+pub const MAX_BATCH: usize = 4096;
+
 const TAG_GET_CHUNK: u8 = 1;
 const TAG_CHUNK_DATA: u8 = 2;
 const TAG_NOT_RESIDENT: u8 = 3;
 const TAG_ERROR: u8 = 4;
+const TAG_GET_CHUNK_BATCH: u8 = 5;
+const TAG_CHUNK_BATCH_DATA: u8 = 6;
 
 /// One protocol frame. Requests are always `GetChunk`; the other three are
 /// responses.
@@ -58,6 +75,12 @@ pub enum Frame {
     NotResident,
     /// Request-level failure (bad request, local I/O error).
     Error(String),
+    /// "Send me these chunks of dataset `dataset_id` under the
+    /// `grid_bytes` grid" — K chunks, one round of framing.
+    GetChunkBatch { dataset_id: u64, grid_bytes: u64, chunks: Vec<u64> },
+    /// Batched response, entry `i` answering chunk `i` of the request
+    /// (`None` ⇔ that chunk is not resident on the serving node).
+    ChunkBatchData(Vec<Option<Vec<u8>>>),
 }
 
 /// Encode a frame (header + body).
@@ -78,6 +101,31 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
         Frame::Error(msg) => {
             body.push(TAG_ERROR);
             body.extend_from_slice(msg.as_bytes());
+        }
+        Frame::GetChunkBatch { dataset_id, grid_bytes, chunks } => {
+            assert!(chunks.len() <= MAX_BATCH, "batch of {} exceeds MAX_BATCH", chunks.len());
+            body.push(TAG_GET_CHUNK_BATCH);
+            body.extend_from_slice(&dataset_id.to_le_bytes());
+            body.extend_from_slice(&grid_bytes.to_le_bytes());
+            body.extend_from_slice(&(chunks.len() as u32).to_le_bytes());
+            for c in chunks {
+                body.extend_from_slice(&c.to_le_bytes());
+            }
+        }
+        Frame::ChunkBatchData(entries) => {
+            assert!(entries.len() <= MAX_BATCH, "batch of {} exceeds MAX_BATCH", entries.len());
+            body.push(TAG_CHUNK_BATCH_DATA);
+            body.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+            for e in entries {
+                match e {
+                    Some(bytes) => {
+                        body.push(1);
+                        body.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+                        body.extend_from_slice(bytes);
+                    }
+                    None => body.push(0),
+                }
+            }
         }
     }
     assert!(body.len() <= MAX_FRAME, "frame body {} exceeds MAX_FRAME", body.len());
@@ -113,6 +161,65 @@ pub fn decode(body: &[u8]) -> Result<Frame> {
             Ok(Frame::NotResident)
         }
         TAG_ERROR => Ok(Frame::Error(String::from_utf8_lossy(payload).into_owned())),
+        TAG_GET_CHUNK_BATCH => {
+            if payload.len() < 20 {
+                bail!("GetChunkBatch header needs 20 bytes, got {}", payload.len());
+            }
+            let word = |i: usize| u64::from_le_bytes(payload[i..i + 8].try_into().unwrap());
+            let count = u32::from_le_bytes(payload[16..20].try_into().unwrap()) as usize;
+            if count > MAX_BATCH {
+                bail!("batch of {count} exceeds cap {MAX_BATCH}");
+            }
+            if payload.len() != 20 + 8 * count {
+                bail!(
+                    "GetChunkBatch of {count} chunks must be {} bytes, got {}",
+                    20 + 8 * count,
+                    payload.len()
+                );
+            }
+            let chunks = (0..count).map(|k| word(20 + 8 * k)).collect();
+            Ok(Frame::GetChunkBatch { dataset_id: word(0), grid_bytes: word(8), chunks })
+        }
+        TAG_CHUNK_BATCH_DATA => {
+            if payload.len() < 4 {
+                bail!("ChunkBatchData header needs 4 bytes, got {}", payload.len());
+            }
+            let count = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+            if count > MAX_BATCH {
+                bail!("batch of {count} exceeds cap {MAX_BATCH}");
+            }
+            let mut entries = Vec::with_capacity(count);
+            let mut at = 4usize;
+            for k in 0..count {
+                let &marker = payload.get(at).with_context(|| format!("entry {k} truncated"))?;
+                at += 1;
+                match marker {
+                    0 => entries.push(None),
+                    1 => {
+                        let hdr = payload
+                            .get(at..at + 8)
+                            .with_context(|| format!("entry {k} length truncated"))?;
+                        let len = u64::from_le_bytes(hdr.try_into().unwrap());
+                        at += 8;
+                        // Bounded by the remaining (already framed) bytes
+                        // *before* any arithmetic or allocation, so a
+                        // hostile length can neither overflow the cursor
+                        // nor out-allocate the frame itself.
+                        if len > (payload.len() - at) as u64 {
+                            bail!("entry {k} payload truncated ({len} > remaining)");
+                        }
+                        let len = len as usize;
+                        entries.push(Some(payload[at..at + len].to_vec()));
+                        at += len;
+                    }
+                    m => bail!("entry {k} has unknown marker {m}"),
+                }
+            }
+            if at != payload.len() {
+                bail!("{} trailing bytes after {count} batch entries", payload.len() - at);
+            }
+            Ok(Frame::ChunkBatchData(entries))
+        }
         t => bail!("unknown frame tag {t}"),
     }
 }
@@ -157,7 +264,7 @@ mod tests {
     use crate::util::{prop::forall, Rng};
 
     fn arbitrary_frame(rng: &mut Rng) -> Frame {
-        match rng.gen_range(4) {
+        match rng.gen_range(6) {
             0 => Frame::GetChunk {
                 dataset_id: rng.next_u64(),
                 chunk: rng.next_u64(),
@@ -172,12 +279,33 @@ mod tests {
                 Frame::ChunkData(bytes)
             }
             2 => Frame::NotResident,
-            _ => {
+            3 => {
                 let n = rng.gen_range(64);
                 let msg: String =
                     (0..n).map(|_| (b'a' + (rng.gen_range(26) as u8)) as char).collect();
                 Frame::Error(msg)
             }
+            4 => Frame::GetChunkBatch {
+                dataset_id: rng.next_u64(),
+                grid_bytes: rng.next_u64(),
+                chunks: (0..rng.gen_range(17)).map(|_| rng.next_u64()).collect(),
+            },
+            _ => Frame::ChunkBatchData(
+                (0..rng.gen_range(9))
+                    .map(|_| {
+                        if rng.gen_range(3) == 0 {
+                            None
+                        } else {
+                            let n = rng.gen_range(512) as usize;
+                            let mut bytes = vec![0u8; n];
+                            for b in &mut bytes {
+                                *b = rng.next_u64() as u8;
+                            }
+                            Some(bytes)
+                        }
+                    })
+                    .collect(),
+            ),
         }
     }
 
@@ -243,6 +371,55 @@ mod tests {
     #[test]
     fn clean_eof_is_none() {
         assert_eq!(read_frame(&mut &[][..]).unwrap(), None);
+    }
+
+    #[test]
+    fn batch_count_cap_enforced_before_allocation() {
+        // A hostile batch count past MAX_BATCH is rejected up front.
+        let mut body = vec![TAG_GET_CHUNK_BATCH];
+        body.extend_from_slice(&[0u8; 16]);
+        body.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let err = decode(&body).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds cap"), "{err:#}");
+        let mut body = vec![TAG_CHUNK_BATCH_DATA];
+        body.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let err = decode(&body).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds cap"), "{err:#}");
+    }
+
+    #[test]
+    fn batch_entry_hostile_length_rejected() {
+        // One entry claiming u64::MAX payload bytes: rejected against the
+        // remaining frame bytes, no overflow, no allocation.
+        let mut body = vec![TAG_CHUNK_BATCH_DATA];
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.push(1);
+        body.extend_from_slice(&u64::MAX.to_le_bytes());
+        let err = decode(&body).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+    }
+
+    #[test]
+    fn batch_trailing_bytes_rejected() {
+        let mut buf = encode(&Frame::ChunkBatchData(vec![None, Some(vec![9, 9])]));
+        // Graft a stray byte into the body and patch the length prefix.
+        buf.push(0xAB);
+        let len = (buf.len() - 4) as u32;
+        buf[..4].copy_from_slice(&len.to_le_bytes());
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+    }
+
+    #[test]
+    fn empty_batch_roundtrips() {
+        for f in [
+            Frame::GetChunkBatch { dataset_id: 1, grid_bytes: 2, chunks: vec![] },
+            Frame::ChunkBatchData(vec![]),
+            Frame::ChunkBatchData(vec![None, Some(vec![]), None]),
+        ] {
+            let buf = encode(&f);
+            assert_eq!(read_frame(&mut buf.as_slice()).unwrap(), Some(f));
+        }
     }
 
     #[test]

@@ -25,7 +25,7 @@ use std::fs;
 use std::io;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
@@ -38,6 +38,23 @@ use crate::posix::throttle::SharedTokenBucket;
 /// Default socket read/write timeout: long enough for any real request,
 /// short enough that silent clients cannot pin handler threads.
 pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Default cap on concurrent handler threads: generous for any real
+/// reader fleet, finite so a connection flood cannot spawn unbounded
+/// threads. Connections over the cap are answered with a request-level
+/// `Error` frame and closed.
+pub const DEFAULT_MAX_CONNS: usize = 128;
+
+/// Counting gate over live handler threads: decrements on drop so a
+/// handler exit (clean, timeout, or panic unwind) always releases its
+/// slot.
+struct HandlerSlot(Arc<AtomicUsize>);
+
+impl Drop for HandlerSlot {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
 
 /// Resolver from item index to on-disk relative path, registered per
 /// dataset for whole-file (item-granular) serving.
@@ -66,12 +83,29 @@ impl PeerServer {
     /// Full-control constructor: `disk_bucket` is charged per served
     /// payload (pass the node's NVMe bucket so peer serving and local
     /// reads share one bandwidth model), `io_timeout` bounds how long a
-    /// silent or stuck connection may hold a handler thread.
+    /// silent or stuck connection may hold a handler thread. Handler
+    /// threads are capped at [`DEFAULT_MAX_CONNS`]
+    /// ([`PeerServer::start_with_limits`] to tune).
     pub fn start_with(
         addr: &str,
         node_dir: impl Into<PathBuf>,
         disk_bucket: Option<SharedTokenBucket>,
         io_timeout: Duration,
+    ) -> Result<PeerServer> {
+        Self::start_with_limits(addr, node_dir, disk_bucket, io_timeout, DEFAULT_MAX_CONNS)
+    }
+
+    /// [`PeerServer::start_with`] plus an explicit cap on concurrent
+    /// handler threads: once `max_conns` handlers are live, further
+    /// connections get a best-effort `Error` frame and are closed — a
+    /// connection flood degrades into polite rejections instead of
+    /// unbounded thread spawn.
+    pub fn start_with_limits(
+        addr: &str,
+        node_dir: impl Into<PathBuf>,
+        disk_bucket: Option<SharedTokenBucket>,
+        io_timeout: Duration,
+        max_conns: usize,
     ) -> Result<PeerServer> {
         let node_dir = node_dir.into();
         let listener = TcpListener::bind(addr)?;
@@ -82,6 +116,7 @@ impl PeerServer {
         let exports: Arc<RwLock<HashMap<u64, ItemPathFn>>> =
             Arc::new(RwLock::new(HashMap::new()));
         let (stop2, conns2, exports2) = (stop.clone(), conns.clone(), exports.clone());
+        let active: Arc<AtomicUsize> = Arc::new(AtomicUsize::new(0));
         let join = std::thread::spawn(move || {
             let mut next_id = 0u64;
             while !stop2.load(Ordering::Relaxed) {
@@ -90,6 +125,19 @@ impl PeerServer {
                         let _ = sock.set_read_timeout(Some(io_timeout));
                         let _ = sock.set_write_timeout(Some(io_timeout));
                         let _ = sock.set_nodelay(true);
+                        if active.load(Ordering::Acquire) >= max_conns {
+                            // Over the gate: answer a request-level Error
+                            // (best effort) and drop — never spawn.
+                            let mut sock = sock;
+                            let _ = proto::write_frame(
+                                &mut sock,
+                                &Frame::Error("server at connection capacity".into()),
+                            );
+                            let _ = sock.shutdown(Shutdown::Both);
+                            continue;
+                        }
+                        active.fetch_add(1, Ordering::AcqRel);
+                        let slot = HandlerSlot(active.clone());
                         let id = next_id;
                         next_id += 1;
                         if let Ok(clone) = sock.try_clone() {
@@ -101,6 +149,7 @@ impl PeerServer {
                         let stop = stop2.clone();
                         let conns = conns2.clone();
                         std::thread::spawn(move || {
+                            let _slot = slot;
                             let mut sock = sock;
                             serve_conn(&mut sock, &node_dir, &exports, bucket.as_ref(), &stop);
                             let _ = sock.shutdown(Shutdown::Both);
@@ -161,6 +210,51 @@ impl Drop for PeerServer {
     }
 }
 
+/// One chunk's resolution outcome, shared by the single and batched
+/// request paths.
+enum ChunkRead {
+    Data(Vec<u8>),
+    NotResident,
+    Fail(String),
+}
+
+/// Resolve and read one addressed payload off `node_dir`, charging
+/// `bucket` for served bytes (the node's simulated NVMe).
+fn read_chunk_payload(
+    node_dir: &Path,
+    exports: &RwLock<HashMap<u64, ItemPathFn>>,
+    bucket: Option<&SharedTokenBucket>,
+    dataset_id: u64,
+    grid_bytes: u64,
+    chunk: u64,
+) -> ChunkRead {
+    let rel = if grid_bytes > 0 {
+        Some(chunk_rel_path(dataset_id, grid_bytes, chunk))
+    } else {
+        exports.read().unwrap().get(&dataset_id).map(|f| f(chunk))
+    };
+    match rel {
+        None => ChunkRead::Fail(format!("dataset {dataset_id} has no item export on this node")),
+        Some(rel) => match fs::read(node_dir.join(&rel)) {
+            // A payload the codec cannot frame is a request error, never a
+            // handler panic (encode asserts).
+            Ok(bytes) if bytes.len() >= proto::MAX_FRAME => ChunkRead::Fail(format!(
+                "payload {} bytes exceeds the {} byte frame cap",
+                bytes.len(),
+                proto::MAX_FRAME
+            )),
+            Ok(bytes) => {
+                if let Some(b) = bucket {
+                    b.acquire(bytes.len() as u64);
+                }
+                ChunkRead::Data(bytes)
+            }
+            Err(e) if e.kind() == io::ErrorKind::NotFound => ChunkRead::NotResident,
+            Err(e) => ChunkRead::Fail(format!("read {}: {e}", rel.display())),
+        },
+    }
+}
+
 /// One connection's serve loop: frames in, frames out, until EOF, timeout,
 /// lost framing sync, or server shutdown.
 fn serve_conn(
@@ -180,35 +274,50 @@ fn serve_conn(
         };
         let resp = match frame {
             Frame::GetChunk { dataset_id, chunk, grid_bytes } => {
-                let rel = if grid_bytes > 0 {
-                    Some(chunk_rel_path(dataset_id, grid_bytes, chunk))
-                } else {
-                    exports.read().unwrap().get(&dataset_id).map(|f| f(chunk))
-                };
-                match rel {
-                    None => Frame::Error(format!(
-                        "dataset {dataset_id} has no item export on this node"
-                    )),
-                    Some(rel) => match fs::read(node_dir.join(&rel)) {
-                        // A payload the codec cannot frame is a request
-                        // error, never a handler panic (encode asserts).
-                        Ok(bytes) if bytes.len() >= proto::MAX_FRAME => Frame::Error(format!(
-                            "payload {} bytes exceeds the {} byte frame cap",
-                            bytes.len(),
-                            proto::MAX_FRAME
-                        )),
-                        Ok(bytes) => {
-                            if let Some(b) = bucket {
-                                b.acquire(bytes.len() as u64);
-                            }
-                            Frame::ChunkData(bytes)
-                        }
-                        Err(e) if e.kind() == io::ErrorKind::NotFound => Frame::NotResident,
-                        Err(e) => Frame::Error(format!("read {}: {e}", rel.display())),
-                    },
+                match read_chunk_payload(node_dir, exports, bucket, dataset_id, grid_bytes, chunk)
+                {
+                    ChunkRead::Data(bytes) => Frame::ChunkData(bytes),
+                    ChunkRead::NotResident => Frame::NotResident,
+                    ChunkRead::Fail(msg) => Frame::Error(msg),
                 }
             }
-            // Only GetChunk is a valid request frame.
+            Frame::GetChunkBatch { dataset_id, grid_bytes, chunks } => {
+                // One response frame for the whole batch. Any per-chunk
+                // I/O failure (or a combined payload the codec cannot
+                // frame) fails the batch as a request-level Error — the
+                // connection's framing stays intact either way.
+                let mut entries = Vec::with_capacity(chunks.len());
+                // Conservative body bound: tag + count + per-entry marker
+                // and length headers + payload bytes.
+                let mut body = 5 + 9 * chunks.len();
+                let mut failed = None;
+                for &c in &chunks {
+                    match read_chunk_payload(node_dir, exports, bucket, dataset_id, grid_bytes, c)
+                    {
+                        ChunkRead::Data(bytes) => {
+                            body += bytes.len();
+                            if body >= proto::MAX_FRAME {
+                                failed = Some(format!(
+                                    "batch payload exceeds the {} byte frame cap",
+                                    proto::MAX_FRAME
+                                ));
+                                break;
+                            }
+                            entries.push(Some(bytes));
+                        }
+                        ChunkRead::NotResident => entries.push(None),
+                        ChunkRead::Fail(msg) => {
+                            failed = Some(msg);
+                            break;
+                        }
+                    }
+                }
+                match failed {
+                    Some(msg) => Frame::Error(msg),
+                    None => Frame::ChunkBatchData(entries),
+                }
+            }
+            // Only GetChunk / GetChunkBatch are valid request frames.
             _ => Frame::Error("expected a GetChunk request".into()),
         };
         if proto::write_frame(sock, &resp).is_err() {

@@ -1,0 +1,105 @@
+//! A small pool of reusable byte buffers for the chunk data plane.
+//!
+//! Chunk fills and peer fetches used to allocate a fresh `Vec<u8>` per
+//! chunk (and a warm 8-reader epoch churns thousands of them). A
+//! [`BufPool`] keeps a bounded stack of cleared buffers so steady-state
+//! readers recycle chunk-sized allocations instead of hitting the
+//! allocator per chunk. The pool is deliberately simple: one mutex popped
+//! once per chunk (microseconds of file I/O dwarf it), bounded both in
+//! buffer count and per-buffer capacity so a pathological payload cannot
+//! pin memory forever.
+
+use std::sync::Mutex;
+
+/// Bounded stack of reusable buffers. `take` hands out an empty buffer
+/// (pooled or fresh); `put` returns it cleared, dropping it instead when
+/// the pool is full or the buffer outgrew the per-buffer cap.
+#[derive(Debug)]
+pub struct BufPool {
+    bufs: Mutex<Vec<Vec<u8>>>,
+    max_bufs: usize,
+    max_buf_bytes: usize,
+}
+
+impl BufPool {
+    /// Keep at most `max_bufs` buffers, each of at most `max_buf_bytes`
+    /// capacity (buffers that grew past the cap are dropped on `put`).
+    pub fn new(max_bufs: usize, max_buf_bytes: usize) -> Self {
+        BufPool { bufs: Mutex::new(Vec::new()), max_bufs, max_buf_bytes }
+    }
+
+    /// An empty buffer — recycled when the pool has one, fresh otherwise.
+    pub fn take(&self) -> Vec<u8> {
+        self.bufs.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return a buffer to the pool (cleared; capacity kept for reuse).
+    pub fn put(&self, mut buf: Vec<u8>) {
+        buf.clear();
+        if buf.capacity() == 0 || buf.capacity() > self.max_buf_bytes {
+            return;
+        }
+        let mut bufs = self.bufs.lock().unwrap();
+        if bufs.len() < self.max_bufs {
+            bufs.push(buf);
+        }
+    }
+
+    /// Buffers currently parked in the pool.
+    pub fn pooled(&self) -> usize {
+        self.bufs.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_recycles_capacity() {
+        let pool = BufPool::new(2, 1 << 20);
+        let mut a = pool.take();
+        assert_eq!(a.capacity(), 0, "fresh buffer from an empty pool");
+        a.extend_from_slice(&[1u8; 4096]);
+        let cap = a.capacity();
+        pool.put(a);
+        assert_eq!(pool.pooled(), 1);
+        let b = pool.take();
+        assert!(b.is_empty(), "pooled buffers come back cleared");
+        assert_eq!(b.capacity(), cap, "capacity survives the round trip");
+        assert_eq!(pool.pooled(), 0);
+    }
+
+    #[test]
+    fn bounds_respected() {
+        let pool = BufPool::new(1, 100);
+        // Over the per-buffer cap: dropped, not pooled.
+        pool.put(Vec::with_capacity(1000));
+        assert_eq!(pool.pooled(), 0);
+        // Zero-capacity buffers are not worth pooling.
+        pool.put(Vec::new());
+        assert_eq!(pool.pooled(), 0);
+        // Count cap: the second buffer is dropped.
+        pool.put(Vec::with_capacity(50));
+        pool.put(Vec::with_capacity(50));
+        assert_eq!(pool.pooled(), 1);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let pool = std::sync::Arc::new(BufPool::new(8, 1 << 16));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = pool.clone();
+                s.spawn(move || {
+                    for _ in 0..100 {
+                        let mut b = pool.take();
+                        b.resize(1024, 7);
+                        pool.put(b);
+                    }
+                });
+            }
+        });
+        assert!(pool.pooled() <= 8);
+    }
+}

@@ -4,10 +4,12 @@
 //! "remote store" directory — so the e2e example moves real bytes through
 //! the same placement/miss logic the simulations model.
 
+pub mod bufpool;
 pub mod reader_pool;
 pub mod realfs;
 pub mod throttle;
 
+pub use bufpool::BufPool;
 pub use reader_pool::{EpochReport, FillTable, ReaderPool, SharedMount};
 pub use realfs::{
     chunk_rel_path, ChunkedMount, HoardMount, LocalMount, Mount, ReadStats, RealCluster,

@@ -10,11 +10,23 @@
 //! get faster because we added readers — the cache does).
 //!
 //! Fetch-once is enforced by a [`FillTable`]: per-slot claim states
-//! (`Empty → InFlight → Done`) behind a mutex + condvar. The filler does
-//! its remote I/O **outside** the lock; concurrent readers of the same
-//! slot park on the condvar until the fill lands, so the remote store sees
-//! every slot exactly once no matter how many readers race — the Table 4
-//! fetch-once invariant, now under real concurrency.
+//! (`Empty → InFlight → Done`) sharded over S independent mutex+condvar
+//! pairs (slot `i` → shard `i mod S`). The filler does its remote I/O
+//! **outside** the lock; concurrent readers of the same slot park on their
+//! shard's condvar until the fill lands, so the remote store sees every
+//! slot exactly once no matter how many readers race — the Table 4
+//! fetch-once invariant, now under real concurrency and without a global
+//! lock or `notify_all` thundering herd on the warm path.
+//!
+//! Warm reads take the **fast lane**: residency resolves through the
+//! lock-free [`ResidencySnapshot`] (atomic loads, zero `RwLock`
+//! acquisitions — [`read_item_concurrent_fast`] /
+//! [`read_item_chunked_fast`]), items assemble single-copy into one
+//! preallocated buffer, chunk fills recycle buffers from a [`BufPool`],
+//! and resident chunks homed on the same peer are pulled with one batched
+//! [`ChunkTransport::fetch_chunk_ranges`] call per peer. The `RwLock`ed
+//! [`SharedCache`] stays the slow/fallback lane (cold bookkeeping,
+//! retired snapshots) and the differential-testing oracle.
 //!
 //! The table is keyed per `(dataset, chunk)`: in whole-file mode a "chunk"
 //! is an item (one slot per file, today's behaviour); in chunked mode
@@ -40,10 +52,11 @@
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
-use super::realfs::{chunk_rel_path, fetch_chunk_payload, ReadStats, RealCluster};
-use crate::cache::{ChunkGeometry, ReadLocation, SharedCache};
+use super::bufpool::BufPool;
+use super::realfs::{chunk_rel_path, fetch_chunk_payload_into, ReadStats, RealCluster};
+use crate::cache::{ChunkGeometry, ReadLocation, ResidencySnapshot, SharedCache};
 use crate::netsim::NodeId;
 use crate::peer::{ChunkTransport, DirTransport};
 use crate::util::Rng;
@@ -67,34 +80,102 @@ pub enum Claim {
     Resident,
 }
 
-/// Shared fetch-once ledger for one dataset.
+/// Shards per [`FillTable`]: slots spread round-robin over independently
+/// locked shards, so readers racing on *different* chunks rarely touch the
+/// same mutex, and a fill completion wakes at most one shard's waiters
+/// instead of the whole pool.
+const FILL_SHARDS: usize = 16;
+
 #[derive(Debug)]
-pub struct FillTable {
-    state: Mutex<Vec<FillState>>,
+struct FillShardState {
+    slots: Vec<FillState>,
+    /// Shard-local Done count, so [`FillTable::done_count`] sums S
+    /// counters instead of scanning every slot under one lock.
+    done: u64,
+    /// Threads currently parked on this shard's condvar — what makes
+    /// `notify_one`-where-safe decidable (see [`FillTable::complete`]).
+    waiters: u64,
+}
+
+#[derive(Debug)]
+struct FillShard {
+    state: Mutex<FillShardState>,
     cv: Condvar,
 }
 
+/// Shared fetch-once ledger for one dataset, sharded S ways: slot `i`
+/// lives in shard `i mod S`, each shard its own mutex + condvar. Claiming,
+/// completing and waiting only ever lock one shard, so the old global
+/// `Mutex<Vec<FillState>>` bottleneck (every reader of every chunk on one
+/// lock) and its `notify_all` thundering herd are both gone.
+///
+/// Wakeup policy (`notify_one`-where-safe): a completion with **zero**
+/// registered waiters on the shard skips the syscall entirely (the common
+/// warm case); with exactly **one** waiter it uses `notify_one` — even if
+/// that waiter is parked on a different slot of the shard it just
+/// re-checks and re-parks, and there is no second waiter to lose a wakeup
+/// to; with **several** waiters (which may be parked on different slots of
+/// this shard) only `notify_all` is correct, and the herd is bounded to
+/// the shard.
+#[derive(Debug)]
+pub struct FillTable {
+    shards: Vec<FillShard>,
+}
+
 impl FillTable {
-    pub fn new(num_items: u64) -> Self {
+    pub fn new(num_slots: u64) -> Self {
+        let s = FILL_SHARDS.min(num_slots.max(1) as usize);
+        let per_shard = (num_slots as usize).div_ceil(s);
         FillTable {
-            state: Mutex::new(vec![FillState::Empty; num_items as usize]),
-            cv: Condvar::new(),
+            shards: (0..s)
+                .map(|_| FillShard {
+                    state: Mutex::new(FillShardState {
+                        slots: vec![FillState::Empty; per_shard],
+                        done: 0,
+                        waiters: 0,
+                    }),
+                    cv: Condvar::new(),
+                })
+                .collect(),
         }
     }
 
-    /// Claim item `i` for filling, or wait until the in-flight fill lands.
-    /// Waiting releases the lock (condvar), so fillers are never blocked
-    /// by waiters.
+    /// Independently locked shards in this table.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_of(&self, i: u64) -> (&FillShard, usize) {
+        let s = self.shards.len() as u64;
+        (&self.shards[(i % s) as usize], (i / s) as usize)
+    }
+
+    fn wake(shard: &FillShard, st: &FillShardState) {
+        match st.waiters {
+            0 => {}
+            1 => shard.cv.notify_one(),
+            _ => shard.cv.notify_all(),
+        }
+    }
+
+    /// Claim slot `i` for filling, or wait until the in-flight fill lands.
+    /// Waiting releases the shard lock (condvar), so fillers are never
+    /// blocked by waiters.
     pub fn claim_or_wait(&self, i: u64) -> Claim {
-        let mut st = self.state.lock().unwrap();
+        let (shard, idx) = self.shard_of(i);
+        let mut st = shard.state.lock().unwrap();
         loop {
-            match st[i as usize] {
+            match st.slots[idx] {
                 FillState::Done => return Claim::Resident,
                 FillState::Empty => {
-                    st[i as usize] = FillState::InFlight;
+                    st.slots[idx] = FillState::InFlight;
                     return Claim::Filler;
                 }
-                FillState::InFlight => st = self.cv.wait(st).unwrap(),
+                FillState::InFlight => {
+                    st.waiters += 1;
+                    st = shard.cv.wait(st).unwrap();
+                    st.waiters -= 1;
+                }
             }
         }
     }
@@ -102,9 +183,10 @@ impl FillTable {
     /// Non-blocking claim (the prefetcher: skip items someone is already
     /// fetching). `true` ⇒ caller owns the fill.
     pub fn try_claim(&self, i: u64) -> bool {
-        let mut st = self.state.lock().unwrap();
-        if st[i as usize] == FillState::Empty {
-            st[i as usize] = FillState::InFlight;
+        let (shard, idx) = self.shard_of(i);
+        let mut st = shard.state.lock().unwrap();
+        if st.slots[idx] == FillState::Empty {
+            st.slots[idx] = FillState::InFlight;
             true
         } else {
             false
@@ -112,14 +194,24 @@ impl FillTable {
     }
 
     pub fn complete(&self, i: u64) {
-        *self.state.lock().unwrap().get_mut(i as usize).unwrap() = FillState::Done;
-        self.cv.notify_all();
+        let (shard, idx) = self.shard_of(i);
+        let mut st = shard.state.lock().unwrap();
+        if st.slots[idx] != FillState::Done {
+            st.slots[idx] = FillState::Done;
+            st.done += 1;
+        }
+        Self::wake(shard, &st);
     }
 
     /// Roll a failed fill back to `Empty` so another reader can retry.
     pub fn abort(&self, i: u64) {
-        *self.state.lock().unwrap().get_mut(i as usize).unwrap() = FillState::Empty;
-        self.cv.notify_all();
+        let (shard, idx) = self.shard_of(i);
+        let mut st = shard.state.lock().unwrap();
+        if st.slots[idx] == FillState::Done {
+            st.done -= 1;
+        }
+        st.slots[idx] = FillState::Empty;
+        Self::wake(shard, &st);
     }
 
     /// Mark an item resident without a fill (found on disk).
@@ -127,8 +219,9 @@ impl FillTable {
         self.complete(i);
     }
 
+    /// Slots in `Done` — an O(shards) counter sum, not an O(slots) scan.
     pub fn done_count(&self) -> u64 {
-        self.state.lock().unwrap().iter().filter(|s| **s == FillState::Done).count() as u64
+        self.shards.iter().map(|s| s.state.lock().unwrap().done).sum()
     }
 }
 
@@ -180,6 +273,28 @@ pub fn read_item_concurrent(
     )
 }
 
+/// Resolve the serving home of item `i`: through the lock-free residency
+/// snapshot when one is live (plain atomic loads — the warm fast lane),
+/// through the `RwLock`ed cache otherwise (the slow/fallback lane; also
+/// taken when the snapshot retires mid-epoch, e.g. on eviction).
+fn resolve_item_home(
+    cache: &SharedCache,
+    residency: Option<&ResidencySnapshot>,
+    dataset: &str,
+    i: u64,
+    reader: NodeId,
+) -> Result<NodeId> {
+    let loc = match residency.and_then(|s| s.read_location(i, reader)) {
+        Some(loc) => loc,
+        None => cache.read_location(dataset, i, reader)?,
+    };
+    Ok(match loc {
+        ReadLocation::Local => reader,
+        ReadLocation::Peer(p) => p,
+        ReadLocation::RemoteFill { fill_node } => fill_node,
+    })
+}
+
 /// Read item `i` through the concurrent Hoard path: resolve the home node
 /// via the shared cache, consult the fill table, and either serve from the
 /// home node (local disk, or `transport` for non-local homes) or own the
@@ -200,12 +315,31 @@ pub fn read_item_concurrent_via(
     reader: NodeId,
     stats: &mut ReadStats,
 ) -> Result<Vec<u8>> {
+    read_item_concurrent_fast(
+        cluster, cache, fill, transport, None, dataset_id, dataset, cfg, i, reader, stats,
+    )
+}
+
+/// [`read_item_concurrent_via`] with the warm fast lane: when `residency`
+/// holds a live [`ResidencySnapshot`], location resolution is pure atomic
+/// loads — zero `RwLock` acquisitions per read (the [`ReaderPool`] passes
+/// its per-epoch snapshot here).
+#[allow(clippy::too_many_arguments)]
+pub fn read_item_concurrent_fast(
+    cluster: &RealCluster,
+    cache: &SharedCache,
+    fill: &FillTable,
+    transport: &dyn ChunkTransport,
+    residency: Option<&ResidencySnapshot>,
+    dataset_id: u64,
+    dataset: &str,
+    cfg: &DataGenConfig,
+    i: u64,
+    reader: NodeId,
+    stats: &mut ReadStats,
+) -> Result<Vec<u8>> {
     let rel = cfg.item_rel_path(i);
-    let home = match cache.read_location(dataset, i, reader)? {
-        ReadLocation::Local => reader,
-        ReadLocation::Peer(p) => p,
-        ReadLocation::RemoteFill { fill_node } => fill_node,
-    };
+    let home = resolve_item_home(cache, residency, dataset, i, reader)?;
     // Serve from the home node: local homes read their own disk, non-local
     // homes go through the transport (every non-local byte does).
     let serve = |stats: &mut ReadStats| -> Result<Option<Vec<u8>>> {
@@ -227,11 +361,15 @@ pub fn read_item_concurrent_via(
         Claim::Filler => {
             // File presence is authoritative (items may predate this pool,
             // e.g. a warm run over existing cache dirs): adopt it in both
-            // the fill table and the residency bitmap (idempotent).
+            // the fill table and the residency bitmap (idempotent). When
+            // the lock-free bitmap already records the item, the exclusive
+            // registry lock is skipped entirely.
             match serve(stats) {
                 Ok(Some(data)) => {
                     fill.mark_resident(i);
-                    cache.mark_item(dataset, i)?;
+                    if !residency.and_then(|s| s.item_resident(i)).unwrap_or(false) {
+                        cache.mark_item(dataset, i)?;
+                    }
                     Ok(data)
                 }
                 Ok(None) => match fill_from_remote(cluster, cache, dataset, cfg, i, home, stats)
@@ -362,88 +500,205 @@ pub fn read_item_chunked_via(
     reader: NodeId,
     stats: &mut ReadStats,
 ) -> Result<Vec<u8>> {
+    read_item_chunked_fast(
+        cluster, cache, fill, transport, None, None, dataset, cfg, geom, i, reader, stats,
+    )
+}
+
+/// One pooled remote fill: fetch + persist chunk `c` through a reusable
+/// buffer (from `bufs` when provided), record residency, and land the
+/// `offset..offset+dst.len()` slice of the payload in `dst`.
+#[allow(clippy::too_many_arguments)]
+fn refill_segment(
+    cluster: &RealCluster,
+    cache: &SharedCache,
+    bufs: Option<&BufPool>,
+    dataset: &str,
+    cfg: &DataGenConfig,
+    geom: &ChunkGeometry,
+    c: u64,
+    offset: u64,
+    dst: &mut [u8],
+    stats: &mut ReadStats,
+) -> Result<()> {
+    let mut buf = bufs.map(|b| b.take()).unwrap_or_default();
+    let result = fetch_chunk_payload_into(cluster, cfg, geom, c, &mut buf, stats).and_then(|()| {
+        cache.mark_chunks(dataset, &[c])?;
+        dst.copy_from_slice(&buf[offset as usize..offset as usize + dst.len()]);
+        Ok(())
+    });
+    if let Some(b) = bufs {
+        b.put(buf);
+    }
+    result
+}
+
+/// [`read_item_chunked_via`] with the full warm fast lane, the path
+/// [`ReaderPool`] reader threads run:
+///
+///  * **single-copy assembly** — the item buffer is allocated once and
+///    every resident local segment is read straight into its final
+///    position ([`RealCluster::read_node_range_into_sharded`]); remote
+///    fills go through a reusable [`BufPool`] buffer instead of a fresh
+///    `Vec` per chunk;
+///  * **batched peer fetches** — resident non-local chunks are grouped by
+///    home node during the claim walk and pulled with one
+///    [`ChunkTransport::fetch_chunk_ranges`] call per peer (one wire round
+///    trip per peer for `SocketTransport`, bit-identical serial reads for
+///    `DirTransport`). Filler chunks are handled inline, exactly as
+///    before, so no Filler claim is ever held across a blocking
+///    `claim_or_wait` — the fetch-once protocol stays deadlock-free by
+///    construction;
+///  * **snapshot-aware adoption** — when the lock-free `residency` bitmap
+///    already records an adopted chunk, the exclusive registry lock is
+///    skipped.
+#[allow(clippy::too_many_arguments)]
+pub fn read_item_chunked_fast(
+    cluster: &RealCluster,
+    cache: &SharedCache,
+    fill: &FillTable,
+    transport: &dyn ChunkTransport,
+    residency: Option<&ResidencySnapshot>,
+    bufs: Option<&BufPool>,
+    dataset: &str,
+    cfg: &DataGenConfig,
+    geom: &ChunkGeometry,
+    i: u64,
+    reader: NodeId,
+    stats: &mut ReadStats,
+) -> Result<Vec<u8>> {
+    let residency = residency.filter(|s| !s.retired());
     let (s, e) = geom.item_range(i);
-    let mut out = Vec::with_capacity((e - s) as usize);
+    let mut out = vec![0u8; (e - s) as usize];
+    // Deferred resident non-local segments, grouped per home node in
+    // first-encounter order: (home, [(chunk, chunk_off, out_pos, len)]).
+    let mut batches: Vec<(NodeId, Vec<(u64, u64, usize, u64)>)> = Vec::new();
     for c in geom.chunks_of_item(i) {
-        let crel = chunk_rel_path(geom.dataset_id, geom.chunk_bytes(), c);
         let home = geom.node_of_chunk(c);
         let (cs, ce) = geom.chunk_range(c);
         let lo = s.max(cs);
         let hi = e.min(ce);
-        let (off, len) = (lo - cs, hi - lo);
-        // One segment read off the chunk's home: local disk, or the
-        // transport for non-local homes. `None` ⇔ the home does not hold
-        // the chunk (peer said `NotResident`, or no local file).
-        let serve = |stats: &mut ReadStats| -> Result<Option<Vec<u8>>> {
-            if home == reader {
-                if cluster.node_has(home, &crel) {
-                    return cluster
-                        .read_node_range_sharded(home, &crel, off, len, reader, stats)
-                        .map(Some);
-                }
-                return Ok(None);
-            }
-            transport.fetch_chunk_range(cluster, geom, c, off, len, reader, stats)
-        };
+        let (off, pos, len) = (lo - cs, (lo - s) as usize, hi - lo);
         match fill.claim_or_wait(c) {
-            Claim::Resident => match serve(stats)? {
-                Some(bytes) => out.extend_from_slice(&bytes),
-                None => {
+            Claim::Resident if home != reader => {
+                match batches.iter().position(|(n, _)| *n == home) {
+                    Some(k) => batches[k].1.push((c, off, pos, len)),
+                    None => batches.push((home, vec![(c, off, pos, len)])),
+                }
+            }
+            Claim::Resident => {
+                let crel = chunk_rel_path(geom.dataset_id, geom.chunk_bytes(), c);
+                let dst = &mut out[pos..pos + len as usize];
+                if cluster.node_has(home, &crel) {
+                    cluster.read_node_range_into_sharded(home, &crel, off, reader, dst, stats)?;
+                } else {
                     // Resident per the ledger but gone at the source:
                     // re-fill from remote and re-record residency.
-                    let buf = fetch_chunk_concurrent(cluster, cache, dataset, cfg, geom, c, stats)?;
-                    out.extend_from_slice(&buf[off as usize..(off + len) as usize]);
+                    refill_segment(
+                        cluster, cache, bufs, dataset, cfg, geom, c, off, dst, stats,
+                    )?;
                 }
-            },
-            Claim::Filler => match serve(stats) {
-                Ok(Some(bytes)) => {
-                    // Chunk predates this pool (warm run): adopt it.
-                    fill.mark_resident(c);
-                    cache.mark_chunks(dataset, &[c])?;
-                    out.extend_from_slice(&bytes);
-                }
-                Ok(None) => {
-                    match fetch_chunk_concurrent(cluster, cache, dataset, cfg, geom, c, stats) {
-                        Ok(buf) => {
-                            fill.complete(c);
-                            out.extend_from_slice(&buf[off as usize..(off + len) as usize]);
+            }
+            Claim::Filler => {
+                let crel = chunk_rel_path(geom.dataset_id, geom.chunk_bytes(), c);
+                let dst = &mut out[pos..pos + len as usize];
+                // Adoption probe: the chunk may predate this pool (warm
+                // run over existing cache dirs). `Ok(false)` ⇔ the home
+                // does not hold it.
+                let probe: Result<bool> = if home == reader {
+                    if cluster.node_has(home, &crel) {
+                        cluster
+                            .read_node_range_into_sharded(home, &crel, off, reader, dst, stats)
+                            .map(|()| true)
+                    } else {
+                        Ok(false)
+                    }
+                } else {
+                    match transport.fetch_chunk_range(cluster, geom, c, off, len, reader, stats) {
+                        Ok(Some(bytes)) => {
+                            if bytes.len() as u64 != len {
+                                fill.abort(c);
+                                bail!(
+                                    "chunk {c} range read returned {} bytes, expected {len}",
+                                    bytes.len()
+                                );
+                            }
+                            dst.copy_from_slice(&bytes);
+                            Ok(true)
                         }
-                        Err(err) => {
-                            fill.abort(c);
-                            return Err(err);
+                        Ok(None) => Ok(false),
+                        Err(e) => Err(e),
+                    }
+                };
+                match probe {
+                    Ok(true) => {
+                        // Adopt it in the fill table; skip the registry
+                        // write when the lock-free bitmap already has it.
+                        fill.mark_resident(c);
+                        if !residency.map(|r| r.contains(c)).unwrap_or(false) {
+                            cache.mark_chunks(dataset, &[c])?;
                         }
                     }
+                    Ok(false) => {
+                        match refill_segment(
+                            cluster, cache, bufs, dataset, cfg, geom, c, off, dst, stats,
+                        ) {
+                            Ok(()) => fill.complete(c),
+                            Err(err) => {
+                                fill.abort(c);
+                                return Err(err);
+                            }
+                        }
+                    }
+                    Err(err) => {
+                        // Adoption probe failed mid-claim: roll the claim
+                        // back so another reader can retry, never deadlock.
+                        fill.abort(c);
+                        return Err(err);
+                    }
                 }
-                Err(err) => {
-                    // Adoption probe failed mid-claim: roll the claim back
-                    // so another reader can retry, never deadlock.
-                    fill.abort(c);
-                    return Err(err);
+            }
+        }
+    }
+    // Batched peer round: one transport call per home node covering every
+    // resident chunk it serves for this item.
+    for (_home, reqs) in batches {
+        let trip: Vec<(u64, u64, u64)> =
+            reqs.iter().map(|&(c, off, _, len)| (c, off, len)).collect();
+        let got = transport.fetch_chunk_ranges(cluster, geom, &trip, reader, stats)?;
+        if got.len() != reqs.len() {
+            // A short response must never zip-truncate into silently
+            // zero-filled segments.
+            bail!("batched fetch answered {} entries for {} requests", got.len(), reqs.len());
+        }
+        for ((c, off, pos, len), payload) in reqs.into_iter().zip(got) {
+            let dst = &mut out[pos..pos + len as usize];
+            match payload {
+                Some(bytes) => {
+                    if bytes.len() as u64 != len {
+                        bail!(
+                            "chunk {c} batched range read returned {} bytes, expected {len}",
+                            bytes.len()
+                        );
+                    }
+                    dst.copy_from_slice(&bytes);
                 }
-            },
+                // Resident per the ledger but gone at the peer: re-fill
+                // from remote and re-record residency.
+                None => refill_segment(
+                    cluster, cache, bufs, dataset, cfg, geom, c, off, dst, stats,
+                )?,
+            }
         }
     }
     Ok(out)
 }
 
-/// Fetch + persist chunk `c` (shared [`fetch_chunk_payload`] path) and
-/// mark it resident in the shared cache.
-fn fetch_chunk_concurrent(
-    cluster: &RealCluster,
-    cache: &SharedCache,
-    dataset: &str,
-    cfg: &DataGenConfig,
-    geom: &ChunkGeometry,
-    c: u64,
-    stats: &mut ReadStats,
-) -> Result<Vec<u8>> {
-    let buf = fetch_chunk_payload(cluster, cfg, geom, c, stats)?;
-    cache.mark_chunks(dataset, &[c])?;
-    Ok(buf)
-}
-
 /// One sequential AFM prefetch pass at chunk granularity: walk the chunk
-/// grid in stripe order, filling whatever no reader has claimed yet.
+/// grid in stripe order, filling whatever no reader has claimed yet. One
+/// buffer is reused across every fill of the pass (the payload is only
+/// persisted, never returned), so the cold-epoch prefetcher allocates
+/// once, not once per chunk.
 fn prefetch_chunks(
     cluster: &RealCluster,
     cache: &SharedCache,
@@ -453,6 +708,7 @@ fn prefetch_chunks(
     geom: &ChunkGeometry,
     stats: &mut ReadStats,
 ) -> Result<()> {
+    let mut buf = Vec::new();
     for c in 0..geom.num_chunks() {
         if !fill.try_claim(c) {
             continue;
@@ -463,8 +719,10 @@ fn prefetch_chunks(
             cache.mark_chunks(dataset, &[c])?;
             continue;
         }
-        match fetch_chunk_concurrent(cluster, cache, dataset, cfg, geom, c, stats) {
-            Ok(_) => fill.complete(c),
+        match fetch_chunk_payload_into(cluster, cfg, geom, c, &mut buf, stats)
+            .and_then(|()| cache.mark_chunks(dataset, &[c]).map_err(Into::into))
+        {
+            Ok(()) => fill.complete(c),
             Err(e) => {
                 fill.abort(c);
                 return Err(e);
@@ -499,6 +757,17 @@ pub struct ReaderPool<'a> {
     /// How reader threads fetch non-local bytes (defaults to the same-FS
     /// [`DirTransport`]; swap in a `SocketTransport` for real peers).
     transport: Box<dyn ChunkTransport>,
+    /// Reusable chunk buffers shared by the reader threads (remote fills
+    /// recycle chunk-sized allocations instead of one fresh `Vec` each).
+    bufs: BufPool,
+}
+
+/// Chunk buffers kept pooled, two per reader thread: one in flight per
+/// reader plus slack for put/take races, so concurrent fills rarely fall
+/// back to a fresh allocation. (The prefetcher reuses its own single
+/// pass-local buffer and never touches this pool.)
+fn pool_bufs(readers: usize) -> BufPool {
+    BufPool::new(2 * readers, 64 << 20)
 }
 
 impl<'a> ReaderPool<'a> {
@@ -521,6 +790,7 @@ impl<'a> ReaderPool<'a> {
             prefetch: true,
             mode: PoolMode::WholeFile,
             transport: Box::new(DirTransport),
+            bufs: pool_bufs(readers),
         }
     }
 
@@ -550,6 +820,7 @@ impl<'a> ReaderPool<'a> {
             prefetch: true,
             mode: PoolMode::Chunked(geom),
             transport: Box::new(DirTransport),
+            bufs: pool_bufs(readers),
         })
     }
 
@@ -598,6 +869,10 @@ impl<'a> ReaderPool<'a> {
     pub fn run_epoch(&self, order: &[u64]) -> Result<EpochReport> {
         let t0 = Instant::now();
         let run_prefetcher = self.prefetch && !self.cache.is_cached(&self.dataset);
+        // One shared-lock acquisition per epoch: every reader thread then
+        // resolves residency through the lock-free snapshot (readers fall
+        // back to the locked lane if it retires mid-epoch).
+        let snapshot = self.cache.snapshot(&self.dataset).ok();
         let (reader_shards, prefetch_shard) = std::thread::scope(|s| {
             let prefetcher = if run_prefetcher {
                 Some(s.spawn(|| self.prefetch_pass()))
@@ -608,7 +883,8 @@ impl<'a> ReaderPool<'a> {
             for r in 0..self.readers {
                 let items: Vec<u64> =
                     order.iter().skip(r).step_by(self.readers).copied().collect();
-                handles.push(s.spawn(move || self.reader_pass(r, &items)));
+                let snap = snapshot.clone();
+                handles.push(s.spawn(move || self.reader_pass(r, &items, snap.as_deref())));
             }
             let shards: Vec<Result<ReadStats>> = handles
                 .into_iter()
@@ -635,7 +911,12 @@ impl<'a> ReaderPool<'a> {
         Ok(EpochReport { wall: t0.elapsed(), merged, per_reader, prefetcher })
     }
 
-    fn reader_pass(&self, r: usize, items: &[u64]) -> Result<ReadStats> {
+    fn reader_pass(
+        &self,
+        r: usize,
+        items: &[u64],
+        snap: Option<&ResidencySnapshot>,
+    ) -> Result<ReadStats> {
         let reader = self.reader_node(r);
         let mut stats = ReadStats::default();
         match &self.mode {
@@ -644,11 +925,12 @@ impl<'a> ReaderPool<'a> {
                 // for the pool's lifetime.
                 let dataset_id = self.cache.dataset_id(&self.dataset)?;
                 for &i in items {
-                    read_item_concurrent_via(
+                    read_item_concurrent_fast(
                         self.cluster,
                         &self.cache,
                         &self.fill,
                         self.transport.as_ref(),
+                        snap,
                         dataset_id,
                         &self.dataset,
                         &self.cfg,
@@ -660,11 +942,13 @@ impl<'a> ReaderPool<'a> {
             }
             PoolMode::Chunked(geom) => {
                 for &i in items {
-                    read_item_chunked_via(
+                    read_item_chunked_fast(
                         self.cluster,
                         &self.cache,
                         &self.fill,
                         self.transport.as_ref(),
+                        snap,
+                        Some(&self.bufs),
                         &self.dataset,
                         &self.cfg,
                         geom,
@@ -849,6 +1133,52 @@ mod tests {
         t.abort(1);
         assert!(t.try_claim(1), "aborted fill is claimable again");
         assert_eq!(t.done_count(), 1);
+    }
+
+    #[test]
+    fn fill_table_shards_scale_with_slots() {
+        assert_eq!(FillTable::new(1).num_shards(), 1);
+        assert_eq!(FillTable::new(5).num_shards(), 5);
+        assert_eq!(FillTable::new(1000).num_shards(), 16);
+        // Zero-slot tables are legal (empty dataset): nothing to claim.
+        assert_eq!(FillTable::new(0).done_count(), 0);
+    }
+
+    #[test]
+    fn done_count_sums_shard_counters_exactly() {
+        let t = FillTable::new(100);
+        // Spread Done slots over every shard, including idempotent
+        // re-completes and a done→abort rollback.
+        for i in [0u64, 1, 15, 16, 17, 31, 63, 99] {
+            t.complete(i);
+            t.complete(i); // idempotent: counted once
+        }
+        assert_eq!(t.done_count(), 8);
+        t.abort(17);
+        assert_eq!(t.done_count(), 7, "abort of a Done slot decrements");
+        t.abort(17); // abort of an Empty slot is a no-op for the counter
+        assert_eq!(t.done_count(), 7);
+        t.complete(17);
+        assert_eq!(t.done_count(), 8);
+    }
+
+    #[test]
+    fn same_shard_different_slot_waiter_survives_unrelated_complete() {
+        // Slots 0 and 16 share shard 0 of a 16-shard table. A waiter on
+        // slot 16 must not be lost when slot 0 completes (the wrong-slot
+        // notify_one wakes it, it re-checks and re-parks), and must wake
+        // when its own slot lands.
+        let t = std::sync::Arc::new(FillTable::new(32));
+        assert_eq!(t.claim_or_wait(0), Claim::Filler);
+        assert_eq!(t.claim_or_wait(16), Claim::Filler);
+        let t2 = t.clone();
+        let waiter = std::thread::spawn(move || t2.claim_or_wait(16));
+        std::thread::sleep(Duration::from_millis(30));
+        t.complete(0); // unrelated slot, same shard
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!waiter.is_finished(), "waiter on slot 16 woke for slot 0's fill");
+        t.complete(16);
+        assert_eq!(waiter.join().unwrap(), Claim::Resident);
     }
 
     #[test]

@@ -75,8 +75,27 @@ pub fn fetch_chunk_payload(
     c: u64,
     stats: &mut ReadStats,
 ) -> Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    fetch_chunk_payload_into(cluster, cfg, geom, c, &mut buf, stats)?;
+    Ok(buf)
+}
+
+/// [`fetch_chunk_payload`] into a caller-provided (reusable) buffer: the
+/// buffer is cleared and filled with chunk `c`'s payload, each per-item
+/// sub-range read straight into its final position (single-copy; no
+/// per-part temporaries). Pair with a [`super::BufPool`] so steady-state
+/// fills recycle chunk-sized allocations.
+pub fn fetch_chunk_payload_into(
+    cluster: &RealCluster,
+    cfg: &DataGenConfig,
+    geom: &ChunkGeometry,
+    c: u64,
+    buf: &mut Vec<u8>,
+    stats: &mut ReadStats,
+) -> Result<()> {
     let (cs, ce) = geom.chunk_range(c);
-    let mut buf = Vec::with_capacity((ce - cs) as usize);
+    buf.clear();
+    buf.reserve((ce - cs) as usize);
     for i in geom.items_of_chunk(c) {
         let (is_, ie) = geom.item_range(i);
         if is_ == ie {
@@ -84,16 +103,21 @@ pub fn fetch_chunk_payload(
         }
         let lo = cs.max(is_);
         let hi = ce.min(ie);
-        let part =
-            cluster.read_remote_range_sharded(&cfg.item_rel_path(i), lo - is_, hi - lo, stats)?;
-        buf.extend_from_slice(&part);
+        let pos = buf.len();
+        buf.resize(pos + (hi - lo) as usize, 0);
+        cluster.read_remote_range_into_sharded(
+            &cfg.item_rel_path(i),
+            lo - is_,
+            &mut buf[pos..],
+            stats,
+        )?;
     }
     cluster.write_node(
         geom.node_of_chunk(c),
         &chunk_rel_path(geom.dataset_id, geom.chunk_bytes(), c),
-        &buf,
+        buf,
     )?;
-    Ok(buf)
+    Ok(())
 }
 
 /// Default per-node cache-volume bandwidth (NVMe class). High enough to be
@@ -285,15 +309,30 @@ impl RealCluster {
         len: u64,
         stats: &mut ReadStats,
     ) -> Result<Vec<u8>> {
+        let mut buf = vec![0u8; len as usize];
+        self.read_remote_range_into_sharded(rel, offset, &mut buf, stats)?;
+        Ok(buf)
+    }
+
+    /// Ranged remote read into a caller-provided buffer: fills `out`
+    /// exactly from `offset` of `rel` (single-copy — the assembly path
+    /// reads each segment straight into its final position).
+    pub fn read_remote_range_into_sharded(
+        &self,
+        rel: &Path,
+        offset: u64,
+        out: &mut [u8],
+        stats: &mut ReadStats,
+    ) -> Result<()> {
         let path = self.remote_dir.join(rel);
         let mut f = fs::File::open(&path)
             .with_context(|| format!("remote open {}", path.display()))?;
         f.seek(SeekFrom::Start(offset))?;
-        let mut buf = vec![0u8; len as usize];
-        f.read_exact(&mut buf)
-            .with_context(|| format!("remote short read {}+{len} {}", offset, path.display()))?;
-        self.remote_account(len, stats);
-        Ok(buf)
+        f.read_exact(out).with_context(|| {
+            format!("remote short read {}+{} {}", offset, out.len(), path.display())
+        })?;
+        self.remote_account(out.len() as u64, stats);
+        Ok(())
     }
 
     /// Ranged remote read recording into the cluster-wide stats.
@@ -357,16 +396,32 @@ impl RealCluster {
         reader: NodeId,
         stats: &mut ReadStats,
     ) -> Result<Vec<u8>> {
+        let mut buf = vec![0u8; len as usize];
+        self.read_node_range_into_sharded(node, rel, offset, reader, &mut buf, stats)?;
+        Ok(buf)
+    }
+
+    /// Ranged node read into a caller-provided buffer: fills `out` exactly
+    /// from `offset` of `rel` on `node` — how the warm assembly path lands
+    /// a resident local segment straight in the item buffer (one copy).
+    pub fn read_node_range_into_sharded(
+        &self,
+        node: NodeId,
+        rel: &Path,
+        offset: u64,
+        reader: NodeId,
+        out: &mut [u8],
+        stats: &mut ReadStats,
+    ) -> Result<()> {
         let path = self.node_dirs[node.0].join(rel);
         let mut f = fs::File::open(&path)
             .with_context(|| format!("node{} open {}", node.0, path.display()))?;
         f.seek(SeekFrom::Start(offset))?;
-        let mut buf = vec![0u8; len as usize];
-        f.read_exact(&mut buf).with_context(|| {
-            format!("node{} short read {offset}+{len} {}", node.0, path.display())
+        f.read_exact(out).with_context(|| {
+            format!("node{} short read {offset}+{} {}", node.0, out.len(), path.display())
         })?;
-        self.node_account(node, len, reader, stats);
-        Ok(buf)
+        self.node_account(node, out.len() as u64, reader, stats);
+        Ok(())
     }
 
     /// Ranged node read recording into the cluster-wide stats.
@@ -812,6 +867,48 @@ mod tests {
         assert_eq!(s.peer_reads, 1);
         assert_eq!(s.peer_bytes, 7);
         fs::remove_dir_all(&cluster.root).unwrap();
+    }
+
+    #[test]
+    fn into_reads_match_allocating_reads_and_account_identically() {
+        let cfg = small_cfg();
+        let (cluster, _) = setup("into", &cfg);
+        let rel = cfg.item_rel_path(3);
+        let whole = cluster.read_remote(&rel).unwrap();
+        cluster.write_node(NodeId(1), &rel, &whole).unwrap();
+        cluster.take_stats();
+        // Remote: the `_into` variant lands the same bytes with the same
+        // accounting as the allocating one.
+        let mut a = ReadStats::default();
+        let alloc = cluster.read_remote_range_sharded(&rel, 5, 200, &mut a).unwrap();
+        let mut b = ReadStats::default();
+        let mut buf = vec![0u8; 200];
+        cluster.read_remote_range_into_sharded(&rel, 5, &mut buf, &mut b).unwrap();
+        assert_eq!(alloc, buf);
+        assert_eq!(a.remote_bytes, b.remote_bytes);
+        assert_eq!(a.remote_reads, b.remote_reads);
+        // Node: same equivalence, and a past-EOF range still fails loudly
+        // without being accounted.
+        let mut c = ReadStats::default();
+        let mut nbuf = vec![0u8; 9];
+        cluster
+            .read_node_range_into_sharded(NodeId(1), &rel, 11, NodeId(0), &mut nbuf, &mut c)
+            .unwrap();
+        assert_eq!(nbuf, whole[11..20]);
+        assert_eq!((c.peer_reads, c.peer_bytes), (1, 9));
+        let mut over = vec![0u8; 10];
+        let mut d = ReadStats::default();
+        assert!(cluster
+            .read_node_range_into_sharded(
+                NodeId(1),
+                &rel,
+                whole.len() as u64 - 3,
+                NodeId(0),
+                &mut over,
+                &mut d
+            )
+            .is_err());
+        assert_eq!(d, ReadStats::default(), "failed range read is not accounted");
     }
 
     #[test]

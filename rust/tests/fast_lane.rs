@@ -1,0 +1,338 @@
+//! Integration tests for the warm-path fast lane: the lock-free
+//! `ResidencySnapshot` differential-tested against the locked
+//! `CacheManager` oracle across random fill states, the sharded
+//! `FillTable` fetch-once protocol under an 8-thread race (with abort
+//! rollbacks), byte-identical warm epochs over `DirTransport` vs the
+//! batched `SocketTransport`, and the peer server's connection gate.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use hoard::cache::{CacheManager, EvictionPolicy, SharedCache};
+use hoard::netsim::NodeId;
+use hoard::peer::{DirTransport, PeerClient, PeerServer, SocketTransport};
+use hoard::posix::realfs::{ReadStats, RealCluster};
+use hoard::posix::reader_pool::{read_item_chunked_fast, Claim, FillTable, ReaderPool};
+use hoard::posix::BufPool;
+use hoard::storage::{Device, DeviceKind, Volume};
+use hoard::util::Rng;
+use hoard::workload::datagen::{self, DataGenConfig};
+use hoard::workload::DatasetSpec;
+
+/// The differential oracle: after every random mutation through any of
+/// the three mark paths, the lock-free snapshot must answer *exactly*
+/// what the locked `CacheManager` answers, for every item × reader.
+#[test]
+fn snapshot_read_plan_matches_locked_oracle_across_random_fills() {
+    let vols = (0..4).map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 30)])).collect();
+    let mut m = CacheManager::new(vols, EvictionPolicy::Manual);
+    // Odd sizes on purpose: 97 items over 9973 bytes with 64-byte chunks
+    // ⇒ ~103-byte items straddling chunk boundaries everywhere.
+    m.chunk_bytes = 64;
+    m.register(DatasetSpec::new("d", 97, 9973), "nfs://r/d".into()).unwrap();
+    m.place("d", (0..4).map(NodeId).collect()).unwrap();
+    let shared = SharedCache::new(m);
+    let snap = shared.snapshot("d").unwrap();
+    let num_chunks = snap.geometry().num_chunks();
+    let mut rng = Rng::new(0xFA57_1A5E);
+    for round in 0..30u32 {
+        match rng.gen_range(3) {
+            0 => shared.mark_chunks("d", &[rng.gen_range(num_chunks)]).unwrap(),
+            1 => shared.mark_item("d", rng.gen_range(97)).unwrap(),
+            _ => shared.prefetch_tick("d", 1 + rng.gen_range(400)).unwrap(),
+        }
+        for item in 0..97u64 {
+            for reader in 0..4usize {
+                let r = NodeId(reader);
+                let want_loc = shared.read_location("d", item, r).unwrap();
+                let want_plan = shared.read_plan("d", item, r).unwrap();
+                assert_eq!(
+                    snap.read_location(item, r),
+                    Some(want_loc),
+                    "round {round} item {item} reader {reader}"
+                );
+                assert_eq!(
+                    snap.read_plan(item, r),
+                    Some(want_plan),
+                    "round {round} item {item} reader {reader}"
+                );
+            }
+        }
+    }
+    // Drive to full through the locked lane; the snapshot must agree.
+    let all: Vec<u64> = (0..num_chunks).collect();
+    shared.mark_chunks("d", &all).unwrap();
+    assert!(shared.is_cached("d"));
+    assert!(snap.is_full());
+    assert_eq!(snap.marked_chunks(), num_chunks);
+}
+
+/// Fetch-once on the sharded `FillTable` under an 8-thread race, with the
+/// first claimant of every slot aborting (a failed fill): every slot must
+/// end exactly-once-filled, waiters must recover from aborts, and the
+/// shard counters must agree with ground truth.
+#[test]
+fn sharded_fill_table_8_thread_race_with_aborts() {
+    const SLOTS: u64 = 512;
+    let table = Arc::new(FillTable::new(SLOTS));
+    assert_eq!(table.num_shards(), 16);
+    let fills: Vec<AtomicU64> = (0..SLOTS).map(|_| AtomicU64::new(0)).collect();
+    let aborted: Vec<AtomicBool> = (0..SLOTS).map(|_| AtomicBool::new(false)).collect();
+    std::thread::scope(|s| {
+        for t in 0..8u64 {
+            let table = table.clone();
+            let fills = &fills;
+            let aborted = &aborted;
+            s.spawn(move || {
+                for step in 0..SLOTS {
+                    // Per-thread stride so shards are hammered unevenly.
+                    let i = (step + t * 61) % SLOTS;
+                    loop {
+                        match table.claim_or_wait(i) {
+                            Claim::Resident => {
+                                assert_eq!(
+                                    fills[i as usize].load(Ordering::SeqCst),
+                                    1,
+                                    "slot {i} resident without exactly one fill"
+                                );
+                                break;
+                            }
+                            Claim::Filler => {
+                                if !aborted[i as usize].swap(true, Ordering::SeqCst) {
+                                    // First owner fails: roll the claim
+                                    // back, someone (maybe us) retries.
+                                    table.abort(i);
+                                    continue;
+                                }
+                                fills[i as usize].fetch_add(1, Ordering::SeqCst);
+                                std::thread::yield_now();
+                                table.complete(i);
+                                break;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    for (i, f) in fills.iter().enumerate() {
+        assert_eq!(f.load(Ordering::SeqCst), 1, "slot {i} filled a wrong number of times");
+    }
+    assert_eq!(table.done_count(), SLOTS, "shard counters must sum to every slot");
+}
+
+const NODES: usize = 2;
+
+/// Two-node chunked fixture: with 2 nodes and sub-item chunks, every item
+/// spans several chunks that alternate homes — the shape where batching
+/// collapses per-chunk round trips into one per peer.
+fn fixture(tag: &str, items: u64, chunk_bytes: u64) -> (RealCluster, SharedCache, DataGenConfig) {
+    let root = std::env::temp_dir().join(format!("hoard-fastlane-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let cluster = RealCluster::create(&root, NODES, 500e6).unwrap();
+    let cfg = DataGenConfig { num_items: items, files_per_dir: 32, ..Default::default() };
+    let total = datagen::generate(&cluster.remote_dir, &cfg).unwrap();
+    let vols = (0..NODES)
+        .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 30)]))
+        .collect();
+    let mut manager = CacheManager::new(vols, EvictionPolicy::Manual);
+    manager.chunk_bytes = chunk_bytes;
+    manager.register(DatasetSpec::new("d", items, total), "nfs://r/d".into()).unwrap();
+    manager.place("d", (0..NODES).map(NodeId).collect()).unwrap();
+    (cluster, SharedCache::new(manager), cfg)
+}
+
+fn start_servers(cluster: &RealCluster) -> Vec<PeerServer> {
+    (0..NODES)
+        .map(|n| {
+            PeerServer::start_with(
+                "127.0.0.1:0",
+                cluster.node_dirs[n].clone(),
+                Some(cluster.node_bw[n].clone()),
+                Duration::from_secs(5),
+            )
+            .unwrap()
+        })
+        .collect()
+}
+
+/// The batching acceptance bar: a warm epoch over `SocketTransport` is
+/// byte-identical to `DirTransport`, zero remote reads either way, and
+/// the wire moved more chunk payloads than it paid round trips (K chunks
+/// per peer per item ride one `GetChunkBatch`).
+#[test]
+fn warm_epoch_dir_vs_socket_batched_byte_identical() {
+    // Records are 3080 B; 512-byte chunks ⇒ each item spans 6–7 chunks,
+    // ~3 of which home on the peer for any reader.
+    let (cluster, cache, cfg) = fixture("batch", 12, 512);
+    // Cold fill through the default dir pool.
+    let pool = ReaderPool::new_chunked(&cluster, cache.clone(), "d", cfg.clone(), 2).unwrap();
+    pool.run_epoch(&pool.epoch_order(11, 0)).unwrap();
+    assert!(cache.is_cached("d"));
+    cluster.take_stats();
+
+    let geom = cache.geometry("d").unwrap();
+    let snap = cache.snapshot("d").unwrap();
+    assert!(snap.is_full());
+    let bufs = BufPool::new(4, 16 << 20);
+    let servers = start_servers(&cluster);
+    let socket_t =
+        SocketTransport::new(PeerClient::connect(servers.iter().map(|s| s.addr).collect()));
+
+    // Every fill-table slot resident (the warm-epoch shape).
+    let warm_fill = || {
+        let f = FillTable::new(geom.num_chunks());
+        for c in 0..geom.num_chunks() {
+            f.mark_resident(c);
+        }
+        f
+    };
+    let dir_fill = warm_fill();
+    let sock_fill = warm_fill();
+    let mut dir_stats = ReadStats::default();
+    let mut sock_stats = ReadStats::default();
+    for i in 0..cfg.num_items {
+        let via_dir = read_item_chunked_fast(
+            &cluster,
+            &cache,
+            &dir_fill,
+            &DirTransport,
+            Some(&snap),
+            Some(&bufs),
+            "d",
+            &cfg,
+            &geom,
+            i,
+            NodeId(0),
+            &mut dir_stats,
+        )
+        .unwrap();
+        let via_socket = read_item_chunked_fast(
+            &cluster,
+            &cache,
+            &sock_fill,
+            &socket_t,
+            Some(&snap),
+            Some(&bufs),
+            "d",
+            &cfg,
+            &geom,
+            i,
+            NodeId(0),
+            &mut sock_stats,
+        )
+        .unwrap();
+        let (_, want) = datagen::make_record(&cfg, i);
+        assert_eq!(via_dir, want, "dir payload item {i}");
+        assert_eq!(via_socket, want, "socket payload item {i}");
+    }
+    assert_eq!(dir_stats.remote_reads, 0, "dir warm epoch touched remote");
+    assert_eq!(sock_stats.remote_reads, 0, "socket warm epoch touched remote");
+    assert_eq!(sock_stats.peer_reads, 0, "socket transport read a peer directory");
+    assert!(sock_stats.peer_net_reads > 0, "no payloads crossed the wire");
+    // The batching win, measured: more chunk payloads than round trips.
+    let trips = socket_t.client().wire_roundtrips();
+    assert!(
+        trips < sock_stats.peer_net_reads,
+        "batching must collapse round trips: {} payloads over {trips} trips",
+        sock_stats.peer_net_reads
+    );
+    // Dir-lane accounting is unchanged by batching: one peer read per
+    // non-local chunk segment, aligned one-to-one with the socket lane's
+    // payload count (the socket moves whole chunks, so its bytes are ≥
+    // the dir lane's exact segment bytes).
+    assert_eq!(dir_stats.peer_reads, sock_stats.peer_net_reads);
+    assert!(sock_stats.peer_net_bytes >= dir_stats.peer_bytes);
+    drop(servers);
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
+
+/// The full pool over the fast lane: a chunked 8-reader cold epoch then a
+/// warm epoch, every assembled item byte-correct, fetch-once preserved.
+#[test]
+fn chunked_pool_fast_lane_cold_warm_byte_correct() {
+    let (cluster, cache, cfg) = fixture("pool8", 24, 777);
+    let total = cfg.num_items * cfg.record_bytes() as u64;
+    let pool = ReaderPool::new_chunked(&cluster, cache.clone(), "d", cfg.clone(), 8).unwrap();
+    let cold = pool.run_epoch(&pool.epoch_order(21, 0)).unwrap();
+    assert_eq!(cold.merged.remote_bytes, total, "cold fetch-once by bytes");
+    assert!(cache.is_cached("d"));
+    cluster.take_stats();
+    let warm = pool.run_epoch(&pool.epoch_order(21, 1)).unwrap();
+    assert_eq!(warm.merged.remote_reads, 0, "warm epoch touched remote");
+    // Byte-correctness through the same fast path the pool readers run.
+    let geom = cache.geometry("d").unwrap();
+    let snap = cache.snapshot("d").unwrap();
+    let bufs = BufPool::new(2, 16 << 20);
+    let fill = FillTable::new(geom.num_chunks());
+    let mut stats = ReadStats::default();
+    for i in 0..cfg.num_items {
+        let got = read_item_chunked_fast(
+            &cluster,
+            &cache,
+            &fill,
+            &DirTransport,
+            Some(&snap),
+            Some(&bufs),
+            "d",
+            &cfg,
+            &geom,
+            i,
+            NodeId(1),
+            &mut stats,
+        )
+        .unwrap();
+        let (_, want) = datagen::make_record(&cfg, i);
+        assert_eq!(got, want, "item {i}");
+    }
+    assert_eq!(stats.remote_reads, 0);
+    assert!(bufs.pooled() <= 2, "buffer pool bounded");
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
+
+/// A connection flood against the peer server is gated: over-cap
+/// connections get a polite request-level error instead of a handler
+/// thread, and service resumes once the flood drains.
+#[test]
+fn peer_server_connection_flood_is_gated() {
+    let dir = std::env::temp_dir().join(format!("hoard-fastlane-gate-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let payload = vec![3u8; 256];
+    let rel = hoard::posix::realfs::chunk_rel_path(1, 64, 0);
+    std::fs::create_dir_all(dir.join(&rel).parent().unwrap()).unwrap();
+    std::fs::write(dir.join(&rel), &payload).unwrap();
+    let mut srv = PeerServer::start_with_limits(
+        "127.0.0.1:0",
+        dir.clone(),
+        None,
+        Duration::from_secs(2),
+        2,
+    )
+    .unwrap();
+    // Two silent connections occupy both handler slots.
+    let idle: Vec<std::net::TcpStream> =
+        (0..2).map(|_| std::net::TcpStream::connect(srv.addr).unwrap()).collect();
+    std::thread::sleep(Duration::from_millis(150));
+    // The third connection is rejected: the server answers a best-effort
+    // "capacity" Error frame and closes. Depending on timing the client
+    // sees either that polite frame or the reset — never a served chunk.
+    let client = PeerClient::connect(vec![srv.addr]);
+    assert!(client.get_chunk(NodeId(0), 1, 64, 0).is_err(), "flooded server served a chunk");
+    // Drain the flood: the occupants hang up, slots free, service resumes.
+    drop(idle);
+    let t0 = std::time::Instant::now();
+    loop {
+        match client.get_chunk(NodeId(0), 1, 64, 0) {
+            Ok(Some(got)) => {
+                assert_eq!(got, payload);
+                break;
+            }
+            _ if t0.elapsed() > Duration::from_secs(5) => panic!("gate never released"),
+            _ => std::thread::sleep(Duration::from_millis(50)),
+        }
+    }
+    srv.stop();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
