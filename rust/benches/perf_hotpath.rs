@@ -145,7 +145,9 @@ fn main() {
     let point = reader_scaling_run(8, epoch_items, Duration::ZERO)
         .expect("warm-epoch run needs a writable temp dir");
     assert_eq!(point.warm.remote_reads, 0, "warm epoch touched remote");
-    let warm_ips = epoch_items as f64 / point.warm_s.max(1e-9);
+    // Guarded rate: a smoke-mode epoch can complete in ~0 ns, and the
+    // recorded JSON must hold 0, not inf/NaN.
+    let warm_ips = hoard::experiments::items_per_sec(epoch_items, point.warm_s);
     println!(
         "BENCH perf_hotpath_warm_epoch_8r best={:.4}s items_per_sec={warm_ips:.0}",
         point.warm_s

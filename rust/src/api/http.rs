@@ -57,6 +57,12 @@ impl Response {
         Response::json(404, r#"{"error":"not found"}"#.to_string())
     }
 
+    /// The route exists but not for this verb (`405`): distinct from 404
+    /// so clients can tell a typo'd path from a wrong method.
+    pub fn method_not_allowed() -> Self {
+        Response::json(405, r#"{"error":"method not allowed"}"#.to_string())
+    }
+
     fn status_line(&self) -> &'static str {
         match self.status {
             200 => "200 OK",
@@ -64,6 +70,7 @@ impl Response {
             204 => "204 No Content",
             400 => "400 Bad Request",
             404 => "404 Not Found",
+            405 => "405 Method Not Allowed",
             409 => "409 Conflict",
             500 => "500 Internal Server Error",
             503 => "503 Service Unavailable",

@@ -14,10 +14,25 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::coordinator::Hoard;
+use crate::posix::dataplane::DataPlane;
 
-/// Start the API server on `addr` over a shared control plane.
+/// Start the API server on `addr` over a shared control plane. The
+/// `/v1/jobs` data-plane endpoints answer 503 until a [`DataPlane`] is
+/// attached ([`serve_with_plane`]).
 pub fn serve(addr: &str, hoard: Arc<Mutex<Hoard>>) -> Result<Server> {
-    let state = ApiState { hoard };
+    let state = ApiState::new(hoard);
+    Server::start(addr, move |req| state.route(req))
+}
+
+/// [`serve`] with a real-mode [`DataPlane`] attached: `POST /v1/jobs`
+/// opens co-scheduled [`JobSession`](crate::posix::dataplane::JobSession)s
+/// that share the plane's fill ledgers and buffers.
+pub fn serve_with_plane(
+    addr: &str,
+    hoard: Arc<Mutex<Hoard>>,
+    plane: Arc<DataPlane>,
+) -> Result<Server> {
+    let state = ApiState::new(hoard).with_plane(plane);
     Server::start(addr, move |req| state.route(req))
 }
 

@@ -1,33 +1,109 @@
-//! REST routing for the Hoard API server. Every mutating request triggers a
-//! control-plane reconcile so responses reflect settled state — the
-//! user-visible behaviour of the paper's "turnkey" workflow.
+//! REST routing for the Hoard API server, versioned under `/v1/`. Every
+//! mutating control-plane request triggers a reconcile so responses
+//! reflect settled state — the user-visible behaviour of the paper's
+//! "turnkey" workflow.
+//!
+//! Two surfaces share the router:
+//!
+//!  * the **control API** (`/v1/stats`, `/v1/datasets…` — with the
+//!    pre-versioning `/api/v1/…` paths kept as aliases, including the
+//!    legacy control-plane `DlJob` routes under `/api/v1/jobs`);
+//!  * the **data-plane job API** (`/v1/jobs`): `POST /v1/jobs` opens a
+//!    [`JobSession`] on the attached [`DataPlane`] (503 when none is
+//!    attached), `GET /v1/jobs/:id/stats` reads its per-job counters plus
+//!    the plane-wide shared-fill evidence, `POST /v1/jobs/:id/epoch`
+//!    drives the next epoch, `DELETE /v1/jobs/:id` closes it. Co-located
+//!    sessions opened through this API share one fill ledger per dataset
+//!    — the Table 4 cross-job point, reachable over HTTP.
+//!
+//! Routing discipline: unknown `/v1/` paths answer `404`; a known path
+//! with the wrong verb answers `405`.
 
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use super::http::{Request, Response};
 use crate::coordinator::{job_controller, Hoard};
 use crate::k8s::{Dataset, DatasetPhase, DlJob, JobPhase, ObjectMeta, StoreError};
+use crate::posix::dataplane::{DataPlane, Granularity, JobSession, JobSpec};
+use crate::posix::realfs::ReadStats;
 use crate::util::Json;
 
 #[derive(Clone)]
 pub struct ApiState {
     pub hoard: Arc<Mutex<Hoard>>,
+    /// The shared per-node data plane behind `/v1/jobs`, when attached.
+    plane: Option<Arc<DataPlane>>,
+    /// Open job sessions by name (the `/v1/jobs/:id` handle).
+    sessions: Arc<Mutex<HashMap<String, Arc<JobSession>>>>,
 }
 
 impl ApiState {
+    pub fn new(hoard: Arc<Mutex<Hoard>>) -> Self {
+        ApiState { hoard, plane: None, sessions: Arc::new(Mutex::new(HashMap::new())) }
+    }
+
+    /// Attach a [`DataPlane`]: `/v1/jobs` opens real job sessions on it.
+    pub fn with_plane(mut self, plane: Arc<DataPlane>) -> Self {
+        self.plane = Some(plane);
+        self
+    }
+
     pub fn route(&self, req: &Request) -> Response {
         let path: Vec<&str> = req.path.trim_matches('/').split('/').collect();
-        match (req.method.as_str(), path.as_slice()) {
-            ("GET", ["healthz"]) => Response::text(200, "ok"),
-            ("GET", ["api", "v1", "stats"]) => self.stats(),
-            ("GET", ["api", "v1", "datasets"]) => self.list_datasets(),
-            ("POST", ["api", "v1", "datasets"]) => self.create_dataset(&req.body),
-            ("GET", ["api", "v1", "datasets", name]) => self.get_dataset(name),
-            ("DELETE", ["api", "v1", "datasets", name]) => self.delete_dataset(name),
-            ("GET", ["api", "v1", "jobs"]) => self.list_jobs(),
-            ("POST", ["api", "v1", "jobs"]) => self.create_job(&req.body),
-            ("GET", ["api", "v1", "jobs", name]) => self.get_job(name),
-            ("POST", ["api", "v1", "jobs", name, "complete"]) => self.complete_job(name),
+        let m = req.method.as_str();
+        match path.as_slice() {
+            ["healthz"] | ["v1", "healthz"] => match m {
+                "GET" => Response::text(200, "ok"),
+                _ => Response::method_not_allowed(),
+            },
+            ["v1", "stats"] | ["api", "v1", "stats"] => match m {
+                "GET" => self.stats(),
+                _ => Response::method_not_allowed(),
+            },
+            ["v1", "datasets"] | ["api", "v1", "datasets"] => match m {
+                "GET" => self.list_datasets(),
+                "POST" => self.create_dataset(&req.body),
+                _ => Response::method_not_allowed(),
+            },
+            ["v1", "datasets", name] | ["api", "v1", "datasets", name] => match m {
+                "GET" => self.get_dataset(name),
+                "DELETE" => self.delete_dataset(name),
+                _ => Response::method_not_allowed(),
+            },
+            // Legacy control-plane DlJobs stay under /api/v1/jobs;
+            // /v1/jobs below is the data-plane session surface.
+            ["api", "v1", "jobs"] => match m {
+                "GET" => self.list_jobs(),
+                "POST" => self.create_job(&req.body),
+                _ => Response::method_not_allowed(),
+            },
+            ["api", "v1", "jobs", name] => match m {
+                "GET" => self.get_job(name),
+                _ => Response::method_not_allowed(),
+            },
+            ["api", "v1", "jobs", name, "complete"] => match m {
+                "POST" => self.complete_job(name),
+                _ => Response::method_not_allowed(),
+            },
+            ["v1", "jobs"] => match m {
+                "GET" => self.list_sessions(),
+                "POST" => self.open_session(&req.body),
+                _ => Response::method_not_allowed(),
+            },
+            ["v1", "jobs", name] => match m {
+                "GET" => self.get_session(name),
+                "DELETE" => self.close_session(name),
+                _ => Response::method_not_allowed(),
+            },
+            ["v1", "jobs", name, "stats"] => match m {
+                "GET" => self.session_stats(name),
+                _ => Response::method_not_allowed(),
+            },
+            ["v1", "jobs", name, "epoch"] => match m {
+                "POST" => self.run_session_epoch(name),
+                _ => Response::method_not_allowed(),
+            },
             _ => Response::not_found(),
         }
     }
@@ -36,6 +112,198 @@ impl ApiState {
         let mut h = self.hoard.lock().unwrap();
         f(&mut h)
     }
+
+    // ----- data-plane job sessions (/v1/jobs) ---------------------------
+
+    fn no_plane() -> Response {
+        Response::json(503, r#"{"error":"no data plane attached to this server"}"#.to_string())
+    }
+
+    /// An error body built through [`Json`] so user-controlled strings
+    /// (job names, dataset names, anyhow messages) are escaped — a quote
+    /// in a name must never produce malformed JSON.
+    fn error_json(status: u16, msg: impl Into<String>) -> Response {
+        Response::json(status, Json::obj(vec![("error", Json::str(msg))]).to_string())
+    }
+
+    fn read_stats_json(s: &ReadStats) -> Json {
+        Json::obj(vec![
+            ("remote_bytes", Json::num(s.remote_bytes as f64)),
+            ("local_bytes", Json::num(s.local_bytes as f64)),
+            ("peer_bytes", Json::num(s.peer_bytes as f64)),
+            ("peer_net_bytes", Json::num(s.peer_net_bytes as f64)),
+            ("remote_reads", Json::num(s.remote_reads as f64)),
+            ("local_reads", Json::num(s.local_reads as f64)),
+            ("peer_reads", Json::num(s.peer_reads as f64)),
+            ("peer_net_reads", Json::num(s.peer_net_reads as f64)),
+            ("remote_wait_s", Json::num(s.remote_wait_s)),
+            ("total_reads", Json::num(s.total_reads() as f64)),
+            ("total_bytes", Json::num(s.total_bytes() as f64)),
+        ])
+    }
+
+    fn session_json(name: &str, sess: &JobSession) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(name)),
+            ("id", Json::num(sess.job_id() as f64)),
+            ("dataset", Json::str(sess.dataset())),
+            ("readers", Json::num(sess.readers() as f64)),
+            ("granularity", Json::str(sess.granularity().name())),
+            ("epochs_run", Json::num(sess.epochs_run() as f64)),
+            ("stats", Self::read_stats_json(&sess.stats())),
+        ])
+    }
+
+    fn session(&self, name: &str) -> Option<Arc<JobSession>> {
+        self.sessions.lock().unwrap().get(name).cloned()
+    }
+
+    fn open_session(&self, body: &[u8]) -> Response {
+        let Some(plane) = &self.plane else { return Self::no_plane() };
+        let Ok(text) = std::str::from_utf8(body) else {
+            return Response::json(400, r#"{"error":"body is not utf-8"}"#.into());
+        };
+        let j = match Json::parse(text) {
+            Ok(j) => j,
+            Err(e) => return Response::json(400, format!(r#"{{"error":"{e}"}}"#)),
+        };
+        let (Some(name), Some(dataset)) = (
+            j.get("name").and_then(|v| v.as_str()).map(str::to_string),
+            j.get("dataset").and_then(|v| v.as_str()).map(str::to_string),
+        ) else {
+            return Response::json(400, r#"{"error":"name and dataset required"}"#.into());
+        };
+        let Some(cfg) = plane.dataset_cfg(&dataset) else {
+            return Self::error_json(
+                400,
+                format!("dataset '{dataset}' is not registered with the data plane"),
+            );
+        };
+        let granularity = match j.get("granularity").and_then(|v| v.as_str()) {
+            None | Some("chunked") => Granularity::Chunked,
+            Some("whole-file") => Granularity::WholeFile,
+            Some(other) => {
+                return Self::error_json(400, format!("unknown granularity '{other}'"));
+            }
+        };
+        let spec = JobSpec::new(dataset, cfg)
+            .readers(j.get("readers").and_then(|v| v.as_u64()).unwrap_or(1) as usize)
+            .seed(j.get("seed").and_then(|v| v.as_u64()).unwrap_or(0))
+            .granularity(granularity)
+            .prefetch(j.get("prefetch").and_then(|v| v.as_bool()).unwrap_or(true));
+        let epochs = j.get("epochs").and_then(|v| v.as_u64()).unwrap_or(0);
+        let sess = match plane.open_job(spec) {
+            Ok(sess) => Arc::new(sess),
+            Err(e) => return Self::error_json(400, format!("{e:#}")),
+        };
+        // Reserve the name under ONE lock acquisition (check + insert
+        // atomically), so a concurrent same-name POST can never overwrite
+        // this session while its warm-up epochs run.
+        {
+            use std::collections::hash_map::Entry;
+            let mut map = self.sessions.lock().unwrap();
+            match map.entry(name.clone()) {
+                Entry::Occupied(_) => {
+                    return Self::error_json(409, format!("job '{name}' exists"));
+                }
+                Entry::Vacant(slot) => {
+                    slot.insert(sess.clone());
+                }
+            }
+        }
+        // Synchronous warm-up epochs, when asked for (tiny datasets; the
+        // epoch endpoint drives the rest). A failed warm-up releases the
+        // name — but only if it still points at *this* session (a
+        // concurrent DELETE + re-POST may have replaced it; never remove
+        // someone else's healthy session).
+        for _ in 0..epochs {
+            if let Err(e) = sess.run_next_epoch() {
+                let mut map = self.sessions.lock().unwrap();
+                if map.get(&name).is_some_and(|cur| Arc::ptr_eq(cur, &sess)) {
+                    map.remove(&name);
+                }
+                return Self::error_json(500, format!("epoch failed: {e:#}"));
+            }
+        }
+        Response::json(201, Self::session_json(&name, &sess).to_string())
+    }
+
+    fn list_sessions(&self) -> Response {
+        if self.plane.is_none() {
+            return Self::no_plane();
+        }
+        let map = self.sessions.lock().unwrap();
+        let mut names: Vec<&String> = map.keys().collect();
+        names.sort();
+        let items: Vec<Json> =
+            names.into_iter().map(|n| Self::session_json(n, &map[n])).collect();
+        Response::json(200, Json::obj(vec![("items", Json::arr(items))]).to_string())
+    }
+
+    fn get_session(&self, name: &str) -> Response {
+        if self.plane.is_none() {
+            return Self::no_plane();
+        }
+        match self.session(name) {
+            Some(s) => Response::json(200, Self::session_json(name, &s).to_string()),
+            None => Response::not_found(),
+        }
+    }
+
+    fn session_stats(&self, name: &str) -> Response {
+        let Some(plane) = &self.plane else { return Self::no_plane() };
+        match self.session(name) {
+            Some(s) => {
+                let body = Json::obj(vec![
+                    ("name", Json::str(name)),
+                    ("dataset", Json::str(s.dataset())),
+                    ("epochs_run", Json::num(s.epochs_run() as f64)),
+                    // Plane-wide remote fills on this dataset: with J
+                    // co-located jobs this stays at the chunk count —
+                    // the shared-fills evidence, readable per job.
+                    ("dataset_fills", Json::num(plane.dataset_fills(s.dataset()) as f64)),
+                    ("stats", Self::read_stats_json(&s.stats())),
+                ]);
+                Response::json(200, body.to_string())
+            }
+            None => Response::not_found(),
+        }
+    }
+
+    fn close_session(&self, name: &str) -> Response {
+        if self.plane.is_none() {
+            return Self::no_plane();
+        }
+        match self.sessions.lock().unwrap().remove(name) {
+            Some(_) => Response { status: 204, content_type: "application/json", body: vec![] },
+            None => Response::not_found(),
+        }
+    }
+
+    fn run_session_epoch(&self, name: &str) -> Response {
+        if self.plane.is_none() {
+            return Self::no_plane();
+        }
+        let Some(sess) = self.session(name) else { return Response::not_found() };
+        match sess.run_next_epoch() {
+            Ok(report) => {
+                let body = Json::obj(vec![
+                    ("name", Json::str(name)),
+                    ("epochs_run", Json::num(sess.epochs_run() as f64)),
+                    ("wall_s", Json::num(report.wall.as_secs_f64())),
+                    (
+                        "items_per_sec",
+                        Json::num(report.items_per_sec(sess.cfg().num_items)),
+                    ),
+                    ("stats", Self::read_stats_json(&report.merged)),
+                ]);
+                Response::json(200, body.to_string())
+            }
+            Err(e) => Self::error_json(500, format!("{e:#}")),
+        }
+    }
+
+    // ----- control plane (datasets + legacy DlJobs) ---------------------
 
     fn dataset_json(h: &Hoard, d: &Dataset) -> Json {
         let rec = h.cache.registry.get(&d.meta.name);
@@ -253,7 +521,7 @@ mod tests {
     #[test]
     fn delete_pinned_dataset_conflicts() {
         let hoard = Arc::new(Mutex::new(Hoard::paper_testbed()));
-        let state = ApiState { hoard };
+        let state = ApiState::new(hoard);
         let mk = |method: &str, path: &str, body: &str| Request {
             method: method.into(),
             path: path.into(),

@@ -94,7 +94,7 @@ pub fn chunk_scaling_run_with_remote(
     cluster.set_node_read_latency(node_latency);
     let total = match shared_remote {
         Some(dir) => {
-            cluster.remote_dir = dir.to_path_buf();
+            cluster.set_remote_dir(dir.to_path_buf());
             cfg.num_items * cfg.record_bytes() as u64
         }
         None => datagen::generate(&cluster.remote_dir, cfg).context("generating dataset")?,
@@ -166,7 +166,7 @@ pub fn chunk_size_table_with(sweep: &[Option<u64>], cfg: &DataGenConfig, readers
                 chunk.map_or("whole-file".to_string(), fmt::bytes),
                 format!("{:.3}", p.cold_s),
                 format!("{:.3}", p.warm_s),
-                format!("{:.0}", cfg.num_items as f64 / p.warm_s.max(1e-9)),
+                format!("{:.0}", super::items_per_sec(cfg.num_items, p.warm_s)),
                 format!("{}", p.cold.remote_reads),
                 format!("{}", p.cold.remote_bytes),
                 format!("{}", p.warm.local_reads + p.warm.peer_reads),

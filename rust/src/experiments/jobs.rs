@@ -1,0 +1,223 @@
+//! Multi-job co-scheduling experiment (`hoard exp jobs`): J ∈ {1, 2, 4}
+//! co-located jobs streaming **one** dataset through a shared
+//! [`DataPlane`], each with its own [`JobSession`] (own seed, own epoch
+//! order, own readers, own stats) over one fill ledger.
+//!
+//! What it shows — the paper's Table 4 cross-job point under real
+//! concurrency: the cold phase's total remote-fill count equals the chunk
+//! count **regardless of J** (fills are shared once, not raced J times),
+//! the remote store supplies every byte exactly once, and every job's
+//! warm epoch then streams from cache at full per-job throughput. Emits
+//! the same JSON table shape as every other `exp`
+//! (`metrics::Table::json`) — CI captures it as `BENCH_jobs.json`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::cache::{CacheManager, EvictionPolicy, SharedCache};
+use crate::metrics::Table;
+use crate::netsim::NodeId;
+use crate::posix::dataplane::{DataPlane, JobSession, JobSpec};
+use crate::posix::realfs::{ReadStats, RealCluster};
+use crate::remote::NfsModel;
+use crate::storage::{Device, DeviceKind, Volume};
+use crate::workload::datagen::{self, DataGenConfig};
+use crate::workload::DatasetSpec;
+
+use super::items_per_sec;
+
+/// Nodes in the co-scheduling testbed (matches the paper's 4-node
+/// cluster).
+pub const JOB_NODES: usize = 4;
+
+/// One measured point: J jobs over one plane.
+#[derive(Debug, Clone)]
+pub struct CoJobPoint {
+    pub jobs: usize,
+    /// Wall of the concurrent cold phase (all J jobs' epoch 0).
+    pub cold_s: f64,
+    /// Remote fills recorded by the shared ledger — `== chunks` is the
+    /// fills-shared-once evidence.
+    pub fills: u64,
+    pub chunks: u64,
+    /// Cluster-wide cold-phase stats (all jobs merged).
+    pub cold: ReadStats,
+    /// Per-job warm-epoch wall seconds, job order.
+    pub warm_s: Vec<f64>,
+    /// Per-job warm-epoch stats, job order.
+    pub warm: Vec<ReadStats>,
+    pub items: u64,
+    pub total_bytes: u64,
+}
+
+/// Run J co-located jobs over one freshly placed dataset: a concurrent
+/// cold phase (every job runs its epoch 0 at once, racing the shared
+/// ledger), then a concurrent warm phase (epoch 1 each).
+pub fn co_job_run(jobs: usize, items: u64, chunk_bytes: u64, readers: usize) -> Result<CoJobPoint> {
+    static RUN_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = RUN_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let root: PathBuf = std::env::temp_dir().join(format!(
+        "hoard-jobs-{jobs}-{}-{seq}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    let cluster = RealCluster::create(&root, JOB_NODES, 200e6)
+        .context("creating co-job cluster")?
+        .with_remote_model(Box::new(NfsModel::new(200e6)));
+    let cfg = DataGenConfig { num_items: items, files_per_dir: 32, ..Default::default() };
+    let total = datagen::generate(&cluster.remote_dir, &cfg).context("generating dataset")?;
+
+    let vols = (0..JOB_NODES)
+        .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 30)]))
+        .collect();
+    let mut manager = CacheManager::new(vols, EvictionPolicy::Manual);
+    manager.chunk_bytes = chunk_bytes;
+    manager.register(DatasetSpec::new("co", items, total), "nfs://remote/co".into())?;
+    manager.place("co", (0..JOB_NODES).map(NodeId).collect())?;
+    let cache = SharedCache::new(manager);
+    let chunks = cache.geometry("co")?.num_chunks();
+
+    // One plane; J sessions on it, each with its own seed.
+    let plane = Arc::new(DataPlane::new(cluster.clone(), cache));
+    let sessions: Vec<JobSession> = (0..jobs)
+        .map(|j| {
+            plane.open_job(JobSpec::new("co", cfg.clone()).readers(readers).seed(0xC05C + j as u64))
+        })
+        .collect::<Result<_>>()?;
+
+    let run_all = |epoch: u32| -> Result<Vec<(f64, ReadStats)>> {
+        let results: Vec<Result<(f64, ReadStats)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = sessions
+                .iter()
+                .map(|sess| {
+                    s.spawn(move || -> Result<(f64, ReadStats)> {
+                        let report = sess.run_epoch(epoch)?;
+                        Ok((report.wall.as_secs_f64(), report.merged))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("job thread panicked"))))
+                .collect()
+        });
+        results.into_iter().collect()
+    };
+
+    // Cold phase: all J jobs race epoch 0 over the shared ledger.
+    let t0 = Instant::now();
+    run_all(0)?;
+    let cold_s = t0.elapsed().as_secs_f64();
+    let fills = plane.dataset_fills("co");
+    let cold = cluster.take_stats();
+
+    // Warm phase: epoch 1 each, still concurrent.
+    let warm_points = run_all(1)?;
+    let (warm_s, warm): (Vec<f64>, Vec<ReadStats>) = warm_points.into_iter().unzip();
+
+    let point = CoJobPoint {
+        jobs,
+        cold_s,
+        fills,
+        chunks,
+        cold,
+        warm_s,
+        warm,
+        items,
+        total_bytes: total,
+    };
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(point)
+}
+
+/// The J-jobs epoch table over an explicit sweep.
+pub fn co_job_table_with(sweep: &[usize], items: u64, chunk_bytes: u64, readers: usize) -> Table {
+    let mut t = Table::new(
+        "Real mode — co-located jobs over one DataPlane (shared fills, per-job epochs)",
+        &[
+            "jobs",
+            "cold phase (s)",
+            "fills",
+            "chunks",
+            "cold remote bytes",
+            "dataset bytes",
+            "warm epoch mean (s)",
+            "warm img/s per job",
+            "warm remote reads",
+        ],
+    );
+    for &j in sweep {
+        match co_job_run(j, items, chunk_bytes, readers) {
+            Ok(p) => {
+                let warm_mean = super::mean(&p.warm_s);
+                let warm_remote: u64 = p.warm.iter().map(|s| s.remote_reads).sum();
+                t.row(vec![
+                    format!("{j}"),
+                    format!("{:.3}", p.cold_s),
+                    format!("{}", p.fills),
+                    format!("{}", p.chunks),
+                    format!("{}", p.cold.remote_bytes),
+                    format!("{}", p.total_bytes),
+                    format!("{warm_mean:.3}"),
+                    format!("{:.0}", items_per_sec(p.items, warm_mean)),
+                    format!("{warm_remote}"),
+                ]);
+            }
+            Err(e) => {
+                let mut cells = vec![format!("{j}"), format!("failed: {e:#}")];
+                cells.resize(9, String::new());
+                t.row(cells);
+            }
+        }
+    }
+    t
+}
+
+/// The default `hoard exp jobs` table: J ∈ {1, 2, 4}, sub-item chunks,
+/// 2 readers per job. Honors `HOARD_BENCH_SMOKE=1` (smaller dataset so CI
+/// smoke runs stay fast).
+pub fn co_job_table(items: u64) -> Table {
+    let smoke = std::env::var("HOARD_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let items = if smoke { items.min(12) } else { items };
+    co_job_table_with(&[1, 2, 4], items, 1000, 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn co_jobs_share_fills_once_and_warm_from_cache() {
+        let p = co_job_run(2, 16, 777, 2).unwrap();
+        assert_eq!(p.fills, p.chunks, "2 jobs must fill each chunk exactly once, together");
+        assert_eq!(p.cold.remote_bytes, p.total_bytes, "remote supplies every byte once");
+        for (j, w) in p.warm.iter().enumerate() {
+            assert_eq!(w.remote_reads, 0, "job {j} warm epoch touched remote");
+            assert!(w.local_reads + w.peer_reads + w.peer_net_reads > 0, "job {j} read nothing");
+        }
+        assert_eq!(p.warm_s.len(), 2);
+    }
+
+    #[test]
+    fn jobs_table_has_one_row_per_fleet_size() {
+        let t = co_job_table_with(&[1, 2], 8, 1000, 1);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][0], "1");
+        assert_eq!(t.rows[1][0], "2");
+        // Fills == chunks on both rows (the headline invariant). Parse
+        // the cells so an error row (empty-padded columns) fails loudly
+        // instead of comparing "" == "" vacuously.
+        for row in &t.rows {
+            let fills: u64 = row[2].parse().unwrap_or_else(|_| {
+                panic!("fills column not numeric — run failed? {row:?}")
+            });
+            let chunks: u64 = row[3].parse().unwrap_or_else(|_| {
+                panic!("chunks column not numeric — run failed? {row:?}")
+            });
+            assert_eq!(fills, chunks, "fills must equal chunks: {row:?}");
+        }
+    }
+}

@@ -5,11 +5,13 @@
 
 pub mod ablations;
 pub mod chunks;
+pub mod jobs;
 pub mod paper;
 pub mod peers;
 pub mod realmode;
 
 pub use chunks::{chunk_scaling_run, chunk_size_table};
+pub use jobs::{co_job_run, co_job_table};
 pub use paper::*;
 pub use peers::{peer_transport_run, peer_transport_table};
 pub use realmode::{realmode_reader_scaling, reader_scaling_run};
@@ -36,6 +38,13 @@ pub mod calib {
 /// Format a speedup like the paper's Table 3 ("2.07 ×").
 pub fn speedup(x: f64) -> String {
     format!("{x:.2} ×")
+}
+
+/// Throughput guarded against zero-duration epochs (smoke-mode runs can
+/// finish in ~0 ns): delegates to the one canonical guard in
+/// [`crate::util::per_sec`].
+pub fn items_per_sec(items: u64, secs: f64) -> f64 {
+    crate::util::per_sec(items, secs)
 }
 
 /// Mean of a slice.
@@ -67,6 +76,9 @@ mod tests {
         assert_eq!(speedup(2.0666), "2.07 ×");
         assert_eq!(mean(&[1.0, 3.0]), 2.0);
         assert_eq!(mean(&[]), 0.0);
+        assert_eq!(items_per_sec(100, 2.0), 50.0);
+        assert_eq!(items_per_sec(100, 0.0), 0.0, "zero-duration epochs must not yield inf");
+        assert_eq!(items_per_sec(100, -1.0), 0.0);
         let pts = [(0.0, 1.0)];
         let csv = series_csv(&[("a", &pts)]);
         assert!(csv.contains("a,0.0,1.0"));

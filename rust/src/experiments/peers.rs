@@ -136,7 +136,7 @@ pub fn peer_transport_table_with(items: u64, chunk_bytes: u64, readers: usize) -
                 p.transport.to_string(),
                 format!("{:.3}", p.cold_s),
                 format!("{:.3}", p.warm_s),
-                format!("{:.0}", items as f64 / p.warm_s.max(1e-9)),
+                format!("{:.0}", super::items_per_sec(items, p.warm_s)),
                 format!("{}", p.warm.peer_reads),
                 format!("{}", p.warm.peer_net_reads),
                 format!("{}", p.warm.peer_net_bytes),

@@ -108,7 +108,7 @@ pub fn realmode_reader_scaling(readers_list: &[usize], items: u64) -> Table {
                     format!("{n}"),
                     format!("{:.3}", p.cold_s),
                     format!("{:.3}", p.warm_s),
-                    format!("{:.0}", items as f64 / p.warm_s.max(1e-9)),
+                    format!("{:.0}", super::items_per_sec(items, p.warm_s)),
                     format!("{:.2} ×", base / p.warm_s.max(1e-9)),
                     format!("{}", p.cold.remote_reads),
                     format!("{}", p.warm.local_reads + p.warm.peer_reads),

@@ -41,8 +41,9 @@ fn main() {
 fn print_usage() {
     eprintln!(
         "hoard — distributed data caching for DL training (paper reproduction)\n\n\
-         USAGE:\n  hoard exp <t1|f3|t3|f4|f5|t4|t5|util|readers|chunks|peers|ablations|all> [--json]\n  \
-         hoard serve [--addr 127.0.0.1:7070] [--config FILE]\n  \
+         USAGE:\n  hoard exp <t1|f3|t3|f4|f5|t4|t5|util|readers|chunks|peers|jobs|ablations|all> [--json]\n  \
+         hoard serve [--addr 127.0.0.1:7070] [--config FILE]\n        \
+         [--data-root DIR] [--data-items N] [--data-chunk BYTES]\n  \
          hoard datagen --out DIR [--items N]\n  \
          hoard sim --mode <rem|nvme|hoard> [--epochs N] [--readers N]\n  \
          hoard info"
@@ -91,6 +92,7 @@ fn cmd_exp(args: &[String]) -> i32 {
             "readers" => emit(experiments::realmode_reader_scaling(&[1, 2, 4], 256)),
             "chunks" => emit(experiments::chunk_size_table(24)),
             "peers" => emit(experiments::peer_transport_table(24)),
+            "jobs" => emit(experiments::co_job_table(24)),
             "ablations" => {
                 emit(ablations::ablation_stripe_width());
                 emit(ablations::ablation_prefetch());
@@ -104,7 +106,7 @@ fn cmd_exp(args: &[String]) -> i32 {
     if which == "all" {
         for id in [
             "t1", "f3", "t3", "f4", "f5", "t4", "t5", "util", "readers", "chunks", "peers",
-            "ablations",
+            "jobs", "ablations",
         ] {
             run(id);
         }
@@ -116,6 +118,42 @@ fn cmd_exp(args: &[String]) -> i32 {
         eprintln!("unknown experiment '{which}'");
         2
     }
+}
+
+/// Build the real-mode data plane behind `/v1/jobs`: a 4-node cluster of
+/// cache directories under `root`, one generated dataset ("default",
+/// reused when the remote store already holds it) striped over all
+/// nodes, and a `DataPlane` with the dataset's layout registered.
+fn build_data_plane(
+    root: &str,
+    items: u64,
+    chunk_bytes: u64,
+) -> anyhow::Result<Arc<hoard::posix::DataPlane>> {
+    use hoard::cache::{CacheManager, EvictionPolicy, SharedCache};
+    use hoard::netsim::NodeId;
+    use hoard::posix::{DataPlane, RealCluster};
+    use hoard::storage::{Device, DeviceKind, Volume};
+    use hoard::workload::DatasetSpec;
+    const NODES: usize = 4;
+    let cluster = RealCluster::create(root, NODES, 500e6)?;
+    let cfg = DataGenConfig { num_items: items, files_per_dir: 64, ..Default::default() };
+    let total = if cluster.remote_dir.join(cfg.item_rel_path(0)).exists() {
+        // Remote store already generated (a previous serve): reuse it.
+        items * cfg.record_bytes() as u64
+    } else {
+        generate(&cluster.remote_dir, &cfg)?
+    };
+    let vols = (0..NODES)
+        .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 32)]))
+        .collect();
+    let mut manager = CacheManager::new(vols, EvictionPolicy::Manual);
+    manager.chunk_bytes = chunk_bytes;
+    manager.register(DatasetSpec::new("default", items, total), format!("nfs://{root}/default"))?;
+    manager.place("default", (0..NODES).map(NodeId).collect())?;
+    let plane = Arc::new(DataPlane::new(cluster, SharedCache::new(manager)));
+    plane.register_dataset("default", cfg);
+    println!("data plane at {root}: dataset 'default' ({items} items) striped over {NODES} nodes");
+    Ok(plane)
 }
 
 fn cmd_serve(args: &[String]) -> i32 {
@@ -131,13 +169,40 @@ fn cmd_serve(args: &[String]) -> i32 {
         None => ClusterConfig::paper_testbed(),
     };
     let hoard = Arc::new(Mutex::new(config.build()));
-    match hoard::api::serve(addr, hoard) {
+    let plane = match flag(args, "--data-root") {
+        Some(root) => {
+            let items = flag(args, "--data-items").and_then(|s| s.parse().ok()).unwrap_or(256);
+            let chunk =
+                flag(args, "--data-chunk").and_then(|s| s.parse().ok()).unwrap_or(1 << 20);
+            match build_data_plane(root, items, chunk) {
+                Ok(p) => Some(p),
+                Err(e) => {
+                    eprintln!("data plane setup failed: {e:#}");
+                    return 1;
+                }
+            }
+        }
+        None => None,
+    };
+    let has_plane = plane.is_some();
+    let served = match plane {
+        Some(p) => hoard::api::serve_with_plane(addr, hoard, p),
+        None => hoard::api::serve(addr, hoard),
+    };
+    match served {
         Ok(server) => {
             println!("hoard api listening on http://{}", server.addr);
             println!("  GET  /healthz");
-            println!("  GET|POST /api/v1/datasets   DELETE /api/v1/datasets/NAME");
-            println!("  GET|POST /api/v1/jobs       POST /api/v1/jobs/NAME/complete");
-            println!("  GET  /api/v1/stats");
+            println!("  GET|POST /v1/datasets       DELETE /v1/datasets/NAME");
+            println!("  GET  /v1/stats              (legacy aliases under /api/v1/)");
+            if has_plane {
+                println!("  GET|POST /v1/jobs           job sessions (dataset 'default')");
+            } else {
+                println!("  GET|POST /v1/jobs           503 — attach with --data-root DIR");
+            }
+            println!("  GET  /v1/jobs/NAME/stats    POST /v1/jobs/NAME/epoch");
+            println!("  DELETE /v1/jobs/NAME");
+            println!("  GET|POST /api/v1/jobs       POST /api/v1/jobs/NAME/complete (control)");
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }

@@ -169,9 +169,9 @@ impl ChunkTransport for DirTransport {
         if !cluster.node_has(home, &crel) {
             return Ok(None);
         }
-        cluster
-            .read_node_range_sharded(home, &crel, offset, len, reader, stats)
-            .map(Some)
+        let mut buf = vec![0u8; len as usize];
+        cluster.read_node_range_into_sharded(home, &crel, offset, reader, &mut buf, stats)?;
+        Ok(Some(buf))
     }
 
     fn fetch_item(

@@ -1,0 +1,795 @@
+//! The per-node data plane and its per-job sessions — the unified
+//! real-mode read API.
+//!
+//! One [`DataPlane`] per node fleet owns everything co-located jobs must
+//! **share**: the [`SharedCache`] (placements + residency snapshots), one
+//! per-`(dataset, chunk)` sharded [`FillTable`] fetch-once ledger per
+//! dataset, the reusable [`BufPool`], and the default
+//! [`ChunkTransport`]. Each job opens a [`JobSession`]
+//! ([`DataPlane::open_job`]) carrying everything jobs must **not** share:
+//! its own epoch order and seed, reader set, prefetch toggle, optional
+//! transport override, and per-job accumulated [`ReadStats`].
+//!
+//! That split is the paper's Table 4 cross-job point made real: J
+//! hyper-parameter-tuning jobs streaming one cached dataset trigger each
+//! remote fill exactly **once** (the shared ledger), instead of J times
+//! (the old one-`ReaderPool`-per-job world, where every pool privately
+//! owned its ledger and raced the others for the same bytes) —
+//! `hoard exp jobs` measures exactly this.
+//!
+//! Every read goes through **one** entry point: build a [`ReadRequest`]
+//! (`item`, optional item-local byte `range`, optional granularity
+//! `mode` check) and call [`JobSession::read`]. Snapshot fast lane vs
+//! locked fallback, whole-file vs chunked assembly, dir vs socket
+//! transport, buffer reuse and batched peer fetches are all internal
+//! dispatch — the six historical `read_item_*` function names survive in
+//! [`reader_pool`](super::reader_pool) as thin wrappers over the same
+//! implementation, and [`ReaderPool`](super::reader_pool::ReaderPool) is
+//! a shim that owns a private plane with one session.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::bufpool::BufPool;
+use super::reader_pool::{
+    prefetch_chunks, prefetch_items, read_item_concurrent_fast, read_item_range_chunked_fast,
+    EpochReport, FillTable,
+};
+use super::realfs::{ReadStats, RealCluster};
+use crate::cache::{ChunkGeometry, ResidencySnapshot, SharedCache};
+use crate::netsim::NodeId;
+use crate::peer::{ChunkTransport, DirTransport};
+use crate::util::Rng;
+use crate::workload::datagen::DataGenConfig;
+
+/// How a dataset is addressed by the fill ledger and on disk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    /// One fetch-once slot per item file (the degenerate case of chunking
+    /// when `chunk_bytes` ≥ item size).
+    WholeFile,
+    /// One slot per stripe chunk: fills fetch byte ranges and readers
+    /// assemble items from chunk files.
+    Chunked,
+}
+
+impl Granularity {
+    /// Wire/table tag ("whole-file" / "chunked").
+    pub fn name(self) -> &'static str {
+        match self {
+            Granularity::WholeFile => "whole-file",
+            Granularity::Chunked => "chunked",
+        }
+    }
+}
+
+/// What a job asks of the plane when it opens a session.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub dataset: String,
+    /// On-disk item layout of the dataset (paths + sizes).
+    pub cfg: DataGenConfig,
+    pub readers: usize,
+    /// Seed for this job's epoch permutations — co-located jobs keep
+    /// their own stochastic read order.
+    pub seed: u64,
+    pub granularity: Granularity,
+    pub prefetch: bool,
+}
+
+impl JobSpec {
+    /// Defaults: 1 reader, seed 0, chunked addressing, prefetch on.
+    pub fn new(dataset: impl Into<String>, cfg: DataGenConfig) -> Self {
+        JobSpec {
+            dataset: dataset.into(),
+            cfg,
+            readers: 1,
+            seed: 0,
+            granularity: Granularity::Chunked,
+            prefetch: true,
+        }
+    }
+
+    pub fn readers(mut self, n: usize) -> Self {
+        self.readers = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn granularity(mut self, g: Granularity) -> Self {
+        self.granularity = g;
+        self
+    }
+
+    pub fn prefetch(mut self, on: bool) -> Self {
+        self.prefetch = on;
+        self
+    }
+}
+
+/// One read, in full: which item, optionally which item-local byte range,
+/// optionally which granularity the caller insists on. Everything else —
+/// fast lane vs locked lane, chunk assembly, transport, buffers — is the
+/// session's dispatch, not the caller's function choice.
+#[derive(Debug, Clone)]
+pub struct ReadRequest {
+    pub item: u64,
+    /// Item-local byte range; `None` ⇒ the whole item. Chunked sessions
+    /// claim and fill **only** the chunks the range overlaps.
+    pub range: Option<std::ops::Range<u64>>,
+    /// When set, the request errors unless the dataset ledger uses this
+    /// granularity — an assertion for callers that depend on one
+    /// addressing mode. `None` follows the ledger.
+    pub mode: Option<Granularity>,
+}
+
+impl ReadRequest {
+    /// Read all of item `i`.
+    pub fn item(i: u64) -> Self {
+        ReadRequest { item: i, range: None, mode: None }
+    }
+
+    /// Read the item-local byte range `r` of item `i`.
+    pub fn range(i: u64, r: std::ops::Range<u64>) -> Self {
+        ReadRequest { item: i, range: Some(r), mode: None }
+    }
+}
+
+/// Per-dataset shared state: the fetch-once ledger plus how it addresses
+/// the dataset. One per dataset per plane — every session on the dataset
+/// holds the same `Arc`, which is what makes fills shared.
+#[derive(Debug)]
+struct Ledger {
+    fill: FillTable,
+    mode: LedgerMode,
+    /// Fetch-once slots the table was sized for (items in whole-file
+    /// mode, chunks in chunked mode) — re-validated on every reuse so a
+    /// mismatched `cfg` or a stale grid errors instead of indexing out
+    /// of bounds.
+    slots: u64,
+}
+
+#[derive(Debug)]
+enum LedgerMode {
+    WholeFile,
+    Chunked(ChunkGeometry),
+}
+
+impl LedgerMode {
+    fn granularity(&self) -> Granularity {
+        match self {
+            LedgerMode::WholeFile => Granularity::WholeFile,
+            LedgerMode::Chunked(_) => Granularity::Chunked,
+        }
+    }
+}
+
+/// Reusable chunk buffers kept pooled on the plane, shared by every
+/// session's readers (remote fills recycle chunk-sized allocations
+/// instead of one fresh `Vec` each). Bounded in count and per-buffer
+/// capacity.
+const PLANE_BUFS: usize = 32;
+const PLANE_BUF_BYTES: usize = 64 << 20;
+
+/// One shared per-node-fleet data plane: the `Arc`-owned object under
+/// every co-located job. See the module docs for the ownership model.
+pub struct DataPlane {
+    cluster: RealCluster,
+    cache: SharedCache,
+    /// Default transport for every session (sessions may override their
+    /// own — e.g. one socket-transport job next to dir-transport jobs).
+    transport: Box<dyn ChunkTransport>,
+    bufs: BufPool,
+    ledgers: Mutex<HashMap<String, Arc<Ledger>>>,
+    /// Dataset layouts registered for control-plane consumers (the
+    /// `/v1/jobs` HTTP endpoints build `JobSpec`s from these).
+    dataset_cfgs: Mutex<HashMap<String, DataGenConfig>>,
+    next_job: AtomicU64,
+}
+
+impl DataPlane {
+    /// A plane over `cluster` + `cache` with the same-FS
+    /// [`DirTransport`] and a bounded shared buffer pool.
+    pub fn new(cluster: RealCluster, cache: SharedCache) -> Self {
+        DataPlane {
+            cluster,
+            cache,
+            transport: Box::new(DirTransport),
+            bufs: BufPool::new(PLANE_BUFS, PLANE_BUF_BYTES),
+            ledgers: Mutex::new(HashMap::new()),
+            dataset_cfgs: Mutex::new(HashMap::new()),
+            next_job: AtomicU64::new(0),
+        }
+    }
+
+    /// Swap the plane-wide default transport (builder-style, before the
+    /// plane is `Arc`-shared).
+    pub fn with_transport(mut self, transport: Box<dyn ChunkTransport>) -> Self {
+        self.transport = transport;
+        self
+    }
+
+    pub fn cluster(&self) -> &RealCluster {
+        &self.cluster
+    }
+
+    pub fn cache(&self) -> &SharedCache {
+        &self.cache
+    }
+
+    /// Record `dataset`'s on-disk item layout so sessions can be opened
+    /// by name alone (the HTTP job endpoints go through this).
+    pub fn register_dataset(&self, dataset: impl Into<String>, cfg: DataGenConfig) {
+        self.dataset_cfgs.lock().unwrap().insert(dataset.into(), cfg);
+    }
+
+    /// The layout registered via [`DataPlane::register_dataset`].
+    pub fn dataset_cfg(&self, dataset: &str) -> Option<DataGenConfig> {
+        self.dataset_cfgs.lock().unwrap().get(dataset).cloned()
+    }
+
+    /// Remote fills completed for `dataset` across **every** session on
+    /// this plane (adoptions excluded). With J co-located jobs
+    /// cold-racing one chunked dataset this lands on exactly
+    /// `num_chunks` — the fills-shared-once evidence.
+    pub fn dataset_fills(&self, dataset: &str) -> u64 {
+        self.ledgers
+            .lock()
+            .unwrap()
+            .get(dataset)
+            .map(|l| l.fill.fills_completed())
+            .unwrap_or(0)
+    }
+
+    /// Drop `dataset`'s fill ledger (e.g. after evict + re-place changed
+    /// the chunk grid); the next session opened on it starts a fresh one.
+    /// Sessions already holding the old ledger keep their consistent view.
+    pub fn reset_dataset(&self, dataset: &str) {
+        self.ledgers.lock().unwrap().remove(dataset);
+    }
+
+    fn ledger(
+        &self,
+        dataset: &str,
+        granularity: Granularity,
+        cfg: &DataGenConfig,
+    ) -> Result<Arc<Ledger>> {
+        let mut map = self.ledgers.lock().unwrap();
+        if let Some(l) = map.get(dataset) {
+            let have = l.mode.granularity();
+            if have != granularity {
+                bail!(
+                    "dataset '{dataset}' is already open at {} granularity \
+                     (requested {})",
+                    have.name(),
+                    granularity.name()
+                );
+            }
+            // Slot-count check: a job opened with a different cfg (or
+            // after a re-place changed the chunk grid) must error, not
+            // index a too-small table out of bounds.
+            let want = match granularity {
+                Granularity::WholeFile => cfg.num_items,
+                Granularity::Chunked => self.cache.geometry(dataset)?.num_chunks(),
+            };
+            if want != l.slots {
+                bail!(
+                    "dataset '{dataset}' ledger has {} slots but this job needs {want} \
+                     (cfg mismatch or re-placed grid — reset_dataset to start fresh)",
+                    l.slots
+                );
+            }
+            return Ok(l.clone());
+        }
+        let ledger = match granularity {
+            Granularity::WholeFile => Arc::new(Ledger {
+                fill: FillTable::new(cfg.num_items),
+                mode: LedgerMode::WholeFile,
+                slots: cfg.num_items,
+            }),
+            Granularity::Chunked => {
+                let geom = self.cache.geometry(dataset)?;
+                let slots = geom.num_chunks();
+                Arc::new(Ledger {
+                    fill: FillTable::new(slots),
+                    mode: LedgerMode::Chunked(geom),
+                    slots,
+                })
+            }
+        };
+        map.insert(dataset.to_string(), ledger.clone());
+        Ok(ledger)
+    }
+
+    /// Open a job session. Fills, buffers, residency and transport are
+    /// shared with every other session on this plane; epoch order, seed,
+    /// reader set and stats are this job's own. Chunked jobs need the
+    /// dataset placed (the ledger is keyed by its chunk grid).
+    pub fn open_job(self: &Arc<Self>, spec: JobSpec) -> Result<JobSession> {
+        if spec.readers == 0 {
+            bail!("job '{}' needs at least one reader", spec.dataset);
+        }
+        let ledger = self.ledger(&spec.dataset, spec.granularity, &spec.cfg)?;
+        Ok(JobSession {
+            plane: self.clone(),
+            id: self.next_job.fetch_add(1, Ordering::Relaxed),
+            dataset: spec.dataset,
+            cfg: spec.cfg,
+            ledger,
+            readers: spec.readers,
+            seed: spec.seed,
+            prefetch: spec.prefetch,
+            transport: None,
+            stats: Mutex::new(ReadStats::default()),
+            epochs: AtomicU64::new(0),
+            next_epoch: AtomicU64::new(0),
+        })
+    }
+}
+
+/// One job's handle on the shared [`DataPlane`]: its own epoch order,
+/// seed, reader set and accumulated [`ReadStats`], over fills and buffers
+/// shared with every co-located job.
+pub struct JobSession {
+    plane: Arc<DataPlane>,
+    id: u64,
+    dataset: String,
+    cfg: DataGenConfig,
+    ledger: Arc<Ledger>,
+    readers: usize,
+    seed: u64,
+    prefetch: bool,
+    /// Session-level transport override (e.g. sockets for this job only);
+    /// `None` ⇒ the plane default.
+    transport: Option<Box<dyn ChunkTransport>>,
+    /// Job-lifetime accumulator: epoch drivers and the convenience
+    /// [`JobSession::read`] fold into it; never locked on the hot path.
+    stats: Mutex<ReadStats>,
+    /// Epochs *completed* (incremented at the end of `run_epoch_order`).
+    epochs: AtomicU64,
+    /// Next epoch index for [`JobSession::run_next_epoch`] — claimed
+    /// atomically, so concurrent drivers never run the same permutation
+    /// twice.
+    next_epoch: AtomicU64,
+}
+
+impl JobSession {
+    /// Toggle the background prefetcher (on by default; builder-style).
+    pub fn with_prefetch(mut self, on: bool) -> Self {
+        self.prefetch = on;
+        self
+    }
+
+    /// Route this session's non-local reads through `transport` instead
+    /// of the plane default (builder-style).
+    pub fn with_transport(mut self, transport: Box<dyn ChunkTransport>) -> Self {
+        self.transport = Some(transport);
+        self
+    }
+
+    pub fn job_id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn dataset(&self) -> &str {
+        &self.dataset
+    }
+
+    pub fn cfg(&self) -> &DataGenConfig {
+        &self.cfg
+    }
+
+    pub fn readers(&self) -> usize {
+        self.readers
+    }
+
+    pub fn granularity(&self) -> Granularity {
+        self.ledger.mode.granularity()
+    }
+
+    /// Tag of the transport this session's reads use ("dir" / "socket").
+    pub fn transport_name(&self) -> &'static str {
+        self.effective_transport().name()
+    }
+
+    /// Epochs this session has completed.
+    pub fn epochs_run(&self) -> u64 {
+        self.epochs.load(Ordering::Relaxed)
+    }
+
+    /// This job's accumulated stats (its own reads only — co-located
+    /// jobs' traffic never bleeds in).
+    pub fn stats(&self) -> ReadStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Fold a stats shard into the job-lifetime accumulator (epoch
+    /// drivers call this once per epoch, not per read).
+    pub fn record(&self, shard: &ReadStats) {
+        self.stats.lock().unwrap().merge(shard);
+    }
+
+    /// Node the `r`-th reader runs on.
+    pub fn reader_node(&self, r: usize) -> NodeId {
+        NodeId(r % self.plane.cluster.num_nodes())
+    }
+
+    fn effective_transport(&self) -> &dyn ChunkTransport {
+        self.transport.as_deref().unwrap_or(self.plane.transport.as_ref())
+    }
+
+    /// A fresh epoch permutation (Fisher–Yates over all items),
+    /// deterministic in `(self.seed, epoch)`.
+    pub fn epoch_order(&self, epoch: u32) -> Vec<u64> {
+        self.epoch_order_with(self.seed, epoch)
+    }
+
+    /// [`JobSession::epoch_order`] with an explicit seed (the shim's
+    /// pre-DataPlane call shape).
+    pub fn epoch_order_with(&self, seed: u64, epoch: u32) -> Vec<u64> {
+        let mut order: Vec<u64> = (0..self.cfg.num_items).collect();
+        let mut rng = Rng::new(seed ^ ((epoch as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+        rng.shuffle(&mut order);
+        order
+    }
+
+    /// The unified read surface: resolve `req` through the session's
+    /// ledger (whole-file or chunked), the lock-free residency snapshot
+    /// when live, and the effective transport. Records into the job's
+    /// accumulated stats and the cluster-wide accumulator.
+    pub fn read(&self, req: &ReadRequest, reader: NodeId) -> Result<Vec<u8>> {
+        let mut shard = ReadStats::default();
+        let data = self.read_with_stats(req, reader, &mut shard)?;
+        self.record(&shard);
+        self.plane.cluster.merge_stats(&shard);
+        Ok(data)
+    }
+
+    /// [`JobSession::read`] recording only into the caller's own shard
+    /// (fold the shard back via [`JobSession::record`] /
+    /// [`RealCluster::merge_stats`] when done). Note this still acquires
+    /// the residency snapshot — one `SharedCache` shared-lock read — per
+    /// call; hot loops should fetch [`JobSession::residency`] once per
+    /// pass and drive [`JobSession::read_resolved`] instead, which is
+    /// exactly what the internal epoch drivers do.
+    pub fn read_with_stats(
+        &self,
+        req: &ReadRequest,
+        reader: NodeId,
+        stats: &mut ReadStats,
+    ) -> Result<Vec<u8>> {
+        let snap = self.plane.cache.snapshot(&self.dataset).ok();
+        self.read_inner(req, reader, snap.as_deref(), stats)
+    }
+
+    /// The dataset's lock-free residency snapshot: one shared-lock
+    /// acquisition buys a whole pass of [`JobSession::read_resolved`]
+    /// calls with **zero** further lock traffic (readers fall back to the
+    /// locked lane automatically if it retires mid-pass).
+    pub fn residency(&self) -> Option<Arc<ResidencySnapshot>> {
+        self.plane.cache.snapshot(&self.dataset).ok()
+    }
+
+    /// The zero-lock hot form of [`JobSession::read_with_stats`]:
+    /// resolves through a caller-held snapshot (from
+    /// [`JobSession::residency`], fetched once per pass) instead of
+    /// acquiring it per read.
+    pub fn read_resolved(
+        &self,
+        req: &ReadRequest,
+        reader: NodeId,
+        snap: Option<&ResidencySnapshot>,
+        stats: &mut ReadStats,
+    ) -> Result<Vec<u8>> {
+        self.read_inner(req, reader, snap, stats)
+    }
+
+    fn read_inner(
+        &self,
+        req: &ReadRequest,
+        reader: NodeId,
+        snap: Option<&ResidencySnapshot>,
+        stats: &mut ReadStats,
+    ) -> Result<Vec<u8>> {
+        if let Some(want) = req.mode {
+            let have = self.ledger.mode.granularity();
+            if want != have {
+                bail!(
+                    "request insists on {} addressing but dataset '{}' is open {}",
+                    want.name(),
+                    self.dataset,
+                    have.name()
+                );
+            }
+        }
+        let plane = &self.plane;
+        let transport = self.effective_transport();
+        match &self.ledger.mode {
+            LedgerMode::WholeFile => {
+                let dataset_id = plane.cache.dataset_id(&self.dataset)?;
+                let data = read_item_concurrent_fast(
+                    &plane.cluster,
+                    &plane.cache,
+                    &self.ledger.fill,
+                    transport,
+                    snap,
+                    dataset_id,
+                    &self.dataset,
+                    &self.cfg,
+                    req.item,
+                    reader,
+                    stats,
+                )?;
+                match &req.range {
+                    None => Ok(data),
+                    Some(r) => {
+                        if r.start > r.end || r.end > data.len() as u64 {
+                            bail!(
+                                "range {}..{} out of bounds for item {} of {} bytes",
+                                r.start,
+                                r.end,
+                                req.item,
+                                data.len()
+                            );
+                        }
+                        Ok(data[r.start as usize..r.end as usize].to_vec())
+                    }
+                }
+            }
+            LedgerMode::Chunked(geom) => {
+                let (s, e) = geom.item_range(req.item);
+                let (lo, hi) = match &req.range {
+                    None => (0, e - s),
+                    Some(r) => (r.start, r.end),
+                };
+                read_item_range_chunked_fast(
+                    &plane.cluster,
+                    &plane.cache,
+                    &self.ledger.fill,
+                    transport,
+                    snap,
+                    Some(&plane.bufs),
+                    &self.dataset,
+                    &self.cfg,
+                    geom,
+                    req.item,
+                    lo,
+                    hi,
+                    reader,
+                    stats,
+                )
+            }
+        }
+    }
+
+    /// Run epoch number `epoch` with this session's own seed/order.
+    pub fn run_epoch(&self, epoch: u32) -> Result<EpochReport> {
+        self.run_epoch_order(&self.epoch_order(epoch))
+    }
+
+    /// Run the next epoch in sequence (what the `/v1/jobs/:id/epoch`
+    /// endpoint drives). The epoch index is claimed atomically, so
+    /// concurrent callers each run a distinct permutation — never the
+    /// same one twice. (Mixing this with explicit [`JobSession::run_epoch`]
+    /// calls leaves the sequence to the caller.)
+    pub fn run_next_epoch(&self) -> Result<EpochReport> {
+        let epoch = self.next_epoch.fetch_add(1, Ordering::Relaxed) as u32;
+        self.run_epoch(epoch)
+    }
+
+    /// Stream one epoch: partition `order` round-robin over the readers,
+    /// run them in parallel (plus the prefetcher while the stripe is
+    /// incomplete), and merge the stat shards. The merged shard is folded
+    /// into the cluster-wide accumulator (so `take_stats()` keeps the
+    /// full picture) *and* this job's own accumulator.
+    pub fn run_epoch_order(&self, order: &[u64]) -> Result<EpochReport> {
+        let t0 = Instant::now();
+        let run_prefetcher = self.prefetch && !self.plane.cache.is_cached(&self.dataset);
+        // One shared-lock acquisition per epoch: every reader thread then
+        // resolves residency through the lock-free snapshot (readers fall
+        // back to the locked lane if it retires mid-epoch).
+        let snapshot = self.plane.cache.snapshot(&self.dataset).ok();
+        let (reader_shards, prefetch_shard) = std::thread::scope(|s| {
+            let prefetcher = if run_prefetcher {
+                Some(s.spawn(|| self.prefetch_pass()))
+            } else {
+                None
+            };
+            let mut handles = Vec::with_capacity(self.readers);
+            for r in 0..self.readers {
+                let items: Vec<u64> =
+                    order.iter().skip(r).step_by(self.readers).copied().collect();
+                let snap = snapshot.clone();
+                handles.push(s.spawn(move || self.reader_pass(r, &items, snap.as_deref())));
+            }
+            let shards: Vec<Result<ReadStats>> = handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("reader thread panicked"))))
+                .collect();
+            let pf: Option<Result<ReadStats>> = prefetcher
+                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("prefetcher thread panicked"))));
+            (shards, pf)
+        });
+
+        let mut per_reader = Vec::with_capacity(self.readers);
+        for shard in reader_shards {
+            per_reader.push(shard?);
+        }
+        let prefetcher = prefetch_shard.transpose()?;
+        let mut merged = ReadStats::default();
+        for s in &per_reader {
+            merged.merge(s);
+        }
+        if let Some(p) = &prefetcher {
+            merged.merge(p);
+        }
+        self.plane.cluster.merge_stats(&merged);
+        self.record(&merged);
+        self.epochs.fetch_add(1, Ordering::Relaxed);
+        Ok(EpochReport { wall: t0.elapsed(), merged, per_reader, prefetcher })
+    }
+
+    fn reader_pass(
+        &self,
+        r: usize,
+        items: &[u64],
+        snap: Option<&ResidencySnapshot>,
+    ) -> Result<ReadStats> {
+        let reader = self.reader_node(r);
+        let plane = &self.plane;
+        let mut stats = ReadStats::default();
+        match &self.ledger.mode {
+            LedgerMode::WholeFile => {
+                // Specialized arm: the dataset ID is resolved once per
+                // pass, not per read.
+                let transport = self.effective_transport();
+                let dataset_id = plane.cache.dataset_id(&self.dataset)?;
+                for &i in items {
+                    read_item_concurrent_fast(
+                        &plane.cluster,
+                        &plane.cache,
+                        &self.ledger.fill,
+                        transport,
+                        snap,
+                        dataset_id,
+                        &self.dataset,
+                        &self.cfg,
+                        i,
+                        reader,
+                        &mut stats,
+                    )?;
+                }
+            }
+            LedgerMode::Chunked(_) => {
+                // One dispatch implementation: the epoch driver runs the
+                // exact same path a `ReadRequest` does (read_inner), with
+                // the per-pass snapshot supplied by the caller.
+                for &i in items {
+                    self.read_inner(&ReadRequest::item(i), reader, snap, &mut stats)?;
+                }
+            }
+        }
+        Ok(stats)
+    }
+
+    /// The background AFM prefetcher thread body (walks items in
+    /// whole-file mode, the chunk grid in chunked mode).
+    fn prefetch_pass(&self) -> Result<ReadStats> {
+        let plane = &self.plane;
+        let mut stats = ReadStats::default();
+        match &self.ledger.mode {
+            LedgerMode::WholeFile => prefetch_items(
+                &plane.cluster,
+                &plane.cache,
+                &self.ledger.fill,
+                &self.dataset,
+                &self.cfg,
+                &mut stats,
+            )?,
+            LedgerMode::Chunked(geom) => prefetch_chunks(
+                &plane.cluster,
+                &plane.cache,
+                &self.ledger.fill,
+                &self.dataset,
+                &self.cfg,
+                geom,
+                &mut stats,
+            )?,
+        }
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::{CacheManager, EvictionPolicy};
+    use crate::storage::{Device, DeviceKind, Volume};
+    use crate::workload::datagen::{self, DataGenConfig};
+    use crate::workload::DatasetSpec;
+
+    fn fixture(
+        tag: &str,
+        items: u64,
+        chunk_bytes: u64,
+    ) -> (RealCluster, SharedCache, DataGenConfig) {
+        let root = std::env::temp_dir().join(format!("hoard-plane-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let cluster = RealCluster::create(&root, 4, 500e6).unwrap();
+        let cfg = DataGenConfig { num_items: items, files_per_dir: 32, ..Default::default() };
+        let total = datagen::generate(&cluster.remote_dir, &cfg).unwrap();
+        let vols = (0..4)
+            .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 30)]))
+            .collect();
+        let mut manager = CacheManager::new(vols, EvictionPolicy::Manual);
+        manager.chunk_bytes = chunk_bytes;
+        manager
+            .register(DatasetSpec::new("d", cfg.num_items, total), "nfs://r/d".into())
+            .unwrap();
+        manager.place("d", (0..4).map(NodeId).collect()).unwrap();
+        (cluster, SharedCache::new(manager), cfg)
+    }
+
+    #[test]
+    fn sessions_on_one_plane_share_the_ledger() {
+        let (cluster, cache, cfg) = fixture("ledger", 8, 1000);
+        let plane = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+        let a = plane.open_job(JobSpec::new("d", cfg.clone()).seed(1)).unwrap();
+        let b = plane.open_job(JobSpec::new("d", cfg.clone()).seed(2)).unwrap();
+        assert_ne!(a.job_id(), b.job_id());
+        assert!(Arc::ptr_eq(&a.ledger, &b.ledger), "same dataset ⇒ same fill ledger");
+        // A third session at the other granularity is refused (the ledger
+        // keying would be incoherent).
+        assert!(plane
+            .open_job(JobSpec::new("d", cfg.clone()).granularity(Granularity::WholeFile))
+            .is_err());
+        // Zero readers is refused.
+        assert!(plane.open_job(JobSpec::new("d", cfg.clone()).readers(0)).is_err());
+        std::fs::remove_dir_all(&cluster.root).unwrap();
+    }
+
+    #[test]
+    fn session_reads_accumulate_job_stats() {
+        let (cluster, cache, cfg) = fixture("stats", 8, 777);
+        let plane = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+        let sess = plane.open_job(JobSpec::new("d", cfg.clone())).unwrap();
+        assert_eq!(sess.stats(), ReadStats::default());
+        let (_, want) = datagen::make_record(&cfg, 0);
+        let got = sess.read(&ReadRequest::item(0), NodeId(0)).unwrap();
+        assert_eq!(got, want);
+        let s = sess.stats();
+        assert!(s.total_reads() > 0, "convenience read must accumulate job stats");
+        assert_eq!(cluster.take_stats(), s, "and the cluster accumulator agrees");
+        std::fs::remove_dir_all(&cluster.root).unwrap();
+    }
+
+    #[test]
+    fn run_epoch_counts_epochs_and_registers_dataset_cfgs() {
+        let (cluster, cache, cfg) = fixture("epochs", 12, 1000);
+        let plane = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+        plane.register_dataset("d", cfg.clone());
+        assert_eq!(plane.dataset_cfg("d").unwrap().num_items, cfg.num_items);
+        assert!(plane.dataset_cfg("ghost").is_none());
+        let sess = plane.open_job(JobSpec::new("d", cfg.clone()).readers(2)).unwrap();
+        assert_eq!(sess.epochs_run(), 0);
+        sess.run_next_epoch().unwrap();
+        sess.run_next_epoch().unwrap();
+        assert_eq!(sess.epochs_run(), 2);
+        // Cold epoch filled every chunk exactly once; the second epoch
+        // (warm) added none.
+        let chunks = cache.geometry("d").unwrap().num_chunks();
+        assert_eq!(plane.dataset_fills("d"), chunks);
+        // reset_dataset drops the ledger: a fresh session starts clean.
+        plane.reset_dataset("d");
+        assert_eq!(plane.dataset_fills("d"), 0);
+        std::fs::remove_dir_all(&cluster.root).unwrap();
+    }
+}

@@ -3,13 +3,20 @@
 //! directories — one per "node" cache volume plus a bandwidth-throttled
 //! "remote store" directory — so the e2e example moves real bytes through
 //! the same placement/miss logic the simulations model.
+//!
+//! The canonical concurrent API is [`dataplane`]: one shared per-node
+//! [`DataPlane`] and per-job [`JobSession`]s dispatching every read
+//! through [`ReadRequest`]. [`reader_pool`] keeps the pre-DataPlane
+//! function surface and the [`ReaderPool`] shim.
 
 pub mod bufpool;
+pub mod dataplane;
 pub mod reader_pool;
 pub mod realfs;
 pub mod throttle;
 
 pub use bufpool::BufPool;
+pub use dataplane::{DataPlane, Granularity, JobSession, JobSpec, ReadRequest};
 pub use reader_pool::{EpochReport, FillTable, ReaderPool, SharedMount};
 pub use realfs::{
     chunk_rel_path, ChunkedMount, HoardMount, LocalMount, Mount, ReadStats, RealCluster,

@@ -1,13 +1,22 @@
-//! The concurrent real-mode data plane: N reader threads (one per
-//! simulated GPU) streaming a striped dataset in parallel, plus a
-//! background AFM-style prefetcher that fills the stripe sequentially
-//! ahead of the readers during the cold epoch.
+//! The concurrent real-mode read path: the fetch-once [`FillTable`]
+//! ledger, the whole-file and chunk-granular item-assembly functions, the
+//! background AFM prefetch passes, and the [`ReaderPool`] epoch driver.
 //!
 //! This is where the reproduction actually *demonstrates* the paper's
 //! parallelism claim (§3.2, Table 3's 2.1×): warm-epoch reads hit
 //! per-node NVMe token buckets concurrently, while cold-epoch remote
 //! fetches share the one throttled remote bucket (the NFS server does not
 //! get faster because we added readers — the cache does).
+//!
+//! **The canonical API surface lives one module over**: a per-node
+//! [`DataPlane`](super::dataplane::DataPlane) owns the shared cache,
+//! fetch-once ledgers, buffer pool and transport, and per-job
+//! [`JobSession`](super::dataplane::JobSession)s dispatch every read
+//! through one [`ReadRequest`](super::dataplane::ReadRequest) entry point.
+//! [`ReaderPool`] is kept as a thin epoch-driver shim over a private
+//! `DataPlane` + one `JobSession` (the pre-DataPlane constructors and
+//! call shape, unchanged), and the free functions below are the shared
+//! implementation both surfaces call.
 //!
 //! Fetch-once is enforced by a [`FillTable`]: per-slot claim states
 //! (`Empty → InFlight → Done`) sharded over S independent mutex+condvar
@@ -16,7 +25,11 @@
 //! shard's condvar until the fill lands, so the remote store sees every
 //! slot exactly once no matter how many readers race — the Table 4
 //! fetch-once invariant, now under real concurrency and without a global
-//! lock or `notify_all` thundering herd on the warm path.
+//! lock or `notify_all` thundering herd on the warm path. Completed
+//! remote fills are counted per shard ([`FillTable::fills_completed`]),
+//! which is what lets co-located jobs *prove* they shared fills: J jobs
+//! cold-racing one dataset end with exactly `num_chunks` fills, not
+//! `J × num_chunks`.
 //!
 //! Warm reads take the **fast lane**: residency resolves through the
 //! lock-free [`ResidencySnapshot`] (atomic loads, zero `RwLock`
@@ -30,18 +43,16 @@
 //!
 //! The table is keyed per `(dataset, chunk)`: in whole-file mode a "chunk"
 //! is an item (one slot per file, today's behaviour); in chunked mode
-//! ([`ReaderPool::new_chunked`]) slots are the stripe's fixed-size chunks,
-//! so two readers racing on *different chunks of the same item* both make
-//! progress, and a reader blocked on chunk *k* no longer waits for the
-//! whole file.
+//! slots are the stripe's fixed-size chunks, so two readers racing on
+//! *different chunks of the same item* both make progress, and a reader
+//! blocked on chunk *k* no longer waits for the whole file.
 //!
 //! Stats are sharded: every reader (and the prefetcher) accumulates its
-//! own [`ReadStats`] and the pool merges them on epoch end — no shared
+//! own [`ReadStats`] and the session merges them on epoch end — no shared
 //! stats lock on the hot path.
 //!
 //! Every **non-local** byte moves through a
-//! [`ChunkTransport`](crate::peer::ChunkTransport)
-//! ([`ReaderPool::with_transport`]): the default
+//! [`ChunkTransport`](crate::peer::ChunkTransport): the default
 //! [`DirTransport`](crate::peer::DirTransport) reads the peer's directory
 //! on the same filesystem (bit-identical to the pre-transport code), while
 //! [`SocketTransport`](crate::peer::SocketTransport) crosses a real TCP
@@ -50,16 +61,16 @@
 //! transport-free by design: it only moves remote→home bytes.
 
 use std::sync::{Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 use super::bufpool::BufPool;
+use super::dataplane::{DataPlane, Granularity, JobSession, JobSpec};
 use super::realfs::{chunk_rel_path, fetch_chunk_payload_into, ReadStats, RealCluster};
 use crate::cache::{ChunkGeometry, ReadLocation, ResidencySnapshot, SharedCache};
 use crate::netsim::NodeId;
 use crate::peer::{ChunkTransport, DirTransport};
-use crate::util::Rng;
 use crate::workload::datagen::DataGenConfig;
 
 /// Per-item fill state for fetch-once coordination across threads.
@@ -92,6 +103,10 @@ struct FillShardState {
     /// Shard-local Done count, so [`FillTable::done_count`] sums S
     /// counters instead of scanning every slot under one lock.
     done: u64,
+    /// Shard-local count of Done transitions that were **remote fills**
+    /// (`complete`), as opposed to adoptions (`mark_resident`) — the
+    /// cross-job fills-shared-once evidence.
+    fills: u64,
     /// Threads currently parked on this shard's condvar — what makes
     /// `notify_one`-where-safe decidable (see [`FillTable::complete`]).
     waiters: u64,
@@ -132,6 +147,7 @@ impl FillTable {
                     state: Mutex::new(FillShardState {
                         slots: vec![FillState::Empty; per_shard],
                         done: 0,
+                        fills: 0,
                         waiters: 0,
                     }),
                     cv: Condvar::new(),
@@ -193,14 +209,29 @@ impl FillTable {
         }
     }
 
-    pub fn complete(&self, i: u64) {
+    fn finish(&self, i: u64, remote_fill: bool) {
         let (shard, idx) = self.shard_of(i);
         let mut st = shard.state.lock().unwrap();
         if st.slots[idx] != FillState::Done {
             st.slots[idx] = FillState::Done;
             st.done += 1;
+            if remote_fill {
+                st.fills += 1;
+            }
         }
         Self::wake(shard, &st);
+    }
+
+    /// Mark slot `i` done after a **remote fill** — counted in
+    /// [`FillTable::fills_completed`].
+    pub fn complete(&self, i: u64) {
+        self.finish(i, true);
+    }
+
+    /// Mark an item resident without a fill (found on disk — adoption).
+    /// Not counted as a fill.
+    pub fn mark_resident(&self, i: u64) {
+        self.finish(i, false);
     }
 
     /// Roll a failed fill back to `Empty` so another reader can retry.
@@ -214,14 +245,18 @@ impl FillTable {
         Self::wake(shard, &st);
     }
 
-    /// Mark an item resident without a fill (found on disk).
-    pub fn mark_resident(&self, i: u64) {
-        self.complete(i);
-    }
-
     /// Slots in `Done` — an O(shards) counter sum, not an O(slots) scan.
     pub fn done_count(&self) -> u64 {
         self.shards.iter().map(|s| s.state.lock().unwrap().done).sum()
+    }
+
+    /// Remote fills completed through this ledger (adoptions excluded).
+    /// A monotone attempt counter: rolling a *completed* slot back with
+    /// [`FillTable::abort`] does not decrement it — with J co-located
+    /// jobs sharing one ledger over a cold dataset, this lands on exactly
+    /// the slot count, not J× it.
+    pub fn fills_completed(&self) -> u64 {
+        self.shards.iter().map(|s| s.state.lock().unwrap().fills).sum()
     }
 }
 
@@ -238,15 +273,18 @@ pub struct EpochReport {
 }
 
 impl EpochReport {
+    /// Epoch throughput; `0.0` for zero-duration epochs (smoke-mode runs
+    /// can finish in ~0 ns — a 0 here beats an inf/NaN in tables and
+    /// `BENCH_*.json`). One guard implementation: [`crate::util::per_sec`].
     pub fn items_per_sec(&self, items: u64) -> f64 {
-        items as f64 / self.wall.as_secs_f64().max(1e-9)
+        crate::util::per_sec(items, self.wall.as_secs_f64())
     }
 }
 
 /// Read item `i` through the concurrent Hoard path with the default
-/// same-FS [`DirTransport`] (today's behaviour, unchanged call shape).
-/// Convenience path: resolves the dataset ID per read; [`ReaderPool`]
-/// hoists that lookup out of the loop (one per reader pass).
+/// same-FS [`DirTransport`] (pre-DataPlane call shape, kept for existing
+/// callers). Resolves the dataset ID per read; epoch drivers hoist that
+/// lookup out of the loop (one per reader pass).
 #[allow(clippy::too_many_arguments)]
 pub fn read_item_concurrent(
     cluster: &RealCluster,
@@ -322,8 +360,8 @@ pub fn read_item_concurrent_via(
 
 /// [`read_item_concurrent_via`] with the warm fast lane: when `residency`
 /// holds a live [`ResidencySnapshot`], location resolution is pure atomic
-/// loads — zero `RwLock` acquisitions per read (the [`ReaderPool`] passes
-/// its per-epoch snapshot here).
+/// loads — zero `RwLock` acquisitions per read (epoch drivers pass their
+/// per-epoch snapshot here).
 #[allow(clippy::too_many_arguments)]
 pub fn read_item_concurrent_fast(
     cluster: &RealCluster,
@@ -397,9 +435,9 @@ pub fn read_item_concurrent_fast(
 /// One sequential AFM prefetch pass: walk the dataset in stripe order,
 /// filling whatever no reader has claimed yet. Items already in flight or
 /// done are skipped without blocking, so the prefetcher stays ahead of
-/// (never behind) the random-order readers. Shared by [`ReaderPool`] and
-/// [`SharedMount`].
-fn prefetch_items(
+/// (never behind) the random-order readers. Shared by
+/// [`JobSession`](super::dataplane::JobSession) and [`SharedMount`].
+pub(crate) fn prefetch_items(
     cluster: &RealCluster,
     cache: &SharedCache,
     fill: &FillTable,
@@ -453,7 +491,7 @@ fn fill_from_remote(
 }
 
 /// Read item `i` through the chunk-granular path with the default same-FS
-/// [`DirTransport`] (today's behaviour, unchanged call shape).
+/// [`DirTransport`] (pre-DataPlane call shape, kept for existing callers).
 #[allow(clippy::too_many_arguments)]
 pub fn read_item_chunked(
     cluster: &RealCluster,
@@ -534,7 +572,8 @@ fn refill_segment(
 }
 
 /// [`read_item_chunked_via`] with the full warm fast lane, the path
-/// [`ReaderPool`] reader threads run:
+/// session reader threads run (the whole-item case of
+/// [`read_item_range_chunked_fast`]):
 ///
 ///  * **single-copy assembly** — the item buffer is allocated once and
 ///    every resident local segment is read straight into its final
@@ -567,18 +606,70 @@ pub fn read_item_chunked_fast(
     reader: NodeId,
     stats: &mut ReadStats,
 ) -> Result<Vec<u8>> {
+    let (s, e) = geom.item_range(i);
+    read_item_range_chunked_fast(
+        cluster,
+        cache,
+        fill,
+        transport,
+        residency,
+        bufs,
+        dataset,
+        cfg,
+        geom,
+        i,
+        0,
+        e - s,
+        reader,
+        stats,
+    )
+}
+
+/// The range-aware chunk-assembly core: read the item-local byte range
+/// `[lo, hi)` of item `i`. Only chunks overlapping the range are claimed
+/// and touched — a sub-range read of a cold item fills exactly the chunks
+/// it needs, never the whole item. `lo == 0 ∧ hi == item len` is the
+/// whole-item case ([`read_item_chunked_fast`]); the unified
+/// [`ReadRequest`](super::dataplane::ReadRequest) dispatch lands here for
+/// every chunked read, ranged or not.
+#[allow(clippy::too_many_arguments)]
+pub fn read_item_range_chunked_fast(
+    cluster: &RealCluster,
+    cache: &SharedCache,
+    fill: &FillTable,
+    transport: &dyn ChunkTransport,
+    residency: Option<&ResidencySnapshot>,
+    bufs: Option<&BufPool>,
+    dataset: &str,
+    cfg: &DataGenConfig,
+    geom: &ChunkGeometry,
+    i: u64,
+    lo: u64,
+    hi: u64,
+    reader: NodeId,
+    stats: &mut ReadStats,
+) -> Result<Vec<u8>> {
     let residency = residency.filter(|s| !s.retired());
     let (s, e) = geom.item_range(i);
-    let mut out = vec![0u8; (e - s) as usize];
+    if lo > hi || hi > e - s {
+        bail!("range {lo}..{hi} out of bounds for item {i} of {} bytes", e - s);
+    }
+    // Global byte bounds of the requested slice.
+    let (gs, ge) = (s + lo, s + hi);
+    let mut out = vec![0u8; (hi - lo) as usize];
     // Deferred resident non-local segments, grouped per home node in
     // first-encounter order: (home, [(chunk, chunk_off, out_pos, len)]).
     let mut batches: Vec<(NodeId, Vec<(u64, u64, usize, u64)>)> = Vec::new();
     for c in geom.chunks_of_item(i) {
         let home = geom.node_of_chunk(c);
         let (cs, ce) = geom.chunk_range(c);
-        let lo = s.max(cs);
-        let hi = e.min(ce);
-        let (off, pos, len) = (lo - cs, (lo - s) as usize, hi - lo);
+        let seg_lo = gs.max(cs);
+        let seg_hi = ge.min(ce);
+        if seg_lo >= seg_hi {
+            // Chunk outside the requested range: not claimed, not read.
+            continue;
+        }
+        let (off, pos, len) = (seg_lo - cs, (seg_lo - gs) as usize, seg_hi - seg_lo);
         match fill.claim_or_wait(c) {
             Claim::Resident if home != reader => {
                 match batches.iter().position(|(n, _)| *n == home) {
@@ -699,7 +790,7 @@ pub fn read_item_chunked_fast(
 /// buffer is reused across every fill of the pass (the payload is only
 /// persisted, never returned), so the cold-epoch prefetcher allocates
 /// once, not once per chunk.
-fn prefetch_chunks(
+pub(crate) fn prefetch_chunks(
     cluster: &RealCluster,
     cache: &SharedCache,
     fill: &FillTable,
@@ -732,101 +823,63 @@ fn prefetch_chunks(
     Ok(())
 }
 
-/// How the pool addresses and fills the dataset.
-#[derive(Debug, Clone)]
-enum PoolMode {
-    /// One fill-table slot per item file (today's behaviour; the
-    /// degenerate case of chunking when `chunk_bytes` ≥ item size).
-    WholeFile,
-    /// One slot per stripe chunk: fills fetch byte ranges and readers
-    /// assemble items from chunk files.
-    Chunked(ChunkGeometry),
+/// N reader threads over one mounted dataset — the pre-DataPlane epoch
+/// driver, kept as a **deprecated shim**: each pool owns a private
+/// [`DataPlane`] with one [`JobSession`] in it and delegates everything.
+/// Two pools built this way share *nothing* (each has its own fill ledger
+/// and buffer pool) — exactly the old semantics. New code that wants
+/// co-located jobs to share fills should hold one
+/// [`DataPlane`](super::dataplane::DataPlane) and open a
+/// [`JobSession`](super::dataplane::JobSession) per job instead.
+pub struct ReaderPool {
+    session: JobSession,
 }
 
-/// N reader threads over one mounted dataset, one reader per simulated
-/// GPU, reader `r` pinned to node `r % num_nodes`.
-pub struct ReaderPool<'a> {
-    cluster: &'a RealCluster,
-    cache: SharedCache,
-    dataset: String,
-    cfg: DataGenConfig,
-    readers: usize,
-    fill: FillTable,
-    prefetch: bool,
-    mode: PoolMode,
-    /// How reader threads fetch non-local bytes (defaults to the same-FS
-    /// [`DirTransport`]; swap in a `SocketTransport` for real peers).
-    transport: Box<dyn ChunkTransport>,
-    /// Reusable chunk buffers shared by the reader threads (remote fills
-    /// recycle chunk-sized allocations instead of one fresh `Vec` each).
-    bufs: BufPool,
-}
-
-/// Chunk buffers kept pooled, two per reader thread: one in flight per
-/// reader plus slack for put/take races, so concurrent fills rarely fall
-/// back to a fresh allocation. (The prefetcher reuses its own single
-/// pass-local buffer and never touches this pool.)
-fn pool_bufs(readers: usize) -> BufPool {
-    BufPool::new(2 * readers, 64 << 20)
-}
-
-impl<'a> ReaderPool<'a> {
+impl ReaderPool {
+    /// Whole-file pool (deprecated shim): one fill-table slot per item
+    /// file. Prefer `DataPlane::open_job` with
+    /// [`Granularity::WholeFile`].
     pub fn new(
-        cluster: &'a RealCluster,
+        cluster: &RealCluster,
         cache: SharedCache,
         dataset: impl Into<String>,
         cfg: DataGenConfig,
         readers: usize,
     ) -> Self {
         assert!(readers > 0, "pool needs at least one reader");
-        let fill = FillTable::new(cfg.num_items);
-        ReaderPool {
-            cluster,
-            cache,
-            dataset: dataset.into(),
-            cfg,
-            readers,
-            fill,
-            prefetch: true,
-            mode: PoolMode::WholeFile,
-            transport: Box::new(DirTransport),
-            bufs: pool_bufs(readers),
-        }
+        let plane = std::sync::Arc::new(DataPlane::new(cluster.clone(), cache));
+        let session = plane
+            .open_job(
+                JobSpec::new(dataset, cfg).readers(readers).granularity(Granularity::WholeFile),
+            )
+            .expect("whole-file sessions need no placement");
+        ReaderPool { session }
     }
 
-    /// Chunk-granular pool: the fill table is keyed by `(dataset, chunk)`
-    /// using the placed stripe's chunk grid, so racing readers fetch-once
-    /// per chunk and partial items serve their resident segments. The
-    /// dataset must already be placed (the geometry comes from its
-    /// stripe).
+    /// Chunk-granular pool (deprecated shim): the fill table is keyed by
+    /// `(dataset, chunk)` using the placed stripe's chunk grid, so racing
+    /// readers fetch-once per chunk and partial items serve their resident
+    /// segments. The dataset must already be placed (the geometry comes
+    /// from its stripe). Prefer `DataPlane::open_job` with
+    /// [`Granularity::Chunked`].
     pub fn new_chunked(
-        cluster: &'a RealCluster,
+        cluster: &RealCluster,
         cache: SharedCache,
         dataset: impl Into<String>,
         cfg: DataGenConfig,
         readers: usize,
     ) -> Result<Self> {
         assert!(readers > 0, "pool needs at least one reader");
-        let dataset = dataset.into();
-        let geom = cache.geometry(&dataset)?;
-        let fill = FillTable::new(geom.num_chunks());
-        Ok(ReaderPool {
-            cluster,
-            cache,
-            dataset,
-            cfg,
-            readers,
-            fill,
-            prefetch: true,
-            mode: PoolMode::Chunked(geom),
-            transport: Box::new(DirTransport),
-            bufs: pool_bufs(readers),
-        })
+        let plane = std::sync::Arc::new(DataPlane::new(cluster.clone(), cache));
+        let session = plane.open_job(
+            JobSpec::new(dataset, cfg).readers(readers).granularity(Granularity::Chunked),
+        )?;
+        Ok(ReaderPool { session })
     }
 
     /// Toggle the background prefetcher (on by default).
     pub fn with_prefetch(mut self, on: bool) -> Self {
-        self.prefetch = on;
+        self.session = self.session.with_prefetch(on);
         self
     }
 
@@ -834,160 +887,46 @@ impl<'a> ReaderPool<'a> {
     /// reader threads). The prefetcher is unaffected: it only moves
     /// remote→home bytes, never peer→reader bytes.
     pub fn with_transport(mut self, transport: Box<dyn ChunkTransport>) -> Self {
-        self.transport = transport;
+        self.session = self.session.with_transport(transport);
         self
     }
 
     /// Tag of the active transport ("dir" / "socket").
     pub fn transport_name(&self) -> &'static str {
-        self.transport.name()
+        self.session.transport_name()
     }
 
     pub fn readers(&self) -> usize {
-        self.readers
+        self.session.readers()
     }
 
     /// Node the `r`-th reader runs on.
     pub fn reader_node(&self, r: usize) -> NodeId {
-        NodeId(r % self.cluster.num_nodes())
+        self.session.reader_node(r)
     }
 
     /// A fresh epoch permutation (Fisher–Yates over all items),
     /// deterministic in `(seed, epoch)`.
     pub fn epoch_order(&self, seed: u64, epoch: u32) -> Vec<u64> {
-        let mut order: Vec<u64> = (0..self.cfg.num_items).collect();
-        let mut rng = Rng::new(seed ^ ((epoch as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)));
-        rng.shuffle(&mut order);
-        order
+        self.session.epoch_order_with(seed, epoch)
     }
 
-    /// Stream one epoch: partition `order` round-robin over the readers,
-    /// run them in parallel (plus the prefetcher while the stripe is
-    /// incomplete), and merge the stat shards. The merged shard is also
-    /// folded into the cluster-wide accumulator so `take_stats()` keeps
-    /// reporting the full picture.
+    /// Stream one epoch over the underlying session (see
+    /// [`JobSession::run_epoch_order`]).
     pub fn run_epoch(&self, order: &[u64]) -> Result<EpochReport> {
-        let t0 = Instant::now();
-        let run_prefetcher = self.prefetch && !self.cache.is_cached(&self.dataset);
-        // One shared-lock acquisition per epoch: every reader thread then
-        // resolves residency through the lock-free snapshot (readers fall
-        // back to the locked lane if it retires mid-epoch).
-        let snapshot = self.cache.snapshot(&self.dataset).ok();
-        let (reader_shards, prefetch_shard) = std::thread::scope(|s| {
-            let prefetcher = if run_prefetcher {
-                Some(s.spawn(|| self.prefetch_pass()))
-            } else {
-                None
-            };
-            let mut handles = Vec::with_capacity(self.readers);
-            for r in 0..self.readers {
-                let items: Vec<u64> =
-                    order.iter().skip(r).step_by(self.readers).copied().collect();
-                let snap = snapshot.clone();
-                handles.push(s.spawn(move || self.reader_pass(r, &items, snap.as_deref())));
-            }
-            let shards: Vec<Result<ReadStats>> = handles
-                .into_iter()
-                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("reader thread panicked"))))
-                .collect();
-            let pf: Option<Result<ReadStats>> = prefetcher
-                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("prefetcher thread panicked"))));
-            (shards, pf)
-        });
-
-        let mut per_reader = Vec::with_capacity(self.readers);
-        for shard in reader_shards {
-            per_reader.push(shard?);
-        }
-        let prefetcher = prefetch_shard.transpose()?;
-        let mut merged = ReadStats::default();
-        for s in &per_reader {
-            merged.merge(s);
-        }
-        if let Some(p) = &prefetcher {
-            merged.merge(p);
-        }
-        self.cluster.merge_stats(&merged);
-        Ok(EpochReport { wall: t0.elapsed(), merged, per_reader, prefetcher })
+        self.session.run_epoch_order(order)
     }
 
-    fn reader_pass(
-        &self,
-        r: usize,
-        items: &[u64],
-        snap: Option<&ResidencySnapshot>,
-    ) -> Result<ReadStats> {
-        let reader = self.reader_node(r);
-        let mut stats = ReadStats::default();
-        match &self.mode {
-            PoolMode::WholeFile => {
-                // Resolved once per pass, not per read: the ID is fixed
-                // for the pool's lifetime.
-                let dataset_id = self.cache.dataset_id(&self.dataset)?;
-                for &i in items {
-                    read_item_concurrent_fast(
-                        self.cluster,
-                        &self.cache,
-                        &self.fill,
-                        self.transport.as_ref(),
-                        snap,
-                        dataset_id,
-                        &self.dataset,
-                        &self.cfg,
-                        i,
-                        reader,
-                        &mut stats,
-                    )?;
-                }
-            }
-            PoolMode::Chunked(geom) => {
-                for &i in items {
-                    read_item_chunked_fast(
-                        self.cluster,
-                        &self.cache,
-                        &self.fill,
-                        self.transport.as_ref(),
-                        snap,
-                        Some(&self.bufs),
-                        &self.dataset,
-                        &self.cfg,
-                        geom,
-                        i,
-                        reader,
-                        &mut stats,
-                    )?;
-                }
-            }
-        }
-        Ok(stats)
-    }
-
-    /// The background AFM prefetcher thread body (walks items in
-    /// whole-file mode, the chunk grid in chunked mode).
-    fn prefetch_pass(&self) -> Result<ReadStats> {
-        let mut stats = ReadStats::default();
-        match &self.mode {
-            PoolMode::WholeFile => prefetch_items(
-                self.cluster, &self.cache, &self.fill, &self.dataset, &self.cfg, &mut stats,
-            )?,
-            PoolMode::Chunked(geom) => prefetch_chunks(
-                self.cluster,
-                &self.cache,
-                &self.fill,
-                &self.dataset,
-                &self.cfg,
-                geom,
-                &mut stats,
-            )?,
-        }
-        Ok(stats)
+    /// The [`JobSession`] this pool drives (per-job stats live there).
+    pub fn session(&self) -> &JobSession {
+        &self.session
     }
 }
 
 /// Thread-safe Hoard mount: the concurrent counterpart of
 /// [`super::realfs::HoardMount`]. `read_item` takes `&self`, so any number
-/// of threads can stream batches while a [`ReaderPool`] prefetcher (or
-/// other readers) share the same [`FillTable`] fetch-once ledger. Stats go
+/// of threads can stream batches while a session prefetcher (or other
+/// readers) share the same [`FillTable`] fetch-once ledger. Stats go
 /// straight to the cluster-wide accumulator (one merge per read).
 pub struct SharedMount<'a> {
     pub cluster: &'a RealCluster,
@@ -1123,6 +1062,50 @@ mod tests {
     }
 
     #[test]
+    fn ranged_chunked_reads_slice_exactly_and_claim_only_overlaps() {
+        let (cluster, cache, cfg) = build_chunked("crange", 8, 777);
+        let geom = cache.geometry("d").unwrap();
+        let fill = FillTable::new(geom.num_chunks());
+        let mut stats = ReadStats::default();
+        let (_, want) = datagen::make_record(&cfg, 2);
+        // A sub-range spanning a chunk boundary assembles byte-exact.
+        let mut ranged = |lo: u64, hi: u64| {
+            read_item_range_chunked_fast(
+                &cluster,
+                &cache,
+                &fill,
+                &DirTransport,
+                None,
+                None,
+                "d",
+                &cfg,
+                &geom,
+                2,
+                lo,
+                hi,
+                NodeId(0),
+                &mut stats,
+            )
+        };
+        let got = ranged(700, 900).unwrap();
+        assert_eq!(got, want[700..900]);
+        // Out-of-bounds / inverted ranges fail loudly.
+        assert!(ranged(100, 90).is_err());
+        assert!(ranged(0, 4000).is_err());
+        // Only the overlapped chunks were claimed/filled.
+        let (s, _) = geom.item_range(2);
+        let touched: u64 = geom
+            .chunks_of_item(2)
+            .filter(|&c| {
+                let (cs, ce) = geom.chunk_range(c);
+                cs < s + 900 && ce > s + 700
+            })
+            .count() as u64;
+        assert_eq!(fill.done_count(), touched, "untouched chunks must stay unclaimed");
+        std::fs::remove_dir_all(&cluster.root).unwrap();
+    }
+
+    #[test]
     fn fill_table_claims_complete_and_abort() {
         let t = FillTable::new(4);
         assert_eq!(t.claim_or_wait(0), Claim::Filler);
@@ -1160,6 +1143,21 @@ mod tests {
         assert_eq!(t.done_count(), 7);
         t.complete(17);
         assert_eq!(t.done_count(), 8);
+    }
+
+    #[test]
+    fn fills_counter_splits_remote_fills_from_adoptions() {
+        let t = FillTable::new(64);
+        t.complete(0); // remote fill
+        t.complete(0); // idempotent: still one fill
+        t.mark_resident(1); // adoption: a Done, not a fill
+        t.mark_resident(17);
+        t.complete(33); // remote fill on another shard
+        assert_eq!(t.done_count(), 4);
+        assert_eq!(t.fills_completed(), 2, "adoptions must not count as fills");
+        // complete() on an adopted slot is a no-op (already Done).
+        t.complete(1);
+        assert_eq!(t.fills_completed(), 2);
     }
 
     #[test]
@@ -1226,6 +1224,8 @@ mod tests {
         assert_eq!(sum, report.merged);
         // And the cluster-wide accumulator saw exactly the merged shard.
         assert_eq!(cluster.take_stats(), report.merged);
+        // The shim's session accumulated the same totals (job stats).
+        assert_eq!(pool.session().stats(), report.merged);
         std::fs::remove_dir_all(&cluster.root).unwrap();
     }
 
@@ -1247,5 +1247,18 @@ mod tests {
         let w2 = pool.run_epoch(&pool.epoch_order(11, 1)).unwrap();
         assert_eq!(w1.merged, w2.merged, "same order + same pool ⇒ same stats");
         std::fs::remove_dir_all(&cluster.root).unwrap();
+    }
+
+    #[test]
+    fn zero_duration_epoch_reports_zero_throughput() {
+        let report = EpochReport {
+            wall: Duration::ZERO,
+            merged: ReadStats::default(),
+            per_reader: vec![],
+            prefetcher: None,
+        };
+        assert_eq!(report.items_per_sec(1000), 0.0, "zero wall must not yield inf/NaN");
+        let report = EpochReport { wall: Duration::from_secs(2), ..report };
+        assert_eq!(report.items_per_sec(1000), 500.0);
     }
 }

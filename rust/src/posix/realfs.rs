@@ -126,9 +126,28 @@ pub fn fetch_chunk_payload_into(
 const DEFAULT_NODE_BW: f64 = 2e9;
 const DEFAULT_NODE_BURST: f64 = 64e6;
 
-/// On-disk layout for a real-mode cluster.
-#[derive(Debug)]
+/// Shared handle to an on-disk cluster: a cheap `Arc` clone, so the
+/// per-node [`DataPlane`](crate::posix::dataplane::DataPlane), its
+/// [`JobSession`](crate::posix::dataplane::JobSession)s, reader pools and
+/// tests can all hold the same cluster without borrow lifetimes. All state
+/// lives in [`ClusterState`]; `Deref` keeps field access
+/// (`cluster.remote_dir`, `cluster.node_bw[n]`) working unchanged.
+#[derive(Debug, Clone)]
 pub struct RealCluster {
+    inner: std::sync::Arc<ClusterState>,
+}
+
+impl std::ops::Deref for RealCluster {
+    type Target = ClusterState;
+
+    fn deref(&self) -> &ClusterState {
+        &self.inner
+    }
+}
+
+/// On-disk layout for a real-mode cluster (owned by [`RealCluster`]).
+#[derive(Debug)]
+pub struct ClusterState {
     pub root: PathBuf,
     pub remote_dir: PathBuf,
     pub node_dirs: Vec<PathBuf>,
@@ -210,26 +229,40 @@ impl RealCluster {
             .map(|_| SharedTokenBucket::new(DEFAULT_NODE_BW, DEFAULT_NODE_BURST))
             .collect();
         Ok(RealCluster {
-            root,
-            remote_dir,
-            node_dirs,
-            remote_bw: SharedTokenBucket::new(remote_bw, remote_bw / 4.0),
-            node_bw,
-            remote_model: None,
-            remote_readers: RemoteReaderGauge::default(),
-            node_read_latency_us: AtomicU64::new(0),
-            remote_read_latency_us: AtomicU64::new(0),
-            stats: Mutex::new(ReadStats::default()),
+            inner: std::sync::Arc::new(ClusterState {
+                root,
+                remote_dir,
+                node_dirs,
+                remote_bw: SharedTokenBucket::new(remote_bw, remote_bw / 4.0),
+                node_bw,
+                remote_model: None,
+                remote_readers: RemoteReaderGauge::default(),
+                node_read_latency_us: AtomicU64::new(0),
+                remote_read_latency_us: AtomicU64::new(0),
+                stats: Mutex::new(ReadStats::default()),
+            }),
         })
     }
 
     /// Attach a remote-store concurrency model: the shared remote bucket's
     /// rate is re-derived from `effective_bw(active_readers)` on every
     /// remote read, giving per-reader effective-bandwidth accounting.
+    /// Builder-style: must run before the handle is cloned/shared.
     pub fn with_remote_model(mut self, model: Box<dyn RemoteStore>) -> Self {
-        self.remote_bw.set_rate(model.peak_bw());
-        self.remote_model = Some(model);
+        let state = std::sync::Arc::get_mut(&mut self.inner)
+            .expect("with_remote_model must run before the cluster handle is shared");
+        state.remote_bw.set_rate(model.peak_bw());
+        state.remote_model = Some(model);
         self
+    }
+
+    /// Point the shared remote store at a pre-generated directory (sweep
+    /// points reuse one dataset across runs). Builder-style: must run
+    /// before the handle is cloned/shared.
+    pub fn set_remote_dir(&mut self, dir: PathBuf) {
+        std::sync::Arc::get_mut(&mut self.inner)
+            .expect("set_remote_dir must run before the cluster handle is shared")
+            .remote_dir = dir;
     }
 
     /// Set per-request service time for node (NVMe) reads.
@@ -300,23 +333,13 @@ impl RealCluster {
         Ok(buf)
     }
 
-    /// Ranged remote read: exactly `len` bytes at `offset` of `rel` (the
-    /// chunk-fill path fetches per-item sub-ranges, not whole files).
-    pub fn read_remote_range_sharded(
-        &self,
-        rel: &Path,
-        offset: u64,
-        len: u64,
-        stats: &mut ReadStats,
-    ) -> Result<Vec<u8>> {
-        let mut buf = vec![0u8; len as usize];
-        self.read_remote_range_into_sharded(rel, offset, &mut buf, stats)?;
-        Ok(buf)
-    }
-
     /// Ranged remote read into a caller-provided buffer: fills `out`
     /// exactly from `offset` of `rel` (single-copy — the assembly path
-    /// reads each segment straight into its final position).
+    /// reads each segment straight into its final position; the
+    /// chunk-fill path fetches per-item sub-ranges, not whole files).
+    /// This is the **one** canonical ranged remote read: the allocating
+    /// variants were delegating shims and are gone — callers size their
+    /// own buffer (usually from a [`super::BufPool`]).
     pub fn read_remote_range_into_sharded(
         &self,
         rel: &Path,
@@ -333,14 +356,6 @@ impl RealCluster {
         })?;
         self.remote_account(out.len() as u64, stats);
         Ok(())
-    }
-
-    /// Ranged remote read recording into the cluster-wide stats.
-    pub fn read_remote_range(&self, rel: &Path, offset: u64, len: u64) -> Result<Vec<u8>> {
-        let mut shard = ReadStats::default();
-        let data = self.read_remote_range_sharded(rel, offset, len, &mut shard)?;
-        self.merge_stats(&shard);
-        Ok(data)
     }
 
     /// Read from a node cache dir (NVMe-class local storage), through that
@@ -385,25 +400,11 @@ impl RealCluster {
         Ok(buf)
     }
 
-    /// Ranged node read: exactly `len` bytes at `offset` of `rel` on
-    /// `node` — how mounts serve one chunk-aligned segment of an item.
-    pub fn read_node_range_sharded(
-        &self,
-        node: NodeId,
-        rel: &Path,
-        offset: u64,
-        len: u64,
-        reader: NodeId,
-        stats: &mut ReadStats,
-    ) -> Result<Vec<u8>> {
-        let mut buf = vec![0u8; len as usize];
-        self.read_node_range_into_sharded(node, rel, offset, reader, &mut buf, stats)?;
-        Ok(buf)
-    }
-
     /// Ranged node read into a caller-provided buffer: fills `out` exactly
     /// from `offset` of `rel` on `node` — how the warm assembly path lands
-    /// a resident local segment straight in the item buffer (one copy).
+    /// a resident local segment straight in the item buffer (one copy),
+    /// and how mounts serve one chunk-aligned segment of an item. The
+    /// **one** canonical ranged node read (allocating variants removed).
     pub fn read_node_range_into_sharded(
         &self,
         node: NodeId,
@@ -422,21 +423,6 @@ impl RealCluster {
         })?;
         self.node_account(node, out.len() as u64, reader, stats);
         Ok(())
-    }
-
-    /// Ranged node read recording into the cluster-wide stats.
-    pub fn read_node_range(
-        &self,
-        node: NodeId,
-        rel: &Path,
-        offset: u64,
-        len: u64,
-        reader: NodeId,
-    ) -> Result<Vec<u8>> {
-        let mut shard = ReadStats::default();
-        let data = self.read_node_range_sharded(node, rel, offset, len, reader, &mut shard)?;
-        self.merge_stats(&shard);
-        Ok(data)
     }
 
     pub fn write_node(&self, node: NodeId, rel: &Path, data: &[u8]) -> Result<()> {
@@ -633,9 +619,11 @@ impl Mount for ChunkedMount<'_> {
             let mut shard = ReadStats::default();
             let got = if home == reader {
                 if self.cluster.node_has(home, &crel) {
-                    Some(self.cluster.read_node_range_sharded(
-                        home, &crel, off, len, reader, &mut shard,
-                    )?)
+                    let mut buf = vec![0u8; len as usize];
+                    self.cluster.read_node_range_into_sharded(
+                        home, &crel, off, reader, &mut buf, &mut shard,
+                    )?;
+                    Some(buf)
                 } else {
                     None
                 }
@@ -849,66 +837,62 @@ mod tests {
     }
 
     #[test]
-    fn ranged_reads_slice_exactly() {
+    fn ranged_into_reads_slice_exactly_and_account_once() {
         let cfg = small_cfg();
         let (cluster, _) = setup("range", &cfg);
         let rel = cfg.item_rel_path(5);
         let whole = cluster.read_remote(&rel).unwrap();
-        let mid = cluster.read_remote_range(&rel, 10, 100).unwrap();
-        assert_eq!(mid, whole[10..110]);
         cluster.write_node(NodeId(2), &rel, &whole).unwrap();
-        let tail_off = whole.len() as u64 - 7;
-        let tail = cluster.read_node_range(NodeId(2), &rel, tail_off, 7, NodeId(0)).unwrap();
-        assert_eq!(tail, whole[whole.len() - 7..]);
-        // Past-EOF ranges fail loudly instead of returning short data.
-        assert!(cluster.read_remote_range(&rel, whole.len() as u64 - 3, 10).is_err());
-        let s = cluster.take_stats();
-        assert_eq!(s.remote_reads, 2, "failed range read is not accounted");
-        assert_eq!(s.peer_reads, 1);
-        assert_eq!(s.peer_bytes, 7);
-        fs::remove_dir_all(&cluster.root).unwrap();
-    }
-
-    #[test]
-    fn into_reads_match_allocating_reads_and_account_identically() {
-        let cfg = small_cfg();
-        let (cluster, _) = setup("into", &cfg);
-        let rel = cfg.item_rel_path(3);
-        let whole = cluster.read_remote(&rel).unwrap();
-        cluster.write_node(NodeId(1), &rel, &whole).unwrap();
         cluster.take_stats();
-        // Remote: the `_into` variant lands the same bytes with the same
-        // accounting as the allocating one.
+        // Remote range: exactly the requested slice, one accounted read.
         let mut a = ReadStats::default();
-        let alloc = cluster.read_remote_range_sharded(&rel, 5, 200, &mut a).unwrap();
+        let mut mid = vec![0u8; 100];
+        cluster.read_remote_range_into_sharded(&rel, 10, &mut mid, &mut a).unwrap();
+        assert_eq!(mid, whole[10..110]);
+        assert_eq!((a.remote_reads, a.remote_bytes), (1, 100));
+        // Node range: tail slice through the peer-accounted path.
         let mut b = ReadStats::default();
-        let mut buf = vec![0u8; 200];
-        cluster.read_remote_range_into_sharded(&rel, 5, &mut buf, &mut b).unwrap();
-        assert_eq!(alloc, buf);
-        assert_eq!(a.remote_bytes, b.remote_bytes);
-        assert_eq!(a.remote_reads, b.remote_reads);
-        // Node: same equivalence, and a past-EOF range still fails loudly
-        // without being accounted.
-        let mut c = ReadStats::default();
-        let mut nbuf = vec![0u8; 9];
+        let mut tail = vec![0u8; 7];
+        let tail_off = whole.len() as u64 - 7;
         cluster
-            .read_node_range_into_sharded(NodeId(1), &rel, 11, NodeId(0), &mut nbuf, &mut c)
+            .read_node_range_into_sharded(NodeId(2), &rel, tail_off, NodeId(0), &mut tail, &mut b)
             .unwrap();
-        assert_eq!(nbuf, whole[11..20]);
-        assert_eq!((c.peer_reads, c.peer_bytes), (1, 9));
+        assert_eq!(tail, whole[whole.len() - 7..]);
+        assert_eq!((b.peer_reads, b.peer_bytes), (1, 7));
+        // Past-EOF ranges fail loudly instead of returning short data, and
+        // a failed range read is never accounted.
         let mut over = vec![0u8; 10];
-        let mut d = ReadStats::default();
+        let mut c = ReadStats::default();
+        assert!(cluster
+            .read_remote_range_into_sharded(&rel, whole.len() as u64 - 3, &mut over, &mut c)
+            .is_err());
         assert!(cluster
             .read_node_range_into_sharded(
-                NodeId(1),
+                NodeId(2),
                 &rel,
                 whole.len() as u64 - 3,
                 NodeId(0),
                 &mut over,
-                &mut d
+                &mut c
             )
             .is_err());
-        assert_eq!(d, ReadStats::default(), "failed range read is not accounted");
+        assert_eq!(c, ReadStats::default(), "failed range reads are not accounted");
+        fs::remove_dir_all(&cluster.root).unwrap();
+    }
+
+    #[test]
+    fn cluster_handle_clones_share_state() {
+        let cfg = small_cfg();
+        let (cluster, _) = setup("handle", &cfg);
+        let other = cluster.clone();
+        let mut shard = ReadStats::default();
+        other.read_remote_sharded(&cfg.item_rel_path(0), &mut shard).unwrap();
+        other.merge_stats(&shard);
+        // Stats recorded through the clone are visible through the
+        // original: both handles are the same cluster.
+        assert_eq!(cluster.take_stats().remote_reads, 1);
+        assert_eq!(other.take_stats(), ReadStats::default(), "take drained the shared state");
+        fs::remove_dir_all(&cluster.root).unwrap();
     }
 
     #[test]

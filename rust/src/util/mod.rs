@@ -9,3 +9,25 @@ pub mod rng;
 
 pub use json::Json;
 pub use rng::Rng;
+
+/// Rate guarded against zero/negative durations: smoke-mode epochs can
+/// finish in ~0 ns, and `count / 0` poisons tables and `BENCH_*.json`
+/// with inf/NaN — report `0.0` instead. The single implementation behind
+/// `EpochReport::items_per_sec` and `experiments::items_per_sec`.
+pub fn per_sec(count: u64, secs: f64) -> f64 {
+    if secs > 0.0 {
+        count as f64 / secs
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn per_sec_guards_zero_durations() {
+        assert_eq!(super::per_sec(100, 2.0), 50.0);
+        assert_eq!(super::per_sec(100, 0.0), 0.0);
+        assert_eq!(super::per_sec(100, -1.0), 0.0);
+    }
+}

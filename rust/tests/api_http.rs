@@ -1,11 +1,20 @@
 //! Integration tests for the REST API over real TCP: concurrent tenants,
-//! error paths, stats consistency.
+//! error paths, stats consistency, the versioned `/v1/` routing rules
+//! (404 for unknown routes, 405 for wrong methods), and the
+//! DataPlane-backed `/v1/jobs` session lifecycle.
 
 use std::sync::{Arc, Mutex};
 
-use hoard::api::{request, serve};
+use hoard::api::{request, serve, serve_with_plane};
+use hoard::cache::{CacheManager, EvictionPolicy, SharedCache};
 use hoard::coordinator::Hoard;
+use hoard::netsim::NodeId;
+use hoard::posix::dataplane::DataPlane;
+use hoard::posix::realfs::RealCluster;
+use hoard::storage::{Device, DeviceKind, Volume};
 use hoard::util::Json;
+use hoard::workload::datagen::{self, DataGenConfig};
+use hoard::workload::DatasetSpec;
 
 fn server() -> (hoard::api::Server, std::net::SocketAddr) {
     let hoard = Arc::new(Mutex::new(Hoard::paper_testbed()));
@@ -89,6 +98,117 @@ fn error_paths() {
     let job = r#"{"name":"j","dataset":"d","gpus":4,"replicas":1,"epochs":1}"#;
     assert_eq!(request(addr, "POST", "/api/v1/jobs", job).unwrap().0, 201);
     assert_eq!(request(addr, "POST", "/api/v1/jobs", job).unwrap().0, 409);
+}
+
+#[test]
+fn v1_unknown_routes_404_and_wrong_methods_405() {
+    let (_srv, addr) = server();
+    // Unknown /v1/ routes: 404.
+    assert_eq!(request(addr, "GET", "/v1/nope", "").unwrap().0, 404);
+    assert_eq!(request(addr, "GET", "/v1/jobs/x/oops", "").unwrap().0, 404);
+    assert_eq!(request(addr, "GET", "/v2/stats", "").unwrap().0, 404);
+    // Known routes with the wrong verb: 405, not 404.
+    assert_eq!(request(addr, "PUT", "/v1/datasets", "").unwrap().0, 405);
+    assert_eq!(request(addr, "DELETE", "/v1/stats", "").unwrap().0, 405);
+    assert_eq!(request(addr, "PUT", "/v1/jobs", "").unwrap().0, 405);
+    assert_eq!(request(addr, "POST", "/v1/jobs/x/stats", "").unwrap().0, 405);
+    assert_eq!(request(addr, "DELETE", "/healthz", "").unwrap().0, 405);
+    assert_eq!(request(addr, "PUT", "/api/v1/jobs", "").unwrap().0, 405);
+    // The versioned control surface mirrors the legacy /api/v1 paths.
+    assert_eq!(request(addr, "GET", "/v1/stats", "").unwrap().0, 200);
+    assert_eq!(request(addr, "GET", "/v1/datasets", "").unwrap().0, 200);
+    assert_eq!(request(addr, "GET", "/v1/healthz", "").unwrap().0, 200);
+    // Without a data plane attached, job-session routes answer 503.
+    assert_eq!(
+        request(addr, "POST", "/v1/jobs", r#"{"name":"j","dataset":"d"}"#).unwrap().0,
+        503
+    );
+    assert_eq!(request(addr, "GET", "/v1/jobs", "").unwrap().0, 503);
+}
+
+/// The DataPlane-backed job API end-to-end: two sessions over one plane
+/// share every fill (job B's cold-start epoch is remote-free because job
+/// A already pulled the dataset once), per-job stats are isolated, and
+/// the lifecycle statuses are right.
+#[test]
+fn v1_job_sessions_share_one_data_plane() {
+    let root = std::env::temp_dir().join(format!("hoard-api-plane-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let cluster = RealCluster::create(&root, 4, 500e6).unwrap();
+    let cfg = DataGenConfig { num_items: 16, files_per_dir: 32, ..Default::default() };
+    let total = datagen::generate(&cluster.remote_dir, &cfg).unwrap();
+    let vols = (0..4).map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 30)])).collect();
+    let mut manager = CacheManager::new(vols, EvictionPolicy::Manual);
+    manager.chunk_bytes = 1000;
+    manager.register(DatasetSpec::new("d", 16, total), "nfs://r/d".into()).unwrap();
+    manager.place("d", (0..4).map(NodeId).collect()).unwrap();
+    let cache = SharedCache::new(manager);
+    let chunks = cache.geometry("d").unwrap().num_chunks();
+    let plane = Arc::new(DataPlane::new(cluster.clone(), cache));
+    plane.register_dataset("d", cfg);
+    let hoard = Arc::new(Mutex::new(Hoard::paper_testbed()));
+    let srv = serve_with_plane("127.0.0.1:0", hoard, plane.clone()).unwrap();
+    let addr = srv.addr;
+
+    // Unregistered dataset → 400; unknown session → 404.
+    let (st, _) =
+        request(addr, "POST", "/v1/jobs", r#"{"name":"x","dataset":"ghost"}"#).unwrap();
+    assert_eq!(st, 400);
+    assert_eq!(request(addr, "GET", "/v1/jobs/ghost/stats", "").unwrap().0, 404);
+    assert_eq!(request(addr, "POST", "/v1/jobs/ghost/epoch", "").unwrap().0, 404);
+
+    // Job A cold-runs one epoch at creation.
+    let (st, body) = request(
+        addr,
+        "POST",
+        "/v1/jobs",
+        r#"{"name":"a","dataset":"d","readers":2,"seed":1,"epochs":1}"#,
+    )
+    .unwrap();
+    assert_eq!(st, 201, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("epochs_run").unwrap().as_u64(), Some(1));
+    assert!(j.get("stats").unwrap().get("remote_bytes").unwrap().as_f64().unwrap() > 0.0);
+
+    // Job B on the same dataset: its "cold" epoch rides A's fills.
+    let (st, _) = request(
+        addr,
+        "POST",
+        "/v1/jobs",
+        r#"{"name":"b","dataset":"d","readers":2,"seed":2,"epochs":1}"#,
+    )
+    .unwrap();
+    assert_eq!(st, 201);
+    let (st, body) = request(addr, "GET", "/v1/jobs/b/stats", "").unwrap();
+    assert_eq!(st, 200);
+    let j = Json::parse(&body).unwrap();
+    let stats = j.get("stats").unwrap();
+    assert_eq!(stats.get("remote_reads").unwrap().as_u64(), Some(0), "B must share A's fills");
+    assert!(stats.get("total_reads").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(
+        j.get("dataset_fills").unwrap().as_u64(),
+        Some(chunks),
+        "plane-wide fills stay at the chunk count across jobs"
+    );
+    assert_eq!(plane.dataset_fills("d"), chunks);
+
+    // Another epoch over the endpoint; list shows both sessions.
+    let (st, body) = request(addr, "POST", "/v1/jobs/b/epoch", "").unwrap();
+    assert_eq!(st, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("epochs_run").unwrap().as_u64(), Some(2));
+    let (_, body) = request(addr, "GET", "/v1/jobs", "").unwrap();
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("items").unwrap().as_arr().unwrap().len(), 2);
+
+    // Duplicate name → 409; delete → 204 then 404.
+    let (st, _) = request(addr, "POST", "/v1/jobs", r#"{"name":"a","dataset":"d"}"#).unwrap();
+    assert_eq!(st, 409);
+    assert_eq!(request(addr, "DELETE", "/v1/jobs/a", "").unwrap().0, 204);
+    assert_eq!(request(addr, "DELETE", "/v1/jobs/a", "").unwrap().0, 404);
+    assert_eq!(request(addr, "GET", "/v1/jobs/a", "").unwrap().0, 404);
+    drop(srv);
+    std::fs::remove_dir_all(&root).unwrap();
 }
 
 #[test]

@@ -1,0 +1,191 @@
+//! Integration tests for the DataPlane/JobSession API: cross-job
+//! fetch-once over one shared plane (two sessions racing a cold dataset
+//! on 8 reader threads end with fill-count == chunk-count and
+//! byte-identical reads), per-job stats isolation, and the unified
+//! `ReadRequest` dispatch (ranges, granularity assertions, shims).
+
+use std::sync::Arc;
+
+use hoard::cache::{CacheManager, EvictionPolicy, SharedCache};
+use hoard::netsim::NodeId;
+use hoard::posix::dataplane::{DataPlane, Granularity, JobSpec, ReadRequest};
+use hoard::posix::realfs::{ReadStats, RealCluster};
+use hoard::posix::reader_pool::ReaderPool;
+use hoard::storage::{Device, DeviceKind, Volume};
+use hoard::workload::datagen::{self, DataGenConfig};
+use hoard::workload::DatasetSpec;
+
+const NODES: usize = 4;
+
+fn fixture(tag: &str, items: u64, chunk_bytes: u64) -> (RealCluster, SharedCache, DataGenConfig) {
+    let root = std::env::temp_dir().join(format!("hoard-dpjobs-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let cluster = RealCluster::create(&root, NODES, 500e6).unwrap();
+    let cfg = DataGenConfig { num_items: items, files_per_dir: 32, ..Default::default() };
+    let total = datagen::generate(&cluster.remote_dir, &cfg).unwrap();
+    let vols = (0..NODES)
+        .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 30)]))
+        .collect();
+    let mut manager = CacheManager::new(vols, EvictionPolicy::Manual);
+    manager.chunk_bytes = chunk_bytes;
+    manager.register(DatasetSpec::new("d", items, total), "nfs://r/d".into()).unwrap();
+    manager.place("d", (0..NODES).map(NodeId).collect()).unwrap();
+    (cluster, SharedCache::new(manager), cfg)
+}
+
+/// The acceptance bar: two sessions cold-racing one dataset over 8 reader
+/// threads (4 + 4) end with exactly chunk-count fills on the shared
+/// ledger, the remote store supplies every byte exactly once, and every
+/// item read through either session is byte-identical to the generator
+/// (hence to a solo run — the generator defines solo-run bytes).
+#[test]
+fn two_sessions_racing_cold_share_every_fill() {
+    // Records are 3080 B; 777-B chunks ⇒ each item spans several chunks,
+    // most straddling two items.
+    let (cluster, cache, cfg) = fixture("share", 24, 777);
+    let total = cfg.num_items * cfg.record_bytes() as u64;
+    let chunks = cache.geometry("d").unwrap().num_chunks();
+    let plane = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+    // Prefetch off: every fill is triggered by a racing reader, the
+    // maximum-contention shape.
+    let a = plane
+        .open_job(JobSpec::new("d", cfg.clone()).readers(4).seed(1).prefetch(false))
+        .unwrap();
+    let b = plane
+        .open_job(JobSpec::new("d", cfg.clone()).readers(4).seed(2).prefetch(false))
+        .unwrap();
+    std::thread::scope(|s| {
+        let ha = s.spawn(|| a.run_epoch(0).unwrap());
+        let hb = s.spawn(|| b.run_epoch(0).unwrap());
+        ha.join().unwrap();
+        hb.join().unwrap();
+    });
+    assert_eq!(
+        plane.dataset_fills("d"),
+        chunks,
+        "2 racing jobs must fill every chunk exactly once, together"
+    );
+    let stats = cluster.take_stats();
+    assert_eq!(stats.remote_bytes, total, "remote supplied every byte exactly once");
+    assert!(cache.is_cached("d"), "all chunks marked ⇒ Cached");
+    // Byte-identity through both sessions — via the zero-lock batch form
+    // (one residency snapshot per pass, zero locks per read).
+    let snap = a.residency();
+    assert!(snap.as_deref().is_some_and(|s| s.is_full()), "cached dataset publishes full snapshot");
+    let mut shard = ReadStats::default();
+    for i in 0..cfg.num_items {
+        let (_, want) = datagen::make_record(&cfg, i);
+        let got_a =
+            a.read_resolved(&ReadRequest::item(i), NodeId(0), snap.as_deref(), &mut shard).unwrap();
+        let got_b = b.read_with_stats(&ReadRequest::item(i), NodeId(1), &mut shard).unwrap();
+        assert_eq!(got_a, want, "item {i} via job a");
+        assert_eq!(got_b, want, "item {i} via job b");
+    }
+    assert_eq!(shard.remote_reads, 0, "verification reads must come from cache");
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
+
+/// Per-job `ReadStats` never bleed: an idle session stays at zero while
+/// its co-tenant streams, and each session's accumulator matches exactly
+/// what its own epochs moved.
+#[test]
+fn per_job_stats_do_not_bleed() {
+    let (cluster, cache, cfg) = fixture("iso", 16, 1000);
+    let plane = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+    let a = plane.open_job(JobSpec::new("d", cfg.clone()).readers(2).seed(7)).unwrap();
+    let b = plane.open_job(JobSpec::new("d", cfg.clone()).readers(2).seed(8)).unwrap();
+    // Job A pays the cold fill; job B is idle.
+    let ra = a.run_epoch(0).unwrap();
+    assert!(ra.merged.remote_bytes > 0);
+    assert_eq!(a.stats(), ra.merged, "A accumulates exactly its own epoch");
+    assert_eq!(b.stats(), ReadStats::default(), "idle job's stats must stay zero");
+    cluster.take_stats();
+    // Job B rides the warm cache; its stats are its own epoch only.
+    let rb = b.run_epoch(0).unwrap();
+    assert_eq!(rb.merged.remote_reads, 0, "job B must ride A's fills");
+    assert_eq!(b.stats(), rb.merged, "B accumulates exactly its own epoch");
+    assert_eq!(a.stats(), ra.merged, "B's epoch must not leak into A");
+    assert_eq!(cluster.take_stats(), rb.merged, "cluster window saw exactly B's shard");
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
+
+/// The unified request surface: ranged chunked reads slice byte-exact
+/// (claiming only overlapped chunks), explicit granularity assertions
+/// behave, and a second granularity on one dataset is refused.
+#[test]
+fn read_request_range_and_mode_dispatch() {
+    let (cluster, cache, cfg) = fixture("range", 8, 777);
+    let plane = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+    let sess = plane.open_job(JobSpec::new("d", cfg.clone())).unwrap();
+    let (_, want) = datagen::make_record(&cfg, 3);
+    let whole = sess.read(&ReadRequest::item(3), NodeId(0)).unwrap();
+    assert_eq!(whole, want);
+    // Sub-ranges crossing chunk boundaries (record is 3080 B, chunks
+    // 777 B).
+    for (s, e) in [(0u64, 1u64), (100, 900), (777, 1554), (3000, 3080)] {
+        let got = sess.read(&ReadRequest::range(3, s..e), NodeId(1)).unwrap();
+        assert_eq!(got, want[s as usize..e as usize], "range {s}..{e}");
+    }
+    // Out-of-bounds / inverted ranges fail loudly.
+    assert!(sess.read(&ReadRequest::range(3, 10..(want.len() as u64 + 1)), NodeId(0)).is_err());
+    assert!(sess.read(&ReadRequest::range(3, 20..10), NodeId(0)).is_err());
+    // Explicit mode: matching passes, mismatched errors.
+    let mut req = ReadRequest::item(3);
+    req.mode = Some(Granularity::Chunked);
+    assert_eq!(sess.read(&req, NodeId(0)).unwrap(), want);
+    req.mode = Some(Granularity::WholeFile);
+    assert!(sess.read(&req, NodeId(0)).is_err(), "mode mismatch must error");
+    // One dataset, one granularity per plane.
+    assert!(plane
+        .open_job(JobSpec::new("d", cfg.clone()).granularity(Granularity::WholeFile))
+        .is_err());
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
+
+/// Whole-file sessions answer ranged requests by slicing the (whole-file)
+/// read — same surface, degenerate addressing.
+#[test]
+fn whole_file_sessions_slice_ranges_too() {
+    let (cluster, cache, cfg) = fixture("wf", 8, 64 << 20);
+    let plane = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+    let sess = plane
+        .open_job(JobSpec::new("d", cfg.clone()).granularity(Granularity::WholeFile))
+        .unwrap();
+    let (_, want) = datagen::make_record(&cfg, 5);
+    assert_eq!(sess.read(&ReadRequest::item(5), NodeId(0)).unwrap(), want);
+    let got = sess.read(&ReadRequest::range(5, 8..100), NodeId(0)).unwrap();
+    assert_eq!(got, want[8..100]);
+    assert!(sess.read(&ReadRequest::range(5, 0..(want.len() as u64 + 1)), NodeId(0)).is_err());
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
+
+/// The deprecated `ReaderPool` shims still drive epochs (their own plane
+/// each — the pre-DataPlane isolation semantics), and two shim pools on
+/// one dataset do NOT share fills, which is exactly what the shared plane
+/// fixes.
+#[test]
+fn shim_pools_keep_old_semantics_shared_plane_fixes_them() {
+    let (cluster, cache, cfg) = fixture("shim", 12, 1000);
+    // Cold epoch through the shim: fetch-once within the one pool.
+    let pool = ReaderPool::new_chunked(&cluster, cache.clone(), "d", cfg.clone(), 2).unwrap();
+    let cold = pool.run_epoch(&pool.epoch_order(3, 0)).unwrap();
+    assert_eq!(cold.merged.remote_bytes, cfg.num_items * cfg.record_bytes() as u64);
+    // A second, separately constructed pool has its own private ledger:
+    // its fill table starts empty even though the bytes are on disk (it
+    // adopts them — zero new remote reads, but zero *shared* state).
+    let pool2 = ReaderPool::new_chunked(&cluster, cache.clone(), "d", cfg.clone(), 2).unwrap();
+    cluster.take_stats();
+    let warm = pool2.run_epoch(&pool2.epoch_order(4, 0)).unwrap();
+    assert_eq!(warm.merged.remote_reads, 0, "second pool adopts on-disk chunks");
+    // The session accessor exposes the per-job accumulator.
+    assert_eq!(pool2.session().stats(), warm.merged);
+    assert_eq!(pool2.session().granularity(), Granularity::Chunked);
+    // Contrast: one plane, two sessions ⇒ one ledger, fills counted once.
+    let plane = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+    let s1 = plane.open_job(JobSpec::new("d", cfg.clone()).seed(1)).unwrap();
+    let s2 = plane.open_job(JobSpec::new("d", cfg.clone()).seed(2)).unwrap();
+    s1.run_epoch(0).unwrap();
+    s2.run_epoch(0).unwrap();
+    assert_eq!(plane.dataset_fills("d"), 0, "warm plane: everything adopted, nothing filled");
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
