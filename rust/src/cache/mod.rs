@@ -102,6 +102,11 @@ pub struct ChunkGeometry {
     /// the namespace of the on-disk chunk files, so two datasets sharing
     /// a grid can never serve each other's chunks.
     pub dataset_id: u64,
+    /// Placement generation the geometry was cut from (bumped on every
+    /// `place`). Part of the on-disk chunk path and the wire address, so
+    /// chunks written under an evicted placement are invisible to the
+    /// re-placed dataset — even on the same grid.
+    pub generation: u64,
 }
 
 impl ChunkGeometry {
@@ -227,7 +232,10 @@ impl ResidencySnapshot {
         self.retired.load(std::sync::atomic::Ordering::Acquire)
     }
 
-    fn retire(&self) {
+    /// Force-retire outside the manager (e.g. `DataPlane::reset_dataset`
+    /// invalidating in-flight sessions). Idempotent; evict/fail_node call
+    /// it too.
+    pub(crate) fn retire(&self) {
         self.retired.store(true, std::sync::atomic::Ordering::Release);
     }
 
@@ -517,6 +525,9 @@ impl CacheManager {
         }
         let chunks = ChunkSet::new(need, chunk);
         let rec = self.registry.get_mut(name)?;
+        // Every placement is a new generation: files and wire requests
+        // from earlier placements no longer address this dataset.
+        rec.generation += 1;
         // Publish the lock-free residency snapshot alongside the placement:
         // same stripe, empty bitmap, bits set under this manager's
         // exclusive lock as fills land.
@@ -525,6 +536,7 @@ impl CacheManager {
             total_bytes: need,
             num_items: rec.spec.num_items,
             dataset_id: rec.id,
+            generation: rec.generation,
         }));
         rec.stripe = Some(stripe);
         rec.state = DatasetState::Caching { chunks };
@@ -670,6 +682,7 @@ impl CacheManager {
             total_bytes: rec.spec.total_bytes,
             num_items: rec.spec.num_items,
             dataset_id: rec.id,
+            generation: rec.generation,
         })
     }
 
@@ -1224,11 +1237,15 @@ mod tests {
         assert_eq!(snap.read_location(0, NodeId(0)), None, "retired ⇒ fall back");
         assert_eq!(snap.read_plan(0, NodeId(0)), None);
         assert!(m.residency_snapshot("a").is_err(), "placement gone");
-        // Re-placement publishes a fresh, empty snapshot.
+        // Re-placement publishes a fresh, empty snapshot under a new
+        // generation — old-generation chunk files no longer address it.
         m.place("a", vec![NodeId(0)]).unwrap();
         let fresh = m.residency_snapshot("a").unwrap();
         assert!(!fresh.retired());
         assert_eq!(fresh.marked_chunks(), 0);
+        assert_eq!(snap.geometry().generation, 1);
+        assert_eq!(fresh.geometry().generation, 2);
+        assert_eq!(m.geometry("a").unwrap().generation, 2);
     }
 
     #[test]

@@ -46,6 +46,11 @@ pub struct DatasetRecord {
     pub last_access: u64,
     /// Jobs currently mounting this dataset (pinned ⇒ not evictable).
     pub pin_count: u32,
+    /// Placement generation: 0 while never placed, bumped on **every**
+    /// successful placement. Stamped into the chunk geometry, the on-disk
+    /// chunk paths and the peer wire protocol, so a re-placed dataset can
+    /// never adopt or serve files written under an earlier placement.
+    pub generation: u64,
 }
 
 impl DatasetRecord {
@@ -131,6 +136,7 @@ impl Registry {
             snapshot: None,
             last_access: self.clock,
             pin_count: 0,
+            generation: 0,
             spec,
         };
         self.entries.insert(rec.spec.name.clone(), rec);

@@ -1,0 +1,211 @@
+//! Eviction-lifecycle experiment (`hoard exp evict`): more datasets than
+//! the cache can hold, placed one after another under the `DatasetLru`
+//! admission policy, with a pinned "priority job" dataset that pressure
+//! must never touch.
+//!
+//! What it shows — the paper's §3.1 dataset-granular eviction made real:
+//! each placement beyond capacity evicts the least-recently-used
+//! *unpinned* dataset end to end ([`DataPlane::place_dataset`]), which
+//! retires its residency snapshot, poisons its fill ledger, and deletes
+//! its on-disk chunk trees — the `reclaimed bytes` column is real
+//! `remove_dir_all` accounting, not bookkeeping. Every row then streams a
+//! cold epoch of the freshly placed dataset to show the cache keeps
+//! serving at full rate across the churn. Emits the standard
+//! `metrics::Table` JSON shape under `--json`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::cache::{CacheManager, EvictionPolicy, SharedCache};
+use crate::metrics::Table;
+use crate::netsim::NodeId;
+use crate::posix::dataplane::{DataPlane, JobSpec};
+use crate::posix::realfs::RealCluster;
+use crate::remote::NfsModel;
+use crate::storage::{Device, DeviceKind, Volume};
+use crate::workload::datagen::{self, DataGenConfig};
+use crate::workload::DatasetSpec;
+
+use super::items_per_sec;
+
+/// Nodes in the eviction testbed (the paper's 4-node cluster).
+pub const EVICT_NODES: usize = 4;
+
+/// One placement + cold epoch under cache pressure.
+#[derive(Debug, Clone)]
+pub struct EvictStep {
+    pub dataset: String,
+    /// This dataset stays pinned for the whole run (the priority job) —
+    /// later placements must evict around it.
+    pub pinned: bool,
+    /// Cold-epoch wall seconds for the freshly placed dataset.
+    pub cold_s: f64,
+    pub items_per_s: f64,
+    /// Datasets the admission policy evicted to admit this placement.
+    pub evicted: Vec<String>,
+    /// On-disk bytes the victims' chunk-tree GC freed cluster-wide.
+    pub reclaimed_bytes: u64,
+    /// Datasets still holding a placement after this step.
+    pub resident_after: usize,
+}
+
+/// Roll `k` equally sized datasets through a cache that only holds two:
+/// register all, then place + pin + stream + unpin each in turn. `d0`
+/// stays pinned throughout, so every over-capacity placement must pick
+/// its LRU victim among the unpinned rest.
+pub fn eviction_lifecycle_run(
+    k: usize,
+    items: u64,
+    chunk_bytes: u64,
+    readers: usize,
+) -> Result<Vec<EvictStep>> {
+    static RUN_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = RUN_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let root: PathBuf =
+        std::env::temp_dir().join(format!("hoard-evict-{k}-{}-{seq}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let cluster = RealCluster::create(&root, EVICT_NODES, 200e6)
+        .context("creating eviction cluster")?
+        .with_remote_model(Box::new(NfsModel::new(200e6)));
+    // One shared remote layout: the k datasets are separate cache
+    // resources (own IDs, own chunk trees, own generations) over the same
+    // item files.
+    let cfg = DataGenConfig { num_items: items, files_per_dir: 32, ..Default::default() };
+    let total = datagen::generate(&cluster.remote_dir, &cfg).context("generating dataset")?;
+
+    // Capacity that fits exactly two striped datasets: the third and
+    // later placements run into admission pressure.
+    let cap_per_node = 2 * total.div_ceil(EVICT_NODES as u64) + chunk_bytes;
+    let vols = (0..EVICT_NODES)
+        .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, cap_per_node)]))
+        .collect();
+    let mut manager = CacheManager::new(vols, EvictionPolicy::DatasetLru);
+    manager.chunk_bytes = chunk_bytes;
+    for j in 0..k {
+        manager.register(
+            DatasetSpec::new(format!("d{j}"), items, total),
+            format!("nfs://remote/d{j}"),
+        )?;
+    }
+    let cache = SharedCache::new(manager);
+    let plane = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+
+    let mut steps = Vec::with_capacity(k);
+    for j in 0..k {
+        let name = format!("d{j}");
+        let outcome = plane.place_dataset(&name, (0..EVICT_NODES).map(NodeId).collect())?;
+        // The running job pins its dataset; d0 is the priority job that
+        // never unpins, so LRU pressure has to route around it.
+        cache.with_mut(|m| m.registry.pin(&name))?;
+        let sess = plane.open_job(
+            JobSpec::new(name.as_str(), cfg.clone()).readers(readers).seed(0xE71C + j as u64),
+        )?;
+        let report = sess.run_epoch(0)?;
+        if j != 0 {
+            cache.with_mut(|m| m.registry.unpin(&name))?;
+        }
+        let cold_s = report.wall.as_secs_f64();
+        steps.push(EvictStep {
+            dataset: name,
+            pinned: j == 0,
+            cold_s,
+            items_per_s: items_per_sec(items, cold_s),
+            evicted: outcome.evicted,
+            reclaimed_bytes: outcome.reclaimed_bytes,
+            resident_after: cache
+                .with(|m| m.registry.iter().filter(|r| r.stripe.is_some()).count()),
+        });
+    }
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(steps)
+}
+
+/// The eviction-lifecycle table over an explicit shape.
+pub fn eviction_lifecycle_table_with(
+    k: usize,
+    items: u64,
+    chunk_bytes: u64,
+    readers: usize,
+) -> Table {
+    let mut t = Table::new(
+        "Real mode — eviction lifecycle under cache pressure (LRU victims, pinned priority job, on-disk GC)",
+        &[
+            "dataset",
+            "pinned",
+            "cold epoch (s)",
+            "img/s",
+            "evicted",
+            "reclaimed bytes",
+            "resident after",
+        ],
+    );
+    match eviction_lifecycle_run(k, items, chunk_bytes, readers) {
+        Ok(steps) => {
+            for s in steps {
+                t.row(vec![
+                    s.dataset,
+                    if s.pinned { "yes".into() } else { "no".into() },
+                    format!("{:.3}", s.cold_s),
+                    format!("{:.0}", s.items_per_s),
+                    if s.evicted.is_empty() { "-".into() } else { s.evicted.join(",") },
+                    format!("{}", s.reclaimed_bytes),
+                    format!("{}", s.resident_after),
+                ]);
+            }
+        }
+        Err(e) => {
+            let mut cells = vec!["-".to_string(), format!("failed: {e:#}")];
+            cells.resize(7, String::new());
+            t.row(cells);
+        }
+    }
+    t
+}
+
+/// The default `hoard exp evict` table: 4 datasets through a 2-dataset
+/// cache, sub-item chunks, 2 readers. Honors `HOARD_BENCH_SMOKE=1`.
+pub fn eviction_lifecycle_table(items: u64) -> Table {
+    let smoke = std::env::var("HOARD_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let items = if smoke { items.min(8) } else { items };
+    eviction_lifecycle_table_with(4, items, 1000, 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pressure_evicts_lru_but_never_the_pinned_dataset() {
+        let steps = eviction_lifecycle_run(4, 8, 1000, 2).unwrap();
+        assert_eq!(steps.len(), 4);
+        // First two placements fit without evictions.
+        assert!(steps[0].evicted.is_empty() && steps[1].evicted.is_empty());
+        assert_eq!(steps[0].resident_after, 1);
+        assert_eq!(steps[1].resident_after, 2);
+        // Every later placement evicts exactly the LRU unpinned dataset
+        // and reclaims real bytes from disk.
+        assert_eq!(steps[2].evicted, vec!["d1".to_string()], "d0 is pinned; d1 is LRU");
+        assert_eq!(steps[3].evicted, vec!["d2".to_string()]);
+        for s in &steps[2..] {
+            assert!(s.reclaimed_bytes > 0, "{}: eviction must free on-disk bytes", s.dataset);
+            assert_eq!(s.resident_after, 2, "cache holds exactly two datasets under churn");
+        }
+        assert!(steps.iter().all(|s| s.items_per_s >= 0.0));
+    }
+
+    #[test]
+    fn evict_table_has_one_row_per_dataset() {
+        let t = eviction_lifecycle_table_with(3, 8, 1000, 1);
+        assert_eq!(t.rows.len(), 3);
+        assert_eq!(t.rows[0][0], "d0");
+        assert_eq!(t.rows[0][1], "yes");
+        // The pressure row names a victim and a positive byte count.
+        let reclaimed: u64 = t.rows[2][5]
+            .parse()
+            .unwrap_or_else(|_| panic!("reclaimed column not numeric: {:?}", t.rows[2]));
+        assert_eq!(t.rows[2][4], "d1");
+        assert!(reclaimed > 0);
+    }
+}

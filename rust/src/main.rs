@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!   exp <id|all>        reproduce a paper table/figure (t1 f3 t3 f4 f5 t4
-//!                       t5 util ablations)
+//!                       t5 util readers chunks peers jobs evict ablations)
 //!   serve [--addr A]    run the Hoard API server over an in-process cluster
 //!   datagen --out DIR   generate a synthetic real-mode dataset
 //!   sim --mode M        run the paper 4-job scenario (rem|nvme|hoard)
@@ -41,7 +41,7 @@ fn main() {
 fn print_usage() {
     eprintln!(
         "hoard — distributed data caching for DL training (paper reproduction)\n\n\
-         USAGE:\n  hoard exp <t1|f3|t3|f4|f5|t4|t5|util|readers|chunks|peers|jobs|ablations|all> [--json]\n  \
+         USAGE:\n  hoard exp <t1|f3|t3|f4|f5|t4|t5|util|readers|chunks|peers|jobs|evict|ablations|all> [--json]\n  \
          hoard serve [--addr 127.0.0.1:7070] [--config FILE]\n        \
          [--data-root DIR] [--data-items N] [--data-chunk BYTES]\n  \
          hoard datagen --out DIR [--items N]\n  \
@@ -93,6 +93,7 @@ fn cmd_exp(args: &[String]) -> i32 {
             "chunks" => emit(experiments::chunk_size_table(24)),
             "peers" => emit(experiments::peer_transport_table(24)),
             "jobs" => emit(experiments::co_job_table(24)),
+            "evict" => emit(experiments::eviction_lifecycle_table(24)),
             "ablations" => {
                 emit(ablations::ablation_stripe_width());
                 emit(ablations::ablation_prefetch());
@@ -106,7 +107,7 @@ fn cmd_exp(args: &[String]) -> i32 {
     if which == "all" {
         for id in [
             "t1", "f3", "t3", "f4", "f5", "t4", "t5", "util", "readers", "chunks", "peers",
-            "jobs", "ablations",
+            "jobs", "evict", "ablations",
         ] {
             run(id);
         }

@@ -143,17 +143,20 @@ impl PeerClient {
         Ok(out)
     }
 
-    /// Request one chunk (`grid_bytes > 0`) or one item file
-    /// (`grid_bytes == 0`, `chunk` = item index) from `peer`.
-    /// `Ok(None)` ⇔ the peer answered `NotResident`.
+    /// Request one chunk (`grid_bytes > 0`, under placement `generation`)
+    /// or one item file (`grid_bytes == 0`, `chunk` = item index,
+    /// `generation` ignored) from `peer`. `Ok(None)` ⇔ the peer answered
+    /// `NotResident` (not held — or evicted/stale-generation on a
+    /// residency-aware server).
     pub fn get_chunk(
         &self,
         peer: NodeId,
         dataset_id: u64,
+        generation: u64,
         grid_bytes: u64,
         chunk: u64,
     ) -> Result<Option<Vec<u8>>> {
-        let req = Frame::GetChunk { dataset_id, chunk, grid_bytes };
+        let req = Frame::GetChunk { dataset_id, generation, chunk, grid_bytes };
         let (sock, resp) = self.pooled_request(peer, &req)?;
         match resp {
             Frame::ChunkData(bytes) => {
@@ -185,6 +188,7 @@ impl PeerClient {
         &self,
         peer: NodeId,
         dataset_id: u64,
+        generation: u64,
         grid_bytes: u64,
         chunks: &[u64],
     ) -> Result<Vec<Option<Vec<u8>>>> {
@@ -194,7 +198,8 @@ impl PeerClient {
         if chunks.len() > proto::MAX_BATCH {
             bail!("batch of {} chunks exceeds cap {}", chunks.len(), proto::MAX_BATCH);
         }
-        let req = Frame::GetChunkBatch { dataset_id, grid_bytes, chunks: chunks.to_vec() };
+        let req =
+            Frame::GetChunkBatch { dataset_id, generation, grid_bytes, chunks: chunks.to_vec() };
         let (sock, resp) = self.pooled_request(peer, &req)?;
         match resp {
             Frame::ChunkBatchData(entries) => {
@@ -225,13 +230,15 @@ impl PeerClient {
 }
 
 /// Byte-bounded FIFO cache of fetched chunk payloads, keyed by the wire
-/// address `(dataset_id, grid_bytes, chunk)`. Chunk payloads are
-/// immutable content, so hits are always valid; the bound evicts oldest
-/// first and payloads larger than the bound are simply not cached.
+/// address `(dataset_id, generation, grid_bytes, chunk)` — generation
+/// included, so a re-placed dataset can never hit payloads cached under an
+/// evicted placement. Within one generation chunk payloads are immutable
+/// content, so hits are always valid; the bound evicts oldest first and
+/// payloads larger than the bound are simply not cached.
 struct ChunkCache {
     max_bytes: usize,
     /// (fifo of entries, current byte total).
-    inner: Mutex<(VecDeque<((u64, u64, u64), Arc<Vec<u8>>)>, usize)>,
+    inner: Mutex<(VecDeque<((u64, u64, u64, u64), Arc<Vec<u8>>)>, usize)>,
 }
 
 impl ChunkCache {
@@ -239,12 +246,12 @@ impl ChunkCache {
         ChunkCache { max_bytes, inner: Mutex::new((VecDeque::new(), 0)) }
     }
 
-    fn get(&self, key: &(u64, u64, u64)) -> Option<Arc<Vec<u8>>> {
+    fn get(&self, key: &(u64, u64, u64, u64)) -> Option<Arc<Vec<u8>>> {
         let guard = self.inner.lock().unwrap();
         guard.0.iter().find(|(k, _)| k == key).map(|(_, v)| v.clone())
     }
 
-    fn put(&self, key: (u64, u64, u64), value: Arc<Vec<u8>>) {
+    fn put(&self, key: (u64, u64, u64, u64), value: Arc<Vec<u8>>) {
         if value.len() > self.max_bytes {
             return;
         }
@@ -325,7 +332,7 @@ impl ChunkTransport for SocketTransport {
         _reader: NodeId,
         stats: &mut ReadStats,
     ) -> Result<Option<Vec<u8>>> {
-        let key = (geom.dataset_id, geom.chunk_bytes(), c);
+        let key = (geom.dataset_id, geom.generation, geom.chunk_bytes(), c);
         if let Some(cache) = &self.cache {
             if let Some(hit) = cache.get(&key) {
                 // No wire traffic: not accounted as peer_net_*.
@@ -333,7 +340,9 @@ impl ChunkTransport for SocketTransport {
             }
         }
         let home = geom.node_of_chunk(c);
-        match self.client.get_chunk(home, geom.dataset_id, geom.chunk_bytes(), c)? {
+        let got =
+            self.client.get_chunk(home, geom.dataset_id, geom.generation, geom.chunk_bytes(), c)?;
+        match got {
             Some(bytes) => {
                 Self::account(stats, &bytes);
                 if let Some(cache) = &self.cache {
@@ -373,7 +382,8 @@ impl ChunkTransport for SocketTransport {
         let mut miss_chunks = Vec::with_capacity(reqs.len());
         for (k, &(c, off, len)) in reqs.iter().enumerate() {
             if let Some(cache) = &self.cache {
-                if let Some(hit) = cache.get(&(geom.dataset_id, geom.chunk_bytes(), c)) {
+                let key = (geom.dataset_id, geom.generation, geom.chunk_bytes(), c);
+                if let Some(hit) = cache.get(&key) {
                     out[k] = Some(Self::slice_range(&hit, c, off, len)?);
                     continue;
                 }
@@ -384,15 +394,21 @@ impl ChunkTransport for SocketTransport {
         if miss_chunks.is_empty() {
             return Ok(out);
         }
-        let got =
-            self.client.get_chunk_batch(home, geom.dataset_id, geom.chunk_bytes(), &miss_chunks)?;
+        let got = self.client.get_chunk_batch(
+            home,
+            geom.dataset_id,
+            geom.generation,
+            geom.chunk_bytes(),
+            &miss_chunks,
+        )?;
         for (k, payload) in miss_idx.into_iter().zip(got) {
             let (c, off, len) = reqs[k];
             if let Some(bytes) = payload {
                 Self::account(stats, &bytes);
                 out[k] = Some(Self::slice_range(&bytes, c, off, len)?);
                 if let Some(cache) = &self.cache {
-                    cache.put((geom.dataset_id, geom.chunk_bytes(), c), Arc::new(bytes));
+                    let key = (geom.dataset_id, geom.generation, geom.chunk_bytes(), c);
+                    cache.put(key, Arc::new(bytes));
                 }
             }
         }
@@ -409,7 +425,7 @@ impl ChunkTransport for SocketTransport {
         _reader: NodeId,
         stats: &mut ReadStats,
     ) -> Result<Option<Vec<u8>>> {
-        match self.client.get_chunk(node, dataset_id, ITEM_GRID, item)? {
+        match self.client.get_chunk(node, dataset_id, 0, ITEM_GRID, item)? {
             Some(bytes) => {
                 Self::account(stats, &bytes);
                 Ok(Some(bytes))
@@ -437,38 +453,44 @@ mod tests {
     fn get_chunk_roundtrip_pool_reuse_and_not_resident() {
         let dir = tmpdir("client");
         let payload: Vec<u8> = (0..=255u8).cycle().take(5000).collect();
-        let rel = chunk_rel_path(7, 100, 3);
+        let rel = chunk_rel_path(7, 1, 8192, 3);
         let path = dir.join(&rel);
         std::fs::create_dir_all(path.parent().unwrap()).unwrap();
         std::fs::write(&path, &payload).unwrap();
 
         let mut srv = PeerServer::start("127.0.0.1:0", dir.clone()).unwrap();
         let client = PeerClient::connect(vec![srv.addr]);
-        assert_eq!(client.get_chunk(NodeId(0), 7, 100, 3).unwrap(), Some(payload.clone()));
+        assert_eq!(client.get_chunk(NodeId(0), 7, 1, 8192, 3).unwrap(), Some(payload.clone()));
         // Second request reuses the pooled connection.
-        assert_eq!(client.get_chunk(NodeId(0), 7, 100, 3).unwrap(), Some(payload));
+        assert_eq!(client.get_chunk(NodeId(0), 7, 1, 8192, 3).unwrap(), Some(payload));
         // Missing chunk ⇒ NotResident ⇒ None (not an error).
-        assert_eq!(client.get_chunk(NodeId(0), 7, 100, 4).unwrap(), None);
+        assert_eq!(client.get_chunk(NodeId(0), 7, 1, 8192, 4).unwrap(), None);
+        // A different generation addresses a different chunk tree.
+        assert_eq!(client.get_chunk(NodeId(0), 7, 2, 8192, 3).unwrap(), None);
+        // A payload wider than the grid allows is a request-level error
+        // even without a residency view (no exact length to check, but
+        // the grid bounds every chunk).
+        assert!(client.get_chunk(NodeId(0), 7, 1, 100, 3).is_err());
         // Item requests without an export are request-level errors.
-        assert!(client.get_chunk(NodeId(0), 7, 0, 0).is_err());
+        assert!(client.get_chunk(NodeId(0), 7, 0, 0, 0).is_err());
         // Registering an export makes item requests servable.
         srv.register_item_paths(7, |i| PathBuf::from(format!("items/i{i}.bin")));
         std::fs::create_dir_all(dir.join("items")).unwrap();
         std::fs::write(dir.join("items/i5.bin"), b"hello").unwrap();
-        assert_eq!(client.get_chunk(NodeId(0), 7, 0, 5).unwrap(), Some(b"hello".to_vec()));
+        assert_eq!(client.get_chunk(NodeId(0), 7, 0, 0, 5).unwrap(), Some(b"hello".to_vec()));
         srv.stop();
         // A stopped server is a hard error, not a silent None.
-        assert!(client.get_chunk(NodeId(0), 7, 100, 3).is_err());
+        assert!(client.get_chunk(NodeId(0), 7, 1, 8192, 3).is_err());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]
     fn unknown_peer_is_an_error() {
         let client = PeerClient::connect(vec![]);
-        assert!(client.get_chunk(NodeId(0), 1, 100, 0).is_err());
-        assert!(client.get_chunk_batch(NodeId(0), 1, 100, &[0]).is_err());
+        assert!(client.get_chunk(NodeId(0), 1, 1, 100, 0).is_err());
+        assert!(client.get_chunk_batch(NodeId(0), 1, 1, 100, &[0]).is_err());
         // Empty batches never touch the wire, even with no peers.
-        assert_eq!(client.get_chunk_batch(NodeId(0), 1, 100, &[]).unwrap(), vec![]);
+        assert_eq!(client.get_chunk_batch(NodeId(0), 1, 1, 100, &[]).unwrap(), vec![]);
     }
 
     #[test]
@@ -476,14 +498,14 @@ mod tests {
         let dir = tmpdir("batch");
         let mk = |c: u64| -> Vec<u8> { (0..100 + c as usize).map(|b| (b % 251) as u8).collect() };
         for c in [0u64, 2] {
-            let rel = chunk_rel_path(9, 64, c);
+            let rel = chunk_rel_path(9, 1, 256, c);
             std::fs::create_dir_all(dir.join(&rel).parent().unwrap()).unwrap();
             std::fs::write(dir.join(&rel), mk(c)).unwrap();
         }
         let mut srv = PeerServer::start("127.0.0.1:0", dir.clone()).unwrap();
         let client = PeerClient::connect(vec![srv.addr]);
         let before = client.wire_roundtrips();
-        let got = client.get_chunk_batch(NodeId(0), 9, 64, &[0, 1, 2]).unwrap();
+        let got = client.get_chunk_batch(NodeId(0), 9, 1, 256, &[0, 1, 2]).unwrap();
         assert_eq!(got, vec![Some(mk(0)), None, Some(mk(2))]);
         assert_eq!(
             client.wire_roundtrips(),
@@ -491,10 +513,15 @@ mod tests {
             "three chunks, mixed residency, exactly one round trip"
         );
         // The connection stays pooled and serves singles afterwards.
-        assert_eq!(client.get_chunk(NodeId(0), 9, 64, 0).unwrap(), Some(mk(0)));
+        assert_eq!(client.get_chunk(NodeId(0), 9, 1, 256, 0).unwrap(), Some(mk(0)));
+        // A stale-generation batch sees none of the files.
+        assert_eq!(
+            client.get_chunk_batch(NodeId(0), 9, 2, 256, &[0, 1, 2]).unwrap(),
+            vec![None, None, None]
+        );
         // Over-cap batches are client-side errors before any wire traffic.
         let too_many: Vec<u64> = (0..=crate::peer::proto::MAX_BATCH as u64).collect();
-        assert!(client.get_chunk_batch(NodeId(0), 9, 64, &too_many).is_err());
+        assert!(client.get_chunk_batch(NodeId(0), 9, 1, 256, &too_many).is_err());
         srv.stop();
         std::fs::remove_dir_all(&dir).unwrap();
     }

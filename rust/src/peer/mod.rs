@@ -16,11 +16,16 @@
 //!    [`PeerClient`] with per-peer connection pools and optional per-link
 //!    NIC throttling.
 //!
-//! Wire addressing is `(dataset_id, chunk, grid_bytes)` — exactly the
-//! `(dataset, chunk)` IDs the residency bitmap is keyed by (Clairvoyant
-//! Prefetching's per-sample-ID granularity) — so a peer answers either
-//! `ChunkData` or `NotResident`, and `NotResident` falls back to a remote
-//! fill that records residency.
+//! Wire addressing is `(dataset_id, generation, chunk, grid_bytes)` —
+//! exactly the `(dataset, generation, chunk)` address the residency bitmap
+//! and the on-disk chunk tree are keyed by (Clairvoyant Prefetching's
+//! per-sample-ID granularity) — so a peer answers either `ChunkData` or
+//! `NotResident`, and `NotResident` falls back to a remote fill that
+//! records residency. A server with a registered residency view
+//! ([`PeerServer::register_residency`]) additionally refuses evicted or
+//! stale-generation requests with `NotResident` and validates payload
+//! lengths against the grid, so eviction is visible on the wire instead of
+//! being masked by leftover files.
 
 pub mod client;
 pub mod proto;
@@ -147,7 +152,7 @@ impl ChunkTransport for DirTransport {
         stats: &mut ReadStats,
     ) -> Result<Option<Vec<u8>>> {
         let home = geom.node_of_chunk(c);
-        let crel = chunk_rel_path(geom.dataset_id, geom.chunk_bytes(), c);
+        let crel = chunk_rel_path(geom.dataset_id, geom.generation, geom.chunk_bytes(), c);
         if !cluster.node_has(home, &crel) {
             return Ok(None);
         }
@@ -165,7 +170,7 @@ impl ChunkTransport for DirTransport {
         stats: &mut ReadStats,
     ) -> Result<Option<Vec<u8>>> {
         let home = geom.node_of_chunk(c);
-        let crel = chunk_rel_path(geom.dataset_id, geom.chunk_bytes(), c);
+        let crel = chunk_rel_path(geom.dataset_id, geom.generation, geom.chunk_bytes(), c);
         if !cluster.node_has(home, &crel) {
             return Ok(None);
         }

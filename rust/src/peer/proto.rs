@@ -9,11 +9,11 @@
 //!
 //! | tag | frame            | payload                                            |
 //! |-----|------------------|----------------------------------------------------|
-//! | 1   | `GetChunk`       | `u64 dataset_id`, `u64 chunk`, `u64 grid_bytes`    |
+//! | 1   | `GetChunk`       | `u64 dataset_id`, `u64 generation`, `u64 chunk`, `u64 grid_bytes` |
 //! | 2   | `ChunkData`      | the raw chunk (or item-file) bytes                 |
 //! | 3   | `NotResident`    | empty                                              |
 //! | 4   | `Error`          | UTF-8 message                                      |
-//! | 5   | `GetChunkBatch`  | `u64 dataset_id`, `u64 grid_bytes`, `u32 n`, `n × u64 chunk` |
+//! | 5   | `GetChunkBatch`  | `u64 dataset_id`, `u64 generation`, `u64 grid_bytes`, `u32 n`, `n × u64 chunk` |
 //! | 6   | `ChunkBatchData` | `u32 n`, then per entry `u8 present` (+ `u64 len`, bytes when present) |
 //!
 //! The batch pair is the pipelined request path: a reader pulling K chunks
@@ -25,10 +25,14 @@
 //! and batch sizes are capped at [`MAX_BATCH`] before any allocation.
 //!
 //! `GetChunk { grid_bytes: 0 }` ([`ITEM_GRID`]) addresses a whole *item
-//! file* instead of a stripe chunk — `chunk` is then the item index and
-//! the server resolves the path through a registered item export. Any
-//! `grid_bytes > 0` addresses chunk `chunk` of that grid, exactly the
-//! `(dataset, chunk)` IDs the residency bitmap is keyed by.
+//! file* instead of a stripe chunk — `chunk` is then the item index, the
+//! server resolves the path through a registered item export, and
+//! `generation` is ignored (item files are not generation-scoped). Any
+//! `grid_bytes > 0` addresses chunk `chunk` of that grid under placement
+//! `generation`, exactly the `(dataset, generation, chunk)` address the
+//! residency bitmap and the on-disk chunk tree are keyed by — a request
+//! carrying a retired generation answers `NotResident` instead of serving
+//! a stale file.
 //!
 //! Decoding is hardened: a length prefix above [`MAX_FRAME`] is rejected
 //! *before* any allocation, truncated frames (header or body) error out,
@@ -64,10 +68,10 @@ const TAG_CHUNK_BATCH_DATA: u8 = 6;
 /// responses.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Frame {
-    /// "Send me chunk `chunk` of dataset `dataset_id` under the
-    /// `grid_bytes` chunk grid" (or item `chunk` when `grid_bytes` is
-    /// [`ITEM_GRID`]).
-    GetChunk { dataset_id: u64, chunk: u64, grid_bytes: u64 },
+    /// "Send me chunk `chunk` of dataset `dataset_id`, placement
+    /// `generation`, under the `grid_bytes` chunk grid" (or item `chunk`
+    /// when `grid_bytes` is [`ITEM_GRID`]; `generation` is then ignored).
+    GetChunk { dataset_id: u64, generation: u64, chunk: u64, grid_bytes: u64 },
     /// The full requested payload.
     ChunkData(Vec<u8>),
     /// The serving node does not hold that chunk — the caller falls back
@@ -75,9 +79,10 @@ pub enum Frame {
     NotResident,
     /// Request-level failure (bad request, local I/O error).
     Error(String),
-    /// "Send me these chunks of dataset `dataset_id` under the
-    /// `grid_bytes` grid" — K chunks, one round of framing.
-    GetChunkBatch { dataset_id: u64, grid_bytes: u64, chunks: Vec<u64> },
+    /// "Send me these chunks of dataset `dataset_id`, placement
+    /// `generation`, under the `grid_bytes` grid" — K chunks, one round of
+    /// framing.
+    GetChunkBatch { dataset_id: u64, generation: u64, grid_bytes: u64, chunks: Vec<u64> },
     /// Batched response, entry `i` answering chunk `i` of the request
     /// (`None` ⇔ that chunk is not resident on the serving node).
     ChunkBatchData(Vec<Option<Vec<u8>>>),
@@ -87,9 +92,10 @@ pub enum Frame {
 pub fn encode(frame: &Frame) -> Vec<u8> {
     let mut body = Vec::new();
     match frame {
-        Frame::GetChunk { dataset_id, chunk, grid_bytes } => {
+        Frame::GetChunk { dataset_id, generation, chunk, grid_bytes } => {
             body.push(TAG_GET_CHUNK);
             body.extend_from_slice(&dataset_id.to_le_bytes());
+            body.extend_from_slice(&generation.to_le_bytes());
             body.extend_from_slice(&chunk.to_le_bytes());
             body.extend_from_slice(&grid_bytes.to_le_bytes());
         }
@@ -102,10 +108,11 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             body.push(TAG_ERROR);
             body.extend_from_slice(msg.as_bytes());
         }
-        Frame::GetChunkBatch { dataset_id, grid_bytes, chunks } => {
+        Frame::GetChunkBatch { dataset_id, generation, grid_bytes, chunks } => {
             assert!(chunks.len() <= MAX_BATCH, "batch of {} exceeds MAX_BATCH", chunks.len());
             body.push(TAG_GET_CHUNK_BATCH);
             body.extend_from_slice(&dataset_id.to_le_bytes());
+            body.extend_from_slice(&generation.to_le_bytes());
             body.extend_from_slice(&grid_bytes.to_le_bytes());
             body.extend_from_slice(&(chunks.len() as u32).to_le_bytes());
             for c in chunks {
@@ -147,11 +154,16 @@ pub fn decode(body: &[u8]) -> Result<Frame> {
     let (&tag, payload) = body.split_first().context("empty frame body")?;
     match tag {
         TAG_GET_CHUNK => {
-            if payload.len() != 24 {
-                bail!("GetChunk payload must be 24 bytes, got {}", payload.len());
+            if payload.len() != 32 {
+                bail!("GetChunk payload must be 32 bytes, got {}", payload.len());
             }
             let word = |i: usize| u64::from_le_bytes(payload[i..i + 8].try_into().unwrap());
-            Ok(Frame::GetChunk { dataset_id: word(0), chunk: word(8), grid_bytes: word(16) })
+            Ok(Frame::GetChunk {
+                dataset_id: word(0),
+                generation: word(8),
+                chunk: word(16),
+                grid_bytes: word(24),
+            })
         }
         TAG_CHUNK_DATA => Ok(Frame::ChunkData(payload.to_vec())),
         TAG_NOT_RESIDENT => {
@@ -162,23 +174,28 @@ pub fn decode(body: &[u8]) -> Result<Frame> {
         }
         TAG_ERROR => Ok(Frame::Error(String::from_utf8_lossy(payload).into_owned())),
         TAG_GET_CHUNK_BATCH => {
-            if payload.len() < 20 {
-                bail!("GetChunkBatch header needs 20 bytes, got {}", payload.len());
+            if payload.len() < 28 {
+                bail!("GetChunkBatch header needs 28 bytes, got {}", payload.len());
             }
             let word = |i: usize| u64::from_le_bytes(payload[i..i + 8].try_into().unwrap());
-            let count = u32::from_le_bytes(payload[16..20].try_into().unwrap()) as usize;
+            let count = u32::from_le_bytes(payload[24..28].try_into().unwrap()) as usize;
             if count > MAX_BATCH {
                 bail!("batch of {count} exceeds cap {MAX_BATCH}");
             }
-            if payload.len() != 20 + 8 * count {
+            if payload.len() != 28 + 8 * count {
                 bail!(
                     "GetChunkBatch of {count} chunks must be {} bytes, got {}",
-                    20 + 8 * count,
+                    28 + 8 * count,
                     payload.len()
                 );
             }
-            let chunks = (0..count).map(|k| word(20 + 8 * k)).collect();
-            Ok(Frame::GetChunkBatch { dataset_id: word(0), grid_bytes: word(8), chunks })
+            let chunks = (0..count).map(|k| word(28 + 8 * k)).collect();
+            Ok(Frame::GetChunkBatch {
+                dataset_id: word(0),
+                generation: word(8),
+                grid_bytes: word(16),
+                chunks,
+            })
         }
         TAG_CHUNK_BATCH_DATA => {
             if payload.len() < 4 {
@@ -267,6 +284,7 @@ mod tests {
         match rng.gen_range(6) {
             0 => Frame::GetChunk {
                 dataset_id: rng.next_u64(),
+                generation: rng.next_u64(),
                 chunk: rng.next_u64(),
                 grid_bytes: rng.next_u64(),
             },
@@ -287,6 +305,7 @@ mod tests {
             }
             4 => Frame::GetChunkBatch {
                 dataset_id: rng.next_u64(),
+                generation: rng.next_u64(),
                 grid_bytes: rng.next_u64(),
                 chunks: (0..rng.gen_range(17)).map(|_| rng.next_u64()).collect(),
             },
@@ -363,9 +382,14 @@ mod tests {
     #[test]
     fn get_chunk_payload_size_enforced() {
         let mut body = vec![TAG_GET_CHUNK];
-        body.extend_from_slice(&[0u8; 23]); // one byte short
+        body.extend_from_slice(&[0u8; 31]); // one byte short
         let err = decode(&body).unwrap_err();
-        assert!(format!("{err:#}").contains("24 bytes"), "{err:#}");
+        assert!(format!("{err:#}").contains("32 bytes"), "{err:#}");
+        // A pre-generation 24-byte request is malformed too, not silently
+        // decoded against shifted fields.
+        let mut body = vec![TAG_GET_CHUNK];
+        body.extend_from_slice(&[0u8; 24]);
+        assert!(decode(&body).is_err());
     }
 
     #[test]
@@ -377,7 +401,7 @@ mod tests {
     fn batch_count_cap_enforced_before_allocation() {
         // A hostile batch count past MAX_BATCH is rejected up front.
         let mut body = vec![TAG_GET_CHUNK_BATCH];
-        body.extend_from_slice(&[0u8; 16]);
+        body.extend_from_slice(&[0u8; 24]);
         body.extend_from_slice(&(u32::MAX).to_le_bytes());
         let err = decode(&body).unwrap_err();
         assert!(format!("{err:#}").contains("exceeds cap"), "{err:#}");
@@ -413,7 +437,7 @@ mod tests {
     #[test]
     fn empty_batch_roundtrips() {
         for f in [
-            Frame::GetChunkBatch { dataset_id: 1, grid_bytes: 2, chunks: vec![] },
+            Frame::GetChunkBatch { dataset_id: 1, generation: 1, grid_bytes: 2, chunks: vec![] },
             Frame::ChunkBatchData(vec![]),
             Frame::ChunkBatchData(vec![None, Some(vec![]), None]),
         ] {

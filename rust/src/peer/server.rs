@@ -32,6 +32,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use super::proto::{self, Frame};
+use crate::cache::ResidencySnapshot;
 use crate::posix::realfs::chunk_rel_path;
 use crate::posix::throttle::SharedTokenBucket;
 
@@ -60,6 +61,13 @@ impl Drop for HandlerSlot {
 /// dataset for whole-file (item-granular) serving.
 type ItemPathFn = Arc<dyn Fn(u64) -> PathBuf + Send + Sync>;
 
+/// Source of a dataset's *current* residency snapshot, registered per
+/// dataset so chunk serving consults cache state instead of bare file
+/// presence. A closure (not a captured `Arc<ResidencySnapshot>`) so a
+/// re-placed dataset is picked up without re-registration — the source
+/// typically resolves through the `SharedCache` on every call.
+type ResidencyFn = Arc<dyn Fn() -> Option<Arc<ResidencySnapshot>> + Send + Sync>;
+
 /// A running per-node chunk server.
 pub struct PeerServer {
     /// Bound address (bind to port 0 and read this back for ephemeral
@@ -71,6 +79,7 @@ pub struct PeerServer {
     /// so churn never accumulates file descriptors.
     conns: Arc<Mutex<Vec<(u64, TcpStream)>>>,
     exports: Arc<RwLock<HashMap<u64, ItemPathFn>>>,
+    views: Arc<RwLock<HashMap<u64, ResidencyFn>>>,
 }
 
 impl PeerServer {
@@ -115,7 +124,9 @@ impl PeerServer {
         let conns: Arc<Mutex<Vec<(u64, TcpStream)>>> = Arc::new(Mutex::new(Vec::new()));
         let exports: Arc<RwLock<HashMap<u64, ItemPathFn>>> =
             Arc::new(RwLock::new(HashMap::new()));
-        let (stop2, conns2, exports2) = (stop.clone(), conns.clone(), exports.clone());
+        let views: Arc<RwLock<HashMap<u64, ResidencyFn>>> = Arc::new(RwLock::new(HashMap::new()));
+        let (stop2, conns2, exports2, views2) =
+            (stop.clone(), conns.clone(), exports.clone(), views.clone());
         let active: Arc<AtomicUsize> = Arc::new(AtomicUsize::new(0));
         let join = std::thread::spawn(move || {
             let mut next_id = 0u64;
@@ -145,13 +156,15 @@ impl PeerServer {
                         }
                         let node_dir = node_dir.clone();
                         let exports = exports2.clone();
+                        let views = views2.clone();
                         let bucket = disk_bucket.clone();
                         let stop = stop2.clone();
                         let conns = conns2.clone();
                         std::thread::spawn(move || {
                             let _slot = slot;
                             let mut sock = sock;
-                            serve_conn(&mut sock, &node_dir, &exports, bucket.as_ref(), &stop);
+                            let bucket = bucket.as_ref();
+                            serve_conn(&mut sock, &node_dir, &exports, &views, bucket, &stop);
                             let _ = sock.shutdown(Shutdown::Both);
                             // Prune this connection's registry entry so
                             // churn never accumulates fds.
@@ -171,7 +184,7 @@ impl PeerServer {
                 }
             }
         });
-        Ok(PeerServer { addr: local, stop, join: Some(join), conns, exports })
+        Ok(PeerServer { addr: local, stop, join: Some(join), conns, exports, views })
     }
 
     /// Register an item-path resolver for `dataset_id`, enabling
@@ -184,6 +197,24 @@ impl PeerServer {
         path_of: impl Fn(u64) -> PathBuf + Send + Sync + 'static,
     ) {
         self.exports.write().unwrap().insert(dataset_id, Arc::new(path_of));
+    }
+
+    /// Register a residency-snapshot source for `dataset_id`, making chunk
+    /// serving *snapshot-aware*: a request for an evicted / retired /
+    /// stale-generation / wrong-grid / unmarked chunk answers
+    /// `NotResident` instead of reading whatever file is still on disk,
+    /// and served payload lengths are validated against the grid (a
+    /// truncated file mid-GC answers `Error`, never short bytes). The
+    /// source is re-resolved per request (returning `None` while the
+    /// dataset is unplaced), so evict → re-place cycles need no
+    /// re-registration. Without a registration, chunk serving keeps the
+    /// file-presence behaviour with heuristic length checks only.
+    pub fn register_residency(
+        &self,
+        dataset_id: u64,
+        source: impl Fn() -> Option<Arc<ResidencySnapshot>> + Send + Sync + 'static,
+    ) {
+        self.views.write().unwrap().insert(dataset_id, Arc::new(source));
     }
 
     /// Graceful shutdown: stop accepting, then sever live connections.
@@ -220,18 +251,60 @@ enum ChunkRead {
 
 /// Resolve and read one addressed payload off `node_dir`, charging
 /// `bucket` for served bytes (the node's simulated NVMe).
+///
+/// Chunk requests (`grid_bytes > 0`) are gated by the dataset's registered
+/// residency view when one exists: an evicted/retired snapshot, a stale
+/// generation, a mismatched grid or an unmarked chunk all answer
+/// `NotResident` — file presence alone never serves. With a view the
+/// payload length is validated **exactly** against the grid's
+/// (tail-aware) chunk range; without one, only impossible lengths (empty,
+/// or larger than the grid) are rejected. Item requests (`grid_bytes ==
+/// 0`) resolve through the item export and are not length-validated (item
+/// sizes are not derivable from the wire address).
 fn read_chunk_payload(
     node_dir: &Path,
     exports: &RwLock<HashMap<u64, ItemPathFn>>,
+    views: &RwLock<HashMap<u64, ResidencyFn>>,
     bucket: Option<&SharedTokenBucket>,
     dataset_id: u64,
+    generation: u64,
     grid_bytes: u64,
     chunk: u64,
 ) -> ChunkRead {
-    let rel = if grid_bytes > 0 {
-        Some(chunk_rel_path(dataset_id, grid_bytes, chunk))
+    let (rel, expect_len) = if grid_bytes > 0 {
+        let view = views.read().unwrap().get(&dataset_id).cloned();
+        let expect_len = match view {
+            Some(source) => {
+                let Some(snap) = source() else {
+                    // Not currently placed (evicted and not re-placed).
+                    return ChunkRead::NotResident;
+                };
+                if snap.retired() {
+                    return ChunkRead::NotResident;
+                }
+                let geom = snap.geometry();
+                if geom.generation != generation || geom.chunk_bytes() != grid_bytes {
+                    // A stale-generation or stale-grid address can only
+                    // match leftover pre-evict files — refuse it.
+                    return ChunkRead::NotResident;
+                }
+                if chunk >= geom.num_chunks() {
+                    return ChunkRead::Fail(format!(
+                        "chunk {chunk} out of range for dataset {dataset_id} ({} chunks)",
+                        geom.num_chunks()
+                    ));
+                }
+                if !snap.contains(chunk) {
+                    return ChunkRead::NotResident;
+                }
+                let (cs, ce) = geom.chunk_range(chunk);
+                Some(ce - cs)
+            }
+            None => None,
+        };
+        (Some(chunk_rel_path(dataset_id, generation, grid_bytes, chunk)), expect_len)
     } else {
-        exports.read().unwrap().get(&dataset_id).map(|f| f(chunk))
+        (exports.read().unwrap().get(&dataset_id).map(|f| f(chunk)), None)
     };
     match rel {
         None => ChunkRead::Fail(format!("dataset {dataset_id} has no item export on this node")),
@@ -244,6 +317,24 @@ fn read_chunk_payload(
                 proto::MAX_FRAME
             )),
             Ok(bytes) => {
+                if let Some(want) = expect_len {
+                    if bytes.len() as u64 != want {
+                        // A truncated (or oversized) chunk file — e.g. one
+                        // caught mid-GC — must never reach a reader as
+                        // short "successful" bytes.
+                        return ChunkRead::Fail(format!(
+                            "chunk {chunk} of dataset {dataset_id} is {} bytes on disk, grid says {want}",
+                            bytes.len()
+                        ));
+                    }
+                } else if grid_bytes > 0 && (bytes.is_empty() || bytes.len() as u64 > grid_bytes) {
+                    // No residency view: still reject lengths the grid
+                    // cannot produce (every chunk is 1..=grid_bytes long).
+                    return ChunkRead::Fail(format!(
+                        "chunk {chunk} of dataset {dataset_id} is {} bytes on disk, grid caps it at {grid_bytes}",
+                        bytes.len()
+                    ));
+                }
                 if let Some(b) = bucket {
                     b.acquire(bytes.len() as u64);
                 }
@@ -261,6 +352,7 @@ fn serve_conn(
     sock: &mut TcpStream,
     node_dir: &Path,
     exports: &RwLock<HashMap<u64, ItemPathFn>>,
+    views: &RwLock<HashMap<u64, ResidencyFn>>,
     bucket: Option<&SharedTokenBucket>,
     stop: &AtomicBool,
 ) {
@@ -273,15 +365,16 @@ fn serve_conn(
             Ok(None) | Err(_) => return,
         };
         let resp = match frame {
-            Frame::GetChunk { dataset_id, chunk, grid_bytes } => {
-                match read_chunk_payload(node_dir, exports, bucket, dataset_id, grid_bytes, chunk)
-                {
+            Frame::GetChunk { dataset_id, generation, chunk, grid_bytes } => {
+                match read_chunk_payload(
+                    node_dir, exports, views, bucket, dataset_id, generation, grid_bytes, chunk,
+                ) {
                     ChunkRead::Data(bytes) => Frame::ChunkData(bytes),
                     ChunkRead::NotResident => Frame::NotResident,
                     ChunkRead::Fail(msg) => Frame::Error(msg),
                 }
             }
-            Frame::GetChunkBatch { dataset_id, grid_bytes, chunks } => {
+            Frame::GetChunkBatch { dataset_id, generation, grid_bytes, chunks } => {
                 // One response frame for the whole batch. Any per-chunk
                 // I/O failure (or a combined payload the codec cannot
                 // frame) fails the batch as a request-level Error — the
@@ -292,8 +385,9 @@ fn serve_conn(
                 let mut body = 5 + 9 * chunks.len();
                 let mut failed = None;
                 for &c in &chunks {
-                    match read_chunk_payload(node_dir, exports, bucket, dataset_id, grid_bytes, c)
-                    {
+                    match read_chunk_payload(
+                        node_dir, exports, views, bucket, dataset_id, generation, grid_bytes, c,
+                    ) {
                         ChunkRead::Data(bytes) => {
                             body += bytes.len();
                             if body >= proto::MAX_FRAME {

@@ -28,7 +28,7 @@
 //! a shim that owns a private plane with one session.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -39,8 +39,8 @@ use super::reader_pool::{
     prefetch_chunks, prefetch_items, read_item_concurrent_fast, read_item_range_chunked_fast,
     EpochReport, FillTable,
 };
-use super::realfs::{ReadStats, RealCluster};
-use crate::cache::{ChunkGeometry, ResidencySnapshot, SharedCache};
+use super::realfs::{gc_dataset_chunks, ReadStats, RealCluster};
+use crate::cache::{CacheEvent, ChunkGeometry, ResidencySnapshot, SharedCache};
 use crate::netsim::NodeId;
 use crate::peer::{ChunkTransport, DirTransport};
 use crate::util::Rng;
@@ -155,6 +155,11 @@ struct Ledger {
     /// mismatched `cfg` or a stale grid errors instead of indexing out
     /// of bounds.
     slots: u64,
+    /// Poisoned by [`DataPlane::reset_dataset`] (evict / re-place / node
+    /// failure): sessions still holding this ledger refuse further reads
+    /// instead of trusting its Done slots — the files those slots vouch
+    /// for may be gone or belong to a dead placement generation.
+    reset: AtomicBool,
 }
 
 #[derive(Debug)]
@@ -178,6 +183,15 @@ impl LedgerMode {
 /// capacity.
 const PLANE_BUFS: usize = 32;
 const PLANE_BUF_BYTES: usize = 64 << 20;
+
+/// What [`DataPlane::place_dataset`] did beyond the placement itself:
+/// which datasets the admission policy evicted to make room, and how many
+/// on-disk chunk-tree bytes their GC freed across the cluster.
+#[derive(Debug, Clone, Default)]
+pub struct PlacementOutcome {
+    pub evicted: Vec<String>,
+    pub reclaimed_bytes: u64,
+}
 
 /// One shared per-node-fleet data plane: the `Arc`-owned object under
 /// every co-located job. See the module docs for the ownership model.
@@ -249,11 +263,89 @@ impl DataPlane {
             .unwrap_or(0)
     }
 
-    /// Drop `dataset`'s fill ledger (e.g. after evict + re-place changed
-    /// the chunk grid); the next session opened on it starts a fresh one.
-    /// Sessions already holding the old ledger keep their consistent view.
+    /// Invalidate `dataset`'s data-plane state after evict, re-place or
+    /// node failure: retire the published residency snapshot (fast-lane
+    /// readers fall back to the locked lane and see the placement gone),
+    /// poison the fill ledger so sessions still holding it fail loudly
+    /// with a "reset" error instead of serving stale bytes, and drop the
+    /// ledger so the next session opened on the dataset starts fresh.
     pub fn reset_dataset(&self, dataset: &str) {
-        self.ledgers.lock().unwrap().remove(dataset);
+        if let Ok(snap) = self.cache.snapshot(dataset) {
+            snap.retire();
+        }
+        if let Some(l) = self.ledgers.lock().unwrap().remove(dataset) {
+            l.reset.store(true, Ordering::Release);
+        }
+    }
+
+    /// Evict `dataset` end to end: retire its placement in the cache
+    /// manager (pin-checked), invalidate open sessions
+    /// ([`DataPlane::reset_dataset`]) and delete its on-disk chunk trees
+    /// on every node. Returns the bytes reclaimed from disk. The
+    /// registration survives — re-[`place`](CacheManager::place) starts a
+    /// fresh generation.
+    ///
+    /// [`CacheManager::place`]: crate::cache::CacheManager::place
+    pub fn evict_dataset(&self, dataset: &str) -> Result<u64> {
+        let id = self.cache.dataset_id(dataset)?;
+        self.cache.with_mut(|m| m.evict(dataset))?;
+        self.reset_dataset(dataset);
+        Ok(gc_dataset_chunks(&self.cluster, id, None))
+    }
+
+    /// Delete `dataset` entirely: evict (pin-checked), invalidate open
+    /// sessions, remove the registration, and delete its on-disk chunk
+    /// trees. Returns the bytes reclaimed from disk.
+    pub fn delete_dataset(&self, dataset: &str) -> Result<u64> {
+        let id = self.cache.dataset_id(dataset)?;
+        self.cache.with_mut(|m| m.delete(dataset))?;
+        self.reset_dataset(dataset);
+        Ok(gc_dataset_chunks(&self.cluster, id, None))
+    }
+
+    /// Place `dataset` on `nodes` with the eviction lifecycle wired
+    /// through: when admission has to evict victims first (the LRU
+    /// policy under capacity pressure), every victim is also reset on
+    /// this plane and its chunk trees are deleted from disk. Returns who
+    /// was evicted and how many bytes their trees freed.
+    pub fn place_dataset(&self, dataset: &str, nodes: Vec<NodeId>) -> Result<PlacementOutcome> {
+        let evicted = self
+            .cache
+            .with_mut(|m| -> Result<Vec<String>, crate::cache::CacheError> {
+                let before = m.events.len();
+                m.place(dataset, nodes)?;
+                Ok(m.events[before..]
+                    .iter()
+                    .filter_map(|e| match e {
+                        CacheEvent::Evicted(n) => Some(n.clone()),
+                        _ => None,
+                    })
+                    .collect())
+            })?;
+        let mut reclaimed_bytes = 0;
+        for victim in &evicted {
+            // Evict keeps the registration, so the victim's ID is still
+            // resolvable here.
+            let id = self.cache.dataset_id(victim)?;
+            self.reset_dataset(victim);
+            reclaimed_bytes += gc_dataset_chunks(&self.cluster, id, None);
+        }
+        Ok(PlacementOutcome { evicted, reclaimed_bytes })
+    }
+
+    /// Mark node `n` failed in the cache manager and run the invalidation
+    /// for every dataset striped on it (their placements are lost —
+    /// striping without replication). Returns the affected dataset names
+    /// and the disk bytes their chunk trees freed cluster-wide.
+    pub fn fail_node(&self, n: NodeId) -> Result<(Vec<String>, u64)> {
+        let affected = self.cache.with_mut(|m| m.fail_node(n));
+        let mut reclaimed = 0;
+        for name in &affected {
+            let id = self.cache.dataset_id(name)?;
+            self.reset_dataset(name);
+            reclaimed += gc_dataset_chunks(&self.cluster, id, None);
+        }
+        Ok((affected, reclaimed))
     }
 
     fn ledger(
@@ -294,6 +386,7 @@ impl DataPlane {
                 fill: FillTable::new(cfg.num_items),
                 mode: LedgerMode::WholeFile,
                 slots: cfg.num_items,
+                reset: AtomicBool::new(false),
             }),
             Granularity::Chunked => {
                 let geom = self.cache.geometry(dataset)?;
@@ -302,6 +395,7 @@ impl DataPlane {
                     fill: FillTable::new(slots),
                     mode: LedgerMode::Chunked(geom),
                     slots,
+                    reset: AtomicBool::new(false),
                 })
             }
         };
@@ -492,6 +586,19 @@ impl JobSession {
         self.read_inner(req, reader, snap, stats)
     }
 
+    /// Refuse to serve through a ledger [`DataPlane::reset_dataset`] has
+    /// poisoned: its Done slots vouch for files that may be deleted or
+    /// belong to a dead placement generation.
+    fn check_reset(&self) -> Result<()> {
+        if self.ledger.reset.load(Ordering::Acquire) {
+            bail!(
+                "dataset '{}' was reset (evicted or re-placed); reopen the job session",
+                self.dataset
+            );
+        }
+        Ok(())
+    }
+
     fn read_inner(
         &self,
         req: &ReadRequest,
@@ -499,6 +606,7 @@ impl JobSession {
         snap: Option<&ResidencySnapshot>,
         stats: &mut ReadStats,
     ) -> Result<Vec<u8>> {
+        self.check_reset()?;
         if let Some(want) = req.mode {
             let have = self.ledger.mode.granularity();
             if want != have {
@@ -591,6 +699,7 @@ impl JobSession {
     /// into the cluster-wide accumulator (so `take_stats()` keeps the
     /// full picture) *and* this job's own accumulator.
     pub fn run_epoch_order(&self, order: &[u64]) -> Result<EpochReport> {
+        self.check_reset()?;
         let t0 = Instant::now();
         let run_prefetcher = self.prefetch && !self.plane.cache.is_cached(&self.dataset);
         // One shared-lock acquisition per epoch: every reader thread then
@@ -653,6 +762,7 @@ impl JobSession {
                 let transport = self.effective_transport();
                 let dataset_id = plane.cache.dataset_id(&self.dataset)?;
                 for &i in items {
+                    self.check_reset()?;
                     read_item_concurrent_fast(
                         &plane.cluster,
                         &plane.cache,
@@ -790,6 +900,55 @@ mod tests {
         // reset_dataset drops the ledger: a fresh session starts clean.
         plane.reset_dataset("d");
         assert_eq!(plane.dataset_fills("d"), 0);
+        std::fs::remove_dir_all(&cluster.root).unwrap();
+    }
+
+    #[test]
+    fn reset_dataset_poisons_open_sessions_and_retires_snapshot() {
+        let (cluster, cache, cfg) = fixture("reset", 8, 1000);
+        let plane = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+        let sess = plane.open_job(JobSpec::new("d", cfg.clone())).unwrap();
+        sess.read(&ReadRequest::item(0), NodeId(0)).unwrap();
+        let snap = cache.snapshot("d").unwrap();
+        plane.reset_dataset("d");
+        assert!(snap.retired(), "reset must retire the published snapshot");
+        let err = sess.read(&ReadRequest::item(1), NodeId(0)).unwrap_err();
+        assert!(err.to_string().contains("reset"), "got: {err}");
+        assert!(sess.run_epoch(0).is_err(), "epoch driver must refuse a reset session");
+        // A fresh session on the same plane starts a clean ledger and can
+        // read again (locked-lane fallback: the placement still stands).
+        let fresh = plane.open_job(JobSpec::new("d", cfg.clone())).unwrap();
+        let (_, want) = datagen::make_record(&cfg, 0);
+        assert_eq!(fresh.read(&ReadRequest::item(0), NodeId(0)).unwrap(), want);
+        std::fs::remove_dir_all(&cluster.root).unwrap();
+    }
+
+    #[test]
+    fn evict_dataset_gcs_chunk_trees_and_reports_bytes() {
+        use crate::posix::realfs::dataset_chunk_dir;
+        let (cluster, cache, cfg) = fixture("evgc", 8, 1000);
+        let plane = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+        let sess = plane.open_job(JobSpec::new("d", cfg.clone())).unwrap();
+        sess.run_epoch(0).unwrap(); // cold epoch fills every chunk
+        let id = cache.dataset_id("d").unwrap();
+        let reclaimed = plane.evict_dataset("d").unwrap();
+        assert!(reclaimed > 0, "a filled cache must reclaim on-disk bytes");
+        for nd in &cluster.node_dirs {
+            assert!(
+                !nd.join(dataset_chunk_dir(id)).exists(),
+                "chunk tree must be gone from every node dir"
+            );
+        }
+        // Idempotent: an already-evicted dataset reclaims nothing more.
+        assert_eq!(plane.evict_dataset("d").unwrap(), 0);
+        // The session that filled the cache is dead; a re-place revives
+        // the dataset under a new generation for fresh sessions.
+        assert!(sess.read(&ReadRequest::item(0), NodeId(0)).is_err());
+        plane.place_dataset("d", (0..4).map(NodeId).collect()).unwrap();
+        assert_eq!(cache.geometry("d").unwrap().generation, 2);
+        let fresh = plane.open_job(JobSpec::new("d", cfg.clone())).unwrap();
+        let (_, want) = datagen::make_record(&cfg, 3);
+        assert_eq!(fresh.read(&ReadRequest::item(3), NodeId(1)).unwrap(), want);
         std::fs::remove_dir_all(&cluster.root).unwrap();
     }
 }

@@ -678,7 +678,7 @@ pub fn read_item_range_chunked_fast(
                 }
             }
             Claim::Resident => {
-                let crel = chunk_rel_path(geom.dataset_id, geom.chunk_bytes(), c);
+                let crel = chunk_rel_path(geom.dataset_id, geom.generation, geom.chunk_bytes(), c);
                 let dst = &mut out[pos..pos + len as usize];
                 if cluster.node_has(home, &crel) {
                     cluster.read_node_range_into_sharded(home, &crel, off, reader, dst, stats)?;
@@ -691,7 +691,7 @@ pub fn read_item_range_chunked_fast(
                 }
             }
             Claim::Filler => {
-                let crel = chunk_rel_path(geom.dataset_id, geom.chunk_bytes(), c);
+                let crel = chunk_rel_path(geom.dataset_id, geom.generation, geom.chunk_bytes(), c);
                 let dst = &mut out[pos..pos + len as usize];
                 // Adoption probe: the chunk may predate this pool (warm
                 // run over existing cache dirs). `Ok(false)` ⇔ the home
@@ -805,7 +805,8 @@ pub(crate) fn prefetch_chunks(
             continue;
         }
         let home = geom.node_of_chunk(c);
-        if cluster.node_has(home, &chunk_rel_path(geom.dataset_id, geom.chunk_bytes(), c)) {
+        let crel = chunk_rel_path(geom.dataset_id, geom.generation, geom.chunk_bytes(), c);
+        if cluster.node_has(home, &crel) {
             fill.mark_resident(c);
             cache.mark_chunks(dataset, &[c])?;
             continue;

@@ -50,17 +50,83 @@ use crate::remote::{RemoteReaderGauge, RemoteStore};
 use crate::workload::datagen::DataGenConfig;
 
 /// On-node path of chunk `c`'s payload for dataset `dataset_id` under the
-/// `chunk_bytes` grid. Chunk-granular striping stores one file per chunk,
-/// so presence-on-disk stays authoritative per chunk exactly like per-item
-/// files are in whole-file mode. The grid's chunk size is part of the
-/// path: a dataset re-placed with a different `chunk_bytes` misses cleanly
-/// instead of adopting stale chunk files whose byte ranges no longer line
-/// up. The dataset ID is part of the path too — it is the peer protocol's
-/// wire address (`GetChunk { dataset_id, chunk, grid_bytes }` resolves to
+/// `chunk_bytes` grid of placement `generation`. Chunk-granular striping
+/// stores one file per chunk, so presence-on-disk stays authoritative per
+/// chunk exactly like per-item files are in whole-file mode. The grid's
+/// chunk size is part of the path: a dataset re-placed with a different
+/// `chunk_bytes` misses cleanly instead of adopting stale chunk files
+/// whose byte ranges no longer line up. The dataset ID is part of the path
+/// too — it is the peer protocol's wire address
+/// (`GetChunk { dataset_id, generation, chunk, grid_bytes }` resolves to
 /// exactly this path on the serving node), and it keeps two datasets that
-/// share a grid from adopting each other's chunks.
-pub fn chunk_rel_path(dataset_id: u64, chunk_bytes: u64, c: u64) -> PathBuf {
-    PathBuf::from(format!("chunks/d{dataset_id:04}/b{chunk_bytes}/c{c:07}.bin"))
+/// share a grid from adopting each other's chunks. The placement
+/// generation sits above the grid: files written under an evicted
+/// placement live in a different `g<N>` tree, so a same-grid re-place can
+/// never adopt pre-evict bytes, and the GC reclaims whole generations
+/// ([`gc_dataset_chunks`]).
+pub fn chunk_rel_path(dataset_id: u64, generation: u64, chunk_bytes: u64, c: u64) -> PathBuf {
+    PathBuf::from(format!("chunks/d{dataset_id:04}/g{generation}/b{chunk_bytes}/c{c:07}.bin"))
+}
+
+/// Per-dataset chunk tree on a node: everything GC removes when the
+/// dataset is evicted (all generations, all grids).
+pub fn dataset_chunk_dir(dataset_id: u64) -> PathBuf {
+    PathBuf::from(format!("chunks/d{dataset_id:04}"))
+}
+
+/// Recursively sum file sizes under `dir` (0 if it does not exist).
+fn tree_bytes(dir: &Path) -> u64 {
+    let Ok(entries) = fs::read_dir(dir) else { return 0 };
+    let mut total = 0;
+    for e in entries.flatten() {
+        let p = e.path();
+        if p.is_dir() {
+            total += tree_bytes(&p);
+        } else if let Ok(md) = e.metadata() {
+            total += md.len();
+        }
+    }
+    total
+}
+
+/// On-disk chunk GC: delete dataset `dataset_id`'s chunk trees from every
+/// node directory, returning the bytes reclaimed. With
+/// `keep_generation: None` the whole `chunks/d<id>/` tree goes (evict /
+/// delete / node-failure cleanup); with `Some(g)` every generation
+/// directory **except** `g<g>` goes (post-re-place GC of retired
+/// generations). Missing trees are fine — GC is idempotent and best-effort
+/// (a file vanishing mid-walk is already reclaimed).
+pub fn gc_dataset_chunks(
+    cluster: &RealCluster,
+    dataset_id: u64,
+    keep_generation: Option<u64>,
+) -> u64 {
+    let mut reclaimed = 0u64;
+    for nd in &cluster.node_dirs {
+        let droot = nd.join(dataset_chunk_dir(dataset_id));
+        match keep_generation {
+            None => {
+                let bytes = tree_bytes(&droot);
+                if fs::remove_dir_all(&droot).is_ok() {
+                    reclaimed += bytes;
+                }
+            }
+            Some(keep) => {
+                let keep_name = format!("g{keep}");
+                let Ok(entries) = fs::read_dir(&droot) else { continue };
+                for e in entries.flatten() {
+                    let p = e.path();
+                    if p.is_dir() && e.file_name() != *keep_name.as_str() {
+                        let bytes = tree_bytes(&p);
+                        if fs::remove_dir_all(&p).is_ok() {
+                            reclaimed += bytes;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    reclaimed
 }
 
 /// Fetch chunk `c`'s payload from the remote store — one ranged read per
@@ -114,7 +180,7 @@ pub fn fetch_chunk_payload_into(
     }
     cluster.write_node(
         geom.node_of_chunk(c),
-        &chunk_rel_path(geom.dataset_id, geom.chunk_bytes(), c),
+        &chunk_rel_path(geom.dataset_id, geom.generation, geom.chunk_bytes(), c),
         buf,
     )?;
     Ok(())
@@ -609,7 +675,8 @@ impl Mount for ChunkedMount<'_> {
         let chunks: Vec<u64> = self.geom.chunks_of_item(i).collect();
         debug_assert_eq!(chunks.len(), plan.segments.len());
         for (c, (seg, loc)) in chunks.into_iter().zip(plan.segments) {
-            let crel = chunk_rel_path(self.geom.dataset_id, self.geom.chunk_bytes(), c);
+            let g = &self.geom;
+            let crel = chunk_rel_path(g.dataset_id, g.generation, g.chunk_bytes(), c);
             let home = self.geom.node_of_chunk(c);
             let (cs, _) = self.geom.chunk_range(c);
             let off = s + seg.start - cs; // segment offset within the chunk

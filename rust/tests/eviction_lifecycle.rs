@@ -1,0 +1,322 @@
+//! Integration tests for the end-to-end eviction lifecycle: snapshot-aware
+//! peer serving (an evicted dataset answers `NotResident` even while its
+//! files are still on disk), placement-generation gating of stale chunk
+//! addresses, on-disk chunk-tree GC with real reclaimed-byte accounting,
+//! session poisoning on reset, LRU admission under cache pressure with pin
+//! protection, and truncated-file detection at the wire.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use hoard::cache::{CacheManager, EvictionPolicy, SharedCache};
+use hoard::netsim::NodeId;
+use hoard::peer::{PeerClient, PeerServer, SocketTransport};
+use hoard::posix::dataplane::{DataPlane, JobSpec, ReadRequest};
+use hoard::posix::realfs::{chunk_rel_path, dataset_chunk_dir, RealCluster};
+use hoard::storage::{Device, DeviceKind, Volume};
+use hoard::workload::datagen::{self, DataGenConfig};
+use hoard::workload::DatasetSpec;
+
+const NODES: usize = 4;
+const CHUNK: u64 = 1000;
+
+/// One dataset "d" striped over 4 nodes with generous capacity, chunked at
+/// [`CHUNK`] bytes, plus the plane that owns its sessions.
+fn fixture(tag: &str, items: u64) -> (RealCluster, SharedCache, DataGenConfig, Arc<DataPlane>) {
+    let root = std::env::temp_dir().join(format!("hoard-evlc-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let cluster = RealCluster::create(&root, NODES, 500e6).unwrap();
+    let cfg = DataGenConfig { num_items: items, files_per_dir: 32, ..Default::default() };
+    let total = datagen::generate(&cluster.remote_dir, &cfg).unwrap();
+    let vols = (0..NODES)
+        .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 30)]))
+        .collect();
+    let mut manager = CacheManager::new(vols, EvictionPolicy::Manual);
+    manager.chunk_bytes = CHUNK;
+    manager.register(DatasetSpec::new("d", items, total), "nfs://r/d".into()).unwrap();
+    let cache = SharedCache::new(manager);
+    let plane = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+    plane.place_dataset("d", (0..NODES).map(NodeId).collect()).unwrap();
+    (cluster, cache, cfg, plane)
+}
+
+fn start_servers(cluster: &RealCluster) -> Vec<PeerServer> {
+    (0..NODES)
+        .map(|n| {
+            PeerServer::start_with(
+                "127.0.0.1:0",
+                cluster.node_dirs[n].clone(),
+                Some(cluster.node_bw[n].clone()),
+                Duration::from_secs(5),
+            )
+            .unwrap()
+        })
+        .collect()
+}
+
+/// Register each server's residency view for "d": resolved through the
+/// `SharedCache` per request, so evict → re-place needs no re-registration.
+fn register_views(servers: &[PeerServer], cache: &SharedCache, dataset_id: u64) {
+    for srv in servers {
+        let cache = cache.clone();
+        srv.register_residency(dataset_id, move || cache.snapshot("d").ok());
+    }
+}
+
+fn socket_transport(servers: &[PeerServer]) -> SocketTransport {
+    SocketTransport::new(PeerClient::connect(servers.iter().map(|s| s.addr).collect()))
+}
+
+/// The tentpole bugfix: after an eviction the peer servers must answer
+/// `NotResident` for every chunk *even though the chunk files are still on
+/// disk* (no GC here), stale-generation addresses stay refused after a
+/// re-place, and a fresh epoch refills from the remote store with
+/// byte-correct payloads — never the leftover (here: deliberately
+/// corrupted) files of the dead placement.
+#[test]
+fn evicted_dataset_answers_not_resident_despite_files_on_disk() {
+    let (cluster, cache, cfg, plane) = fixture("gate", 8);
+    let sess = plane.open_job(JobSpec::new("d", cfg.clone()).readers(2).seed(7)).unwrap();
+    sess.run_epoch(0).unwrap();
+
+    let servers = start_servers(&cluster);
+    let did = cache.dataset_id("d").unwrap();
+    register_views(&servers, &cache, did);
+    let client = PeerClient::connect(servers.iter().map(|s| s.addr).collect());
+
+    // Warm probe through the registered view: generation-1 chunk 0 serves
+    // exactly the bytes on its home node's disk.
+    let geom = cache.geometry("d").unwrap();
+    assert_eq!(geom.generation, 1);
+    let home = geom.node_of_chunk(0);
+    let rel = chunk_rel_path(did, 1, CHUNK, 0);
+    let on_disk = std::fs::read(cluster.node_dirs[home.0].join(&rel)).unwrap();
+    assert_eq!(client.get_chunk(home, did, 1, CHUNK, 0).unwrap(), Some(on_disk.clone()));
+
+    // Evict WITHOUT GC: registry/state eviction only, files left behind.
+    cache.with_mut(|m| m.evict("d")).unwrap();
+    plane.reset_dataset("d");
+    assert!(cluster.node_has(home, &rel), "this test needs the files to survive eviction");
+    assert_eq!(
+        client.get_chunk(home, did, 1, CHUNK, 0).unwrap(),
+        None,
+        "evicted dataset must answer NotResident, not the leftover file"
+    );
+    let batch = client.get_chunk_batch(home, did, 1, CHUNK, &[0]).unwrap();
+    assert_eq!(batch, vec![None], "batched requests must be gated identically");
+
+    // Corrupt the dead placement's files: if any stale byte ever reached a
+    // reader after the re-place below, payload checks would catch it.
+    for c in 0..geom.num_chunks() {
+        let rel = chunk_rel_path(did, 1, CHUNK, c);
+        let node = geom.node_of_chunk(c);
+        let len = std::fs::metadata(cluster.node_dirs[node.0].join(&rel)).unwrap().len();
+        std::fs::write(cluster.node_dirs[node.0].join(&rel), vec![0xAAu8; len as usize]).unwrap();
+    }
+
+    // Re-place: the generation bumps, so generation-1 addresses can only
+    // name the dead files — the view must keep refusing them.
+    plane.place_dataset("d", (0..NODES).map(NodeId).collect()).unwrap();
+    assert_eq!(cache.geometry("d").unwrap().generation, 2);
+    assert_eq!(
+        client.get_chunk(home, did, 1, CHUNK, 0).unwrap(),
+        None,
+        "stale-generation address served after re-place"
+    );
+
+    // A fresh epoch over sockets refills generation 2 from the remote
+    // store; every item must match the generator, never the 0xAA garbage.
+    let sess2 = plane
+        .open_job(JobSpec::new("d", cfg.clone()).readers(2).seed(8))
+        .unwrap()
+        .with_transport(Box::new(socket_transport(&servers)));
+    let report = sess2.run_epoch(0).unwrap();
+    assert!(report.merged.remote_bytes > 0, "re-placed dataset must refill from remote");
+    for i in 0..cfg.num_items {
+        let data = sess2.read(&ReadRequest::item(i), NodeId(i as usize % NODES)).unwrap();
+        let (_, want) = datagen::make_record(&cfg, i);
+        assert_eq!(data, want, "item {i} served stale or corrupt bytes");
+    }
+    drop(servers);
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
+
+/// The issue's acceptance scenario: evict mid-training with live peer
+/// servers. The open session is poisoned (reads fail with a "reset" error
+/// instead of returning dead bytes), the chunk trees are GC'd off every
+/// node with reclaimed bytes reported, and a reopened session re-plans:
+/// `NotResident` from the peers, refill from remote, byte-correct epoch.
+#[test]
+fn evict_mid_epoch_poisons_session_gcs_disk_and_refills() {
+    let (cluster, cache, cfg, plane) = fixture("midepoch", 8);
+    let servers = start_servers(&cluster);
+    let did = cache.dataset_id("d").unwrap();
+    register_views(&servers, &cache, did);
+
+    let sess = plane
+        .open_job(JobSpec::new("d", cfg.clone()).readers(2).seed(11))
+        .unwrap()
+        .with_transport(Box::new(socket_transport(&servers)));
+    sess.run_epoch(0).unwrap();
+    let (_, want0) = datagen::make_record(&cfg, 0);
+    assert_eq!(sess.read(&ReadRequest::item(0), NodeId(0)).unwrap(), want0);
+
+    // Mid-epoch eviction: full lifecycle (retire snapshot, poison ledger,
+    // delete chunk trees) through the plane.
+    let reclaimed = plane.evict_dataset("d").unwrap();
+    assert!(reclaimed > 0, "eviction must reclaim real on-disk bytes");
+    for nd in &cluster.node_dirs {
+        assert!(!nd.join(dataset_chunk_dir(did)).exists(), "chunk tree survived GC in {nd:?}");
+    }
+
+    // The live session must refuse, not serve dead bytes.
+    let err = sess.read(&ReadRequest::item(0), NodeId(0)).unwrap_err();
+    assert!(err.to_string().contains("reset"), "unexpected poison error: {err:#}");
+    assert!(sess.run_epoch(1).is_err(), "poisoned session ran an epoch");
+
+    // Re-place and reopen: readers re-plan via NotResident → remote fill.
+    plane.place_dataset("d", (0..NODES).map(NodeId).collect()).unwrap();
+    let sess2 = plane
+        .open_job(JobSpec::new("d", cfg.clone()).readers(2).seed(12))
+        .unwrap()
+        .with_transport(Box::new(socket_transport(&servers)));
+    let report = sess2.run_epoch(0).unwrap();
+    assert!(report.merged.remote_bytes > 0, "refill must come from the remote store");
+    for i in 0..cfg.num_items {
+        let data = sess2.read(&ReadRequest::item(i), NodeId(0)).unwrap();
+        let (_, want) = datagen::make_record(&cfg, i);
+        assert_eq!(data, want, "item {i} wrong after evict/re-place");
+    }
+    // The old session stays dead even after the re-place (its ledger
+    // belongs to the dead generation).
+    assert!(sess.read(&ReadRequest::item(0), NodeId(0)).is_err());
+    drop(servers);
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
+
+/// Cache pressure with `DatasetLru`: three equally sized datasets through
+/// a cache that holds two. The pinned priority dataset is untouchable; the
+/// over-capacity placement evicts the LRU unpinned dataset end to end
+/// (snapshot retired, chunk tree GC'd, bytes reported) and the admitted
+/// dataset trains correctly.
+#[test]
+fn cache_pressure_evicts_lru_victim_and_honors_pins() {
+    let root = std::env::temp_dir().join(format!("hoard-evlc-lru-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let cluster = RealCluster::create(&root, NODES, 500e6).unwrap();
+    let cfg = DataGenConfig { num_items: 8, files_per_dir: 32, ..Default::default() };
+    let total = datagen::generate(&cluster.remote_dir, &cfg).unwrap();
+    // Fits exactly two striped datasets; the third placement must evict.
+    let cap = 2 * total.div_ceil(NODES as u64) + CHUNK;
+    let vols =
+        (0..NODES).map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, cap)])).collect();
+    let mut manager = CacheManager::new(vols, EvictionPolicy::DatasetLru);
+    manager.chunk_bytes = CHUNK;
+    for j in 0..3 {
+        manager
+            .register(DatasetSpec::new(format!("d{j}"), 8, total), format!("nfs://r/d{j}"))
+            .unwrap();
+    }
+    let cache = SharedCache::new(manager);
+    let plane = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+
+    // d0 is the pinned priority job; d0 and d1 fill the cache on disk.
+    for name in ["d0", "d1"] {
+        let out = plane.place_dataset(name, (0..NODES).map(NodeId).collect()).unwrap();
+        assert!(out.evicted.is_empty(), "{name} placed without pressure");
+        let sess = plane.open_job(JobSpec::new(name, cfg.clone()).readers(2)).unwrap();
+        sess.run_epoch(0).unwrap();
+    }
+    cache.with_mut(|m| m.registry.pin("d0")).unwrap();
+
+    // Pressure: d2 must evict d1 (d0 is pinned) and reclaim its tree.
+    let out = plane.place_dataset("d2", (0..NODES).map(NodeId).collect()).unwrap();
+    assert_eq!(out.evicted, vec!["d1".to_string()], "LRU victim must be the unpinned d1");
+    assert!(out.reclaimed_bytes > 0, "victim GC must reclaim on-disk bytes");
+    let (id0, id1) = (cache.dataset_id("d0").unwrap(), cache.dataset_id("d1").unwrap());
+    for nd in &cluster.node_dirs {
+        assert!(!nd.join(dataset_chunk_dir(id1)).exists(), "victim tree survived in {nd:?}");
+    }
+    assert!(
+        cluster.node_dirs.iter().any(|nd| nd.join(dataset_chunk_dir(id0)).exists()),
+        "pinned dataset's chunk tree must survive the pressure"
+    );
+    assert_eq!(cache.with(|m| m.registry.iter().filter(|r| r.stripe.is_some()).count()), 2);
+
+    // The pin is load-bearing: a direct evict of d0 is refused.
+    assert!(cache.with_mut(|m| m.evict("d0")).is_err(), "pinned dataset evicted");
+
+    // The admitted dataset trains byte-correct over the freed space.
+    let sess = plane.open_job(JobSpec::new("d2", cfg.clone()).readers(2)).unwrap();
+    sess.run_epoch(0).unwrap();
+    let (_, want) = datagen::make_record(&cfg, 3);
+    assert_eq!(sess.read(&ReadRequest::item(3), NodeId(1)).unwrap(), want);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Under the `Manual` policy the same pressure is a hard error — nothing
+/// is evicted behind the operator's back, and the resident dataset keeps
+/// its placement.
+#[test]
+fn manual_policy_rejects_pressure_instead_of_evicting() {
+    let root = std::env::temp_dir().join(format!("hoard-evlc-manual-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let cluster = RealCluster::create(&root, NODES, 500e6).unwrap();
+    let cfg = DataGenConfig { num_items: 8, files_per_dir: 32, ..Default::default() };
+    let total = datagen::generate(&cluster.remote_dir, &cfg).unwrap();
+    let cap = total.div_ceil(NODES as u64) + CHUNK; // fits exactly one
+    let vols =
+        (0..NODES).map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, cap)])).collect();
+    let mut manager = CacheManager::new(vols, EvictionPolicy::Manual);
+    manager.chunk_bytes = CHUNK;
+    manager.register(DatasetSpec::new("d0", 8, total), "nfs://r/d0".into()).unwrap();
+    manager.register(DatasetSpec::new("d1", 8, total), "nfs://r/d1".into()).unwrap();
+    let cache = SharedCache::new(manager);
+    let plane = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+
+    plane.place_dataset("d0", (0..NODES).map(NodeId).collect()).unwrap();
+    let err = plane.place_dataset("d1", (0..NODES).map(NodeId).collect()).unwrap_err();
+    let msg = format!("{err:#}").to_lowercase();
+    assert!(msg.contains("admission rejected"), "unexpected rejection shape: {msg}");
+    assert!(cache.geometry("d0").is_ok(), "resident dataset lost its placement");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// A chunk file truncated at the *current* generation (e.g. caught
+/// mid-write) must answer a request-level `Error` through the registered
+/// view — never short "successful" bytes — and the server survives to
+/// serve intact chunks.
+#[test]
+fn truncated_chunk_answers_error_not_short_bytes() {
+    let (cluster, cache, cfg, plane) = fixture("trunc", 8);
+    let sess = plane.open_job(JobSpec::new("d", cfg.clone()).readers(2).seed(3)).unwrap();
+    sess.run_epoch(0).unwrap();
+
+    let servers = start_servers(&cluster);
+    let did = cache.dataset_id("d").unwrap();
+    register_views(&servers, &cache, did);
+    let client = PeerClient::connect(servers.iter().map(|s| s.addr).collect());
+    let geom = cache.geometry("d").unwrap();
+
+    // Truncate chunk 0 on its home node to half its grid length.
+    let home = geom.node_of_chunk(0);
+    let rel = chunk_rel_path(did, 1, CHUNK, 0);
+    let full = std::fs::read(cluster.node_dirs[home.0].join(&rel)).unwrap();
+    std::fs::write(cluster.node_dirs[home.0].join(&rel), &full[..full.len() / 2]).unwrap();
+
+    let err = client.get_chunk(home, did, 1, CHUNK, 0).unwrap_err();
+    assert!(format!("{err:#}").contains("bytes"), "unexpected error shape: {err:#}");
+    assert!(
+        client.get_chunk_batch(home, did, 1, CHUNK, &[0]).is_err(),
+        "batch must fail the truncated chunk, not skip it"
+    );
+
+    // An intact chunk still serves — the error was request-level.
+    let c1 = 1.min(geom.num_chunks() - 1);
+    let home1 = geom.node_of_chunk(c1);
+    let rel1 = chunk_rel_path(did, 1, CHUNK, c1);
+    let want = std::fs::read(cluster.node_dirs[home1.0].join(&rel1)).unwrap();
+    assert_eq!(client.get_chunk(home1, did, 1, CHUNK, c1).unwrap(), Some(want));
+    drop(servers);
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}

@@ -300,7 +300,7 @@ fn peer_server_connection_flood_is_gated() {
     let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir).unwrap();
     let payload = vec![3u8; 256];
-    let rel = hoard::posix::realfs::chunk_rel_path(1, 64, 0);
+    let rel = hoard::posix::realfs::chunk_rel_path(1, 1, 512, 0);
     std::fs::create_dir_all(dir.join(&rel).parent().unwrap()).unwrap();
     std::fs::write(dir.join(&rel), &payload).unwrap();
     let mut srv = PeerServer::start_with_limits(
@@ -319,12 +319,12 @@ fn peer_server_connection_flood_is_gated() {
     // "capacity" Error frame and closes. Depending on timing the client
     // sees either that polite frame or the reset — never a served chunk.
     let client = PeerClient::connect(vec![srv.addr]);
-    assert!(client.get_chunk(NodeId(0), 1, 64, 0).is_err(), "flooded server served a chunk");
+    assert!(client.get_chunk(NodeId(0), 1, 1, 512, 0).is_err(), "flooded server served a chunk");
     // Drain the flood: the occupants hang up, slots free, service resumes.
     drop(idle);
     let t0 = std::time::Instant::now();
     loop {
-        match client.get_chunk(NodeId(0), 1, 64, 0) {
+        match client.get_chunk(NodeId(0), 1, 1, 512, 0) {
             Ok(Some(got)) => {
                 assert_eq!(got, payload);
                 break;

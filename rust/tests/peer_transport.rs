@@ -192,7 +192,7 @@ fn socket_not_resident_falls_back_to_remote_fill() {
     // The fill landed on the home nodes: item 0's chunks are on disk now,
     // and a second read stays off the remote store.
     for c in geom.chunks_of_item(0) {
-        let crel = chunk_rel_path(geom.dataset_id, geom.chunk_bytes(), c);
+        let crel = chunk_rel_path(geom.dataset_id, geom.generation, geom.chunk_bytes(), c);
         assert!(cluster.node_has(geom.node_of_chunk(c), &crel), "chunk {c} not persisted");
     }
     let mut stats2 = ReadStats::default();
@@ -297,7 +297,7 @@ fn server_drops_silent_and_hostile_connections() {
     let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir).unwrap();
     let payload = vec![7u8; 1234];
-    let rel = chunk_rel_path(1, 100, 0);
+    let rel = chunk_rel_path(1, 1, 2048, 0);
     std::fs::create_dir_all(dir.join(&rel).parent().unwrap()).unwrap();
     std::fs::write(dir.join(&rel), &payload).unwrap();
     let mut srv =
@@ -327,7 +327,7 @@ fn server_drops_silent_and_hostile_connections() {
 
     // The server still serves real requests afterwards.
     let client = PeerClient::connect(vec![srv.addr]);
-    assert_eq!(client.get_chunk(NodeId(0), 1, 100, 0).unwrap(), Some(payload));
+    assert_eq!(client.get_chunk(NodeId(0), 1, 1, 2048, 0).unwrap(), Some(payload));
     srv.stop();
     std::fs::remove_dir_all(&dir).unwrap();
 }
