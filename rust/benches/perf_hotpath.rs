@@ -12,7 +12,7 @@ mod common;
 use std::time::{Duration, Instant};
 
 use hoard::cache::{CacheManager, EvictionPolicy, SharedCache};
-use hoard::experiments::realmode::reader_scaling_run;
+use hoard::experiments::realmode::{ram_tier_run, reader_scaling_run};
 use hoard::netsim::{fair_share, Flow, NodeId, Resource, ResourceId};
 use hoard::storage::{Device, DeviceKind, Volume};
 use hoard::workload::trainsim::{paper_scenario, ReadMode};
@@ -153,16 +153,47 @@ fn main() {
         point.warm_s
     );
 
+    // 6. Warm epoch with the RAM hot-chunk tier off vs on: the same
+    //    chunked 8-reader hot epoch, with the tier budgeted to the whole
+    //    dataset. The simulated per-read NVMe latency is what the tier
+    //    elides — a RAM hit is one memcpy, no chunk-file open.
+    let latency = Duration::from_micros(if smoke { 0 } else { 400 });
+    let off = ram_tier_run(8, epoch_items, 1000, false, latency)
+        .expect("tier-off warm-epoch run needs a writable temp dir");
+    let on = ram_tier_run(8, epoch_items, 1000, true, latency)
+        .expect("tier-on warm-epoch run needs a writable temp dir");
+    assert_eq!(on.warm.remote_reads, 0, "tiered warm epoch touched remote");
+    let tier_off_ips = hoard::experiments::items_per_sec(epoch_items, off.warm_s);
+    let tier_on_ips = hoard::experiments::items_per_sec(epoch_items, on.warm_s);
+    println!(
+        "BENCH perf_hotpath_warm_epoch_8r_tier_off best={:.4}s items_per_sec={tier_off_ips:.0}",
+        off.warm_s
+    );
+    println!(
+        "BENCH perf_hotpath_warm_epoch_8r_tier_on best={:.4}s items_per_sec={tier_on_ips:.0} \
+         ram_hits={} ram_bytes={}",
+        on.warm_s, on.warm.ram_hits, on.warm.ram_bytes
+    );
+
     // Machine-readable trajectory point (bench name → items/sec).
     let json = format!(
         "{{\n  \"resolve_plan_rwlock_8t\": {lock_plan:.1},\n  \
          \"resolve_plan_snapshot_8t\": {snap_plan:.1},\n  \
          \"resolve_location_rwlock_8t\": {lock_loc:.1},\n  \
          \"resolve_location_snapshot_8t\": {snap_loc:.1},\n  \
-         \"warm_epoch_8r\": {warm_ips:.1}\n}}\n"
+         \"warm_epoch_8r\": {warm_ips:.1},\n  \
+         \"warm_epoch_8r_tier_off\": {tier_off_ips:.1},\n  \
+         \"warm_epoch_8r_tier_on\": {tier_on_ips:.1}\n}}\n"
     );
-    std::fs::write("BENCH_hotpath.json", &json).expect("writing BENCH_hotpath.json");
-    println!("BENCH_hotpath.json written:\n{json}");
+    // Smoke runs must never clobber the committed trajectory with ~0
+    // throughput numbers: they record to a scratch path instead.
+    let out = if smoke {
+        std::env::temp_dir().join("BENCH_hotpath.smoke.json")
+    } else {
+        std::path::PathBuf::from("BENCH_hotpath.json")
+    };
+    std::fs::write(&out, &json).expect("writing BENCH_hotpath.json");
+    println!("{} written:\n{json}", out.display());
 
     if smoke {
         println!("smoke mode: fast-lane speedup assertion skipped");
@@ -177,5 +208,13 @@ fn main() {
         loc_speedup >= 2.0,
         "snapshot lane must be ≥2× the RwLock lane for read_location at {threads} readers, \
          got {loc_speedup:.2}×"
+    );
+    assert!(on.warm.ram_hits > 0, "non-smoke tiered warm epoch must hit RAM");
+    let tier_speedup = tier_on_ips / tier_off_ips.max(1e-9);
+    println!("warm epoch RAM tier speedup: {tier_speedup:.2}× (on vs off)");
+    assert!(
+        tier_speedup >= 1.5,
+        "RAM tier must be ≥1.5× the disk warm path with the hot set in budget, \
+         got {tier_speedup:.2}×"
     );
 }

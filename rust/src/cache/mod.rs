@@ -11,10 +11,12 @@
 //!  * evict at dataset granularity ([`eviction`]).
 
 pub mod eviction;
+pub mod ramtier;
 pub mod registry;
 pub mod stripe;
 
 pub use eviction::{plan_admission, Admission, EvictionPolicy};
+pub use ramtier::{ChunkKey, RamTier, RamTierStats};
 pub use registry::{DatasetRecord, DatasetState, Registry, RegistryError};
 pub use stripe::{item_range, ChunkSet, StripeMap};
 

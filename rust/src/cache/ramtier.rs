@@ -1,0 +1,455 @@
+//! `RamTier` — the bounded in-memory hot-chunk cache above the NVMe chunk
+//! files (the bi-level cache of the ROADMAP, SNIPPETS' BiLevelCache shape).
+//!
+//! The warm fast lane pays one chunk-file open + read per resident local
+//! segment; for the hot set that disk I/O is the whole remaining cost of a
+//! warm item. The tier keeps whole chunk payloads in RAM under a byte
+//! budget so a hot read is one `copy_from_slice` into the caller's final
+//! buffer — no file open, no syscall.
+//!
+//! Design:
+//!
+//!  * **Keys are `(dataset_id, generation, grid_bytes, chunk)`** — the
+//!    same address the peer wire uses. Because the placement generation is
+//!    *in the key*, a re-placed dataset structurally cannot hit the dead
+//!    placement's bytes: gen-N entries are unreachable from gen-N+1 reads.
+//!    On top of that, [`RamTier::invalidate_dataset`] drops every entry of
+//!    a dataset eagerly (wired into `DataPlane::reset_dataset`), so dead
+//!    generations also stop occupying budget.
+//!  * **Admission on second touch**: the first touch of a chunk only
+//!    records the key in a bounded touch filter; the payload is kept only
+//!    when the chunk comes back. A one-pass scan (cold fill, one-epoch
+//!    job) therefore cannot flush the hot set — classic scan resistance.
+//!  * **CLOCK eviction**: one reference bit per entry, a clock hand over
+//!    fixed slots. A hit sets the bit; the hand clears bits until it finds
+//!    a cold entry to evict. Approximates LRU at a fraction of the
+//!    bookkeeping and needs no per-hit list surgery.
+//!  * **Copy outside the lock**: entries hold `Arc<Vec<u8>>`; a lookup
+//!    clones the `Arc` under a short mutex hold and the memcpy into the
+//!    caller's buffer happens lock-free, so 8 readers hitting one hot
+//!    chunk do not serialize their copies.
+//!  * **Atomic counters** (`hits`/`misses`/`inserted`/`evicted`) readable
+//!    without the lock — the experiment tables and benches report them.
+//!
+//! Shared across co-scheduled jobs via the `DataPlane` (one tier per
+//! plane, like the fill ledgers and the `BufPool`): J jobs streaming one
+//! dataset warm each other's hot set.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One cached chunk's address: `(dataset_id, generation, grid_bytes,
+/// chunk)` — identical to the peer wire address, so a stale generation or
+/// a re-gridded placement can never alias a live entry.
+pub type ChunkKey = (u64, u64, u64, u64);
+
+/// Touch-filter capacity (keys, not bytes): when the filter fills, it is
+/// cleared wholesale — coarse aging that bounds memory at a few MB while
+/// keeping the second-touch property for any realistically hot set.
+const TOUCH_CAP: usize = 1 << 16;
+
+/// One resident entry on the clock ring.
+#[derive(Debug)]
+struct Slot {
+    key: ChunkKey,
+    data: Arc<Vec<u8>>,
+    /// CLOCK reference bit: set on hit, cleared by the sweeping hand.
+    referenced: bool,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    /// Key → slot index. Slots never move, so indices stay valid.
+    map: HashMap<ChunkKey, usize>,
+    /// Fixed-position slots (`None` ⇒ free); the clock hand walks this.
+    slots: Vec<Option<Slot>>,
+    free: Vec<usize>,
+    hand: usize,
+    bytes: u64,
+    /// First-touch filter for second-touch admission.
+    touched: HashSet<ChunkKey>,
+}
+
+/// Counter snapshot ([`RamTier::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RamTierStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserted: u64,
+    pub evicted: u64,
+    /// Payload bytes currently cached.
+    pub bytes: u64,
+    /// Entries currently cached.
+    pub entries: u64,
+}
+
+/// Bounded-bytes in-memory hot-chunk cache. See the module docs for the
+/// admission/eviction/invalidation model.
+#[derive(Debug)]
+pub struct RamTier {
+    budget_bytes: u64,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserted: AtomicU64,
+    evicted: AtomicU64,
+}
+
+impl RamTier {
+    /// A tier that holds at most `budget_bytes` of chunk payloads.
+    pub fn new(budget_bytes: u64) -> Self {
+        RamTier {
+            budget_bytes,
+            inner: Mutex::new(Inner::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserted: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+        }
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// Copy `dst.len()` bytes starting at `off` of `key`'s payload into
+    /// `dst`. `true` ⇔ hit (and the entry's reference bit is set). A
+    /// cached payload too short for the requested window counts as a miss
+    /// — the caller falls through to disk, never reads garbage.
+    pub fn read_into(&self, key: ChunkKey, off: u64, dst: &mut [u8]) -> bool {
+        let data = self.lookup(key);
+        match data {
+            Some(d) => {
+                let off = off as usize;
+                if off.checked_add(dst.len()).map(|end| end <= d.len()) != Some(true) {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    return false;
+                }
+                dst.copy_from_slice(&d[off..off + dst.len()]);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+        }
+    }
+
+    /// The whole cached payload (the peer-serving path). Hit/miss counted
+    /// like [`RamTier::read_into`].
+    pub fn get(&self, key: ChunkKey) -> Option<Arc<Vec<u8>>> {
+        match self.lookup(key) {
+            Some(d) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(d)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Whether `key` is currently cached, with **no** counter or reference
+    /// side effects (tests and introspection).
+    pub fn contains(&self, key: ChunkKey) -> bool {
+        self.inner.lock().unwrap().map.contains_key(&key)
+    }
+
+    fn lookup(&self, key: ChunkKey) -> Option<Arc<Vec<u8>>> {
+        let mut inner = self.inner.lock().unwrap();
+        let idx = inner.map.get(&key).copied()?;
+        let slot = inner.slots[idx].as_mut().expect("mapped slot must be occupied");
+        slot.referenced = true;
+        Some(slot.data.clone())
+    }
+
+    /// Record a touch of `key` without supplying bytes. `true` ⇔ the tier
+    /// now wants the payload (second or later touch, not yet cached): the
+    /// caller should read the **full** chunk and [`RamTier::insert`] it.
+    /// Idempotent in the wanting state — asking again keeps answering
+    /// `true` until the payload arrives (or the filter ages out).
+    pub fn note_touch(&self, key: ChunkKey) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.contains_key(&key) {
+            return false;
+        }
+        if inner.touched.contains(&key) {
+            return true;
+        }
+        if inner.touched.len() >= TOUCH_CAP {
+            inner.touched.clear();
+        }
+        inner.touched.insert(key);
+        false
+    }
+
+    /// Offer a payload already in hand (the fill path): records the touch
+    /// and inserts on the second one. `true` ⇔ inserted.
+    pub fn offer(&self, key: ChunkKey, payload: &[u8]) -> bool {
+        if self.note_touch(key) {
+            self.insert(key, payload)
+        } else {
+            false
+        }
+    }
+
+    /// Insert unconditionally (admission already decided), evicting via
+    /// CLOCK until the payload fits the budget. Refuses empty payloads and
+    /// payloads larger than the whole budget. Re-inserting a cached key
+    /// refreshes its reference bit and payload.
+    pub fn insert(&self, key: ChunkKey, payload: &[u8]) -> bool {
+        let len = payload.len() as u64;
+        if len == 0 || len > self.budget_bytes {
+            return false;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.touched.remove(&key);
+        if let Some(idx) = inner.map.get(&key).copied() {
+            let slot = inner.slots[idx].as_mut().expect("mapped slot must be occupied");
+            let old = slot.data.len() as u64;
+            slot.data = Arc::new(payload.to_vec());
+            slot.referenced = true;
+            inner.bytes = inner.bytes - old + len;
+            // Same-key refresh can still overflow the budget when the
+            // payload grew: sweep below.
+        } else {
+            let data = Arc::new(payload.to_vec());
+            let idx = match inner.free.pop() {
+                Some(i) => i,
+                None => {
+                    inner.slots.push(None);
+                    inner.slots.len() - 1
+                }
+            };
+            inner.slots[idx] = Some(Slot { key, data, referenced: false });
+            inner.map.insert(key, idx);
+            inner.bytes += len;
+            self.inserted.fetch_add(1, Ordering::Relaxed);
+        }
+        while inner.bytes > self.budget_bytes {
+            if Self::evict_one(&mut inner, Some(key)) == 0 {
+                break;
+            }
+            self.evicted.fetch_add(1, Ordering::Relaxed);
+        }
+        true
+    }
+
+    /// One CLOCK sweep step: clear reference bits until a cold entry
+    /// falls, never evicting `protect` (the entry just inserted). Returns
+    /// the bytes freed (0 ⇔ nothing evictable).
+    fn evict_one(inner: &mut Inner, protect: Option<ChunkKey>) -> u64 {
+        let n = inner.slots.len();
+        if n == 0 || inner.map.len() <= usize::from(protect.is_some()) {
+            return 0;
+        }
+        // Two full revolutions always suffice: the first clears every
+        // reference bit, the second must find a cold victim.
+        for _ in 0..2 * n {
+            let idx = inner.hand;
+            inner.hand = (inner.hand + 1) % n;
+            let Some(slot) = inner.slots[idx].as_mut() else { continue };
+            if protect == Some(slot.key) {
+                continue;
+            }
+            if slot.referenced {
+                slot.referenced = false;
+                continue;
+            }
+            let victim = inner.slots[idx].take().expect("checked occupied above");
+            inner.map.remove(&victim.key);
+            inner.free.push(idx);
+            let freed = victim.data.len() as u64;
+            inner.bytes -= freed;
+            return freed;
+        }
+        0
+    }
+
+    /// Drop every cached entry and pending touch of `dataset_id`
+    /// (evict / re-place / GC — wired into `DataPlane::reset_dataset`).
+    /// Returns the payload bytes released.
+    pub fn invalidate_dataset(&self, dataset_id: u64) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        let victims: Vec<(ChunkKey, usize)> = inner
+            .map
+            .iter()
+            .filter(|(k, _)| k.0 == dataset_id)
+            .map(|(k, &i)| (*k, i))
+            .collect();
+        let mut dropped = 0u64;
+        for (key, idx) in victims {
+            inner.map.remove(&key);
+            if let Some(slot) = inner.slots[idx].take() {
+                dropped += slot.data.len() as u64;
+                inner.free.push(idx);
+            }
+            self.evicted.fetch_add(1, Ordering::Relaxed);
+        }
+        inner.bytes -= dropped;
+        inner.touched.retain(|k| k.0 != dataset_id);
+        dropped
+    }
+
+    /// Payload bytes currently cached.
+    pub fn bytes_cached(&self) -> u64 {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Entries currently cached.
+    pub fn len(&self) -> u64 {
+        self.inner.lock().unwrap().map.len() as u64
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Counter + occupancy snapshot (counters are monotone; occupancy is
+    /// instantaneous).
+    pub fn stats(&self) -> RamTierStats {
+        let (bytes, entries) = {
+            let inner = self.inner.lock().unwrap();
+            (inner.bytes, inner.map.len() as u64)
+        };
+        RamTierStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserted: self.inserted.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
+            bytes,
+            entries,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(d: u64, g: u64, c: u64) -> ChunkKey {
+        (d, g, 1000, c)
+    }
+
+    #[test]
+    fn second_touch_admission_resists_one_pass_scans() {
+        let tier = RamTier::new(1 << 20);
+        // One pass over 10 chunks: touches only, nothing admitted.
+        for c in 0..10 {
+            assert!(!tier.offer(key(1, 1, c), &[7u8; 100]), "first touch must not admit");
+        }
+        assert_eq!(tier.len(), 0, "a one-pass scan must not populate the tier");
+        assert_eq!(tier.stats().inserted, 0);
+        // Second pass: every chunk admitted.
+        for c in 0..10 {
+            assert!(tier.offer(key(1, 1, c), &[7u8; 100]), "second touch must admit");
+        }
+        assert_eq!(tier.len(), 10);
+        assert_eq!(tier.bytes_cached(), 1000);
+        // note_touch on a cached key answers false (nothing wanted).
+        assert!(!tier.note_touch(key(1, 1, 3)));
+        // ...and on a once-touched key keeps answering true until insert.
+        assert!(!tier.note_touch(key(1, 1, 77)));
+        assert!(tier.note_touch(key(1, 1, 77)));
+        assert!(tier.note_touch(key(1, 1, 77)));
+    }
+
+    #[test]
+    fn read_into_copies_exact_window_and_counts() {
+        let tier = RamTier::new(1 << 20);
+        let payload: Vec<u8> = (0..=255u8).collect();
+        tier.insert(key(1, 1, 0), &payload);
+        let mut dst = [0u8; 16];
+        assert!(tier.read_into(key(1, 1, 0), 100, &mut dst));
+        assert_eq!(&dst[..], &payload[100..116]);
+        // Whole-payload window.
+        let mut all = vec![0u8; 256];
+        assert!(tier.read_into(key(1, 1, 0), 0, &mut all));
+        assert_eq!(all, payload);
+        // Out-of-window requests miss instead of serving short bytes.
+        let mut over = [0u8; 16];
+        assert!(!tier.read_into(key(1, 1, 0), 250, &mut over));
+        assert!(!tier.read_into(key(1, 1, 9), 0, &mut over), "absent key misses");
+        let s = tier.stats();
+        assert_eq!((s.hits, s.misses), (2, 2));
+    }
+
+    #[test]
+    fn clock_evicts_cold_entries_and_keeps_hot_ones() {
+        // Budget fits exactly 4 × 100-byte payloads.
+        let tier = RamTier::new(400);
+        for c in 0..4 {
+            tier.insert(key(1, 1, c), &[c as u8; 100]);
+        }
+        assert_eq!(tier.bytes_cached(), 400);
+        // Heat chunks 2 and 3 (sets their reference bits).
+        let mut dst = [0u8; 1];
+        assert!(tier.read_into(key(1, 1, 2), 0, &mut dst));
+        assert!(tier.read_into(key(1, 1, 3), 0, &mut dst));
+        // Two more inserts: the hand must fell the cold 0 and 1, not the
+        // hot 2 and 3.
+        tier.insert(key(1, 1, 4), &[4u8; 100]);
+        tier.insert(key(1, 1, 5), &[5u8; 100]);
+        assert_eq!(tier.bytes_cached(), 400);
+        assert!(tier.contains(key(1, 1, 2)), "hot entry evicted");
+        assert!(tier.contains(key(1, 1, 3)), "hot entry evicted");
+        assert!(!tier.contains(key(1, 1, 0)), "cold entry survived");
+        assert!(!tier.contains(key(1, 1, 1)), "cold entry survived");
+        assert_eq!(tier.stats().evicted, 2);
+        // Oversized and empty payloads are refused outright.
+        assert!(!tier.insert(key(1, 1, 9), &[0u8; 500]));
+        assert!(!tier.insert(key(1, 1, 9), &[]));
+        // Same-key refresh replaces the payload without a second entry.
+        tier.insert(key(1, 1, 4), &[9u8; 50]);
+        assert_eq!(tier.len(), 4);
+        assert!(tier.read_into(key(1, 1, 4), 0, &mut dst));
+        assert_eq!(dst[0], 9);
+    }
+
+    #[test]
+    fn generation_keys_never_alias_and_invalidate_drops_dataset() {
+        let tier = RamTier::new(1 << 20);
+        tier.insert(key(1, 1, 0), &[0xAA; 64]); // gen 1 bytes
+        tier.insert(key(2, 1, 0), &[0xBB; 64]); // another dataset
+        // A gen-2 read of the same chunk misses structurally.
+        let mut dst = [0u8; 8];
+        assert!(!tier.read_into(key(1, 2, 0), 0, &mut dst), "generation must key the entry");
+        assert!(tier.get(key(1, 2, 0)).is_none());
+        // Invalidation drops dataset 1 (entries and pending touches) and
+        // leaves dataset 2 untouched.
+        tier.note_touch(key(1, 1, 7));
+        assert_eq!(tier.invalidate_dataset(1), 64);
+        assert!(!tier.contains(key(1, 1, 0)));
+        assert!(tier.contains(key(2, 1, 0)));
+        assert_eq!(tier.bytes_cached(), 64);
+        // The dropped touch is gone too: the next touch is a *first* touch.
+        assert!(!tier.note_touch(key(1, 1, 7)));
+        // Idempotent.
+        assert_eq!(tier.invalidate_dataset(1), 0);
+    }
+
+    #[test]
+    fn shared_across_threads_stays_within_budget() {
+        let tier = Arc::new(RamTier::new(10_000));
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let tier = tier.clone();
+                s.spawn(move || {
+                    let mut dst = [0u8; 32];
+                    for round in 0..50u64 {
+                        let c = (t * 50 + round) % 64;
+                        tier.offer(key(1, 1, c), &[c as u8; 200]);
+                        tier.read_into(key(1, 1, c), 0, &mut dst);
+                    }
+                });
+            }
+        });
+        assert!(tier.bytes_cached() <= 10_000, "budget must hold under concurrency");
+        let s = tier.stats();
+        assert_eq!(s.bytes, tier.bytes_cached());
+        assert!(s.hits + s.misses > 0);
+    }
+}

@@ -17,7 +17,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::cache::{CacheManager, EvictionPolicy, SharedCache};
+use crate::cache::{CacheManager, EvictionPolicy, RamTierStats, SharedCache};
 use crate::metrics::Table;
 use crate::netsim::NodeId;
 use crate::posix::dataplane::{DataPlane, JobSession, JobSpec};
@@ -37,6 +37,10 @@ pub const JOB_NODES: usize = 4;
 #[derive(Debug, Clone)]
 pub struct CoJobPoint {
     pub jobs: usize,
+    /// Whether the plane carried the shared RAM hot-chunk tier.
+    pub tier_on: bool,
+    /// Tier counters after the warm phase (`None` with the tier off).
+    pub ram: Option<RamTierStats>,
     /// Wall of the concurrent cold phase (all J jobs' epoch 0).
     pub cold_s: f64,
     /// Remote fills recorded by the shared ledger — `== chunks` is the
@@ -57,6 +61,19 @@ pub struct CoJobPoint {
 /// cold phase (every job runs its epoch 0 at once, racing the shared
 /// ledger), then a concurrent warm phase (epoch 1 each).
 pub fn co_job_run(jobs: usize, items: u64, chunk_bytes: u64, readers: usize) -> Result<CoJobPoint> {
+    co_job_run_tiered(jobs, items, chunk_bytes, readers, false)
+}
+
+/// [`co_job_run`] with the plane's RAM hot-chunk tier toggled: `tier_on`
+/// attaches a tier budgeted to the whole dataset, so J jobs warm each
+/// other's hot set — the cross-job sharing claim extended one tier up.
+pub fn co_job_run_tiered(
+    jobs: usize,
+    items: u64,
+    chunk_bytes: u64,
+    readers: usize,
+    tier_on: bool,
+) -> Result<CoJobPoint> {
     static RUN_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
     let seq = RUN_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     let root: PathBuf = std::env::temp_dir().join(format!(
@@ -81,7 +98,11 @@ pub fn co_job_run(jobs: usize, items: u64, chunk_bytes: u64, readers: usize) -> 
     let chunks = cache.geometry("co")?.num_chunks();
 
     // One plane; J sessions on it, each with its own seed.
-    let plane = Arc::new(DataPlane::new(cluster.clone(), cache));
+    let mut plane = DataPlane::new(cluster.clone(), cache);
+    if tier_on {
+        plane = plane.with_ram_tier(total);
+    }
+    let plane = Arc::new(plane);
     let sessions: Vec<JobSession> = (0..jobs)
         .map(|j| {
             plane.open_job(JobSpec::new("co", cfg.clone()).readers(readers).seed(0xC05C + j as u64))
@@ -120,6 +141,8 @@ pub fn co_job_run(jobs: usize, items: u64, chunk_bytes: u64, readers: usize) -> 
 
     let point = CoJobPoint {
         jobs,
+        tier_on,
+        ram: plane.ram_tier().map(|r| r.stats()),
         cold_s,
         fills,
         chunks,
@@ -133,12 +156,16 @@ pub fn co_job_run(jobs: usize, items: u64, chunk_bytes: u64, readers: usize) -> 
     Ok(point)
 }
 
-/// The J-jobs epoch table over an explicit sweep.
+/// The J-jobs epoch table over an explicit sweep: each fleet size runs
+/// with the plane's RAM tier off and on (paired rows), so the table shows
+/// both the fills-shared-once invariant and what the shared hot-chunk
+/// tier adds on top.
 pub fn co_job_table_with(sweep: &[usize], items: u64, chunk_bytes: u64, readers: usize) -> Table {
     let mut t = Table::new(
         "Real mode — co-located jobs over one DataPlane (shared fills, per-job epochs)",
         &[
             "jobs",
+            "ram tier",
             "cold phase (s)",
             "fills",
             "chunks",
@@ -147,29 +174,39 @@ pub fn co_job_table_with(sweep: &[usize], items: u64, chunk_bytes: u64, readers:
             "warm epoch mean (s)",
             "warm img/s per job",
             "warm remote reads",
+            "warm ram hits",
         ],
     );
     for &j in sweep {
-        match co_job_run(j, items, chunk_bytes, readers) {
-            Ok(p) => {
-                let warm_mean = super::mean(&p.warm_s);
-                let warm_remote: u64 = p.warm.iter().map(|s| s.remote_reads).sum();
-                t.row(vec![
-                    format!("{j}"),
-                    format!("{:.3}", p.cold_s),
-                    format!("{}", p.fills),
-                    format!("{}", p.chunks),
-                    format!("{}", p.cold.remote_bytes),
-                    format!("{}", p.total_bytes),
-                    format!("{warm_mean:.3}"),
-                    format!("{:.0}", items_per_sec(p.items, warm_mean)),
-                    format!("{warm_remote}"),
-                ]);
-            }
-            Err(e) => {
-                let mut cells = vec![format!("{j}"), format!("failed: {e:#}")];
-                cells.resize(9, String::new());
-                t.row(cells);
+        for tier_on in [false, true] {
+            match co_job_run_tiered(j, items, chunk_bytes, readers, tier_on) {
+                Ok(p) => {
+                    let warm_mean = super::mean(&p.warm_s);
+                    let warm_remote: u64 = p.warm.iter().map(|s| s.remote_reads).sum();
+                    let warm_ram: u64 = p.warm.iter().map(|s| s.ram_hits).sum();
+                    t.row(vec![
+                        format!("{j}"),
+                        if tier_on { "on" } else { "off" }.to_string(),
+                        format!("{:.3}", p.cold_s),
+                        format!("{}", p.fills),
+                        format!("{}", p.chunks),
+                        format!("{}", p.cold.remote_bytes),
+                        format!("{}", p.total_bytes),
+                        format!("{warm_mean:.3}"),
+                        format!("{:.0}", items_per_sec(p.items, warm_mean)),
+                        format!("{warm_remote}"),
+                        format!("{warm_ram}"),
+                    ]);
+                }
+                Err(e) => {
+                    let mut cells = vec![
+                        format!("{j}"),
+                        if tier_on { "on" } else { "off" }.to_string(),
+                        format!("failed: {e:#}"),
+                    ];
+                    cells.resize(11, String::new());
+                    t.row(cells);
+                }
             }
         }
     }
@@ -202,22 +239,39 @@ mod tests {
     }
 
     #[test]
-    fn jobs_table_has_one_row_per_fleet_size() {
+    fn co_jobs_share_the_ram_tier() {
+        let p = co_job_run_tiered(2, 16, 777, 2, true).unwrap();
+        assert_eq!(p.fills, p.chunks, "the tier must not change the fetch-once invariant");
+        assert!(p.tier_on);
+        let warm_ram: u64 = p.warm.iter().map(|s| s.ram_hits).sum();
+        assert!(warm_ram > 0, "warm jobs must hit the shared tier");
+        let rs = p.ram.unwrap();
+        assert!(rs.hits >= warm_ram, "plane counters cover every session's hits");
+    }
+
+    #[test]
+    fn jobs_table_has_tier_off_and_on_rows_per_fleet_size() {
         let t = co_job_table_with(&[1, 2], 8, 1000, 1);
-        assert_eq!(t.rows.len(), 2);
-        assert_eq!(t.rows[0][0], "1");
-        assert_eq!(t.rows[1][0], "2");
-        // Fills == chunks on both rows (the headline invariant). Parse
+        assert_eq!(t.rows.len(), 4, "each fleet size pairs an off row with an on row");
+        assert_eq!((t.rows[0][0].as_str(), t.rows[0][1].as_str()), ("1", "off"));
+        assert_eq!((t.rows[1][0].as_str(), t.rows[1][1].as_str()), ("1", "on"));
+        assert_eq!((t.rows[2][0].as_str(), t.rows[2][1].as_str()), ("2", "off"));
+        assert_eq!((t.rows[3][0].as_str(), t.rows[3][1].as_str()), ("2", "on"));
+        // Fills == chunks on every row (the headline invariant). Parse
         // the cells so an error row (empty-padded columns) fails loudly
         // instead of comparing "" == "" vacuously.
         for row in &t.rows {
-            let fills: u64 = row[2].parse().unwrap_or_else(|_| {
+            let fills: u64 = row[3].parse().unwrap_or_else(|_| {
                 panic!("fills column not numeric — run failed? {row:?}")
             });
-            let chunks: u64 = row[3].parse().unwrap_or_else(|_| {
+            let chunks: u64 = row[4].parse().unwrap_or_else(|_| {
                 panic!("chunks column not numeric — run failed? {row:?}")
             });
             assert_eq!(fills, chunks, "fills must equal chunks: {row:?}");
+            // Off rows never count RAM hits.
+            if row[1] == "off" {
+                assert_eq!(row[10], "0", "tier-off row counted RAM hits: {row:?}");
+            }
         }
     }
 }

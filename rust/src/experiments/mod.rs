@@ -13,10 +13,10 @@ pub mod realmode;
 
 pub use chunks::{chunk_scaling_run, chunk_size_table};
 pub use evict::{eviction_lifecycle_run, eviction_lifecycle_table};
-pub use jobs::{co_job_run, co_job_table};
+pub use jobs::{co_job_run, co_job_run_tiered, co_job_table};
 pub use paper::*;
 pub use peers::{peer_transport_run, peer_transport_table};
-pub use realmode::{realmode_reader_scaling, reader_scaling_run};
+pub use realmode::{ram_tier_run, ram_tier_table, realmode_reader_scaling, reader_scaling_run};
 
 /// Calibration constants derived from the paper's own numbers; the deeper
 /// story for each lives next to its definition.

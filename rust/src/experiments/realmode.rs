@@ -14,9 +14,10 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::cache::{CacheManager, EvictionPolicy, SharedCache};
+use crate::cache::{CacheManager, EvictionPolicy, RamTierStats, SharedCache};
 use crate::metrics::Table;
 use crate::netsim::NodeId;
+use crate::posix::dataplane::{DataPlane, JobSpec};
 use crate::posix::realfs::{ReadStats, RealCluster};
 use crate::posix::reader_pool::ReaderPool;
 use crate::remote::NfsModel;
@@ -124,6 +125,124 @@ pub fn realmode_reader_scaling(readers_list: &[usize], items: u64) -> Table {
     t
 }
 
+/// One measured point of the RAM-tier on/off comparison: a warm epoch
+/// over a chunked plane, with or without the in-memory hot-chunk tier.
+#[derive(Debug, Clone)]
+pub struct TierPoint {
+    pub tier_on: bool,
+    pub warm_s: f64,
+    pub warm: ReadStats,
+    /// Tier counters after the measured epoch (`None` with the tier off).
+    pub ram: Option<RamTierStats>,
+}
+
+/// Run a chunked plane to a *hot* warm state and measure one more epoch:
+/// epoch 0 fills from remote (fill-path `offer`s record first touches),
+/// epoch 1 completes second-touch promotion, epoch 2 is the measured warm
+/// epoch. With `tier_on` the plane carries a [`RamTier`] budgeted to the
+/// whole dataset (every hot chunk fits — the ≥-1.5×-regime of the bench);
+/// off, the identical run hits the chunk files for every segment.
+///
+/// [`RamTier`]: crate::cache::RamTier
+pub fn ram_tier_run(
+    readers: usize,
+    items: u64,
+    chunk_bytes: u64,
+    tier_on: bool,
+    node_latency: Duration,
+) -> Result<TierPoint> {
+    static RUN_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = RUN_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let root: PathBuf = std::env::temp_dir().join(format!(
+        "hoard-ramtier-{}-{}-{seq}",
+        if tier_on { "on" } else { "off" },
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    let cluster = RealCluster::create(&root, SCALING_NODES, 200e6)
+        .context("creating ram-tier cluster")?
+        .with_remote_model(Box::new(NfsModel::new(200e6)));
+    cluster.set_node_read_latency(node_latency);
+    let cfg = DataGenConfig { num_items: items, files_per_dir: 64, ..Default::default() };
+    let total = datagen::generate(&cluster.remote_dir, &cfg).context("generating dataset")?;
+
+    let vols = (0..SCALING_NODES)
+        .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 30)]))
+        .collect();
+    let mut manager = CacheManager::new(vols, EvictionPolicy::Manual);
+    manager.chunk_bytes = chunk_bytes;
+    manager.register(DatasetSpec::new("scale", items, total), "nfs://remote/scale".into())?;
+    manager.place("scale", (0..SCALING_NODES).map(NodeId).collect())?;
+
+    let mut plane = DataPlane::new(cluster.clone(), SharedCache::new(manager));
+    if tier_on {
+        plane = plane.with_ram_tier(total);
+    }
+    let plane = std::sync::Arc::new(plane);
+    let sess = plane.open_job(JobSpec::new("scale", cfg).readers(readers).seed(0x7157))?;
+    sess.run_epoch(0)?; // cold fill (tier records first touches)
+    sess.run_epoch(1)?; // promotion epoch (second touches admit)
+    cluster.take_stats();
+    let warm = sess.run_epoch(2)?; // the measured hot epoch
+
+    let point = TierPoint {
+        tier_on,
+        warm_s: warm.wall.as_secs_f64(),
+        warm: warm.merged,
+        ram: plane.ram_tier().map(|r| r.stats()),
+    };
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(point)
+}
+
+/// The RAM-tier on/off table (second table of `hoard exp readers`): the
+/// same warm epoch with and without the in-memory hot-chunk tier. Honors
+/// `HOARD_BENCH_SMOKE=1` (smaller dataset so CI smoke runs stay fast).
+pub fn ram_tier_table(items: u64) -> Table {
+    let smoke = std::env::var("HOARD_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let items = if smoke { items.min(16) } else { items };
+    let mut t = Table::new(
+        "Real mode — warm epoch with the RAM hot-chunk tier off vs on (4 readers, chunked)",
+        &[
+            "ram tier",
+            "warm epoch (s)",
+            "warm img/s",
+            "speedup",
+            "ram hits",
+            "ram bytes",
+            "disk local reads",
+            "peer reads",
+        ],
+    );
+    let mut base_warm = None;
+    for tier_on in [false, true] {
+        match ram_tier_run(4, items, 1000, tier_on, Duration::from_micros(400)) {
+            Ok(p) => {
+                let base = *base_warm.get_or_insert(p.warm_s);
+                t.row(vec![
+                    if tier_on { "on" } else { "off" }.to_string(),
+                    format!("{:.3}", p.warm_s),
+                    format!("{:.0}", super::items_per_sec(items, p.warm_s)),
+                    format!("{:.2} ×", base / p.warm_s.max(1e-9)),
+                    format!("{}", p.warm.ram_hits),
+                    format!("{}", p.warm.ram_bytes),
+                    format!("{}", p.warm.local_reads),
+                    format!("{}", p.warm.peer_reads + p.warm.peer_net_reads),
+                ]);
+            }
+            Err(e) => {
+                let mut cells = vec![
+                    if tier_on { "on" } else { "off" }.to_string(),
+                    format!("failed: {e:#}"),
+                ];
+                cells.resize(8, String::new());
+                t.row(cells);
+            }
+        }
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,5 +261,40 @@ mod tests {
         assert_eq!(t.rows.len(), 2);
         assert_eq!(t.rows[0][0], "1");
         assert_eq!(t.rows[1][0], "2");
+    }
+
+    #[test]
+    fn ram_tier_warm_epoch_hits_ram_and_cuts_disk_reads() {
+        let off = ram_tier_run(2, 16, 1000, false, Duration::ZERO).unwrap();
+        let on = ram_tier_run(2, 16, 1000, true, Duration::ZERO).unwrap();
+        assert_eq!(off.warm.ram_hits, 0, "tier off must never count RAM hits");
+        assert!(off.ram.is_none());
+        assert_eq!(on.warm.remote_reads, 0, "hot epoch must not touch remote");
+        assert!(on.warm.ram_hits > 0, "hot epoch must hit the tier");
+        assert!(
+            on.warm.local_reads < off.warm.local_reads,
+            "tier must cut disk local reads ({} vs {})",
+            on.warm.local_reads,
+            off.warm.local_reads
+        );
+        let rs = on.ram.unwrap();
+        assert!(rs.inserted > 0 && rs.hits > 0);
+        assert!(rs.bytes <= rs.inserted.max(1) * 1000, "budget accounting is per payload");
+    }
+
+    #[test]
+    fn ram_tier_table_has_off_and_on_rows() {
+        let t = ram_tier_table(8);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][0], "off");
+        assert_eq!(t.rows[1][0], "on");
+        let off_hits: u64 = t.rows[0][4]
+            .parse()
+            .unwrap_or_else(|_| panic!("ram hits column not numeric — run failed? {:?}", t.rows[0]));
+        let on_hits: u64 = t.rows[1][4]
+            .parse()
+            .unwrap_or_else(|_| panic!("ram hits column not numeric — run failed? {:?}", t.rows[1]));
+        assert_eq!(off_hits, 0);
+        assert!(on_hits > 0, "the on row must show RAM hits");
     }
 }

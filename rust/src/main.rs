@@ -89,7 +89,10 @@ fn cmd_exp(args: &[String]) -> i32 {
             "t4" => emit(experiments::table4_network_usage()),
             "t5" => emit(experiments::table5_rack_uplink()),
             "util" => emit(experiments::utilization_2x()),
-            "readers" => emit(experiments::realmode_reader_scaling(&[1, 2, 4], 256)),
+            "readers" => {
+                emit(experiments::realmode_reader_scaling(&[1, 2, 4], 256));
+                emit(experiments::ram_tier_table(128));
+            }
             "chunks" => emit(experiments::chunk_size_table(24)),
             "peers" => emit(experiments::peer_transport_table(24)),
             "jobs" => emit(experiments::co_job_table(24)),

@@ -32,7 +32,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use super::proto::{self, Frame};
-use crate::cache::ResidencySnapshot;
+use crate::cache::{RamTier, ResidencySnapshot};
 use crate::posix::realfs::chunk_rel_path;
 use crate::posix::throttle::SharedTokenBucket;
 
@@ -80,6 +80,10 @@ pub struct PeerServer {
     conns: Arc<Mutex<Vec<(u64, TcpStream)>>>,
     exports: Arc<RwLock<HashMap<u64, ItemPathFn>>>,
     views: Arc<RwLock<HashMap<u64, ResidencyFn>>>,
+    /// Optional RAM hot-chunk tier consulted before the chunk file — only
+    /// for requests that pass the residency-view gating, so eviction and
+    /// generation semantics are identical to disk serving.
+    ram: Arc<RwLock<Option<Arc<RamTier>>>>,
 }
 
 impl PeerServer {
@@ -125,8 +129,9 @@ impl PeerServer {
         let exports: Arc<RwLock<HashMap<u64, ItemPathFn>>> =
             Arc::new(RwLock::new(HashMap::new()));
         let views: Arc<RwLock<HashMap<u64, ResidencyFn>>> = Arc::new(RwLock::new(HashMap::new()));
-        let (stop2, conns2, exports2, views2) =
-            (stop.clone(), conns.clone(), exports.clone(), views.clone());
+        let ram: Arc<RwLock<Option<Arc<RamTier>>>> = Arc::new(RwLock::new(None));
+        let (stop2, conns2, exports2, views2, ram2) =
+            (stop.clone(), conns.clone(), exports.clone(), views.clone(), ram.clone());
         let active: Arc<AtomicUsize> = Arc::new(AtomicUsize::new(0));
         let join = std::thread::spawn(move || {
             let mut next_id = 0u64;
@@ -157,6 +162,7 @@ impl PeerServer {
                         let node_dir = node_dir.clone();
                         let exports = exports2.clone();
                         let views = views2.clone();
+                        let ram = ram2.clone();
                         let bucket = disk_bucket.clone();
                         let stop = stop2.clone();
                         let conns = conns2.clone();
@@ -164,7 +170,7 @@ impl PeerServer {
                             let _slot = slot;
                             let mut sock = sock;
                             let bucket = bucket.as_ref();
-                            serve_conn(&mut sock, &node_dir, &exports, &views, bucket, &stop);
+                            serve_conn(&mut sock, &node_dir, &exports, &views, &ram, bucket, &stop);
                             let _ = sock.shutdown(Shutdown::Both);
                             // Prune this connection's registry entry so
                             // churn never accumulates fds.
@@ -184,7 +190,17 @@ impl PeerServer {
                 }
             }
         });
-        Ok(PeerServer { addr: local, stop, join: Some(join), conns, exports, views })
+        Ok(PeerServer { addr: local, stop, join: Some(join), conns, exports, views, ram })
+    }
+
+    /// Attach a [`RamTier`] (typically the co-located `DataPlane`'s —
+    /// `DataPlane::ram_tier`): chunk requests that pass residency gating
+    /// are answered from RAM when the tier holds the exact payload, before
+    /// any file read. RAM serves skip the NVMe bucket — they never touch
+    /// the disk. Requests for datasets without a residency view never
+    /// consult the tier.
+    pub fn set_ram_tier(&self, tier: Arc<RamTier>) {
+        *self.ram.write().unwrap() = Some(tier);
     }
 
     /// Register an item-path resolver for `dataset_id`, enabling
@@ -265,6 +281,7 @@ fn read_chunk_payload(
     node_dir: &Path,
     exports: &RwLock<HashMap<u64, ItemPathFn>>,
     views: &RwLock<HashMap<u64, ResidencyFn>>,
+    ram: Option<&RamTier>,
     bucket: Option<&SharedTokenBucket>,
     dataset_id: u64,
     generation: u64,
@@ -298,6 +315,17 @@ fn read_chunk_payload(
                     return ChunkRead::NotResident;
                 }
                 let (cs, ce) = geom.chunk_range(chunk);
+                // RAM tier, only past every gate above: the key carries the
+                // generation (stale entries structurally cannot match) and
+                // the length check mirrors the on-disk validation. No NVMe
+                // bucket charge — this serve never touches the disk.
+                if let Some(r) = ram {
+                    if let Some(data) = r.get((dataset_id, generation, grid_bytes, chunk)) {
+                        if data.len() as u64 == ce - cs && data.len() < proto::MAX_FRAME {
+                            return ChunkRead::Data(data.as_ref().clone());
+                        }
+                    }
+                }
                 Some(ce - cs)
             }
             None => None,
@@ -353,6 +381,7 @@ fn serve_conn(
     node_dir: &Path,
     exports: &RwLock<HashMap<u64, ItemPathFn>>,
     views: &RwLock<HashMap<u64, ResidencyFn>>,
+    ram: &RwLock<Option<Arc<RamTier>>>,
     bucket: Option<&SharedTokenBucket>,
     stop: &AtomicBool,
 ) {
@@ -364,10 +393,15 @@ fn serve_conn(
             // dead pooled connection as stale and redial.
             Ok(None) | Err(_) => return,
         };
+        // Re-resolved per frame so a tier attached after this connection
+        // opened is picked up immediately.
+        let tier = ram.read().unwrap().clone();
+        let tier = tier.as_deref();
         let resp = match frame {
             Frame::GetChunk { dataset_id, generation, chunk, grid_bytes } => {
                 match read_chunk_payload(
-                    node_dir, exports, views, bucket, dataset_id, generation, grid_bytes, chunk,
+                    node_dir, exports, views, tier, bucket, dataset_id, generation, grid_bytes,
+                    chunk,
                 ) {
                     ChunkRead::Data(bytes) => Frame::ChunkData(bytes),
                     ChunkRead::NotResident => Frame::NotResident,
@@ -386,7 +420,8 @@ fn serve_conn(
                 let mut failed = None;
                 for &c in &chunks {
                     match read_chunk_payload(
-                        node_dir, exports, views, bucket, dataset_id, generation, grid_bytes, c,
+                        node_dir, exports, views, tier, bucket, dataset_id, generation,
+                        grid_bytes, c,
                     ) {
                         ChunkRead::Data(bytes) => {
                             body += bytes.len();

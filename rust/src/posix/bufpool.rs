@@ -86,6 +86,27 @@ mod tests {
     }
 
     #[test]
+    fn put_drops_buffers_grown_past_the_cap_but_keeps_cap_sized_ones() {
+        let pool = BufPool::new(4, 4096);
+        // A recycled buffer grown past the cap in use (a coarse-grid
+        // chunk promotion resizes to the full chunk) is dropped on
+        // re-insertion, not pooled forever.
+        let mut b = pool.take();
+        b.resize(64 << 10, 0);
+        assert!(b.capacity() > 4096);
+        pool.put(b);
+        assert_eq!(pool.pooled(), 0, "oversized buffer must not re-enter the pool");
+        // Exactly at the cap is still worth pooling.
+        pool.put(Vec::with_capacity(4096));
+        assert_eq!(pool.pooled(), 1);
+        // The count bound holds even when every buffer is cap-sized.
+        for _ in 0..8 {
+            pool.put(Vec::with_capacity(4096));
+        }
+        assert_eq!(pool.pooled(), 4);
+    }
+
+    #[test]
     fn shared_across_threads() {
         let pool = std::sync::Arc::new(BufPool::new(8, 1 << 16));
         std::thread::scope(|s| {

@@ -40,7 +40,7 @@ use super::reader_pool::{
     EpochReport, FillTable,
 };
 use super::realfs::{gc_dataset_chunks, ReadStats, RealCluster};
-use crate::cache::{CacheEvent, ChunkGeometry, ResidencySnapshot, SharedCache};
+use crate::cache::{CacheEvent, ChunkGeometry, RamTier, ResidencySnapshot, SharedCache};
 use crate::netsim::NodeId;
 use crate::peer::{ChunkTransport, DirTransport};
 use crate::util::Rng;
@@ -202,6 +202,11 @@ pub struct DataPlane {
     /// own — e.g. one socket-transport job next to dir-transport jobs).
     transport: Box<dyn ChunkTransport>,
     bufs: BufPool,
+    /// Optional RAM hot-chunk tier above the NVMe chunk files, shared by
+    /// every session on the plane (like the ledgers and the buffer pool):
+    /// `None` ⇒ every resident read goes to the chunk files (the pre-tier
+    /// behaviour, and the default).
+    ram: Option<Arc<RamTier>>,
     ledgers: Mutex<HashMap<String, Arc<Ledger>>>,
     /// Dataset layouts registered for control-plane consumers (the
     /// `/v1/jobs` HTTP endpoints build `JobSpec`s from these).
@@ -218,6 +223,7 @@ impl DataPlane {
             cache,
             transport: Box::new(DirTransport),
             bufs: BufPool::new(PLANE_BUFS, PLANE_BUF_BYTES),
+            ram: None,
             ledgers: Mutex::new(HashMap::new()),
             dataset_cfgs: Mutex::new(HashMap::new()),
             next_job: AtomicU64::new(0),
@@ -229,6 +235,22 @@ impl DataPlane {
     pub fn with_transport(mut self, transport: Box<dyn ChunkTransport>) -> Self {
         self.transport = transport;
         self
+    }
+
+    /// Attach a shared [`RamTier`] holding at most `budget_bytes` of hot
+    /// chunk payloads (builder-style, before the plane is `Arc`-shared).
+    /// The byte budget is the tier's only knob: sized to the hot set, warm
+    /// resident reads become memcpys; sized to zero, the tier admits
+    /// nothing and the plane behaves as if it had none.
+    pub fn with_ram_tier(mut self, budget_bytes: u64) -> Self {
+        self.ram = Some(Arc::new(RamTier::new(budget_bytes)));
+        self
+    }
+
+    /// The plane's RAM tier, when one is attached (`with_ram_tier`) —
+    /// experiments read its counters, the peer server can serve from it.
+    pub fn ram_tier(&self) -> Option<&Arc<RamTier>> {
+        self.ram.as_ref()
     }
 
     pub fn cluster(&self) -> &RealCluster {
@@ -276,6 +298,22 @@ impl DataPlane {
         if let Some(l) = self.ledgers.lock().unwrap().remove(dataset) {
             l.reset.store(true, Ordering::Release);
         }
+        // Best-effort RAM drop (generation-keyed entries are unreachable
+        // from the next placement anyway — this reclaims their budget).
+        // `delete_dataset` loses the name→id registration before reaching
+        // here and invalidates with its pre-resolved id instead.
+        if let Ok(id) = self.cache.dataset_id(dataset) {
+            self.invalidate_ram(id);
+        }
+    }
+
+    /// Drop every RAM-tier entry of dataset `id` (no-op without a tier).
+    /// Generation-keyed entries could never serve a newer placement, but
+    /// eager invalidation returns their bytes to the budget immediately.
+    fn invalidate_ram(&self, id: u64) {
+        if let Some(r) = &self.ram {
+            r.invalidate_dataset(id);
+        }
     }
 
     /// Evict `dataset` end to end: retire its placement in the cache
@@ -300,6 +338,9 @@ impl DataPlane {
         let id = self.cache.dataset_id(dataset)?;
         self.cache.with_mut(|m| m.delete(dataset))?;
         self.reset_dataset(dataset);
+        // The registration is gone, so reset_dataset could not resolve the
+        // id — invalidate RAM with the one resolved above.
+        self.invalidate_ram(id);
         Ok(gc_dataset_chunks(&self.cluster, id, None))
     }
 
@@ -665,6 +706,7 @@ impl JobSession {
                     transport,
                     snap,
                     Some(&plane.bufs),
+                    plane.ram.as_deref(),
                     &self.dataset,
                     &self.cfg,
                     geom,
@@ -808,6 +850,7 @@ impl JobSession {
                 &plane.cluster,
                 &plane.cache,
                 &self.ledger.fill,
+                plane.ram.as_deref(),
                 &self.dataset,
                 &self.cfg,
                 geom,

@@ -68,7 +68,7 @@ use anyhow::{bail, Result};
 use super::bufpool::BufPool;
 use super::dataplane::{DataPlane, Granularity, JobSession, JobSpec};
 use super::realfs::{chunk_rel_path, fetch_chunk_payload_into, ReadStats, RealCluster};
-use crate::cache::{ChunkGeometry, ReadLocation, ResidencySnapshot, SharedCache};
+use crate::cache::{ChunkGeometry, RamTier, ReadLocation, ResidencySnapshot, SharedCache};
 use crate::netsim::NodeId;
 use crate::peer::{ChunkTransport, DirTransport};
 use crate::workload::datagen::DataGenConfig;
@@ -539,18 +539,21 @@ pub fn read_item_chunked_via(
     stats: &mut ReadStats,
 ) -> Result<Vec<u8>> {
     read_item_chunked_fast(
-        cluster, cache, fill, transport, None, None, dataset, cfg, geom, i, reader, stats,
+        cluster, cache, fill, transport, None, None, None, dataset, cfg, geom, i, reader, stats,
     )
 }
 
 /// One pooled remote fill: fetch + persist chunk `c` through a reusable
 /// buffer (from `bufs` when provided), record residency, and land the
-/// `offset..offset+dst.len()` slice of the payload in `dst`.
+/// `offset..offset+dst.len()` slice of the payload in `dst`. The full
+/// payload is already in hand here, so the RAM tier is offered it for free
+/// (second-touch admission decides whether it sticks).
 #[allow(clippy::too_many_arguments)]
 fn refill_segment(
     cluster: &RealCluster,
     cache: &SharedCache,
     bufs: Option<&BufPool>,
+    ram: Option<&RamTier>,
     dataset: &str,
     cfg: &DataGenConfig,
     geom: &ChunkGeometry,
@@ -562,6 +565,9 @@ fn refill_segment(
     let mut buf = bufs.map(|b| b.take()).unwrap_or_default();
     let result = fetch_chunk_payload_into(cluster, cfg, geom, c, &mut buf, stats).and_then(|()| {
         cache.mark_chunks(dataset, &[c])?;
+        if let Some(r) = ram {
+            r.offer((geom.dataset_id, geom.generation, geom.chunk_bytes(), c), &buf);
+        }
         dst.copy_from_slice(&buf[offset as usize..offset as usize + dst.len()]);
         Ok(())
     });
@@ -580,6 +586,12 @@ fn refill_segment(
 ///    position ([`RealCluster::read_node_range_into_sharded`]); remote
 ///    fills go through a reusable [`BufPool`] buffer instead of a fresh
 ///    `Vec` per chunk;
+///  * **RAM-tier hits** — when the plane carries a [`RamTier`], resident
+///    chunks are consulted in RAM *before* any chunk-file open: a hit is
+///    one `copy_from_slice` into the final buffer (`stats.ram_hits` /
+///    `stats.ram_bytes`), a repeated disk miss promotes the whole chunk
+///    (second-touch admission), and fills offer their payloads on the way
+///    through;
 ///  * **batched peer fetches** — resident non-local chunks are grouped by
 ///    home node during the claim walk and pulled with one
 ///    [`ChunkTransport::fetch_chunk_ranges`] call per peer (one wire round
@@ -599,6 +611,7 @@ pub fn read_item_chunked_fast(
     transport: &dyn ChunkTransport,
     residency: Option<&ResidencySnapshot>,
     bufs: Option<&BufPool>,
+    ram: Option<&RamTier>,
     dataset: &str,
     cfg: &DataGenConfig,
     geom: &ChunkGeometry,
@@ -614,6 +627,7 @@ pub fn read_item_chunked_fast(
         transport,
         residency,
         bufs,
+        ram,
         dataset,
         cfg,
         geom,
@@ -640,6 +654,7 @@ pub fn read_item_range_chunked_fast(
     transport: &dyn ChunkTransport,
     residency: Option<&ResidencySnapshot>,
     bufs: Option<&BufPool>,
+    ram: Option<&RamTier>,
     dataset: &str,
     cfg: &DataGenConfig,
     geom: &ChunkGeometry,
@@ -672,21 +687,67 @@ pub fn read_item_range_chunked_fast(
         let (off, pos, len) = (seg_lo - cs, (seg_lo - gs) as usize, seg_hi - seg_lo);
         match fill.claim_or_wait(c) {
             Claim::Resident if home != reader => {
+                // A tier hit beats a peer round trip too: co-scheduled jobs
+                // on this plane (or an earlier refill) may have parked the
+                // chunk in RAM already.
+                if let Some(r) = ram {
+                    let key = (geom.dataset_id, geom.generation, geom.chunk_bytes(), c);
+                    let dst = &mut out[pos..pos + len as usize];
+                    if r.read_into(key, off, dst) {
+                        stats.ram_hits += 1;
+                        stats.ram_bytes += len;
+                        continue;
+                    }
+                }
                 match batches.iter().position(|(n, _)| *n == home) {
                     Some(k) => batches[k].1.push((c, off, pos, len)),
                     None => batches.push((home, vec![(c, off, pos, len)])),
                 }
             }
             Claim::Resident => {
-                let crel = chunk_rel_path(geom.dataset_id, geom.generation, geom.chunk_bytes(), c);
+                let key = (geom.dataset_id, geom.generation, geom.chunk_bytes(), c);
                 let dst = &mut out[pos..pos + len as usize];
+                // RAM tier first: a hit is one memcpy into the final
+                // buffer — no chunk-file open at all.
+                if let Some(r) = ram {
+                    if r.read_into(key, off, dst) {
+                        stats.ram_hits += 1;
+                        stats.ram_bytes += len;
+                        continue;
+                    }
+                }
+                let crel = chunk_rel_path(geom.dataset_id, geom.generation, geom.chunk_bytes(), c);
                 if cluster.node_has(home, &crel) {
-                    cluster.read_node_range_into_sharded(home, &crel, off, reader, dst, stats)?;
+                    // Second-touch promotion: when the tier wants this
+                    // chunk, read it in FULL through a pooled buffer and
+                    // insert — one widened disk read funds every later RAM
+                    // hit. First touches read just the segment.
+                    if ram.map(|r| r.note_touch(key)).unwrap_or(false) {
+                        let clen = (ce - cs) as usize;
+                        let mut buf = bufs.map(|b| b.take()).unwrap_or_default();
+                        buf.clear();
+                        buf.resize(clen, 0);
+                        let res = cluster
+                            .read_node_range_into_sharded(home, &crel, 0, reader, &mut buf, stats)
+                            .map(|()| {
+                                ram.expect("promotion implies a tier").insert(key, &buf);
+                                dst.copy_from_slice(
+                                    &buf[off as usize..off as usize + dst.len()],
+                                );
+                            });
+                        if let Some(b) = bufs {
+                            b.put(buf);
+                        }
+                        res?;
+                    } else {
+                        cluster
+                            .read_node_range_into_sharded(home, &crel, off, reader, dst, stats)?;
+                    }
                 } else {
                     // Resident per the ledger but gone at the source:
                     // re-fill from remote and re-record residency.
                     refill_segment(
-                        cluster, cache, bufs, dataset, cfg, geom, c, off, dst, stats,
+                        cluster, cache, bufs, ram, dataset, cfg, geom, c, off, dst, stats,
                     )?;
                 }
             }
@@ -732,7 +793,7 @@ pub fn read_item_range_chunked_fast(
                     }
                     Ok(false) => {
                         match refill_segment(
-                            cluster, cache, bufs, dataset, cfg, geom, c, off, dst, stats,
+                            cluster, cache, bufs, ram, dataset, cfg, geom, c, off, dst, stats,
                         ) {
                             Ok(()) => fill.complete(c),
                             Err(err) => {
@@ -777,7 +838,7 @@ pub fn read_item_range_chunked_fast(
                 // Resident per the ledger but gone at the peer: re-fill
                 // from remote and re-record residency.
                 None => refill_segment(
-                    cluster, cache, bufs, dataset, cfg, geom, c, off, dst, stats,
+                    cluster, cache, bufs, ram, dataset, cfg, geom, c, off, dst, stats,
                 )?,
             }
         }
@@ -794,6 +855,7 @@ pub(crate) fn prefetch_chunks(
     cluster: &RealCluster,
     cache: &SharedCache,
     fill: &FillTable,
+    ram: Option<&RamTier>,
     dataset: &str,
     cfg: &DataGenConfig,
     geom: &ChunkGeometry,
@@ -813,7 +875,12 @@ pub(crate) fn prefetch_chunks(
         }
         match fetch_chunk_payload_into(cluster, cfg, geom, c, &mut buf, stats)
             .and_then(|()| cache.mark_chunks(dataset, &[c]).map_err(Into::into))
-        {
+            .map(|()| {
+                // The payload is in hand: let second-touch admission decide.
+                if let Some(r) = ram {
+                    r.offer((geom.dataset_id, geom.generation, geom.chunk_bytes(), c), &buf);
+                }
+            }) {
             Ok(()) => fill.complete(c),
             Err(e) => {
                 fill.abort(c);
@@ -1076,6 +1143,7 @@ mod tests {
                 &cache,
                 &fill,
                 &DirTransport,
+                None,
                 None,
                 None,
                 "d",

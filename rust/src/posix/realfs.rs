@@ -247,11 +247,18 @@ pub struct ReadStats {
     /// Peer bytes that crossed the node interconnect (socket transport) —
     /// split from `peer_bytes` so the network leg is visible on its own.
     pub peer_net_bytes: u64,
+    /// Bytes served straight from the in-memory `RamTier` (one memcpy, no
+    /// chunk-file open) — split from `local_bytes` so the disk-local vs
+    /// RAM-local mix is visible on its own.
+    pub ram_bytes: u64,
     pub remote_reads: u64,
     pub local_reads: u64,
     pub peer_reads: u64,
     /// Socket-peer requests, split from the disk-peer `peer_reads`.
     pub peer_net_reads: u64,
+    /// Segments served from the `RamTier`, split from the disk-local
+    /// `local_reads`.
+    pub ram_hits: u64,
     /// Seconds spent waiting on the shared remote bucket.
     pub remote_wait_s: f64,
 }
@@ -263,19 +270,23 @@ impl ReadStats {
         self.local_bytes += other.local_bytes;
         self.peer_bytes += other.peer_bytes;
         self.peer_net_bytes += other.peer_net_bytes;
+        self.ram_bytes += other.ram_bytes;
         self.remote_reads += other.remote_reads;
         self.local_reads += other.local_reads;
         self.peer_reads += other.peer_reads;
         self.peer_net_reads += other.peer_net_reads;
+        self.ram_hits += other.ram_hits;
         self.remote_wait_s += other.remote_wait_s;
     }
 
     pub fn total_reads(&self) -> u64 {
         self.remote_reads + self.local_reads + self.peer_reads + self.peer_net_reads
+            + self.ram_hits
     }
 
     pub fn total_bytes(&self) -> u64 {
         self.remote_bytes + self.local_bytes + self.peer_bytes + self.peer_net_bytes
+            + self.ram_bytes
     }
 }
 

@@ -194,6 +194,99 @@ fn evict_mid_epoch_poisons_session_gcs_disk_and_refills() {
     std::fs::remove_dir_all(&cluster.root).unwrap();
 }
 
+/// RAM-tier eviction safety: evict → reset drops every tier entry, a
+/// re-placed dataset never reads stale-generation RAM bytes (a planted
+/// generation-1 poison entry is structurally unreachable from
+/// generation-2 keys), and the peer servers refuse stale-generation
+/// requests even when the tier still holds those exact bytes — while a
+/// current-generation chunk serves straight from RAM with its file gone.
+#[test]
+fn replaced_dataset_never_serves_stale_generation_ram_bytes() {
+    let root = std::env::temp_dir().join(format!("hoard-evlc-ram-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let cluster = RealCluster::create(&root, NODES, 500e6).unwrap();
+    let cfg = DataGenConfig { num_items: 8, files_per_dir: 32, ..Default::default() };
+    let total = datagen::generate(&cluster.remote_dir, &cfg).unwrap();
+    let vols = (0..NODES)
+        .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 30)]))
+        .collect();
+    let mut manager = CacheManager::new(vols, EvictionPolicy::Manual);
+    manager.chunk_bytes = CHUNK;
+    manager.register(DatasetSpec::new("d", 8, total), "nfs://r/d".into()).unwrap();
+    let cache = SharedCache::new(manager);
+    let plane =
+        Arc::new(DataPlane::new(cluster.clone(), cache.clone()).with_ram_tier(2 * total));
+    plane.place_dataset("d", (0..NODES).map(NodeId).collect()).unwrap();
+    let did = cache.dataset_id("d").unwrap();
+    let tier = plane.ram_tier().unwrap().clone();
+
+    // One reader on node 0: chunks homed there are locally read every
+    // epoch, so second touches (and promotion) are deterministic.
+    let sess = plane.open_job(JobSpec::new("d", cfg.clone()).readers(1).seed(21)).unwrap();
+    sess.run_epoch(0).unwrap();
+    sess.run_epoch(1).unwrap();
+    assert!(tier.stats().inserted > 0, "warm epochs must promote chunks into the tier");
+    let report = sess.run_epoch(2).unwrap();
+    assert!(report.merged.ram_hits > 0, "promoted chunks must serve epoch 2 from RAM");
+
+    // Evict + reset: the generation-1 entries are eagerly dropped.
+    cache.with_mut(|m| m.evict("d")).unwrap();
+    plane.reset_dataset("d");
+    assert_eq!(tier.stats().entries, 0, "reset must drop the dataset's RAM entries");
+    assert_eq!(tier.bytes_cached(), 0);
+
+    // Re-place (generation 2) and plant a generation-1 poison entry: the
+    // bytes a buggy tier would leak to readers of the new placement.
+    plane.place_dataset("d", (0..NODES).map(NodeId).collect()).unwrap();
+    let geom = cache.geometry("d").unwrap();
+    assert_eq!(geom.generation, 2);
+    let poison = vec![0xABu8; CHUNK as usize];
+    assert!(tier.insert((did, 1, CHUNK, 0), &poison), "poison entry must be accepted");
+    assert!(tier.contains((did, 1, CHUNK, 0)));
+
+    // A fresh session reads byte-correct: generation-2 keys never alias
+    // the generation-1 poison.
+    let sess2 = plane.open_job(JobSpec::new("d", cfg.clone()).readers(1).seed(22)).unwrap();
+    sess2.run_epoch(0).unwrap();
+    sess2.run_epoch(1).unwrap();
+    for i in 0..cfg.num_items {
+        let data = sess2.read(&ReadRequest::item(i), NodeId(0)).unwrap();
+        let (_, want) = datagen::make_record(&cfg, i);
+        assert_eq!(data, want, "item {i} served stale RAM bytes");
+    }
+
+    // Peer servers with the tier attached: a stale-generation request is
+    // refused by the residency view before the tier is ever consulted,
+    // even though the tier holds those exact poison bytes.
+    let servers = start_servers(&cluster);
+    register_views(&servers, &cache, did);
+    for srv in &servers {
+        srv.set_ram_tier(tier.clone());
+    }
+    let client = PeerClient::connect(servers.iter().map(|s| s.addr).collect());
+    let home = geom.node_of_chunk(0);
+    assert_eq!(
+        client.get_chunk(home, did, 1, CHUNK, 0).unwrap(),
+        None,
+        "stale-generation RAM bytes served over the wire"
+    );
+
+    // Positive control: plant the *current* generation's chunk 0 in the
+    // tier, delete its file, and the server must still serve it — the
+    // only possible source is RAM.
+    let rel = chunk_rel_path(did, 2, CHUNK, 0);
+    let on_disk = std::fs::read(cluster.node_dirs[home.0].join(&rel)).unwrap();
+    assert!(tier.insert((did, 2, CHUNK, 0), &on_disk));
+    std::fs::remove_file(cluster.node_dirs[home.0].join(&rel)).unwrap();
+    assert_eq!(
+        client.get_chunk(home, did, 2, CHUNK, 0).unwrap(),
+        Some(on_disk),
+        "current-generation chunk must serve from the tier with its file gone"
+    );
+    drop(servers);
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
+
 /// Cache pressure with `DatasetLru`: three equally sized datasets through
 /// a cache that holds two. The pinned priority dataset is untouchable; the
 /// over-capacity placement evicts the LRU unpinned dataset end to end

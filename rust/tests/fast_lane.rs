@@ -9,7 +9,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use hoard::cache::{CacheManager, EvictionPolicy, SharedCache};
+use hoard::cache::{CacheManager, EvictionPolicy, RamTier, SharedCache};
 use hoard::netsim::NodeId;
 use hoard::peer::{DirTransport, PeerClient, PeerServer, SocketTransport};
 use hoard::posix::realfs::{ReadStats, RealCluster};
@@ -200,6 +200,7 @@ fn warm_epoch_dir_vs_socket_batched_byte_identical() {
             &DirTransport,
             Some(&snap),
             Some(&bufs),
+            None,
             "d",
             &cfg,
             &geom,
@@ -215,6 +216,7 @@ fn warm_epoch_dir_vs_socket_batched_byte_identical() {
             &socket_t,
             Some(&snap),
             Some(&bufs),
+            None,
             "d",
             &cfg,
             &geom,
@@ -275,6 +277,7 @@ fn chunked_pool_fast_lane_cold_warm_byte_correct() {
             &DirTransport,
             Some(&snap),
             Some(&bufs),
+            None,
             "d",
             &cfg,
             &geom,
@@ -288,6 +291,81 @@ fn chunked_pool_fast_lane_cold_warm_byte_correct() {
     }
     assert_eq!(stats.remote_reads, 0);
     assert!(bufs.pooled() <= 2, "buffer pool bounded");
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
+
+/// RAM-tier differential: the same warm item stream read with the tier
+/// off and on must be byte-identical, and the tiered pass must serve a
+/// strict subset of its disk-local reads from RAM (ram_hits > 0, local
+/// chunk-file reads strictly lower).
+#[test]
+fn warm_reads_with_ram_tier_are_byte_identical_and_skip_disk() {
+    // 3080-B records over 700-B chunks: every chunk overlaps several
+    // items, so second touches (and promotion) happen within one pass.
+    let (cluster, cache, cfg) = fixture("ramdiff", 12, 700);
+    let pool = ReaderPool::new_chunked(&cluster, cache.clone(), "d", cfg.clone(), 2).unwrap();
+    pool.run_epoch(&pool.epoch_order(5, 0)).unwrap();
+    assert!(cache.is_cached("d"));
+    cluster.take_stats();
+
+    let geom = cache.geometry("d").unwrap();
+    let snap = cache.snapshot("d").unwrap();
+    assert!(snap.is_full());
+    let bufs = BufPool::new(4, 16 << 20);
+    let fill = FillTable::new(geom.num_chunks());
+    for c in 0..geom.num_chunks() {
+        fill.mark_resident(c);
+    }
+    let read_all = |ram: Option<&RamTier>, stats: &mut ReadStats| -> Vec<Vec<u8>> {
+        (0..cfg.num_items)
+            .map(|i| {
+                read_item_chunked_fast(
+                    &cluster,
+                    &cache,
+                    &fill,
+                    &DirTransport,
+                    Some(&snap),
+                    Some(&bufs),
+                    ram,
+                    "d",
+                    &cfg,
+                    &geom,
+                    i,
+                    NodeId(0),
+                    stats,
+                )
+                .unwrap()
+            })
+            .collect()
+    };
+
+    // Baseline: tier off.
+    let mut off_stats = ReadStats::default();
+    let baseline = read_all(None, &mut off_stats);
+    assert_eq!(off_stats.ram_hits, 0, "tier-off pass counted RAM hits");
+    assert!(off_stats.local_reads > 0, "fixture must exercise disk-local reads");
+
+    // Tier on: one pass to touch/promote, then the measured pass.
+    let tier = RamTier::new(1 << 20);
+    let mut promo_stats = ReadStats::default();
+    let promoted = read_all(Some(&tier), &mut promo_stats);
+    let mut on_stats = ReadStats::default();
+    let tiered = read_all(Some(&tier), &mut on_stats);
+    for (i, want) in baseline.iter().enumerate() {
+        let (_, record) = datagen::make_record(&cfg, i as u64);
+        assert_eq!(want, &record, "baseline item {i}");
+        assert_eq!(&promoted[i], want, "promotion-pass item {i} diverged");
+        assert_eq!(&tiered[i], want, "tiered item {i} diverged from tier-off bytes");
+    }
+    assert!(tier.stats().inserted > 0, "second touches must promote chunks into the tier");
+    assert!(on_stats.ram_hits > 0, "warm tiered pass never hit RAM");
+    assert!(
+        on_stats.local_reads < off_stats.local_reads,
+        "RAM hits must displace disk-local reads: tiered {} vs off {}",
+        on_stats.local_reads,
+        off_stats.local_reads
+    );
+    assert_eq!(on_stats.remote_reads, 0, "tiered warm pass touched remote");
     std::fs::remove_dir_all(&cluster.root).unwrap();
 }
 
