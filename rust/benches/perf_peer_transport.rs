@@ -12,10 +12,161 @@
 //! so the interesting number is the ratio, with only a loose sanity bound
 //! (catching pathological per-request reconnect regressions) outside
 //! smoke mode.
+//!
+//! Second scenario (§Perf, event-driven data plane): `threaded_vs_evloop`
+//! connection scaling. The same warm chunk directory is served by the
+//! legacy thread-per-connection [`ThreadedPeerServer`] and the epoll
+//! [`PeerServer`], hammered by N persistent client connections, and the
+//! per-implementation items/sec lands in `BENCH_peer_net.json` (smoke runs
+//! record to a scratch path so the committed trajectory is never
+//! clobbered by throwaway numbers).
 
 mod common;
 
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
 use hoard::experiments::peers::peer_transport_run;
+use hoard::net::raise_nofile_limit;
+use hoard::peer::proto::{self, Frame};
+use hoard::peer::{PeerServer, ThreadedPeerServer};
+use hoard::posix::realfs::chunk_rel_path;
+
+const DATASET: u64 = 1;
+const GEN: u64 = 1;
+const GRID: u64 = 16 << 10;
+const CHUNKS: u64 = 64;
+
+/// A node directory with `CHUNKS` warm 16 KiB chunk files.
+fn warm_node_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hoard-peer-net-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    for c in 0..CHUNKS {
+        let p = dir.join(chunk_rel_path(DATASET, GEN, GRID, c));
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        std::fs::write(&p, vec![(c % 251) as u8; GRID as usize]).unwrap();
+    }
+    dir
+}
+
+/// Drive `total` GetChunk round trips over `conns` persistent
+/// connections (one thread per connection, all released together) and
+/// return items/sec.
+fn hammer(addr: SocketAddr, conns: usize, total: usize) -> f64 {
+    let per_conn = total / conns;
+    let gate = Arc::new(Barrier::new(conns + 1));
+    let handles: Vec<_> = (0..conns)
+        .map(|t| {
+            let gate = gate.clone();
+            std::thread::spawn(move || {
+                let mut sock = TcpStream::connect(addr).expect("connect");
+                sock.set_nodelay(true).ok();
+                gate.wait();
+                for i in 0..per_conn {
+                    let chunk = ((t + i) as u64) % CHUNKS;
+                    proto::write_frame(
+                        &mut sock,
+                        &Frame::GetChunk {
+                            dataset_id: DATASET,
+                            generation: GEN,
+                            chunk,
+                            grid_bytes: GRID,
+                        },
+                    )
+                    .expect("request");
+                    match proto::read_frame(&mut sock).expect("response") {
+                        Some(Frame::ChunkData(b)) => {
+                            assert_eq!(b.len() as u64, GRID, "short chunk payload");
+                            assert_eq!(b[0], (chunk % 251) as u8, "wrong chunk bytes");
+                        }
+                        other => panic!("expected ChunkData, got {other:?}"),
+                    }
+                }
+            })
+        })
+        .collect();
+    gate.wait();
+    let t0 = Instant::now();
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    total as f64 / t0.elapsed().as_secs_f64().max(1e-9)
+}
+
+/// Connection-scaling scan: items/sec per `(implementation, conns)`,
+/// recorded into `BENCH_peer_net.json`.
+fn bench_conn_scaling(smoke: bool) {
+    let limit = raise_nofile_limit(8192);
+    let io_timeout = Duration::from_secs(30);
+    let budget = 4096;
+    let (scan, total): (&[usize], usize) =
+        if smoke { (&[4, 32], 256) } else { (&[8, 512], 16384) };
+
+    let dir = warm_node_dir("scale");
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    for &conns in scan {
+        // Client + server sockets live in this one process; skip scales
+        // the fd budget cannot hold (with margin for everything else).
+        if (conns as u64) * 3 + 64 > limit {
+            println!("skipping {conns} conns: RLIMIT_NOFILE={limit}");
+            continue;
+        }
+        let mut threaded =
+            ThreadedPeerServer::start_with_limits("127.0.0.1:0", &dir, None, io_timeout, budget)
+                .expect("threaded server");
+        let ips = hammer(threaded.addr, conns, total);
+        threaded.stop();
+        println!("BENCH peer_net_threaded_{conns} items_per_sec={ips:.0} conns={conns}");
+        rows.push((format!("threaded_{conns}"), ips));
+
+        let mut evloop =
+            PeerServer::start_with_limits("127.0.0.1:0", &dir, None, io_timeout, budget)
+                .expect("evloop server");
+        let ips = hammer(evloop.addr, conns, total);
+        evloop.stop();
+        println!("BENCH peer_net_evloop_{conns} items_per_sec={ips:.0} conns={conns}");
+        rows.push((format!("evloop_{conns}"), ips));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut json = String::from("{\n");
+    for (i, (k, v)) in rows.iter().enumerate() {
+        let sep = if i + 1 < rows.len() { "," } else { "" };
+        json.push_str(&format!("  \"{k}\": {v:.1}{sep}\n"));
+    }
+    json.push_str("}\n");
+    // Smoke runs must never clobber the committed trajectory with ~0
+    // throughput numbers: they record to a scratch path instead.
+    let out = if smoke {
+        std::env::temp_dir().join("BENCH_peer_net.smoke.json")
+    } else {
+        PathBuf::from("BENCH_peer_net.json")
+    };
+    let mut f = std::fs::File::create(&out).expect("creating BENCH_peer_net.json");
+    f.write_all(json.as_bytes()).expect("writing BENCH_peer_net.json");
+    println!("{} written:\n{json}", out.display());
+
+    if smoke {
+        println!("smoke mode: threaded-vs-evloop assertions skipped");
+        return;
+    }
+    let get = |k: &str| rows.iter().find(|(n, _)| n == k).map(|&(_, v)| v);
+    if let (Some(th8), Some(ev8)) = (get("threaded_8"), get("evloop_8")) {
+        assert!(
+            ev8 >= th8 * 0.95,
+            "evloop at 8 conns ({ev8:.0}/s) regressed below threaded ({th8:.0}/s)"
+        );
+    }
+    if let (Some(th512), Some(ev512)) = (get("threaded_512"), get("evloop_512")) {
+        assert!(
+            ev512 > th512,
+            "evloop at 512 conns ({ev512:.0}/s) must beat thread-per-conn ({th512:.0}/s)"
+        );
+    }
+}
 
 fn main() {
     let smoke = common::smoke();
@@ -57,13 +208,15 @@ fn main() {
 
     if smoke {
         println!("smoke mode: timing sanity bound skipped");
-        return;
+    } else {
+        assert!(
+            ratio > 0.02,
+            "socket warm epoch {:.3}s is >50× slower than dir {:.3}s — \
+             per-request dial/reconnect regression?",
+            socket.warm_s,
+            dir.warm_s
+        );
     }
-    assert!(
-        ratio > 0.02,
-        "socket warm epoch {:.3}s is >50× slower than dir {:.3}s — \
-         per-request dial/reconnect regression?",
-        socket.warm_s,
-        dir.warm_s
-    );
+
+    bench_conn_scaling(smoke);
 }

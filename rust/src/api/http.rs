@@ -1,34 +1,39 @@
-//! Minimal threaded HTTP/1.1 server on std::net (the offline build has no
-//! tokio/hyper). Enough of the protocol for the Hoard REST API: one request
-//! per connection, Content-Length bodies, JSON in/out.
+//! Minimal HTTP/1.1 server on std::net (the offline build has no
+//! tokio/hyper). Enough of the protocol for the Hoard REST API: one
+//! request per connection, Content-Length bodies, JSON in/out.
+//!
+//! Serving runs on the event-driven [`Engine`](crate::net::Engine): one
+//! loop thread multiplexes every connection, requests are parsed
+//! *incrementally* ([`try_parse_request`]) as bytes arrive — a slow or
+//! stalled client costs buffered bytes, never a parked thread — and
+//! handlers run on the engine's worker pool. Connections over the budget
+//! are answered `503` with a `Retry-After` header and closed; silent
+//! connections are dropped at the io deadline without a byte written.
 
 use std::io::{BufRead, BufReader, Read, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-/// Socket read/write timeout on accepted connections: a client that
-/// connects and sends nothing (or stalls mid-request) is dropped instead
-/// of pinning its handler thread forever.
+use crate::net::{Engine, EngineConfig, Reply, Service};
+
+/// Io deadline on accepted connections: a client that connects and sends
+/// nothing (or stalls mid-request) is dropped instead of holding its
+/// connection slot forever.
 pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(10);
 
-/// Default cap on concurrent handler threads; connections over the cap
-/// are answered `503` and closed, so a connection flood cannot spawn
-/// unbounded threads.
-pub const DEFAULT_MAX_CONNS: usize = 128;
+/// Default connection budget; connections over the budget are answered
+/// `503` (with `Retry-After`) and closed. The event-driven server holds a
+/// connection in buffers, not a thread, so the budget is generous.
+pub const DEFAULT_MAX_CONNS: usize = 1024;
 
-/// Counting gate over live handler threads (decrements on drop, so every
-/// handler exit path releases its slot).
-struct HandlerSlot(Arc<AtomicUsize>);
+/// Cap on buffered request-head bytes before the blank line must appear.
+const MAX_HEAD: usize = 64 << 10;
 
-impl Drop for HandlerSlot {
-    fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::AcqRel);
-    }
-}
+/// Cap on a declared request body.
+const MAX_BODY: usize = 64 << 20;
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Request {
@@ -79,17 +84,86 @@ impl Response {
     }
 }
 
-/// Parse one HTTP/1.1 request from a stream.
-pub fn parse_request(stream: &mut dyn Read) -> Result<Request> {
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
+fn parse_request_line(line: &str) -> Result<(String, String)> {
     let mut parts = line.split_whitespace();
     let method = parts.next().context("missing method")?.to_string();
     let path = parts.next().context("missing path")?.to_string();
     if !matches!(method.as_str(), "GET" | "POST" | "PUT" | "DELETE") {
         bail!("unsupported method {method}");
     }
+    Ok((method, path))
+}
+
+/// Index one past the blank line ending the request head, accepting both
+/// `\r\n\r\n` and bare `\n\n` (and the mixed `\n\r\n`).
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    for (i, &b) in buf.iter().enumerate() {
+        if b != b'\n' {
+            continue;
+        }
+        match (buf.get(i + 1), buf.get(i + 2)) {
+            (Some(b'\n'), _) => return Some(i + 2),
+            (Some(b'\r'), Some(b'\n')) => return Some(i + 3),
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Incremental request parse for the event-driven server: if `buf` holds a
+/// complete request (head + declared body), cut it out (draining the
+/// consumed bytes) and return it; `Ok(None)` means more bytes are needed.
+/// Hostile inputs are rejected as early as the bytes allow — a bogus
+/// method as soon as the request line is complete, an oversized
+/// `Content-Length` as soon as the head is complete (before one body byte
+/// is buffered), an endless head at [`MAX_HEAD`].
+pub fn try_parse_request(buf: &mut Vec<u8>) -> Result<Option<Request>> {
+    let Some(head_end) = find_head_end(buf) else {
+        if buf.len() > MAX_HEAD {
+            bail!("request head too large");
+        }
+        // Cheap early rejection: once the request line is in, a non-HTTP
+        // client is cut off without waiting for a full head.
+        if let Some(nl) = buf.iter().position(|&b| b == b'\n') {
+            let line = std::str::from_utf8(&buf[..nl]).context("request line is not UTF-8")?;
+            parse_request_line(line)?;
+        }
+        return Ok(None);
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).context("request head is not UTF-8")?;
+    let mut lines = head.lines();
+    let (method, path) = parse_request_line(lines.next().context("missing request line")?)?;
+    let mut content_length = 0usize;
+    for h in lines {
+        let h = h.trim();
+        if h.is_empty() {
+            continue;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().context("bad content-length")?;
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        bail!("body too large");
+    }
+    if buf.len() < head_end + content_length {
+        return Ok(None);
+    }
+    let body = buf[head_end..head_end + content_length].to_vec();
+    buf.drain(..head_end + content_length);
+    Ok(Some(Request { method, path, body }))
+}
+
+/// Parse one HTTP/1.1 request from a blocking stream (kept for direct
+/// stream callers; the server itself parses incrementally via
+/// [`try_parse_request`]).
+pub fn parse_request(stream: &mut dyn Read) -> Result<Request> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let (method, path) = parse_request_line(&line)?;
     let mut content_length = 0usize;
     loop {
         let mut h = String::new();
@@ -104,7 +178,7 @@ pub fn parse_request(stream: &mut dyn Read) -> Result<Request> {
             }
         }
     }
-    if content_length > 64 << 20 {
+    if content_length > MAX_BODY {
         bail!("body too large");
     }
     let mut body = vec![0u8; content_length];
@@ -112,28 +186,83 @@ pub fn parse_request(stream: &mut dyn Read) -> Result<Request> {
     Ok(Request { method, path, body })
 }
 
-pub fn write_response(stream: &mut dyn Write, resp: &Response) -> Result<()> {
-    write!(
-        stream,
-        "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+/// Serialize a response, with optional extra headers (e.g.
+/// `("Retry-After", "1")` on a 503).
+pub fn response_bytes(resp: &Response, extra_headers: &[(&str, &str)]) -> Vec<u8> {
+    let mut head = format!(
+        "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
         resp.status_line(),
         resp.content_type,
         resp.body.len()
-    )?;
-    stream.write_all(&resp.body)?;
+    );
+    for (k, v) in extra_headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    let mut out = head.into_bytes();
+    out.extend_from_slice(&resp.body);
+    out
+}
+
+pub fn write_response(stream: &mut dyn Write, resp: &Response) -> Result<()> {
+    stream.write_all(&response_bytes(resp, &[]))?;
     Ok(())
 }
 
-/// A running server; `handler` is called per request on worker threads.
+/// The HTTP protocol as an engine [`Service`].
+struct HttpService<F> {
+    handler: F,
+}
+
+impl<F> Service for HttpService<F>
+where
+    F: Fn(&Request) -> Response + Send + Sync + 'static,
+{
+    type Request = Request;
+
+    fn try_parse(&self, inbuf: &mut Vec<u8>) -> Result<Option<Request>> {
+        try_parse_request(inbuf)
+    }
+
+    fn handle(&self, req: Request) -> Reply {
+        let resp = (self.handler)(&req);
+        // One request per connection (matching the Connection: close the
+        // response advertises).
+        Reply::closing(vec![response_bytes(&resp, &[])])
+    }
+
+    /// Head cap + body cap with slack: anything needing more buffered
+    /// bytes was already rejected by the parser's own caps.
+    fn max_buffered(&self) -> usize {
+        MAX_HEAD + MAX_BODY + 4096
+    }
+
+    /// Over the connection budget: `503` + `Retry-After` so well-behaved
+    /// clients back off instead of hammering.
+    fn busy_reply(&self) -> Option<Reply> {
+        let resp = Response::json(503, r#"{"error":"server busy"}"#.to_string());
+        Some(Reply::closing(vec![response_bytes(&resp, &[("Retry-After", "1")])]))
+    }
+
+    fn parse_error_reply(&self, err: &anyhow::Error) -> Option<Reply> {
+        let resp = Response::json(400, format!(r#"{{"error":"{err}"}}"#));
+        Some(Reply::closing(vec![response_bytes(&resp, &[])]))
+    }
+}
+
+/// A running server; `handler` is called per request on the engine's
+/// worker threads.
 pub struct Server {
     pub addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    join: Option<std::thread::JoinHandle<()>>,
+    engine: Engine,
 }
 
 impl Server {
     /// Bind `addr` (e.g. "127.0.0.1:0") and serve until dropped/stopped,
-    /// with the default per-connection I/O timeout.
+    /// with the default per-connection io deadline.
     pub fn start<F>(addr: &str, handler: F) -> Result<Server>
     where
         F: Fn(&Request) -> Response + Send + Sync + 'static,
@@ -141,9 +270,9 @@ impl Server {
         Self::start_with_timeout(addr, DEFAULT_IO_TIMEOUT, handler)
     }
 
-    /// Like [`Server::start`], with an explicit per-connection read/write
-    /// timeout (tests use short ones to exercise the silent-client path).
-    /// Handler threads are capped at [`DEFAULT_MAX_CONNS`]
+    /// Like [`Server::start`], with an explicit per-connection io deadline
+    /// (tests use short ones to exercise the silent-client path). The
+    /// connection budget is [`DEFAULT_MAX_CONNS`]
     /// ([`Server::start_with_limits`] to tune).
     pub fn start_with_timeout<F>(addr: &str, io_timeout: Duration, handler: F) -> Result<Server>
     where
@@ -152,10 +281,9 @@ impl Server {
         Self::start_with_limits(addr, io_timeout, DEFAULT_MAX_CONNS, handler)
     }
 
-    /// [`Server::start_with_timeout`] plus an explicit cap on concurrent
-    /// handler threads: once `max_conns` handlers are live, further
-    /// connections get a best-effort `503` and are closed instead of
-    /// spawning a thread.
+    /// [`Server::start_with_timeout`] plus an explicit connection budget:
+    /// once `max_conns` connections are live (idle ones count), further
+    /// sockets get a best-effort `503` + `Retry-After` and are closed.
     pub fn start_with_limits<F>(
         addr: &str,
         io_timeout: Duration,
@@ -165,76 +293,30 @@ impl Server {
     where
         F: Fn(&Request) -> Response + Send + Sync + 'static,
     {
-        let listener = TcpListener::bind(addr)?;
-        let local = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let handler = Arc::new(handler);
-        let active: Arc<AtomicUsize> = Arc::new(AtomicUsize::new(0));
-        let join = std::thread::spawn(move || {
-            while !stop2.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((mut sock, _peer)) => {
-                        // A silent or stalled client hits the timeout, the
-                        // parse fails, and its handler thread exits — no
-                        // connection can pin a thread forever.
-                        let _ = sock.set_read_timeout(Some(io_timeout));
-                        let _ = sock.set_write_timeout(Some(io_timeout));
-                        if active.load(Ordering::Acquire) >= max_conns {
-                            // Over the gate: 503 (best effort) and close —
-                            // never spawn.
-                            let _ = write_response(
-                                &mut sock,
-                                &Response::json(503, r#"{"error":"server busy"}"#.to_string()),
-                            );
-                            let _ = sock.shutdown(std::net::Shutdown::Both);
-                            continue;
-                        }
-                        active.fetch_add(1, Ordering::AcqRel);
-                        let slot = HandlerSlot(active.clone());
-                        let h = handler.clone();
-                        std::thread::spawn(move || {
-                            let _slot = slot;
-                            let resp = match parse_request(&mut sock) {
-                                Ok(req) => h(&req),
-                                Err(e) => Response::json(400, format!(r#"{{"error":"{e}"}}"#)),
-                            };
-                            let _ = write_response(&mut sock, &resp);
-                            let _ = sock.shutdown(std::net::Shutdown::Both);
-                        });
-                    }
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
-                    }
-                    // Client-aborted handshakes are transient — keep
-                    // accepting instead of killing the server.
-                    Err(ref e)
-                        if e.kind() == std::io::ErrorKind::ConnectionAborted
-                            || e.kind() == std::io::ErrorKind::Interrupted => {}
-                    Err(_) => break,
-                }
-            }
-        });
-        Ok(Server { addr: local, stop, join: Some(join) })
+        let svc = Arc::new(HttpService { handler });
+        let cfg = EngineConfig { io_timeout, max_conns, ..EngineConfig::default() };
+        let engine = Engine::start(addr, svc, cfg)?;
+        Ok(Server { addr: engine.addr, engine })
     }
 
+    /// Connections currently held by the engine.
+    pub fn live_conns(&self) -> usize {
+        self.engine.live_conns()
+    }
+
+    /// Graceful shutdown (idempotent; also runs on drop, via the engine).
     pub fn stop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
-    }
-}
-
-impl Drop for Server {
-    fn drop(&mut self) {
-        self.stop();
+        self.engine.stop();
     }
 }
 
 /// Blocking single-request client (tests, examples, CLI).
-pub fn request(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+pub fn request(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> Result<(u16, String)> {
     let mut sock = TcpStream::connect(addr)?;
     write!(
         sock,
@@ -287,6 +369,54 @@ mod tests {
     }
 
     #[test]
+    fn try_parse_is_incremental_and_byte_exact() {
+        let raw: &[u8] =
+            b"POST /api/x HTTP/1.1\r\nContent-Length: 4\r\nHost: h\r\n\r\nabcdTRAILING";
+        // Fed one byte at a time, the parser stays quiet until the exact
+        // byte that completes head + body, then leaves the rest buffered.
+        let mut buf = Vec::new();
+        let complete = raw.len() - "TRAILING".len();
+        for (i, &b) in raw.iter().enumerate() {
+            buf.push(b);
+            match try_parse_request(&mut buf).unwrap() {
+                None => assert!(i + 1 < complete, "complete request at byte {} unparsed", i + 1),
+                Some(req) => {
+                    assert_eq!(i + 1, complete, "early parse at byte {}", i + 1);
+                    assert_eq!(req.method, "POST");
+                    assert_eq!(req.path, "/api/x");
+                    assert_eq!(req.body, b"abcd");
+                    assert_eq!(buf, &raw[complete..i + 1], "consumed bytes must drain");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn try_parse_accepts_bare_newline_heads() {
+        let mut buf = b"GET /x HTTP/1.1\nHost: h\n\n".to_vec();
+        let req = try_parse_request(&mut buf).unwrap().unwrap();
+        assert_eq!(req.path, "/x");
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn try_parse_rejects_hostile_input_early() {
+        // A bogus method is rejected as soon as the request line is in —
+        // no waiting for the rest of the head.
+        let mut buf = b"BREW /pot HTTP/1.1\r\n".to_vec();
+        assert!(try_parse_request(&mut buf).is_err());
+        // An oversized declared body is rejected at the head, before a
+        // single body byte is buffered or allocated.
+        let mut buf =
+            format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1).into_bytes();
+        assert!(try_parse_request(&mut buf).is_err());
+        // A head that never ends is cut off at MAX_HEAD.
+        let mut buf = b"GET /x HTTP/1.1\r\n".to_vec();
+        buf.resize(buf.len() + MAX_HEAD + 2, b'a');
+        assert!(try_parse_request(&mut buf).is_err());
+    }
+
+    #[test]
     fn server_roundtrip() {
         let srv = Server::start("127.0.0.1:0", |req| {
             Response::text(200, format!("{} {}", req.method, req.path))
@@ -309,12 +439,12 @@ mod tests {
         idle.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
         // …does not block real requests…
         assert_eq!(request(srv.addr, "GET", "/", "").unwrap().0, 200);
-        // …and its handler gives up at the read timeout: the server sends
-        // its 400 (parse failure) and closes, so the client reaches EOF
+        // …and is dropped at the io deadline — without a byte written —
         // well before our own 5 s guard.
         let t0 = Instant::now();
         let mut buf = Vec::new();
         let _ = idle.read_to_end(&mut buf);
+        assert!(buf.is_empty(), "idle-timeout close must write nothing, got {buf:?}");
         assert!(
             t0.elapsed() < Duration::from_secs(4),
             "idle connection still open after the server timeout"
@@ -323,9 +453,9 @@ mod tests {
 
     #[test]
     fn connection_flood_is_gated_not_unbounded() {
-        // Cap 1: one parked silent connection occupies the only handler
-        // slot, so the next request is answered 503 instead of spawning
-        // another thread. Once the occupant leaves, service resumes.
+        // Budget 1: one parked silent connection occupies the only slot,
+        // so the next request is answered 503 instead of being served.
+        // Once the occupant leaves, service resumes.
         let srv = Server::start_with_limits(
             "127.0.0.1:0",
             Duration::from_millis(400),
@@ -334,17 +464,17 @@ mod tests {
         )
         .unwrap();
         let idle = TcpStream::connect(srv.addr).unwrap();
-        // Let the accept loop register the occupant before probing.
+        // Let the loop register the occupant before probing.
         std::thread::sleep(Duration::from_millis(100));
-        // Depending on timing the over-cap client reads the best-effort
-        // 503 or hits the reset — it must never be served a 200.
+        // Depending on timing the over-budget client reads the
+        // best-effort 503 or hits the reset — it must never be served.
         match request(srv.addr, "GET", "/", "") {
-            Ok((status, _)) => assert_eq!(status, 503, "over-cap connection must get 503"),
+            Ok((status, _)) => assert_eq!(status, 503, "over-budget connection must get 503"),
             Err(_) => {} // connection reset before the 503 was read — still gated
         }
         drop(idle);
-        // The occupant's handler exits at its read timeout; the slot
-        // frees and requests succeed again.
+        // The occupant is dropped at its io deadline; the slot frees and
+        // requests succeed again.
         let t0 = std::time::Instant::now();
         loop {
             match request(srv.addr, "GET", "/", "") {
@@ -355,6 +485,26 @@ mod tests {
                 _ => std::thread::sleep(Duration::from_millis(50)),
             }
         }
+    }
+
+    #[test]
+    fn over_budget_503_carries_retry_after() {
+        let srv = Server::start_with_limits(
+            "127.0.0.1:0",
+            Duration::from_secs(5),
+            1,
+            |_| Response::text(200, "ok"),
+        )
+        .unwrap();
+        let _idle = TcpStream::connect(srv.addr).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        // Read the raw rejection: status 503 plus the backoff header.
+        let mut sock = TcpStream::connect(srv.addr).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut raw = String::new();
+        let _ = sock.read_to_string(&mut raw);
+        assert!(raw.starts_with("HTTP/1.1 503"), "expected a 503, got: {raw:?}");
+        assert!(raw.contains("Retry-After: 1"), "503 must carry Retry-After, got: {raw:?}");
     }
 
     #[test]

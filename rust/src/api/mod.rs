@@ -36,6 +36,23 @@ pub fn serve_with_plane(
     Server::start(addr, move |req| state.route(req))
 }
 
+/// [`serve_with_plane`] with a tunable connection budget (optional plane):
+/// what `hoard serve --max-conns N` reaches for.
+pub fn serve_with_opts(
+    addr: &str,
+    hoard: Arc<Mutex<Hoard>>,
+    plane: Option<Arc<DataPlane>>,
+    max_conns: usize,
+) -> Result<Server> {
+    let mut state = ApiState::new(hoard);
+    if let Some(p) = plane {
+        state = state.with_plane(p);
+    }
+    Server::start_with_limits(addr, http::DEFAULT_IO_TIMEOUT, max_conns, move |req| {
+        state.route(req)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -27,6 +27,7 @@ pub mod dfs;
 pub mod experiments;
 pub mod k8s;
 pub mod metrics;
+pub mod net;
 pub mod peer;
 pub mod posix;
 pub mod runtime;

@@ -42,7 +42,7 @@ fn print_usage() {
     eprintln!(
         "hoard — distributed data caching for DL training (paper reproduction)\n\n\
          USAGE:\n  hoard exp <t1|f3|t3|f4|f5|t4|t5|util|readers|chunks|peers|jobs|evict|ablations|all> [--json]\n  \
-         hoard serve [--addr 127.0.0.1:7070] [--config FILE]\n        \
+         hoard serve [--addr 127.0.0.1:7070] [--config FILE] [--max-conns N]\n        \
          [--data-root DIR] [--data-items N] [--data-chunk BYTES]\n  \
          hoard datagen --out DIR [--items N]\n  \
          hoard sim --mode <rem|nvme|hoard> [--epochs N] [--readers N]\n  \
@@ -188,11 +188,11 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
         None => None,
     };
+    let max_conns = flag(args, "--max-conns")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(hoard::api::http::DEFAULT_MAX_CONNS);
     let has_plane = plane.is_some();
-    let served = match plane {
-        Some(p) => hoard::api::serve_with_plane(addr, hoard, p),
-        None => hoard::api::serve(addr, hoard),
-    };
+    let served = hoard::api::serve_with_opts(addr, hoard, plane, max_conns);
     match served {
         Ok(server) => {
             println!("hoard api listening on http://{}", server.addr);

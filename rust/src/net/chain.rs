@@ -1,0 +1,138 @@
+//! `BufferChain` — a queue of byte segments with a front cursor, the
+//! write-side buffer of an event-loop connection.
+//!
+//! Responses queue as whole segments (for a chunk frame: one pooled
+//! header buffer plus the payload `Vec` itself — no copy into a contiguous
+//! staging buffer, so a frame larger than one pooled buffer needs no
+//! special case). `front`/`advance` drive partial non-blocking writes;
+//! fully drained segments are handed back for recycling into a
+//! [`BufPool`](crate::posix::bufpool::BufPool).
+
+use std::collections::VecDeque;
+
+#[derive(Debug, Default)]
+pub struct BufferChain {
+    segs: VecDeque<Vec<u8>>,
+    /// Bytes of `segs[0]` already written out.
+    front_off: usize,
+    /// Total unwritten bytes across all segments.
+    bytes: usize,
+}
+
+impl BufferChain {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Queue `seg` for writing (empty segments are dropped, not queued).
+    pub fn push(&mut self, seg: Vec<u8>) {
+        if seg.is_empty() {
+            return;
+        }
+        self.bytes += seg.len();
+        self.segs.push_back(seg);
+    }
+
+    /// The next contiguous unwritten bytes, if any.
+    pub fn front(&self) -> Option<&[u8]> {
+        self.segs.front().map(|s| &s[self.front_off..])
+    }
+
+    /// Consume `n` written bytes from the front (`n` may span segments).
+    /// Fully drained segments are pushed onto `recycled` for the caller to
+    /// return to its pool.
+    pub fn advance(&mut self, mut n: usize, recycled: &mut Vec<Vec<u8>>) {
+        debug_assert!(n <= self.bytes, "advance {n} past {} buffered bytes", self.bytes);
+        self.bytes = self.bytes.saturating_sub(n);
+        while n > 0 {
+            let rem = match self.segs.front() {
+                Some(s) => s.len() - self.front_off,
+                None => return,
+            };
+            if n < rem {
+                self.front_off += n;
+                return;
+            }
+            n -= rem;
+            self.front_off = 0;
+            recycled.push(self.segs.pop_front().expect("front checked above"));
+        }
+    }
+
+    /// Drop everything buffered, recycling the segments.
+    pub fn clear(&mut self, recycled: &mut Vec<Vec<u8>>) {
+        self.front_off = 0;
+        self.bytes = 0;
+        recycled.extend(self.segs.drain(..));
+    }
+
+    /// Unwritten bytes buffered.
+    pub fn len(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drain the chain via front/advance in `step`-byte bites.
+    fn drain(chain: &mut BufferChain, step: usize) -> (Vec<u8>, Vec<Vec<u8>>) {
+        let mut out = Vec::new();
+        let mut recycled = Vec::new();
+        while let Some(front) = chain.front() {
+            let take = step.min(front.len());
+            out.extend_from_slice(&front[..take]);
+            chain.advance(take, &mut recycled);
+        }
+        (out, recycled)
+    }
+
+    #[test]
+    fn multi_segment_drain_is_byte_exact() {
+        for step in [1usize, 2, 3, 5, 100] {
+            let mut chain = BufferChain::new();
+            chain.push(b"hello ".to_vec());
+            chain.push(Vec::new()); // dropped
+            chain.push(b"event ".to_vec());
+            chain.push(b"loop".to_vec());
+            assert_eq!(chain.len(), 16);
+            let (out, recycled) = drain(&mut chain, step);
+            assert_eq!(out, b"hello event loop");
+            assert_eq!(recycled.len(), 3, "every non-empty segment recycles");
+            assert!(chain.is_empty());
+            assert_eq!(chain.front(), None);
+        }
+    }
+
+    #[test]
+    fn advance_within_one_segment_keeps_offset() {
+        let mut chain = BufferChain::new();
+        chain.push(vec![1, 2, 3, 4, 5]);
+        let mut recycled = Vec::new();
+        chain.advance(2, &mut recycled);
+        assert!(recycled.is_empty(), "partially written segment stays queued");
+        assert_eq!(chain.front().unwrap(), &[3, 4, 5]);
+        assert_eq!(chain.len(), 3);
+        chain.advance(3, &mut recycled);
+        assert_eq!(recycled.len(), 1);
+        assert!(chain.is_empty());
+    }
+
+    #[test]
+    fn clear_recycles_all_segments() {
+        let mut chain = BufferChain::new();
+        chain.push(vec![1; 10]);
+        chain.push(vec![2; 10]);
+        let mut recycled = Vec::new();
+        chain.advance(5, &mut recycled);
+        chain.clear(&mut recycled);
+        assert_eq!(recycled.len(), 2);
+        assert!(chain.is_empty());
+        assert_eq!(chain.front(), None);
+    }
+}

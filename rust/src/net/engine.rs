@@ -1,0 +1,822 @@
+//! The event-driven connection engine: one loop thread multiplexing every
+//! connection over an [`EventLoop`], a small worker pool for request
+//! handling, and a [`Service`] trait that both wire protocols
+//! (`peer::proto` frames and `api::http` requests) plug into.
+//!
+//! ## Architecture
+//!
+//! ```text
+//!            ┌────────────────────────── loop thread ─────────────────────────┐
+//!  accept ──▶│ conns: token → Conn { inbuf, out: BufferChain, state }         │
+//!            │   readable ─▶ read to inbuf ─▶ try_parse ─▶ dispatch ──────────┼──▶ JobQueue
+//!            │   writable ─▶ flush out chain (partial writes resume)          │      │ workers
+//!            │   deadline wheel ─▶ close idle conns                           │      ▼ svc.handle
+//!            │ ◀── completions (token, Reply) + waker ◀──────────────────────────────┘
+//!            └────────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Per-connection state machine: *Reading* (bytes accumulate in `inbuf`
+//! until `try_parse` yields a request) → *Serving* (`in_flight`: the
+//! request is on a worker; at most one per connection, so responses keep
+//! request order) → *Writing* (the reply's segments drain through the
+//! [`BufferChain`] under write readiness) → back to *Reading* (any
+//! pipelined bytes already buffered parse immediately).
+//!
+//! Invariants:
+//!  * the loop thread never blocks on a socket, a disk read, or a token
+//!    bucket — anything that can block runs on the workers;
+//!  * backpressure, not collapse: at the connection budget the listener
+//!    answers the service's busy reply and closes *new* sockets — live
+//!    connections are never mid-stream dropped;
+//!  * io deadlines come from a [`TimerWheel`] (one entry per connection,
+//!    lazily re-armed), not per-socket `SO_RCVTIMEO` — O(1) per tick at
+//!    any connection count, and an idle-timeout close writes nothing;
+//!  * buffers recycle: connection read buffers and drained write segments
+//!    return to a shared [`BufPool`].
+//!
+//! Under light load (small readiness batches) requests the service marks
+//! [`Service::serve_inline`] are handled on the loop thread itself,
+//! skipping two thread handoffs — at 8 connections the engine matches the
+//! thread-per-connection design it replaced; under bursts everything goes
+//! through the workers and the loop stays responsive.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context as _, Result};
+
+use super::chain::BufferChain;
+use super::evloop::{Event, EventLoop, Interest, Waker};
+use super::wheel::TimerWheel;
+use crate::posix::bufpool::BufPool;
+
+const LISTENER_TOKEN: u64 = 0;
+const FIRST_CONN_TOKEN: u64 = 1;
+/// Per-readiness read bite (and the loop's reusable scratch buffer size).
+const READ_CHUNK: usize = 64 << 10;
+/// A readiness batch at least this large counts as a burst: inline
+/// serving is skipped and every request goes to the workers.
+const INLINE_BATCH_CUTOFF: usize = 8;
+const WHEEL_SLOTS: usize = 128;
+
+/// A response as a list of byte segments (written in order, zero-copy for
+/// payloads the service already owns). `close` ⇒ close the connection
+/// once every segment is flushed.
+#[derive(Debug)]
+pub struct Reply {
+    pub segments: Vec<Vec<u8>>,
+    pub close: bool,
+}
+
+impl Reply {
+    pub fn new(segments: Vec<Vec<u8>>) -> Self {
+        Reply { segments, close: false }
+    }
+
+    pub fn closing(segments: Vec<Vec<u8>>) -> Self {
+        Reply { segments, close: true }
+    }
+}
+
+/// A wire protocol plugged into the [`Engine`]. Parsing runs on the loop
+/// thread (must be cheap and incremental); `handle` runs on a worker (may
+/// block on disk, locks, token buckets).
+pub trait Service: Send + Sync + 'static {
+    type Request: Send + 'static;
+
+    /// Incremental parse: inspect `inbuf` and either cut one complete
+    /// request out of it (draining the consumed bytes) or report that
+    /// more bytes are needed (`Ok(None)`, `inbuf` untouched). An `Err` is
+    /// a protocol violation: the connection is closed (after
+    /// [`Service::parse_error_reply`], if any). Must reject hostile
+    /// lengths *before* allocating.
+    fn try_parse(&self, inbuf: &mut Vec<u8>) -> Result<Option<Self::Request>>;
+
+    /// Handle one request (worker thread; blocking is fine).
+    fn handle(&self, req: Self::Request) -> Reply;
+
+    /// Per-connection cap on buffered unparsed input. A connection whose
+    /// `inbuf` reaches the cap without yielding a request is closed.
+    fn max_buffered(&self) -> usize;
+
+    /// Best-effort reply for connections over the budget (written
+    /// non-blocking to the fresh socket, then closed). `None` ⇒ just
+    /// close.
+    fn busy_reply(&self) -> Option<Reply> {
+        None
+    }
+
+    /// Reply to send (then close) when `try_parse` errors. `None` ⇒ close
+    /// silently.
+    fn parse_error_reply(&self, _err: &anyhow::Error) -> Option<Reply> {
+        None
+    }
+
+    /// Whether `req` is cheap enough to serve on the loop thread under
+    /// light load (no blocking calls, small payload). Default: never.
+    fn serve_inline(&self, _req: &Self::Request) -> bool {
+        false
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Idle deadline: a connection with no io progress and no request in
+    /// flight for this long is closed (without writing anything).
+    pub io_timeout: Duration,
+    /// Connection budget: at the cap, new sockets get the busy reply and
+    /// are closed. Live connections are never dropped.
+    pub max_conns: usize,
+    /// Worker threads handling requests.
+    pub workers: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            io_timeout: Duration::from_secs(10),
+            max_conns: 4096,
+            workers: default_workers(),
+        }
+    }
+}
+
+fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 8)
+}
+
+type Job = Box<dyn FnOnce() + Send>;
+
+/// Mutex+Condvar job queue (not `std::sync::mpsc`: a shared `Receiver`
+/// behind a `Mutex` would serialize workers across the blocking `recv`).
+/// `close` lets queued jobs drain, then wakes every worker to exit.
+struct JobQueue<T> {
+    inner: Mutex<(VecDeque<T>, bool)>,
+    cv: Condvar,
+}
+
+impl<T> JobQueue<T> {
+    fn new() -> Self {
+        JobQueue { inner: Mutex::new((VecDeque::new(), false)), cv: Condvar::new() }
+    }
+
+    fn push(&self, item: T) {
+        let mut g = self.inner.lock().unwrap();
+        if g.1 {
+            return;
+        }
+        g.0.push_back(item);
+        drop(g);
+        self.cv.notify_one();
+    }
+
+    fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.0.pop_front() {
+                return Some(item);
+            }
+            if g.1 {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        self.inner.lock().unwrap().1 = true;
+        self.cv.notify_all();
+    }
+}
+
+/// A running engine. Dropping (or [`Engine::stop`]) severs every
+/// connection, joins the loop, and drains the workers.
+pub struct Engine {
+    /// Bound address (bind to port 0 and read this back).
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    waker: Waker,
+    live: Arc<AtomicUsize>,
+    jobs: Arc<JobQueue<Job>>,
+    loop_join: Option<std::thread::JoinHandle<()>>,
+    worker_joins: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Engine {
+    pub fn start<S: Service>(addr: &str, svc: Arc<S>, cfg: EngineConfig) -> Result<Engine> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let evloop = EventLoop::new()?;
+        let waker = evloop.waker();
+        let stop = Arc::new(AtomicBool::new(false));
+        let live = Arc::new(AtomicUsize::new(0));
+        let jobs: Arc<JobQueue<Job>> = Arc::new(JobQueue::new());
+        let worker_joins = (0..cfg.workers.max(1))
+            .map(|i| {
+                let jobs = jobs.clone();
+                std::thread::Builder::new()
+                    .name(format!("hoard-net-worker-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = jobs.pop() {
+                            job();
+                        }
+                    })
+                    .context("spawning engine worker")
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let ctx = LoopCtx {
+            svc,
+            cfg,
+            pool: Arc::new(BufPool::new(256, 1 << 20)),
+            jobs: jobs.clone(),
+            completions: Arc::new(Mutex::new(Vec::new())),
+            sleeping: Arc::new(AtomicBool::new(false)),
+            waker: waker.clone(),
+            live: live.clone(),
+            stop: stop.clone(),
+            scratch: RefCell::new(vec![0u8; READ_CHUNK]),
+        };
+        let loop_join = std::thread::Builder::new()
+            .name("hoard-net-loop".into())
+            .spawn(move || run_loop(listener, evloop, ctx))
+            .context("spawning engine loop")?;
+        Ok(Engine { addr, stop, waker, live, jobs, loop_join: Some(loop_join), worker_joins })
+    }
+
+    /// Connections currently held by the loop (observability; tests use
+    /// it to assert churn returns to zero).
+    pub fn live_conns(&self) -> usize {
+        self.live.load(Ordering::Acquire)
+    }
+
+    /// Graceful shutdown: wake the loop (which severs every connection),
+    /// join it, then drain and join the workers. Idempotent.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.waker.wake();
+        if let Some(j) = self.loop_join.take() {
+            let _ = j.join();
+        }
+        self.jobs.close();
+        for j in self.worker_joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Per-connection state (the `Reading → Serving → Writing` machine).
+struct Conn {
+    sock: TcpStream,
+    token: u64,
+    /// Buffered unparsed input.
+    inbuf: Vec<u8>,
+    /// Buffered unwritten output.
+    out: BufferChain,
+    /// A request is on a worker; parsing pauses (order preservation).
+    in_flight: bool,
+    /// Close once `out` drains (EOF seen, parse error, or service said
+    /// close).
+    close_after_write: bool,
+    /// Peer half-closed its write side.
+    read_closed: bool,
+    /// Authoritative idle deadline (the wheel entry is a lazy hint).
+    deadline: Instant,
+    interest: Interest,
+}
+
+enum Verdict {
+    Keep,
+    Close,
+}
+
+struct LoopCtx<S: Service> {
+    svc: Arc<S>,
+    cfg: EngineConfig,
+    pool: Arc<BufPool>,
+    jobs: Arc<JobQueue<Job>>,
+    completions: Arc<Mutex<Vec<(u64, Reply)>>>,
+    /// True while the loop is (about to be) parked in poll — workers only
+    /// pay the wake syscall when it is.
+    sleeping: Arc<AtomicBool>,
+    waker: Waker,
+    live: Arc<AtomicUsize>,
+    stop: Arc<AtomicBool>,
+    /// Loop-thread read scratch (avoids zero-filling `inbuf` tails per
+    /// read).
+    scratch: RefCell<Vec<u8>>,
+}
+
+impl<S: Service> LoopCtx<S> {
+    /// Hand a request to the worker pool; the reply comes back through
+    /// `completions`.
+    fn dispatch(&self, token: u64, req: S::Request) {
+        let svc = self.svc.clone();
+        let completions = self.completions.clone();
+        let waker = self.waker.clone();
+        let sleeping = self.sleeping.clone();
+        self.jobs.push(Box::new(move || {
+            // A panicking handler severs its connection (empty closing
+            // reply) instead of wedging it in the Serving state forever.
+            let reply =
+                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| svc.handle(req))) {
+                    Ok(r) => r,
+                    Err(_) => Reply::closing(vec![]),
+                };
+            completions.lock().unwrap().push((token, reply));
+            if sleeping.load(Ordering::SeqCst) {
+                waker.wake();
+            }
+        }));
+    }
+
+    /// Drain the socket's readable bytes into `inbuf` (up to the buffer
+    /// cap).
+    fn on_readable(&self, conn: &mut Conn) -> Verdict {
+        let cap = self.svc.max_buffered();
+        let mut scratch = self.scratch.borrow_mut();
+        loop {
+            if conn.inbuf.len() >= cap {
+                break;
+            }
+            let want = READ_CHUNK.min(cap - conn.inbuf.len());
+            match conn.sock.read(&mut scratch[..want]) {
+                Ok(0) => {
+                    conn.read_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.inbuf.extend_from_slice(&scratch[..n]);
+                    conn.deadline = Instant::now() + self.cfg.io_timeout;
+                    if n < want {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => return Verdict::Close,
+            }
+        }
+        Verdict::Keep
+    }
+
+    /// Parse-and-dispatch until blocked on bytes or an in-flight request.
+    fn pump(&self, conn: &mut Conn, inline_ok: bool) -> Verdict {
+        while !conn.in_flight && !conn.close_after_write {
+            match self.svc.try_parse(&mut conn.inbuf) {
+                Ok(Some(req)) => {
+                    if inline_ok && self.svc.serve_inline(&req) {
+                        let reply = self.svc.handle(req);
+                        queue_reply(conn, reply);
+                    } else {
+                        conn.in_flight = true;
+                        self.dispatch(conn.token, req);
+                    }
+                }
+                Ok(None) => {
+                    if conn.inbuf.len() >= self.svc.max_buffered() {
+                        // A frame the service can never complete within
+                        // its buffer budget.
+                        return Verdict::Close;
+                    }
+                    if conn.read_closed {
+                        // EOF with no completable request: flush whatever
+                        // is queued, then close.
+                        conn.close_after_write = true;
+                    }
+                    break;
+                }
+                Err(err) => {
+                    conn.read_closed = true;
+                    conn.inbuf.clear();
+                    match self.svc.parse_error_reply(&err) {
+                        Some(reply) => {
+                            queue_reply(conn, reply);
+                            conn.close_after_write = true;
+                        }
+                        None => return Verdict::Close,
+                    }
+                    break;
+                }
+            }
+        }
+        Verdict::Keep
+    }
+
+    /// Write queued output until the socket blocks, recycling drained
+    /// segments.
+    fn flush(&self, conn: &mut Conn) -> Verdict {
+        let mut recycled = Vec::new();
+        let verdict = loop {
+            let n = {
+                let Some(front) = conn.out.front() else { break Verdict::Keep };
+                match conn.sock.write(front) {
+                    Ok(0) => break Verdict::Close,
+                    Ok(n) => n,
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break Verdict::Keep,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => break Verdict::Close,
+                }
+            };
+            conn.out.advance(n, &mut recycled);
+            conn.deadline = Instant::now() + self.cfg.io_timeout;
+        };
+        for seg in recycled {
+            self.pool.put(seg);
+        }
+        verdict
+    }
+
+    /// Flush, then either close or re-register with the interest the
+    /// connection's state implies and park it back in the map.
+    fn finish(
+        &self,
+        evloop: &mut EventLoop,
+        conns: &mut HashMap<u64, Conn>,
+        mut conn: Conn,
+        verdict: Verdict,
+    ) {
+        let verdict = match verdict {
+            Verdict::Keep => self.flush(&mut conn),
+            Verdict::Close => Verdict::Close,
+        };
+        let drained = conn.close_after_write && conn.out.is_empty() && !conn.in_flight;
+        if matches!(verdict, Verdict::Close) || drained {
+            self.close_conn(evloop, conn);
+            return;
+        }
+        let want = Interest::new(
+            !conn.read_closed
+                && !conn.close_after_write
+                && conn.inbuf.len() < self.svc.max_buffered(),
+            !conn.out.is_empty(),
+        );
+        if want != conn.interest {
+            if evloop.reregister(conn.sock.as_raw_fd(), conn.token, want).is_err() {
+                self.close_conn(evloop, conn);
+                return;
+            }
+            conn.interest = want;
+        }
+        conns.insert(conn.token, conn);
+    }
+
+    fn close_conn(&self, evloop: &mut EventLoop, mut conn: Conn) {
+        let _ = evloop.deregister(conn.sock.as_raw_fd());
+        let _ = conn.sock.shutdown(Shutdown::Both);
+        self.pool.put(std::mem::take(&mut conn.inbuf));
+        let mut recycled = Vec::new();
+        conn.out.clear(&mut recycled);
+        for seg in recycled {
+            self.pool.put(seg);
+        }
+    }
+
+    /// Accept everything pending; over the budget each fresh socket gets
+    /// the busy reply (one non-blocking attempt) and is closed.
+    fn accept_burst(
+        &self,
+        listener: &TcpListener,
+        evloop: &mut EventLoop,
+        conns: &mut HashMap<u64, Conn>,
+        next_token: &mut u64,
+        wheel: &mut TimerWheel,
+    ) {
+        loop {
+            match listener.accept() {
+                Ok((sock, _peer)) => {
+                    let _ = sock.set_nodelay(true);
+                    if sock.set_nonblocking(true).is_err() {
+                        let _ = sock.shutdown(Shutdown::Both);
+                        continue;
+                    }
+                    if conns.len() >= self.cfg.max_conns {
+                        if let Some(reply) = self.svc.busy_reply() {
+                            let mut s = &sock;
+                            for seg in &reply.segments {
+                                if s.write_all(seg).is_err() {
+                                    break;
+                                }
+                            }
+                        }
+                        let _ = sock.shutdown(Shutdown::Both);
+                        continue;
+                    }
+                    let token = *next_token;
+                    *next_token += 1;
+                    if evloop.register(sock.as_raw_fd(), token, Interest::READ).is_err() {
+                        let _ = sock.shutdown(Shutdown::Both);
+                        continue;
+                    }
+                    let deadline = Instant::now() + self.cfg.io_timeout;
+                    wheel.schedule(token, deadline);
+                    conns.insert(
+                        token,
+                        Conn {
+                            sock,
+                            token,
+                            inbuf: self.pool.take(),
+                            out: BufferChain::new(),
+                            in_flight: false,
+                            close_after_write: false,
+                            read_closed: false,
+                            deadline,
+                            interest: Interest::READ,
+                        },
+                    );
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(ref e)
+                    if e.kind() == io::ErrorKind::ConnectionAborted
+                        || e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+fn queue_reply(conn: &mut Conn, reply: Reply) {
+    for seg in reply.segments {
+        conn.out.push(seg);
+    }
+    if reply.close {
+        conn.close_after_write = true;
+    }
+}
+
+fn wheel_tick(io_timeout: Duration) -> Duration {
+    (io_timeout / 32).clamp(Duration::from_millis(5), Duration::from_millis(250))
+}
+
+fn run_loop<S: Service>(listener: TcpListener, mut evloop: EventLoop, ctx: LoopCtx<S>) {
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut wheel = TimerWheel::new(wheel_tick(ctx.cfg.io_timeout), WHEEL_SLOTS);
+    let mut events: Vec<Event> = Vec::new();
+    let mut due: Vec<u64> = Vec::new();
+    let mut next_token = FIRST_CONN_TOKEN;
+    if evloop.register(listener.as_raw_fd(), LISTENER_TOKEN, Interest::READ).is_err() {
+        return;
+    }
+    loop {
+        // Park until the next wheel tick, socket readiness, or a wake.
+        // `sleeping` goes up *before* the completion check: a worker that
+        // posts after the check sees it and wakes us (no lost wakeups).
+        ctx.sleeping.store(true, Ordering::SeqCst);
+        let timeout = if ctx.completions.lock().unwrap().is_empty() {
+            wheel.next_tick_in(Instant::now())
+        } else {
+            Duration::ZERO
+        };
+        let poll_res = evloop.poll(&mut events, Some(timeout));
+        ctx.sleeping.store(false, Ordering::SeqCst);
+        if ctx.stop.load(Ordering::SeqCst) || poll_res.is_err() {
+            break;
+        }
+        // Light load (small readiness batch) ⇒ cheap requests may be
+        // served inline on the loop thread; bursts all go to workers.
+        let inline_ok = events.len() < INLINE_BATCH_CUTOFF;
+        for ev in &events {
+            if ev.token == LISTENER_TOKEN {
+                ctx.accept_burst(&listener, &mut evloop, &mut conns, &mut next_token, &mut wheel);
+                continue;
+            }
+            let Some(mut conn) = conns.remove(&ev.token) else { continue };
+            let mut verdict = Verdict::Keep;
+            if ev.readable {
+                verdict = ctx.on_readable(&mut conn);
+                if matches!(verdict, Verdict::Keep) {
+                    verdict = ctx.pump(&mut conn, inline_ok);
+                }
+            }
+            // `finish` always attempts a flush, which covers `ev.writable`.
+            ctx.finish(&mut evloop, &mut conns, conn, verdict);
+        }
+        // Worker completions: queue the reply, resume parsing pipelined
+        // bytes, flush.
+        let done: Vec<(u64, Reply)> = std::mem::take(&mut *ctx.completions.lock().unwrap());
+        for (token, reply) in done {
+            let Some(mut conn) = conns.remove(&token) else { continue };
+            conn.in_flight = false;
+            conn.deadline = Instant::now() + ctx.cfg.io_timeout;
+            queue_reply(&mut conn, reply);
+            let verdict = ctx.pump(&mut conn, false);
+            ctx.finish(&mut evloop, &mut conns, conn, verdict);
+        }
+        // Deadlines. Lazy: `conn.deadline` is authoritative; a fired
+        // entry whose deadline moved (io progress) re-arms, an in-flight
+        // request gets a fresh lease, and a truly idle conn closes —
+        // without writing anything.
+        due.clear();
+        let now = Instant::now();
+        wheel.advance(now, &mut due);
+        for &token in &due {
+            let Some(conn) = conns.get(&token) else { continue };
+            if conn.in_flight {
+                wheel.schedule(token, now + ctx.cfg.io_timeout);
+                continue;
+            }
+            if conn.deadline > now {
+                let deadline = conn.deadline;
+                wheel.schedule(token, deadline);
+                continue;
+            }
+            let conn = conns.remove(&token).expect("present: looked up above");
+            ctx.close_conn(&mut evloop, conn);
+        }
+        ctx.live.store(conns.len(), Ordering::Release);
+    }
+    // Shutdown: sever every live connection.
+    for (_, conn) in conns.drain() {
+        ctx.close_conn(&mut evloop, conn);
+    }
+    ctx.live.store(0, Ordering::Release);
+    let _ = evloop.deregister(listener.as_raw_fd());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader};
+
+    /// Newline-delimited echo-reversed protocol; the line "die" is a
+    /// parse error, "slow" sleeps on the worker.
+    struct Echo;
+
+    impl Service for Echo {
+        type Request = Vec<u8>;
+
+        fn try_parse(&self, inbuf: &mut Vec<u8>) -> Result<Option<Vec<u8>>> {
+            match inbuf.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    let line = inbuf[..i].to_vec();
+                    inbuf.drain(..=i);
+                    if line == b"die" {
+                        anyhow::bail!("poison line");
+                    }
+                    Ok(Some(line))
+                }
+                None => Ok(None),
+            }
+        }
+
+        fn handle(&self, req: Vec<u8>) -> Reply {
+            let mut out = req;
+            if out == b"slow" {
+                std::thread::sleep(Duration::from_millis(100));
+            }
+            out.reverse();
+            out.push(b'\n');
+            Reply::new(vec![out])
+        }
+
+        fn max_buffered(&self) -> usize {
+            1024
+        }
+
+        fn busy_reply(&self) -> Option<Reply> {
+            Some(Reply::closing(vec![b"busy\n".to_vec()]))
+        }
+    }
+
+    fn start(cfg: EngineConfig) -> Engine {
+        Engine::start("127.0.0.1:0", Arc::new(Echo), cfg).unwrap()
+    }
+
+    fn roundtrip(sock: &mut TcpStream, line: &str) -> String {
+        sock.write_all(format!("{line}\n").as_bytes()).unwrap();
+        let mut r = BufReader::new(sock.try_clone().unwrap());
+        let mut out = String::new();
+        r.read_line(&mut out).unwrap();
+        out.trim_end().to_string()
+    }
+
+    #[test]
+    fn echo_roundtrips_across_connections_and_pipelines() {
+        let mut eng = start(EngineConfig::default());
+        let mut socks: Vec<TcpStream> =
+            (0..4).map(|_| TcpStream::connect(eng.addr).unwrap()).collect();
+        for (i, s) in socks.iter_mut().enumerate() {
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            assert_eq!(roundtrip(s, &format!("hello{i}")), format!("{i}olleh"));
+        }
+        // Pipelined: two requests in one write, answers in order.
+        let s = &mut socks[0];
+        s.write_all(b"ab\nslow\ncd\n").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut lines = Vec::new();
+        for _ in 0..3 {
+            let mut l = String::new();
+            r.read_line(&mut l).unwrap();
+            lines.push(l.trim_end().to_string());
+        }
+        assert_eq!(lines, vec!["ba", "wols", "dc"]);
+        eng.stop();
+    }
+
+    #[test]
+    fn byte_at_a_time_requests_parse_incrementally() {
+        let mut eng = start(EngineConfig::default());
+        let mut s = TcpStream::connect(eng.addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        for b in b"ping\n" {
+            s.write_all(&[*b]).unwrap();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut out = String::new();
+        r.read_line(&mut out).unwrap();
+        assert_eq!(out.trim_end(), "gnip");
+        eng.stop();
+    }
+
+    #[test]
+    fn over_budget_connections_get_busy_reply_and_close() {
+        let mut eng = start(EngineConfig {
+            io_timeout: Duration::from_secs(5),
+            max_conns: 1,
+            workers: 2,
+        });
+        let mut first = TcpStream::connect(eng.addr).unwrap();
+        first.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        assert_eq!(roundtrip(&mut first, "a"), "a");
+        // Budget full: the next socket reads the busy reply then EOF.
+        let mut second = TcpStream::connect(eng.addr).unwrap();
+        second.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut buf = Vec::new();
+        second.read_to_end(&mut buf).unwrap();
+        assert_eq!(buf, b"busy\n");
+        // The first (in-budget) connection was never disturbed.
+        assert_eq!(roundtrip(&mut first, "bc"), "cb");
+        eng.stop();
+    }
+
+    #[test]
+    fn idle_connections_close_at_the_deadline_without_writing() {
+        let mut eng = start(EngineConfig {
+            io_timeout: Duration::from_millis(150),
+            max_conns: 64,
+            workers: 2,
+        });
+        let mut idle = TcpStream::connect(eng.addr).unwrap();
+        idle.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let t0 = Instant::now();
+        let mut buf = Vec::new();
+        idle.read_to_end(&mut buf).unwrap();
+        assert!(buf.is_empty(), "idle-timeout close must write nothing, got {buf:?}");
+        assert!(t0.elapsed() < Duration::from_secs(5), "deadline wheel never fired");
+        // Connection count returns to zero.
+        let t0 = Instant::now();
+        while eng.live_conns() != 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "live_conns stuck nonzero");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        eng.stop();
+    }
+
+    #[test]
+    fn parse_errors_close_silently_by_default() {
+        let mut eng = start(EngineConfig::default());
+        let mut s = TcpStream::connect(eng.addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.write_all(b"die\n").unwrap();
+        let mut buf = Vec::new();
+        s.read_to_end(&mut buf).unwrap();
+        assert!(buf.is_empty(), "parse-error close must write nothing (no reply configured)");
+        eng.stop();
+    }
+
+    #[test]
+    fn stop_severs_live_connections() {
+        let mut eng = start(EngineConfig::default());
+        let mut s = TcpStream::connect(eng.addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        assert_eq!(roundtrip(&mut s, "x"), "x");
+        eng.stop();
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf); // EOF or reset — either way, severed
+        assert!(buf.is_empty());
+        // Stopped engine refuses new connections (or resets them fast).
+        assert!(
+            TcpStream::connect(eng.addr)
+                .map(|mut c| {
+                    let _ = c.set_read_timeout(Some(Duration::from_secs(2)));
+                    let mut b = Vec::new();
+                    matches!(c.read_to_end(&mut b), Ok(0)) || b.is_empty()
+                })
+                .unwrap_or(true),
+            "stopped engine must not serve"
+        );
+    }
+}

@@ -1,0 +1,33 @@
+//! Event-driven networking: the readiness-based connection engine behind
+//! [`PeerServer`](crate::peer::PeerServer) and the HTTP API server.
+//!
+//! The thread-per-connection servers of earlier iterations spent a stack
+//! and a scheduler slot per socket and capped out at 128 connections. This
+//! module replaces that with one loop thread multiplexing every
+//! connection (epoll on Linux via the [`sys`] shim, poll(2) elsewhere —
+//! std-only, no external crates) plus a small worker pool for anything
+//! that can block. Layers:
+//!
+//! * [`sys`] — FFI shim: epoll / poll / wake pipe / RLIMIT_NOFILE;
+//! * [`evloop`] — [`EventLoop`]: register / reregister / deregister fds
+//!   with a token and [`Interest`], poll for [`Event`]s, cross-thread
+//!   [`Waker`];
+//! * [`chain`] — [`BufferChain`]: segmented write buffering for partial
+//!   non-blocking writes with pool recycling;
+//! * [`wheel`] — [`TimerWheel`]: io deadlines without per-socket
+//!   `SO_RCVTIMEO`;
+//! * [`engine`] — [`Engine`]: connection state machines, accept and
+//!   backpressure at the connection budget, worker-pool handoff, and the
+//!   [`Service`] trait the wire protocols implement.
+
+pub mod chain;
+pub mod engine;
+pub mod evloop;
+pub mod sys;
+pub mod wheel;
+
+pub use chain::BufferChain;
+pub use engine::{Engine, EngineConfig, Reply, Service};
+pub use evloop::{Event, EventLoop, Interest, Waker};
+pub use sys::raise_nofile_limit;
+pub use wheel::TimerWheel;

@@ -1,0 +1,315 @@
+//! Thin FFI shim over the handful of POSIX calls the event loop needs:
+//! epoll (Linux), poll (portable fallback), a non-blocking wake pipe, and
+//! RLIMIT_NOFILE. The offline build has no `libc` crate, but `std`
+//! already links libc — declaring the symbols in an `extern "C"` block is
+//! all it takes, with the constants spelled out per target.
+//!
+//! Everything here returns `std::io::Error` (via `last_os_error`) so the
+//! layers above never see raw errnos.
+
+use std::io;
+use std::time::Duration;
+
+/// Raw file descriptor (what `std::os::fd::RawFd` is on every POSIX
+/// target; spelled out so this module stays self-contained).
+pub type RawFd = i32;
+
+// ---------------------------------------------------------------- epoll --
+
+/// `struct epoll_event`. Packed on x86 (the kernel ABI packs it there);
+/// natural alignment elsewhere. Fields are read *by value* at use sites —
+/// never by reference — so the packed layout cannot produce unaligned
+/// references.
+#[repr(C)]
+#[cfg_attr(any(target_arch = "x86_64", target_arch = "x86"), repr(packed))]
+#[derive(Clone, Copy)]
+pub struct EpollEvent {
+    pub events: u32,
+    pub data: u64,
+}
+
+#[cfg(target_os = "linux")]
+pub const EPOLLIN: u32 = 0x001;
+#[cfg(target_os = "linux")]
+pub const EPOLLOUT: u32 = 0x004;
+#[cfg(target_os = "linux")]
+pub const EPOLLERR: u32 = 0x008;
+#[cfg(target_os = "linux")]
+pub const EPOLLHUP: u32 = 0x010;
+#[cfg(target_os = "linux")]
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+#[cfg(target_os = "linux")]
+const EPOLL_CTL_ADD: i32 = 1;
+#[cfg(target_os = "linux")]
+const EPOLL_CTL_DEL: i32 = 2;
+#[cfg(target_os = "linux")]
+const EPOLL_CTL_MOD: i32 = 3;
+#[cfg(target_os = "linux")]
+const EPOLL_CLOEXEC: i32 = 0o2000000;
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout_ms: i32) -> i32;
+    fn pipe2(fds: *mut i32, flags: i32) -> i32;
+}
+
+#[cfg(target_os = "linux")]
+pub fn epoll_create() -> io::Result<RawFd> {
+    let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+    if fd < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(fd)
+}
+
+#[cfg(target_os = "linux")]
+fn epoll_op(epfd: RawFd, op: i32, fd: RawFd, events: u32, data: u64) -> io::Result<()> {
+    let mut ev = EpollEvent { events, data };
+    let rc = unsafe { epoll_ctl(epfd, op, fd, &mut ev) };
+    if rc != 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(())
+}
+
+#[cfg(target_os = "linux")]
+pub fn epoll_add(epfd: RawFd, fd: RawFd, events: u32, data: u64) -> io::Result<()> {
+    epoll_op(epfd, EPOLL_CTL_ADD, fd, events, data)
+}
+
+#[cfg(target_os = "linux")]
+pub fn epoll_mod(epfd: RawFd, fd: RawFd, events: u32, data: u64) -> io::Result<()> {
+    epoll_op(epfd, EPOLL_CTL_MOD, fd, events, data)
+}
+
+#[cfg(target_os = "linux")]
+pub fn epoll_del(epfd: RawFd, fd: RawFd) -> io::Result<()> {
+    // Pre-2.6.9 kernels require a non-null event even for DEL; passing a
+    // dummy one costs nothing and works everywhere.
+    epoll_op(epfd, EPOLL_CTL_DEL, fd, 0, 0)
+}
+
+#[cfg(target_os = "linux")]
+pub fn epoll_wait_events(
+    epfd: RawFd,
+    buf: &mut [EpollEvent],
+    timeout: Option<Duration>,
+) -> io::Result<usize> {
+    let cap = buf.len().min(i32::MAX as usize) as i32;
+    let n = unsafe { epoll_wait(epfd, buf.as_mut_ptr(), cap, timeout_ms(timeout)) };
+    if n < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(n as usize)
+}
+
+// ----------------------------------------------------------------- poll --
+
+/// `struct pollfd` (identical layout on every POSIX target).
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct PollFd {
+    pub fd: i32,
+    pub events: i16,
+    pub revents: i16,
+}
+
+pub const POLLIN: i16 = 0x001;
+pub const POLLOUT: i16 = 0x004;
+pub const POLLERR: i16 = 0x008;
+pub const POLLHUP: i16 = 0x010;
+pub const POLLNVAL: i16 = 0x020;
+
+/// `nfds_t`: unsigned long on Linux, unsigned int elsewhere.
+#[cfg(target_os = "linux")]
+type NFds = u64;
+#[cfg(not(target_os = "linux"))]
+type NFds = u32;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: NFds, timeout_ms: i32) -> i32;
+    fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    fn close(fd: i32) -> i32;
+    fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+    fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+}
+
+#[cfg(not(target_os = "linux"))]
+extern "C" {
+    fn pipe(fds: *mut i32) -> i32;
+    fn fcntl(fd: i32, cmd: i32, arg: i32) -> i32;
+}
+
+pub fn sys_poll(fds: &mut [PollFd], timeout: Option<Duration>) -> io::Result<usize> {
+    let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as NFds, timeout_ms(timeout)) };
+    if n < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(n as usize)
+}
+
+/// `None` ⇒ block forever (-1); sub-millisecond waits round up to 1 ms so
+/// a short deadline never degenerates into a busy spin.
+fn timeout_ms(t: Option<Duration>) -> i32 {
+    match t {
+        None => -1,
+        Some(d) if d.is_zero() => 0,
+        Some(d) => d.as_millis().clamp(1, i32::MAX as u128) as i32,
+    }
+}
+
+// ------------------------------------------------------ pipe/read/write --
+
+pub fn sys_read(fd: RawFd, buf: &mut [u8]) -> io::Result<usize> {
+    let n = unsafe { read(fd, buf.as_mut_ptr(), buf.len()) };
+    if n < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(n as usize)
+}
+
+pub fn sys_write(fd: RawFd, buf: &[u8]) -> io::Result<usize> {
+    let n = unsafe { write(fd, buf.as_ptr(), buf.len()) };
+    if n < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(n as usize)
+}
+
+pub fn sys_close(fd: RawFd) {
+    unsafe {
+        close(fd);
+    }
+}
+
+/// A non-blocking self-pipe: `(read_end, write_end)`. Writes from any
+/// thread make the read end poll-readable — the classic waker.
+#[cfg(target_os = "linux")]
+pub fn wake_pipe() -> io::Result<(RawFd, RawFd)> {
+    const O_NONBLOCK: i32 = 0o4000;
+    const O_CLOEXEC: i32 = 0o2000000;
+    let mut fds = [0i32; 2];
+    if unsafe { pipe2(fds.as_mut_ptr(), O_NONBLOCK | O_CLOEXEC) } != 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok((fds[0], fds[1]))
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn wake_pipe() -> io::Result<(RawFd, RawFd)> {
+    const F_SETFL: i32 = 4;
+    const O_NONBLOCK: i32 = 0x4;
+    let mut fds = [0i32; 2];
+    if unsafe { pipe(fds.as_mut_ptr()) } != 0 {
+        return Err(io::Error::last_os_error());
+    }
+    for fd in fds {
+        if unsafe { fcntl(fd, F_SETFL, O_NONBLOCK) } < 0 {
+            let e = io::Error::last_os_error();
+            sys_close(fds[0]);
+            sys_close(fds[1]);
+            return Err(e);
+        }
+    }
+    Ok((fds[0], fds[1]))
+}
+
+// --------------------------------------------------------------- rlimit --
+
+#[repr(C)]
+struct RLimit {
+    cur: u64,
+    max: u64,
+}
+
+#[cfg(target_os = "linux")]
+const RLIMIT_NOFILE: i32 = 7;
+#[cfg(not(target_os = "linux"))]
+const RLIMIT_NOFILE: i32 = 8;
+
+/// Best-effort: raise the soft RLIMIT_NOFILE to at least `min` (clamped to
+/// the hard limit). Returns the soft limit in effect afterwards — callers
+/// opening thousands of sockets (high-connection tests and benches) check
+/// it and scale down instead of dying on EMFILE.
+pub fn raise_nofile_limit(min: u64) -> u64 {
+    unsafe {
+        let mut lim = RLimit { cur: 0, max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut lim) != 0 {
+            return 0;
+        }
+        if lim.cur >= min {
+            return lim.cur;
+        }
+        let want = RLimit { cur: min.min(lim.max), max: lim.max };
+        if setrlimit(RLIMIT_NOFILE, &want) != 0 {
+            return lim.cur;
+        }
+        want.cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wake_pipe_roundtrip_and_nonblocking() {
+        let (rx, tx) = wake_pipe().unwrap();
+        // Empty pipe: non-blocking read says WouldBlock instead of hanging.
+        let mut buf = [0u8; 8];
+        let err = sys_read(rx, &mut buf).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::WouldBlock);
+        assert_eq!(sys_write(tx, &[7, 8]).unwrap(), 2);
+        assert_eq!(sys_read(rx, &mut buf).unwrap(), 2);
+        assert_eq!(&buf[..2], &[7, 8]);
+        sys_close(rx);
+        sys_close(tx);
+    }
+
+    #[test]
+    fn poll_reports_pipe_readability() {
+        let (rx, tx) = wake_pipe().unwrap();
+        let mut fds = [PollFd { fd: rx, events: POLLIN, revents: 0 }];
+        // Nothing buffered: poll times out with zero ready fds.
+        assert_eq!(sys_poll(&mut fds, Some(Duration::from_millis(10))).unwrap(), 0);
+        sys_write(tx, &[1]).unwrap();
+        fds[0].revents = 0;
+        assert_eq!(sys_poll(&mut fds, Some(Duration::from_millis(1000))).unwrap(), 1);
+        assert_ne!(fds[0].revents & POLLIN, 0);
+        sys_close(rx);
+        sys_close(tx);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_reports_pipe_readability() {
+        let (rx, tx) = wake_pipe().unwrap();
+        let ep = epoll_create().unwrap();
+        epoll_add(ep, rx, EPOLLIN, 42).unwrap();
+        let mut buf = [EpollEvent { events: 0, data: 0 }; 8];
+        assert_eq!(epoll_wait_events(ep, &mut buf, Some(Duration::from_millis(10))).unwrap(), 0);
+        sys_write(tx, &[1]).unwrap();
+        let n = epoll_wait_events(ep, &mut buf, Some(Duration::from_millis(1000))).unwrap();
+        assert_eq!(n, 1);
+        let data = buf[0].data;
+        let events = buf[0].events;
+        assert_eq!(data, 42);
+        assert_ne!(events & EPOLLIN, 0);
+        epoll_del(ep, rx).unwrap();
+        sys_close(ep);
+        sys_close(rx);
+        sys_close(tx);
+    }
+
+    #[test]
+    fn raise_nofile_limit_is_monotone() {
+        let before = raise_nofile_limit(0);
+        assert!(before > 0, "getrlimit must succeed");
+        let after = raise_nofile_limit(before);
+        assert!(after >= before);
+    }
+}

@@ -7,7 +7,17 @@
 //!    a warm epoch reuses a handful of long-lived connections per link
 //!    instead of one dial per chunk. A stale pooled connection (the server
 //!    idle-closed it) is detected by the failed round-trip and retried
-//!    once on a fresh dial.
+//!    once on a fresh dial. Pooled sockets idle longer than
+//!    [`DEFAULT_POOL_IDLE_TTL`] ([`PeerClient::with_idle_ttl`] to tune)
+//!    are dropped at the next checkout (or explicitly via
+//!    [`PeerClient::reap_idle`]) — the server will have idle-closed them
+//!    anyway, so the TTL turns guaranteed-stale round trips into skipped
+//!    sockets and frees both sides' descriptors between epochs.
+//!  * **Busy backoff** — a server at its connection budget answers an
+//!    `Error` frame carrying [`proto::SERVER_BUSY`] and closes. The
+//!    client recognises the signal, backs off briefly, and redials (a
+//!    bounded number of times) before surfacing the error — transient
+//!    capacity spikes heal instead of failing reads.
 //!  * **NIC throttling** — [`PeerClient::with_nic_bw`] attaches one
 //!    [`SharedTokenBucket`] per peer link; every received payload is
 //!    charged to its link's bucket, modelling the node interconnect the
@@ -20,7 +30,7 @@ use std::net::{SocketAddr, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -34,13 +44,25 @@ use crate::posix::throttle::SharedTokenBucket;
 /// Idle connections kept per peer; extras are dropped on check-in.
 const POOL_CAP: usize = 4;
 
+/// Default idle TTL for pooled connections: shorter than the server's
+/// default idle deadline would also work, but the point is reclaiming
+/// descriptors between epochs, not racing the server — anything the
+/// server closed first is caught by the stale-retry path regardless.
+pub const DEFAULT_POOL_IDLE_TTL: Duration = Duration::from_secs(30);
+
+/// Redials attempted against a [`proto::SERVER_BUSY`] rejection before
+/// the error surfaces.
+const BUSY_RETRIES: usize = 2;
+
 /// Chunk client with a per-peer connection pool.
 pub struct PeerClient {
     peers: Vec<SocketAddr>,
-    pool: Vec<Mutex<Vec<TcpStream>>>,
+    /// Pooled idle sockets with their check-in time (for the idle TTL).
+    pool: Vec<Mutex<Vec<(TcpStream, Instant)>>>,
     /// One bucket per peer link when NIC throttling is on.
     nic: Option<Vec<SharedTokenBucket>>,
     io_timeout: Duration,
+    idle_ttl: Duration,
     /// Request/response round trips completed (batched or single) —
     /// observability for the batching win: K chunks per batch move K
     /// payloads over one round trip.
@@ -57,6 +79,7 @@ impl PeerClient {
             pool,
             nic: None,
             io_timeout: super::server::DEFAULT_IO_TIMEOUT,
+            idle_ttl: DEFAULT_POOL_IDLE_TTL,
             roundtrips: AtomicU64::new(0),
         }
     }
@@ -76,6 +99,12 @@ impl PeerClient {
     /// Socket read/write timeout for subsequently dialed connections.
     pub fn with_io_timeout(mut self, d: Duration) -> Self {
         self.io_timeout = d;
+        self
+    }
+
+    /// Idle TTL for pooled connections (see [`DEFAULT_POOL_IDLE_TTL`]).
+    pub fn with_idle_ttl(mut self, d: Duration) -> Self {
+        self.idle_ttl = d;
         self
     }
 
@@ -112,35 +141,84 @@ impl PeerClient {
     fn checkin(&self, peer: NodeId, sock: TcpStream) {
         let mut pool = self.pool[peer.0].lock().unwrap();
         if pool.len() < POOL_CAP {
-            pool.push(sock);
+            pool.push((sock, Instant::now()));
         }
     }
 
-    /// One request/response over a pooled connection (dialing lazily; a
-    /// stale pooled connection — the server idle-closed it — is detected
-    /// by the failed round trip and retried once on a fresh dial).
-    fn pooled_request(&self, peer: NodeId, req: &Frame) -> Result<(TcpStream, Frame)> {
-        if peer.0 >= self.peers.len() {
-            bail!("no peer address for node{}", peer.0);
+    /// Pop the freshest pooled socket, dropping any past the idle TTL on
+    /// the way (the server will have idle-closed them — skipping them
+    /// saves a guaranteed-stale round trip).
+    fn checkout(&self, peer: NodeId) -> Option<TcpStream> {
+        let mut pool = self.pool[peer.0].lock().unwrap();
+        pool.retain(|(_, at)| at.elapsed() < self.idle_ttl);
+        pool.pop().map(|(s, _)| s)
+    }
+
+    /// Drop every pooled connection past the idle TTL (all peers);
+    /// returns how many were dropped. Checkout reaps lazily anyway — this
+    /// is for callers that go idle for long stretches (between epochs)
+    /// and want the descriptors back *now*.
+    pub fn reap_idle(&self) -> usize {
+        let mut dropped = 0;
+        for pool in &self.pool {
+            let mut g = pool.lock().unwrap();
+            let before = g.len();
+            g.retain(|(_, at)| at.elapsed() < self.idle_ttl);
+            dropped += before - g.len();
         }
-        let pooled = self.pool[peer.0].lock().unwrap().pop();
-        let out = match pooled {
+        dropped
+    }
+
+    /// Idle sockets currently pooled across all peers.
+    pub fn pooled_conns(&self) -> usize {
+        self.pool.iter().map(|p| p.lock().unwrap().len()).sum()
+    }
+
+    /// One request/response over a checked-out connection (dialing lazily;
+    /// a stale pooled connection — the server idle-closed it — is
+    /// detected by the failed round trip and retried once on a fresh
+    /// dial).
+    fn request_once(&self, peer: NodeId, req: &Frame) -> Result<(TcpStream, Frame)> {
+        match self.checkout(peer) {
             Some(mut s) => match Self::roundtrip(&mut s, req) {
-                Ok(r) => (s, r),
+                Ok(r) => Ok((s, r)),
                 Err(_) => {
                     let mut fresh = self.dial(peer)?;
                     let r = Self::roundtrip(&mut fresh, req)?;
-                    (fresh, r)
+                    Ok((fresh, r))
                 }
             },
             None => {
                 let mut fresh = self.dial(peer)?;
                 let r = Self::roundtrip(&mut fresh, req)?;
-                (fresh, r)
+                Ok((fresh, r))
             }
-        };
-        self.roundtrips.fetch_add(1, Ordering::Relaxed);
-        Ok(out)
+        }
+    }
+
+    /// [`PeerClient::request_once`] plus busy backoff: a
+    /// [`proto::SERVER_BUSY`] rejection (the server's connection budget is
+    /// full; it closed the socket after the frame) sleeps briefly and
+    /// redials, up to [`BUSY_RETRIES`] times, before the error surfaces to
+    /// the caller.
+    fn pooled_request(&self, peer: NodeId, req: &Frame) -> Result<(TcpStream, Frame)> {
+        if peer.0 >= self.peers.len() {
+            bail!("no peer address for node{}", peer.0);
+        }
+        let mut attempt = 0usize;
+        loop {
+            let (sock, resp) = self.request_once(peer, req)?;
+            if let Frame::Error(msg) = &resp {
+                if proto::is_server_busy(msg) && attempt < BUSY_RETRIES {
+                    attempt += 1;
+                    drop(sock); // the server closed its side already
+                    std::thread::sleep(Duration::from_millis(25 * attempt as u64));
+                    continue;
+                }
+            }
+            self.roundtrips.fetch_add(1, Ordering::Relaxed);
+            return Ok((sock, resp));
+        }
     }
 
     /// Request one chunk (`grid_bytes > 0`, under placement `generation`)
@@ -172,8 +250,12 @@ impl PeerClient {
             }
             Frame::Error(msg) => {
                 // Request-level error: a complete frame was read, so the
-                // connection's framing is intact — keep it pooled.
-                self.checkin(peer, sock);
+                // connection's framing is intact — keep it pooled. A busy
+                // rejection that exhausted its retries is the exception
+                // (the server closed that socket after the frame).
+                if !proto::is_server_busy(&msg) {
+                    self.checkin(peer, sock);
+                }
                 bail!("peer node{} error: {msg}", peer.0)
             }
             _ => bail!("peer node{} answered GetChunk with the wrong frame kind", peer.0),
@@ -221,7 +303,9 @@ impl PeerClient {
                 Ok(entries)
             }
             Frame::Error(msg) => {
-                self.checkin(peer, sock);
+                if !proto::is_server_busy(&msg) {
+                    self.checkin(peer, sock);
+                }
                 bail!("peer node{} error: {msg}", peer.0)
             }
             _ => bail!("peer node{} answered GetChunkBatch with the wrong frame kind", peer.0),
@@ -438,8 +522,8 @@ impl ChunkTransport for SocketTransport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::posix::realfs::chunk_rel_path;
     use crate::peer::PeerServer;
+    use crate::posix::realfs::chunk_rel_path;
     use std::path::PathBuf;
 
     fn tmpdir(tag: &str) -> PathBuf {
@@ -522,6 +606,69 @@ mod tests {
         // Over-cap batches are client-side errors before any wire traffic.
         let too_many: Vec<u64> = (0..=crate::peer::proto::MAX_BATCH as u64).collect();
         assert!(client.get_chunk_batch(NodeId(0), 9, 1, 256, &too_many).is_err());
+        srv.stop();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn pool_idle_ttl_reaps_and_redials() {
+        let dir = tmpdir("ttl");
+        let mut srv = PeerServer::start("127.0.0.1:0", dir.clone()).unwrap();
+        let client =
+            PeerClient::connect(vec![srv.addr]).with_idle_ttl(Duration::from_millis(50));
+        // A request pools its connection on the way out.
+        assert_eq!(client.get_chunk(NodeId(0), 1, 1, 64, 0).unwrap(), None);
+        assert_eq!(client.pooled_conns(), 1);
+        // Fresh sockets survive an explicit reap...
+        assert_eq!(client.reap_idle(), 0);
+        // ...and expired ones don't.
+        std::thread::sleep(Duration::from_millis(80));
+        assert_eq!(client.reap_idle(), 1);
+        assert_eq!(client.pooled_conns(), 0);
+        // Requests after a reap just dial fresh.
+        assert_eq!(client.get_chunk(NodeId(0), 1, 1, 64, 0).unwrap(), None);
+        assert_eq!(client.pooled_conns(), 1);
+        // Checkout reaps lazily too: expire the pooled socket, request
+        // again — the expired socket is skipped, not round-tripped.
+        std::thread::sleep(Duration::from_millis(80));
+        assert_eq!(client.get_chunk(NodeId(0), 1, 1, 64, 0).unwrap(), None);
+        srv.stop();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn busy_rejection_backs_off_then_surfaces_then_recovers() {
+        let dir = tmpdir("busy");
+        let mut srv = PeerServer::start_with_limits(
+            "127.0.0.1:0",
+            dir.clone(),
+            None,
+            Duration::from_secs(5),
+            1,
+        )
+        .unwrap();
+        // One client occupies the entire connection budget (its socket
+        // stays pooled, hence live on the server).
+        let holder = PeerClient::connect(vec![srv.addr]);
+        assert_eq!(holder.get_chunk(NodeId(0), 1, 1, 64, 0).unwrap(), None);
+        // A second client is rejected with the retryable busy signal —
+        // after its backoff retries the distinguishable error surfaces.
+        let rejected = PeerClient::connect(vec![srv.addr]);
+        let err = rejected.get_chunk(NodeId(0), 1, 1, 64, 0).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("server busy"),
+            "busy rejection must be distinguishable, got: {err:#}"
+        );
+        // Freeing the slot lets the backoff-retry path get through.
+        drop(holder);
+        let t0 = Instant::now();
+        loop {
+            if rejected.get_chunk(NodeId(0), 1, 1, 64, 0).is_ok() {
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(5), "busy never cleared");
+            std::thread::sleep(Duration::from_millis(20));
+        }
         srv.stop();
         std::fs::remove_dir_all(&dir).unwrap();
     }

@@ -10,11 +10,12 @@
 //!  * [`DirTransport`] — the degenerate same-FS peer-directory read
 //!    (today's behaviour, kept as the default so every existing dir-mode
 //!    path stays bit-identical);
-//!  * [`SocketTransport`] — a real TCP data plane: a per-node threaded
-//!    [`PeerServer`] (FanStore-style user-level chunk server) serving its
-//!    node directory over the [`proto`] frame protocol, and a
-//!    [`PeerClient`] with per-peer connection pools and optional per-link
-//!    NIC throttling.
+//!  * [`SocketTransport`] — a real TCP data plane: a per-node
+//!    event-driven [`PeerServer`] (FanStore-style user-level chunk
+//!    server, multiplexing thousands of connections over one epoll loop)
+//!    serving its node directory over the [`proto`] frame protocol, and a
+//!    [`PeerClient`] with per-peer connection pools (idle-TTL reaped) and
+//!    optional per-link NIC throttling.
 //!
 //! Wire addressing is `(dataset_id, generation, chunk, grid_bytes)` —
 //! exactly the `(dataset, generation, chunk)` address the residency bitmap
@@ -33,7 +34,7 @@ pub mod server;
 
 pub use client::{PeerClient, SocketTransport};
 pub use proto::Frame;
-pub use server::{PeerServer, DEFAULT_IO_TIMEOUT, DEFAULT_MAX_CONNS};
+pub use server::{PeerServer, ThreadedPeerServer, DEFAULT_IO_TIMEOUT, DEFAULT_MAX_CONNS};
 
 use std::path::Path;
 

@@ -275,6 +275,65 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>> {
     decode(&body).map(Some)
 }
 
+/// Incremental decode for the event-driven server: if `buf` starts with a
+/// complete frame, cut it out (draining the consumed bytes) and return it;
+/// `Ok(None)` means more bytes are needed and `buf` is left untouched.
+///
+/// The hostile-input checks run as early as the bytes allow: a length
+/// prefix of zero or past [`MAX_FRAME`] is rejected as soon as the 4
+/// header bytes are buffered — *before* the body arrives and before any
+/// allocation — so a connection spraying a multi-GiB length never costs
+/// more than 4 bytes of buffer.
+pub fn decode_prefix(buf: &mut Vec<u8>) -> Result<Option<Frame>> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[..4].try_into().expect("4 bytes checked")) as usize;
+    if len == 0 {
+        bail!("zero-length frame body");
+    }
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds cap {MAX_FRAME}");
+    }
+    if buf.len() < 4 + len {
+        return Ok(None);
+    }
+    let frame = decode(&buf[4..4 + len])?;
+    buf.drain(..4 + len);
+    Ok(Some(frame))
+}
+
+/// Encode a frame as write segments for a
+/// [`BufferChain`](crate::net::BufferChain): `ChunkData` becomes
+/// `[5-byte header, payload]` with the payload `Vec` moved — a chunk is
+/// never memcpy'd into a staging buffer on its way out. Everything else
+/// (requests, errors, batch frames, which interleave markers and bytes)
+/// encodes contiguously.
+pub fn encode_segments(frame: Frame) -> Vec<Vec<u8>> {
+    match frame {
+        Frame::ChunkData(bytes) => {
+            assert!(bytes.len() < MAX_FRAME, "chunk of {} exceeds MAX_FRAME", bytes.len());
+            let mut hdr = Vec::with_capacity(5);
+            hdr.extend_from_slice(&(1 + bytes.len() as u32).to_le_bytes());
+            hdr.push(TAG_CHUNK_DATA);
+            vec![hdr, bytes]
+        }
+        other => vec![encode(&other)],
+    }
+}
+
+/// `Error` frame message a server at its connection budget answers before
+/// closing. [`is_server_busy`] recognises it (by prefix, so the server may
+/// append detail) and lets clients back off and retry instead of failing
+/// the read.
+pub const SERVER_BUSY: &str = "server busy: connection capacity reached, retry later";
+
+/// Whether an `Error` frame's message is the server-busy backpressure
+/// signal (retryable) rather than a request failure (not retryable).
+pub fn is_server_busy(msg: &str) -> bool {
+    msg.starts_with("server busy")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -451,5 +510,116 @@ mod tests {
         let f = Frame::ChunkData(vec![]);
         let buf = encode(&f);
         assert_eq!(read_frame(&mut buf.as_slice()).unwrap(), Some(f));
+    }
+
+    #[test]
+    fn prop_decode_prefix_byte_at_a_time_matches_read_frame() {
+        // Feeding the encoded bytes one at a time must yield exactly the
+        // frame `read_frame` sees on the whole buffer, with Ok(None) at
+        // every strict prefix and the buffer fully drained at the end.
+        forall(100, arbitrary_frame, |frame| {
+            let wire = encode(frame);
+            let mut buf = Vec::new();
+            for (i, b) in wire.iter().enumerate() {
+                buf.push(*b);
+                match decode_prefix(&mut buf) {
+                    Ok(None) if i + 1 < wire.len() => {
+                        if buf.len() != i + 1 {
+                            return Err(format!("prefix {} bytes disturbed the buffer", i + 1));
+                        }
+                    }
+                    Ok(None) => return Err("complete frame read as incomplete".into()),
+                    Ok(Some(got)) if i + 1 == wire.len() => {
+                        if got != *frame {
+                            return Err(format!("decoded {got:?} != {frame:?}"));
+                        }
+                        if !buf.is_empty() {
+                            return Err(format!("{} undrained bytes", buf.len()));
+                        }
+                    }
+                    Ok(Some(got)) => return Err(format!("early decode at byte {i}: {got:?}")),
+                    Err(e) => return Err(format!("prefix decode failed: {e:#}")),
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_decode_prefix_random_splits_preserve_pipelining() {
+        // Several frames concatenated and split at arbitrary points must
+        // come out as the same frame sequence, regardless of the split.
+        forall(50, |rng| (0..3).map(|_| arbitrary_frame(rng)).collect::<Vec<_>>(), |frames| {
+            let wire: Vec<u8> = frames.iter().flat_map(encode).collect();
+            let mut rng = Rng::new(wire.len() as u64 + 7);
+            let mut buf = Vec::new();
+            let mut got = Vec::new();
+            let mut at = 0usize;
+            while at < wire.len() {
+                let take = (rng.gen_range(7) as usize + 1).min(wire.len() - at);
+                buf.extend_from_slice(&wire[at..at + take]);
+                at += take;
+                loop {
+                    match decode_prefix(&mut buf) {
+                        Ok(Some(f)) => got.push(f),
+                        Ok(None) => break,
+                        Err(e) => return Err(format!("split decode failed: {e:#}")),
+                    }
+                }
+            }
+            if got != *frames {
+                return Err(format!("decoded {} frames, expected {}", got.len(), frames.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decode_prefix_rejects_hostile_length_at_the_header() {
+        // The oversize check fires with ONLY the 4 header bytes buffered —
+        // before the hostile body could ever be buffered or allocated.
+        for len in [0u32, (MAX_FRAME as u32) + 1, u32::MAX] {
+            let mut buf = len.to_le_bytes().to_vec();
+            assert!(
+                decode_prefix(&mut buf).is_err(),
+                "length {len} must be rejected from the header alone"
+            );
+        }
+        // Three header bytes: undecidable, wait for more.
+        let mut buf = vec![0xFF, 0xFF, 0xFF];
+        assert!(decode_prefix(&mut buf).unwrap().is_none());
+        assert_eq!(buf.len(), 3);
+    }
+
+    #[test]
+    fn encode_segments_concatenate_to_encode() {
+        forall(100, arbitrary_frame, |frame| {
+            let whole = encode(frame);
+            let segs = encode_segments(frame.clone());
+            let glued: Vec<u8> = segs.concat();
+            if glued != whole {
+                return Err("segments don't concatenate to the contiguous encoding".into());
+            }
+            if let Frame::ChunkData(bytes) = frame {
+                if segs.len() != 2 || segs[1] != *bytes {
+                    return Err("ChunkData must split as [header, payload]".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn server_busy_signal_is_distinguishable() {
+        assert!(is_server_busy(SERVER_BUSY));
+        assert!(is_server_busy("server busy: shedding load"));
+        assert!(!is_server_busy("expected a GetChunk request"));
+        assert!(!is_server_busy("chunk 7 out of range"));
+        // And it survives the wire.
+        let buf = encode(&Frame::Error(SERVER_BUSY.to_string()));
+        match read_frame(&mut buf.as_slice()).unwrap() {
+            Some(Frame::Error(msg)) => assert!(is_server_busy(&msg)),
+            other => panic!("expected Error frame, got {other:?}"),
+        }
     }
 }

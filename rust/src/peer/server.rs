@@ -1,24 +1,39 @@
-//! `PeerServer` — the per-node user-level chunk server (FanStore-style):
-//! one threaded TCP listener per cache node serving `GetChunk` requests
-//! straight out of that node's cache directory.
+//! `PeerServer` — the per-node user-level chunk server (FanStore-style)
+//! serving `GetChunk` / `GetChunkBatch` requests straight out of that
+//! node's cache directory.
 //!
-//! Concurrency and robustness model (mirrors `api::http::Server`):
-//!  * non-blocking accept loop on its own thread, one handler thread per
-//!    connection, connections are persistent (many frames per socket);
-//!  * read/write timeouts on every accepted socket — a client that
-//!    connects and sends nothing is dropped after `io_timeout` instead of
-//!    pinning its handler thread forever (the same hardening applied to
-//!    the HTTP API server);
-//!  * graceful shutdown: [`PeerServer::stop`] flips the stop flag, shuts
-//!    down every live connection and joins the accept thread, so handler
-//!    threads unwind promptly;
+//! Serving is event-driven: one [`Engine`](crate::net::Engine) loop thread
+//! multiplexes every connection (epoll on Linux), request frames are
+//! decoded incrementally ([`proto::decode_prefix`]) as bytes arrive, and
+//! the actual chunk resolution — which may touch disk and sleep on the
+//! NVMe token bucket — runs on the engine's worker pool so the loop never
+//! blocks. That turns the old 128-thread connection cap into a
+//! many-thousands connection *budget* ([`DEFAULT_MAX_CONNS`]): at the
+//! budget new sockets get a best-effort `Error` frame carrying
+//! [`proto::SERVER_BUSY`] (so [`PeerClient`](super::PeerClient) backs off
+//! and retries instead of failing) and live connections are never
+//! mid-stream dropped.
+//!
+//! Robustness model (unchanged semantics from the threaded server):
+//!  * connections are persistent (many frames per socket);
+//!  * a client that connects and sends nothing is dropped after
+//!    `io_timeout` — enforced by the engine's timer wheel, and the close
+//!    writes nothing;
 //!  * malformed frames (lost sync, oversized length prefix) close the
-//!    connection — the codec guarantees no panic and no unbounded
-//!    allocation on hostile input.
+//!    connection silently; the codec rejects hostile lengths from the 4
+//!    header bytes alone, before any allocation;
+//!  * graceful shutdown: [`PeerServer::stop`] severs every live
+//!    connection and joins the loop and worker threads.
 //!
 //! Disk modelling: an optional [`SharedTokenBucket`] (the node's NVMe
 //! bucket) is charged for every payload served, so loopback peer serving
 //! consumes the same simulated node bandwidth a local read would.
+//!
+//! [`ThreadedPeerServer`] keeps the previous thread-per-connection
+//! implementation alive as the comparison baseline for the
+//! `perf_peer_transport` bench; both servers share the same request
+//! resolution ([`respond`] → [`read_chunk_payload`]) and are
+//! byte-identical on the wire.
 
 use std::collections::HashMap;
 use std::fs;
@@ -33,29 +48,25 @@ use anyhow::Result;
 
 use super::proto::{self, Frame};
 use crate::cache::{RamTier, ResidencySnapshot};
+use crate::net::{Engine, EngineConfig, Reply, Service};
 use crate::posix::realfs::chunk_rel_path;
 use crate::posix::throttle::SharedTokenBucket;
 
-/// Default socket read/write timeout: long enough for any real request,
-/// short enough that silent clients cannot pin handler threads.
+/// Default io deadline: long enough for any real request, short enough
+/// that silent clients cannot pin a connection slot.
 pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(10);
 
-/// Default cap on concurrent handler threads: generous for any real
-/// reader fleet, finite so a connection flood cannot spawn unbounded
-/// threads. Connections over the cap are answered with a request-level
-/// `Error` frame and closed.
-pub const DEFAULT_MAX_CONNS: usize = 128;
+/// Default connection budget. The event-driven server holds a connection
+/// in a few hundred bytes of state instead of a thread stack, so the
+/// budget is thousands where the threaded cap was 128. Connections over
+/// the budget are answered with an `Error` frame carrying
+/// [`proto::SERVER_BUSY`] and closed.
+pub const DEFAULT_MAX_CONNS: usize = 4096;
 
-/// Counting gate over live handler threads: decrements on drop so a
-/// handler exit (clean, timeout, or panic unwind) always releases its
-/// slot.
-struct HandlerSlot(Arc<AtomicUsize>);
-
-impl Drop for HandlerSlot {
-    fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::AcqRel);
-    }
-}
+/// Requests at most this large (by grid) may be served inline on the loop
+/// thread under light load — a warm ≤256 KiB read costs less than two
+/// thread handoffs.
+const INLINE_GRID_MAX: u64 = 256 << 10;
 
 /// Resolver from item index to on-disk relative path, registered per
 /// dataset for whole-file (item-granular) serving.
@@ -68,22 +79,26 @@ type ItemPathFn = Arc<dyn Fn(u64) -> PathBuf + Send + Sync>;
 /// typically resolves through the `SharedCache` on every call.
 type ResidencyFn = Arc<dyn Fn() -> Option<Arc<ResidencySnapshot>> + Send + Sync>;
 
-/// A running per-node chunk server.
+/// Everything request resolution needs, shared by the event-driven server,
+/// the threaded baseline, and every worker thread.
+struct PeerShared {
+    node_dir: PathBuf,
+    exports: RwLock<HashMap<u64, ItemPathFn>>,
+    views: RwLock<HashMap<u64, ResidencyFn>>,
+    /// Optional RAM hot-chunk tier consulted before the chunk file — only
+    /// for requests that pass the residency-view gating, so eviction and
+    /// generation semantics are identical to disk serving.
+    ram: RwLock<Option<Arc<RamTier>>>,
+    bucket: Option<SharedTokenBucket>,
+}
+
+/// A running per-node chunk server (event-driven).
 pub struct PeerServer {
     /// Bound address (bind to port 0 and read this back for ephemeral
     /// port discovery).
     pub addr: SocketAddr,
-    stop: Arc<AtomicBool>,
-    join: Option<std::thread::JoinHandle<()>>,
-    /// Live connections only: each handler prunes its own entry on exit,
-    /// so churn never accumulates file descriptors.
-    conns: Arc<Mutex<Vec<(u64, TcpStream)>>>,
-    exports: Arc<RwLock<HashMap<u64, ItemPathFn>>>,
-    views: Arc<RwLock<HashMap<u64, ResidencyFn>>>,
-    /// Optional RAM hot-chunk tier consulted before the chunk file — only
-    /// for requests that pass the residency-view gating, so eviction and
-    /// generation semantics are identical to disk serving.
-    ram: Arc<RwLock<Option<Arc<RamTier>>>>,
+    engine: Engine,
+    shared: Arc<PeerShared>,
 }
 
 impl PeerServer {
@@ -96,9 +111,9 @@ impl PeerServer {
     /// Full-control constructor: `disk_bucket` is charged per served
     /// payload (pass the node's NVMe bucket so peer serving and local
     /// reads share one bandwidth model), `io_timeout` bounds how long a
-    /// silent or stuck connection may hold a handler thread. Handler
-    /// threads are capped at [`DEFAULT_MAX_CONNS`]
-    /// ([`PeerServer::start_with_limits`] to tune).
+    /// silent or stuck connection may hold its slot. The connection
+    /// budget is [`DEFAULT_MAX_CONNS`] ([`PeerServer::start_with_limits`]
+    /// to tune).
     pub fn start_with(
         addr: &str,
         node_dir: impl Into<PathBuf>,
@@ -108,11 +123,11 @@ impl PeerServer {
         Self::start_with_limits(addr, node_dir, disk_bucket, io_timeout, DEFAULT_MAX_CONNS)
     }
 
-    /// [`PeerServer::start_with`] plus an explicit cap on concurrent
-    /// handler threads: once `max_conns` handlers are live, further
-    /// connections get a best-effort `Error` frame and are closed — a
-    /// connection flood degrades into polite rejections instead of
-    /// unbounded thread spawn.
+    /// [`PeerServer::start_with`] plus an explicit connection budget: once
+    /// `max_conns` connections are live (idle ones count — they hold
+    /// kernel and engine state), further sockets get a best-effort
+    /// [`proto::SERVER_BUSY`] `Error` frame and are closed — a connection
+    /// flood degrades into polite, retryable rejections.
     pub fn start_with_limits(
         addr: &str,
         node_dir: impl Into<PathBuf>,
@@ -120,77 +135,17 @@ impl PeerServer {
         io_timeout: Duration,
         max_conns: usize,
     ) -> Result<PeerServer> {
-        let node_dir = node_dir.into();
-        let listener = TcpListener::bind(addr)?;
-        let local = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let conns: Arc<Mutex<Vec<(u64, TcpStream)>>> = Arc::new(Mutex::new(Vec::new()));
-        let exports: Arc<RwLock<HashMap<u64, ItemPathFn>>> =
-            Arc::new(RwLock::new(HashMap::new()));
-        let views: Arc<RwLock<HashMap<u64, ResidencyFn>>> = Arc::new(RwLock::new(HashMap::new()));
-        let ram: Arc<RwLock<Option<Arc<RamTier>>>> = Arc::new(RwLock::new(None));
-        let (stop2, conns2, exports2, views2, ram2) =
-            (stop.clone(), conns.clone(), exports.clone(), views.clone(), ram.clone());
-        let active: Arc<AtomicUsize> = Arc::new(AtomicUsize::new(0));
-        let join = std::thread::spawn(move || {
-            let mut next_id = 0u64;
-            while !stop2.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((sock, _peer)) => {
-                        let _ = sock.set_read_timeout(Some(io_timeout));
-                        let _ = sock.set_write_timeout(Some(io_timeout));
-                        let _ = sock.set_nodelay(true);
-                        if active.load(Ordering::Acquire) >= max_conns {
-                            // Over the gate: answer a request-level Error
-                            // (best effort) and drop — never spawn.
-                            let mut sock = sock;
-                            let _ = proto::write_frame(
-                                &mut sock,
-                                &Frame::Error("server at connection capacity".into()),
-                            );
-                            let _ = sock.shutdown(Shutdown::Both);
-                            continue;
-                        }
-                        active.fetch_add(1, Ordering::AcqRel);
-                        let slot = HandlerSlot(active.clone());
-                        let id = next_id;
-                        next_id += 1;
-                        if let Ok(clone) = sock.try_clone() {
-                            conns2.lock().unwrap().push((id, clone));
-                        }
-                        let node_dir = node_dir.clone();
-                        let exports = exports2.clone();
-                        let views = views2.clone();
-                        let ram = ram2.clone();
-                        let bucket = disk_bucket.clone();
-                        let stop = stop2.clone();
-                        let conns = conns2.clone();
-                        std::thread::spawn(move || {
-                            let _slot = slot;
-                            let mut sock = sock;
-                            let bucket = bucket.as_ref();
-                            serve_conn(&mut sock, &node_dir, &exports, &views, &ram, bucket, &stop);
-                            let _ = sock.shutdown(Shutdown::Both);
-                            // Prune this connection's registry entry so
-                            // churn never accumulates fds.
-                            conns.lock().unwrap().retain(|(i, _)| *i != id);
-                        });
-                    }
-                    Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(Duration::from_millis(5));
-                    }
-                    // A handshake aborted by the client (RST before
-                    // accept) is that connection's problem, not the
-                    // listener's — keep accepting.
-                    Err(ref e)
-                        if e.kind() == io::ErrorKind::ConnectionAborted
-                            || e.kind() == io::ErrorKind::Interrupted => {}
-                    Err(_) => break,
-                }
-            }
+        let shared = Arc::new(PeerShared {
+            node_dir: node_dir.into(),
+            exports: RwLock::new(HashMap::new()),
+            views: RwLock::new(HashMap::new()),
+            ram: RwLock::new(None),
+            bucket: disk_bucket,
         });
-        Ok(PeerServer { addr: local, stop, join: Some(join), conns, exports, views, ram })
+        let svc = Arc::new(PeerService { shared: shared.clone() });
+        let cfg = EngineConfig { io_timeout, max_conns, ..EngineConfig::default() };
+        let engine = Engine::start(addr, svc, cfg)?;
+        Ok(PeerServer { addr: engine.addr, engine, shared })
     }
 
     /// Attach a [`RamTier`] (typically the co-located `DataPlane`'s —
@@ -200,7 +155,7 @@ impl PeerServer {
     /// the disk. Requests for datasets without a residency view never
     /// consult the tier.
     pub fn set_ram_tier(&self, tier: Arc<RamTier>) {
-        *self.ram.write().unwrap() = Some(tier);
+        *self.shared.ram.write().unwrap() = Some(tier);
     }
 
     /// Register an item-path resolver for `dataset_id`, enabling
@@ -212,7 +167,7 @@ impl PeerServer {
         dataset_id: u64,
         path_of: impl Fn(u64) -> PathBuf + Send + Sync + 'static,
     ) {
-        self.exports.write().unwrap().insert(dataset_id, Arc::new(path_of));
+        self.shared.exports.write().unwrap().insert(dataset_id, Arc::new(path_of));
     }
 
     /// Register a residency-snapshot source for `dataset_id`, making chunk
@@ -230,30 +185,66 @@ impl PeerServer {
         dataset_id: u64,
         source: impl Fn() -> Option<Arc<ResidencySnapshot>> + Send + Sync + 'static,
     ) {
-        self.views.write().unwrap().insert(dataset_id, Arc::new(source));
+        self.shared.views.write().unwrap().insert(dataset_id, Arc::new(source));
     }
 
-    /// Graceful shutdown: stop accepting, then sever live connections.
-    /// The accept thread is joined *before* the drain, so no connection
-    /// accepted during the race window can escape it. Idempotent (also
-    /// runs on drop).
+    /// Connections currently held by the engine (tests assert churn
+    /// returns to zero).
+    pub fn live_conns(&self) -> usize {
+        self.engine.live_conns()
+    }
+
+    /// Graceful shutdown: sever every live connection, join the loop and
+    /// worker threads. Idempotent (also runs on drop, via the engine).
     pub fn stop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
-        for (_, c) in self.conns.lock().unwrap().drain(..) {
-            // Unblocks the handler's in-flight read immediately (the
-            // clone shares the underlying socket), so handlers exit
-            // promptly instead of sitting out their io_timeout.
-            let _ = c.shutdown(Shutdown::Both);
-        }
+        self.engine.stop();
     }
 }
 
-impl Drop for PeerServer {
-    fn drop(&mut self) {
-        self.stop();
+/// The peer wire protocol as an engine [`Service`].
+struct PeerService {
+    shared: Arc<PeerShared>,
+}
+
+impl Service for PeerService {
+    type Request = Frame;
+
+    fn try_parse(&self, inbuf: &mut Vec<u8>) -> Result<Option<Frame>> {
+        proto::decode_prefix(inbuf)
+    }
+
+    fn handle(&self, req: Frame) -> Reply {
+        Reply::new(proto::encode_segments(respond(&self.shared, req)))
+    }
+
+    /// Enough to buffer any frame the codec accepts: the old server
+    /// decoded (and answered `Error` to) every well-formed frame, request
+    /// or not, and the budget keeps that behaviour.
+    fn max_buffered(&self) -> usize {
+        proto::MAX_FRAME + 4
+    }
+
+    fn busy_reply(&self) -> Option<Reply> {
+        Some(Reply::closing(vec![proto::encode(&Frame::Error(proto::SERVER_BUSY.into()))]))
+    }
+
+    /// Malformed frame ⇒ close silently (framing sync is lost; anything
+    /// written could be misparsed as a frame header).
+    fn parse_error_reply(&self, _err: &anyhow::Error) -> Option<Reply> {
+        None
+    }
+
+    /// Single small-grid chunk requests are served on the loop thread
+    /// under light load: a warm read beats two thread handoffs. Anything
+    /// that can sleep (the NVMe bucket) or get large (items, batches)
+    /// goes to the workers.
+    fn serve_inline(&self, req: &Frame) -> bool {
+        self.shared.bucket.is_none()
+            && matches!(
+                req,
+                Frame::GetChunk { grid_bytes, .. }
+                    if *grid_bytes > 0 && *grid_bytes <= INLINE_GRID_MAX
+            )
     }
 }
 
@@ -277,6 +268,7 @@ enum ChunkRead {
 /// or larger than the grid) are rejected. Item requests (`grid_bytes ==
 /// 0`) resolve through the item export and are not length-validated (item
 /// sizes are not derivable from the wire address).
+#[allow(clippy::too_many_arguments)]
 fn read_chunk_payload(
     node_dir: &Path,
     exports: &RwLock<HashMap<u64, ItemPathFn>>,
@@ -374,17 +366,222 @@ fn read_chunk_payload(
     }
 }
 
-/// One connection's serve loop: frames in, frames out, until EOF, timeout,
-/// lost framing sync, or server shutdown.
-fn serve_conn(
-    sock: &mut TcpStream,
-    node_dir: &Path,
-    exports: &RwLock<HashMap<u64, ItemPathFn>>,
-    views: &RwLock<HashMap<u64, ResidencyFn>>,
-    ram: &RwLock<Option<Arc<RamTier>>>,
-    bucket: Option<&SharedTokenBucket>,
-    stop: &AtomicBool,
-) {
+/// Answer one request frame — the single serving path both servers share.
+/// The RAM tier is re-resolved per request so a tier attached after a
+/// connection opened is picked up immediately.
+fn respond(shared: &PeerShared, frame: Frame) -> Frame {
+    let tier = shared.ram.read().unwrap().clone();
+    let tier = tier.as_deref();
+    let bucket = shared.bucket.as_ref();
+    match frame {
+        Frame::GetChunk { dataset_id, generation, chunk, grid_bytes } => {
+            match read_chunk_payload(
+                &shared.node_dir,
+                &shared.exports,
+                &shared.views,
+                tier,
+                bucket,
+                dataset_id,
+                generation,
+                grid_bytes,
+                chunk,
+            ) {
+                ChunkRead::Data(bytes) => Frame::ChunkData(bytes),
+                ChunkRead::NotResident => Frame::NotResident,
+                ChunkRead::Fail(msg) => Frame::Error(msg),
+            }
+        }
+        Frame::GetChunkBatch { dataset_id, generation, grid_bytes, chunks } => {
+            // One response frame for the whole batch. Any per-chunk I/O
+            // failure (or a combined payload the codec cannot frame)
+            // fails the batch as a request-level Error — the connection's
+            // framing stays intact either way.
+            let mut entries = Vec::with_capacity(chunks.len());
+            // Conservative body bound: tag + count + per-entry marker
+            // and length headers + payload bytes.
+            let mut body = 5 + 9 * chunks.len();
+            let mut failed = None;
+            for &c in &chunks {
+                match read_chunk_payload(
+                    &shared.node_dir,
+                    &shared.exports,
+                    &shared.views,
+                    tier,
+                    bucket,
+                    dataset_id,
+                    generation,
+                    grid_bytes,
+                    c,
+                ) {
+                    ChunkRead::Data(bytes) => {
+                        body += bytes.len();
+                        if body >= proto::MAX_FRAME {
+                            failed = Some(format!(
+                                "batch payload exceeds the {} byte frame cap",
+                                proto::MAX_FRAME
+                            ));
+                            break;
+                        }
+                        entries.push(Some(bytes));
+                    }
+                    ChunkRead::NotResident => entries.push(None),
+                    ChunkRead::Fail(msg) => {
+                        failed = Some(msg);
+                        break;
+                    }
+                }
+            }
+            match failed {
+                Some(msg) => Frame::Error(msg),
+                None => Frame::ChunkBatchData(entries),
+            }
+        }
+        // Only GetChunk / GetChunkBatch are valid request frames.
+        _ => Frame::Error("expected a GetChunk request".into()),
+    }
+}
+
+// ------------------------------------------------- threaded baseline --
+
+/// Counting gate over live handler threads: decrements on drop so a
+/// handler exit (clean, timeout, or panic unwind) always releases its
+/// slot.
+struct HandlerSlot(Arc<AtomicUsize>);
+
+impl Drop for HandlerSlot {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// The previous thread-per-connection chunk server, kept as the
+/// comparison baseline for `perf_peer_transport`'s high-connection
+/// scenario. Wire-identical to [`PeerServer`] (same [`respond`]); the
+/// difference is purely the concurrency model — a thread, a stack, and
+/// two `SO_*TIMEO` timeouts per connection.
+pub struct ThreadedPeerServer {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+    /// Live connections only: each handler prunes its own entry on exit,
+    /// so churn never accumulates file descriptors.
+    conns: Arc<Mutex<Vec<(u64, TcpStream)>>>,
+    shared: Arc<PeerShared>,
+}
+
+impl ThreadedPeerServer {
+    pub fn start_with_limits(
+        addr: &str,
+        node_dir: impl Into<PathBuf>,
+        disk_bucket: Option<SharedTokenBucket>,
+        io_timeout: Duration,
+        max_conns: usize,
+    ) -> Result<ThreadedPeerServer> {
+        let shared = Arc::new(PeerShared {
+            node_dir: node_dir.into(),
+            exports: RwLock::new(HashMap::new()),
+            views: RwLock::new(HashMap::new()),
+            ram: RwLock::new(None),
+            bucket: disk_bucket,
+        });
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<(u64, TcpStream)>>> = Arc::new(Mutex::new(Vec::new()));
+        let (stop2, conns2, shared2) = (stop.clone(), conns.clone(), shared.clone());
+        let active: Arc<AtomicUsize> = Arc::new(AtomicUsize::new(0));
+        let join = std::thread::spawn(move || {
+            let mut next_id = 0u64;
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((sock, _peer)) => {
+                        let _ = sock.set_read_timeout(Some(io_timeout));
+                        let _ = sock.set_write_timeout(Some(io_timeout));
+                        let _ = sock.set_nodelay(true);
+                        if active.load(Ordering::Acquire) >= max_conns {
+                            // Over the gate: answer a request-level Error
+                            // (best effort) and drop — never spawn.
+                            let mut sock = sock;
+                            let _ = proto::write_frame(
+                                &mut sock,
+                                &Frame::Error(proto::SERVER_BUSY.into()),
+                            );
+                            let _ = sock.shutdown(Shutdown::Both);
+                            continue;
+                        }
+                        active.fetch_add(1, Ordering::AcqRel);
+                        let slot = HandlerSlot(active.clone());
+                        let id = next_id;
+                        next_id += 1;
+                        if let Ok(clone) = sock.try_clone() {
+                            conns2.lock().unwrap().push((id, clone));
+                        }
+                        let shared = shared2.clone();
+                        let stop = stop2.clone();
+                        let conns = conns2.clone();
+                        std::thread::spawn(move || {
+                            let _slot = slot;
+                            let mut sock = sock;
+                            serve_conn(&mut sock, &shared, &stop);
+                            let _ = sock.shutdown(Shutdown::Both);
+                            // Prune this connection's registry entry so
+                            // churn never accumulates fds.
+                            conns.lock().unwrap().retain(|(i, _)| *i != id);
+                        });
+                    }
+                    Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    // A handshake aborted by the client (RST before
+                    // accept) is that connection's problem, not the
+                    // listener's — keep accepting.
+                    Err(ref e)
+                        if e.kind() == io::ErrorKind::ConnectionAborted
+                            || e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(ThreadedPeerServer { addr: local, stop, join: Some(join), conns, shared })
+    }
+
+    /// See [`PeerServer::register_residency`].
+    pub fn register_residency(
+        &self,
+        dataset_id: u64,
+        source: impl Fn() -> Option<Arc<ResidencySnapshot>> + Send + Sync + 'static,
+    ) {
+        self.shared.views.write().unwrap().insert(dataset_id, Arc::new(source));
+    }
+
+    /// Graceful shutdown: stop accepting, then sever live connections.
+    /// The accept thread is joined *before* the drain, so no connection
+    /// accepted during the race window can escape it. Idempotent (also
+    /// runs on drop).
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        for (_, c) in self.conns.lock().unwrap().drain(..) {
+            // Unblocks the handler's in-flight read immediately (the
+            // clone shares the underlying socket), so handlers exit
+            // promptly instead of sitting out their io_timeout.
+            let _ = c.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+impl Drop for ThreadedPeerServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// One connection's serve loop (threaded baseline): frames in, frames
+/// out, until EOF, timeout, lost framing sync, or server shutdown.
+fn serve_conn(sock: &mut TcpStream, shared: &PeerShared, stop: &AtomicBool) {
     while !stop.load(Ordering::Relaxed) {
         let frame = match proto::read_frame(sock) {
             Ok(Some(f)) => f,
@@ -393,63 +590,7 @@ fn serve_conn(
             // dead pooled connection as stale and redial.
             Ok(None) | Err(_) => return,
         };
-        // Re-resolved per frame so a tier attached after this connection
-        // opened is picked up immediately.
-        let tier = ram.read().unwrap().clone();
-        let tier = tier.as_deref();
-        let resp = match frame {
-            Frame::GetChunk { dataset_id, generation, chunk, grid_bytes } => {
-                match read_chunk_payload(
-                    node_dir, exports, views, tier, bucket, dataset_id, generation, grid_bytes,
-                    chunk,
-                ) {
-                    ChunkRead::Data(bytes) => Frame::ChunkData(bytes),
-                    ChunkRead::NotResident => Frame::NotResident,
-                    ChunkRead::Fail(msg) => Frame::Error(msg),
-                }
-            }
-            Frame::GetChunkBatch { dataset_id, generation, grid_bytes, chunks } => {
-                // One response frame for the whole batch. Any per-chunk
-                // I/O failure (or a combined payload the codec cannot
-                // frame) fails the batch as a request-level Error — the
-                // connection's framing stays intact either way.
-                let mut entries = Vec::with_capacity(chunks.len());
-                // Conservative body bound: tag + count + per-entry marker
-                // and length headers + payload bytes.
-                let mut body = 5 + 9 * chunks.len();
-                let mut failed = None;
-                for &c in &chunks {
-                    match read_chunk_payload(
-                        node_dir, exports, views, tier, bucket, dataset_id, generation,
-                        grid_bytes, c,
-                    ) {
-                        ChunkRead::Data(bytes) => {
-                            body += bytes.len();
-                            if body >= proto::MAX_FRAME {
-                                failed = Some(format!(
-                                    "batch payload exceeds the {} byte frame cap",
-                                    proto::MAX_FRAME
-                                ));
-                                break;
-                            }
-                            entries.push(Some(bytes));
-                        }
-                        ChunkRead::NotResident => entries.push(None),
-                        ChunkRead::Fail(msg) => {
-                            failed = Some(msg);
-                            break;
-                        }
-                    }
-                }
-                match failed {
-                    Some(msg) => Frame::Error(msg),
-                    None => Frame::ChunkBatchData(entries),
-                }
-            }
-            // Only GetChunk / GetChunkBatch are valid request frames.
-            _ => Frame::Error("expected a GetChunk request".into()),
-        };
-        if proto::write_frame(sock, &resp).is_err() {
+        if proto::write_frame(sock, &respond(shared, frame)).is_err() {
             return;
         }
     }
