@@ -77,6 +77,7 @@ impl Response {
             404 => "404 Not Found",
             405 => "405 Method Not Allowed",
             409 => "409 Conflict",
+            410 => "410 Gone",
             500 => "500 Internal Server Error",
             503 => "503 Service Unavailable",
             _ => "200 OK",

@@ -25,7 +25,7 @@ use std::sync::{Arc, Mutex};
 use super::http::{Request, Response};
 use crate::coordinator::{job_controller, Hoard};
 use crate::k8s::{Dataset, DatasetPhase, DlJob, JobPhase, ObjectMeta, StoreError};
-use crate::posix::dataplane::{DataPlane, Granularity, JobSession, JobSpec};
+use crate::posix::dataplane::{DataPlane, DatasetRetired, Granularity, JobSession, JobSpec};
 use crate::posix::realfs::ReadStats;
 use crate::util::Json;
 
@@ -137,12 +137,25 @@ impl ApiState {
             ("peer_reads", Json::num(s.peer_reads as f64)),
             ("peer_net_reads", Json::num(s.peer_net_reads as f64)),
             ("remote_wait_s", Json::num(s.remote_wait_s)),
+            ("peer_failures", Json::num(s.peer_failures as f64)),
+            ("degraded_reads", Json::num(s.degraded_reads as f64)),
             ("total_reads", Json::num(s.total_reads() as f64)),
             ("total_bytes", Json::num(s.total_bytes() as f64)),
         ])
     }
 
-    fn session_json(name: &str, sess: &JobSession) -> Json {
+    /// The dataset's lifecycle state as the plane reports it — surfaced on
+    /// every session body so a client polling `/v1/jobs/:id` sees
+    /// `degraded(lost=…)` / `replacing` / `retired` instead of guessing
+    /// from 500s.
+    fn session_lifecycle(&self, sess: &JobSession) -> String {
+        self.plane
+            .as_ref()
+            .map(|p| p.dataset_lifecycle(sess.dataset()))
+            .unwrap_or_else(|| "unknown".into())
+    }
+
+    fn session_json(&self, name: &str, sess: &JobSession) -> Json {
         Json::obj(vec![
             ("name", Json::str(name)),
             ("id", Json::num(sess.job_id() as f64)),
@@ -150,6 +163,7 @@ impl ApiState {
             ("readers", Json::num(sess.readers() as f64)),
             ("granularity", Json::str(sess.granularity().name())),
             ("epochs_run", Json::num(sess.epochs_run() as f64)),
+            ("lifecycle", Json::str(self.session_lifecycle(sess))),
             ("stats", Self::read_stats_json(&sess.stats())),
         ])
     }
@@ -225,7 +239,7 @@ impl ApiState {
                 return Self::error_json(500, format!("epoch failed: {e:#}"));
             }
         }
-        Response::json(201, Self::session_json(&name, &sess).to_string())
+        Response::json(201, self.session_json(&name, &sess).to_string())
     }
 
     fn list_sessions(&self) -> Response {
@@ -236,7 +250,7 @@ impl ApiState {
         let mut names: Vec<&String> = map.keys().collect();
         names.sort();
         let items: Vec<Json> =
-            names.into_iter().map(|n| Self::session_json(n, &map[n])).collect();
+            names.into_iter().map(|n| self.session_json(n, &map[n])).collect();
         Response::json(200, Json::obj(vec![("items", Json::arr(items))]).to_string())
     }
 
@@ -245,7 +259,14 @@ impl ApiState {
             return Self::no_plane();
         }
         match self.session(name) {
-            Some(s) => Response::json(200, Self::session_json(name, &s).to_string()),
+            // A retired (deleted) dataset answers 410 Gone — the session
+            // handle still exists, but nothing behind it will ever serve
+            // again; the body carries the lifecycle so clients see why.
+            Some(s) => {
+                let status =
+                    if self.session_lifecycle(&s) == "retired" { 410 } else { 200 };
+                Response::json(status, self.session_json(name, &s).to_string())
+            }
             None => Response::not_found(),
         }
     }
@@ -298,6 +319,11 @@ impl ApiState {
                     ("stats", Self::read_stats_json(&report.merged)),
                 ]);
                 Response::json(200, body.to_string())
+            }
+            // Lifecycle-precise failures: a retired dataset is 410 Gone
+            // (permanent), not a generic 500.
+            Err(e) if e.downcast_ref::<DatasetRetired>().is_some() => {
+                Self::error_json(410, format!("{e:#}"))
             }
             Err(e) => Self::error_json(500, format!("{e:#}")),
         }

@@ -454,12 +454,176 @@ impl CacheManager {
         affected
     }
 
-    /// Bring a failed node back (empty — its old data is considered gone).
-    pub fn recover_node(&mut self, n: NodeId) {
+    /// A cache node died but its datasets should **degrade, not vanish**
+    /// — the real-mode failure model. Every placed dataset striped on `n`
+    /// keeps its stripe and its surviving chunks: only the chunks homed on
+    /// the dead node are cleared, so survivors keep serving warm while the
+    /// lost chunks re-plan as remote fills. The published residency
+    /// snapshot is retired and a fresh one — **same generation**, so
+    /// surviving chunk files keep their on-disk and wire addresses — is
+    /// republished with the survivor bits. Only the dead node's
+    /// reservation is released. Returns the degraded dataset names.
+    ///
+    /// Contrast [`CacheManager::fail_node`], the simulated-coordinator
+    /// path, where losing a stripe member invalidates the whole placement
+    /// and the repair loop re-places cold.
+    pub fn degrade_node(&mut self, n: NodeId) -> Vec<String> {
         if !self.healthy[n.0] {
-            self.healthy[n.0] = true;
-            self.events.push(CacheEvent::NodeRecovered(n.0));
+            return vec![];
         }
+        self.healthy[n.0] = false;
+        let affected: Vec<String> = self
+            .registry
+            .iter()
+            .filter(|r| r.stripe.as_ref().is_some_and(|s| s.contains(n)))
+            .map(|r| r.spec.name.clone())
+            .collect();
+        for name in &affected {
+            let rec = self.registry.get_mut(name).expect("listed above");
+            let total = rec.spec.total_bytes;
+            let stripe = rec.stripe.as_ref().expect("filtered on stripe").clone();
+            let state = std::mem::replace(&mut rec.state, DatasetState::Registered);
+            let (mut chunks, mut lost) = match state {
+                DatasetState::Cached => {
+                    let mut full = ChunkSet::new(total, stripe.chunk_bytes);
+                    for c in 0..full.num_chunks() {
+                        full.mark(c);
+                    }
+                    (full, vec![])
+                }
+                DatasetState::Caching { chunks } => (chunks, vec![]),
+                DatasetState::Degraded { chunks, lost } => (chunks, lost),
+                other => {
+                    // A stripe in Evicting/Replacing holds no serving
+                    // residency — leave it to its own transition.
+                    rec.state = other;
+                    continue;
+                }
+            };
+            for c in 0..chunks.num_chunks() {
+                if stripe.node_of_chunk(c) == n {
+                    chunks.clear(c);
+                }
+            }
+            lost.push(n);
+            if let Some(snap) = rec.snapshot.take() {
+                snap.retire();
+            }
+            let snap = ResidencySnapshot::new(ChunkGeometry {
+                stripe: stripe.clone(),
+                total_bytes: total,
+                num_items: rec.spec.num_items,
+                dataset_id: rec.id,
+                generation: rec.generation,
+            });
+            for c in 0..chunks.num_chunks() {
+                if chunks.contains(c) {
+                    snap.set(c);
+                }
+            }
+            rec.snapshot = Some(snap);
+            rec.state = DatasetState::Degraded { chunks, lost };
+            // The dead node's share is gone; survivors keep theirs.
+            let share = stripe.bytes_on_node(n, total);
+            self.volumes[n.0].release(share).expect("reserved at placement");
+        }
+        self.events.push(CacheEvent::NodeFailed {
+            node: n.0,
+            datasets_lost: affected.clone(),
+        });
+        affected
+    }
+
+    /// Coordinator-triggered re-stripe of a placed dataset: tear down the
+    /// placement bookkeeping (state → `Replacing`, snapshot retired,
+    /// surviving reservations released, stripe cleared so
+    /// [`CacheManager::place`] accepts a new node set) and return what a
+    /// warm migration needs — the old chunk geometry plus the chunk IDs
+    /// still resident on survivors. The caller re-places on the survivor
+    /// set (generation bump) and copies the surviving chunk payloads
+    /// instead of re-fetching the whole dataset from remote.
+    pub fn begin_replace(&mut self, name: &str) -> Result<(ChunkGeometry, Vec<u64>), CacheError> {
+        let geom = self.geometry(name)?;
+        let rec = self.registry.get_mut(name)?;
+        let total = rec.spec.total_bytes;
+        let stripe = rec.stripe.take().expect("geometry() ensured a placement");
+        let (survivors, lost): (Vec<u64>, Vec<NodeId>) =
+            match std::mem::replace(&mut rec.state, DatasetState::Replacing) {
+                DatasetState::Cached => ((0..geom.num_chunks()).collect(), vec![]),
+                DatasetState::Caching { chunks } => (
+                    (0..chunks.num_chunks()).filter(|&c| chunks.contains(c)).collect(),
+                    vec![],
+                ),
+                DatasetState::Degraded { chunks, lost } => (
+                    (0..chunks.num_chunks()).filter(|&c| chunks.contains(c)).collect(),
+                    lost,
+                ),
+                other => {
+                    let why = format!("replace in state {other:?}");
+                    rec.state = other;
+                    rec.stripe = Some(stripe);
+                    return Err(CacheError::Registry(RegistryError::BadTransition(
+                        name.into(),
+                        why,
+                    )));
+                }
+            };
+        if let Some(snap) = rec.snapshot.take() {
+            snap.retire();
+        }
+        for &sn in stripe.nodes() {
+            if lost.contains(&sn) {
+                continue; // released when the node failed
+            }
+            let share = stripe.bytes_on_node(sn, total);
+            self.volumes[sn.0].release(share).expect("reserved at placement");
+        }
+        Ok((geom, survivors))
+    }
+
+    /// Bring a failed node back (empty — its old data is considered
+    /// gone). Datasets degraded on it re-admit the node: its reservation
+    /// is re-taken and its chunks — still cleared — refill through the
+    /// normal mark paths; the dataset leaves `Degraded` once no lost
+    /// member remains.
+    pub fn recover_node(&mut self, n: NodeId) {
+        if self.healthy[n.0] {
+            return;
+        }
+        self.healthy[n.0] = true;
+        let degraded: Vec<String> = self
+            .registry
+            .iter()
+            .filter(|r| {
+                matches!(&r.state, DatasetState::Degraded { lost, .. } if lost.contains(&n))
+            })
+            .map(|r| r.spec.name.clone())
+            .collect();
+        for name in &degraded {
+            let rec = self.registry.get_mut(name).expect("listed above");
+            let total = rec.spec.total_bytes;
+            let stripe = rec.stripe.as_ref().expect("degraded keeps its stripe").clone();
+            // Re-reserve the share released at failure; if the capacity
+            // was taken meanwhile, the dataset stays degraded on `n`.
+            if self.volumes[n.0].allocate(stripe.bytes_on_node(n, total)).is_err() {
+                continue;
+            }
+            let state = std::mem::replace(&mut rec.state, DatasetState::Registered);
+            rec.state = match state {
+                DatasetState::Degraded { chunks, mut lost } => {
+                    lost.retain(|&m| m != n);
+                    if !lost.is_empty() {
+                        DatasetState::Degraded { chunks, lost }
+                    } else if chunks.is_full() {
+                        DatasetState::Cached
+                    } else {
+                        DatasetState::Caching { chunks }
+                    }
+                }
+                other => other,
+            };
+        }
+        self.events.push(CacheEvent::NodeRecovered(n.0));
     }
 
     pub fn num_nodes(&self) -> usize {
@@ -593,6 +757,7 @@ impl CacheManager {
     ) -> Result<(), CacheError> {
         let rec = self.registry.get_mut(name)?;
         let snap = rec.snapshot.clone();
+        let stripe = rec.stripe.clone();
         match &mut rec.state {
             DatasetState::Caching { chunks } => {
                 for c in chunk_ids {
@@ -608,6 +773,23 @@ impl CacheManager {
                         s.set_full();
                     }
                     self.events.push(CacheEvent::FullyCached(name.to_string()));
+                }
+                Ok(())
+            }
+            DatasetState::Degraded { chunks, lost } => {
+                let stripe = stripe.as_ref().expect("degraded keeps its stripe");
+                for c in chunk_ids {
+                    // A chunk homed on a lost member has no live node to
+                    // hold it — it cannot be admitted until the node
+                    // rejoins or the dataset is re-placed.
+                    if lost.contains(&stripe.node_of_chunk(c)) {
+                        continue;
+                    }
+                    if chunks.mark(c) {
+                        if let Some(s) = &snap {
+                            s.set(c);
+                        }
+                    }
                 }
                 Ok(())
             }
@@ -645,7 +827,22 @@ impl CacheManager {
         };
         let rec = self.registry.get_mut(name)?;
         let snap = rec.snapshot.clone();
+        let stripe = rec.stripe.clone();
         match &mut rec.state {
+            DatasetState::Degraded { chunks, lost } => {
+                let stripe = stripe.as_ref().expect("degraded keeps its stripe");
+                for (c, bytes) in overlaps {
+                    if lost.contains(&stripe.node_of_chunk(c)) {
+                        continue;
+                    }
+                    if chunks.credit_unit(c, item, bytes) {
+                        if let Some(s) = &snap {
+                            s.set(c);
+                        }
+                    }
+                }
+                Ok(())
+            }
             DatasetState::Caching { chunks } => {
                 for (c, bytes) in overlaps {
                     if chunks.credit_unit(c, item, bytes) {
@@ -729,7 +926,7 @@ impl CacheManager {
         let home = stripe.node_of_item(item);
         let resident = match &rec.state {
             DatasetState::Cached => true,
-            DatasetState::Caching { chunks } => stripe
+            DatasetState::Caching { chunks } | DatasetState::Degraded { chunks, .. } => stripe
                 .chunks_of_item(item, rec.spec.num_items, rec.spec.total_bytes)
                 .all(|c| chunks.contains(c)),
             _ => false,
@@ -762,7 +959,9 @@ impl CacheManager {
             let home = stripe.node_of_chunk(c);
             let resident = match &rec.state {
                 DatasetState::Cached => true,
-                DatasetState::Caching { chunks } => chunks.contains(c),
+                DatasetState::Caching { chunks } | DatasetState::Degraded { chunks, .. } => {
+                    chunks.contains(c)
+                }
                 _ => false,
             };
             let loc = if resident {
@@ -793,11 +992,18 @@ impl CacheManager {
             snap.retire();
         }
         if let Some(stripe) = rec.stripe.take() {
-            rec.state = DatasetState::Registered;
+            let lost = match std::mem::replace(&mut rec.state, DatasetState::Registered) {
+                DatasetState::Degraded { lost, .. } => lost,
+                _ => vec![],
+            };
             // Release per-node reservations (reservation was for the full
-            // dataset regardless of fetch progress).
+            // dataset regardless of fetch progress). A lost member's share
+            // was already released when it failed.
             let _ = resident;
             for &n in stripe.nodes() {
+                if lost.contains(&n) {
+                    continue;
+                }
                 let share = stripe.bytes_on_node(n, total);
                 self.volumes[n.0].release(share).expect("reserved earlier");
             }
@@ -1258,6 +1464,99 @@ mod tests {
         let snap = m.residency_snapshot("a").unwrap();
         m.fail_node(NodeId(1));
         assert!(snap.retired(), "losing a stripe member retires the snapshot");
+    }
+
+    #[test]
+    fn degrade_keeps_survivors_and_rejoin_readmits() {
+        let mut m = manager(2, 10_000, EvictionPolicy::Manual);
+        m.register(ds("a", 10, 1000), "nfs://s/a".into()).unwrap();
+        m.place("a", vec![NodeId(0), NodeId(1)]).unwrap();
+        m.prefetch_tick("a", 1000).unwrap();
+        let old_snap = m.residency_snapshot("a").unwrap();
+        // Grid: chunk = 500 ⇒ chunk 0 → node 0, chunk 1 → node 1.
+        let degraded = m.degrade_node(NodeId(1));
+        assert_eq!(degraded, vec!["a".to_string()]);
+        assert!(old_snap.retired(), "degrade retires the published snapshot");
+        let rec = m.registry.get("a").unwrap();
+        assert!(rec.stripe.is_some(), "degraded keeps the stripe");
+        assert_eq!(rec.generation, 1, "no generation bump on degrade");
+        assert!(matches!(&rec.state, DatasetState::Degraded { lost, .. } if lost == &[NodeId(1)]));
+        let snap = m.residency_snapshot("a").unwrap();
+        assert!(snap.contains(0) && !snap.contains(1), "survivor bits republished");
+        // Survivor chunk keeps serving; lost chunk re-plans remote.
+        assert_eq!(m.read_location("a", 0, NodeId(0)).unwrap(), ReadLocation::Local);
+        assert!(matches!(
+            m.read_location("a", 9, NodeId(0)).unwrap(),
+            ReadLocation::RemoteFill { .. }
+        ));
+        // A lost-homed chunk cannot be re-admitted while its node is gone.
+        m.mark_chunks("a", [1u64]).unwrap();
+        assert!(!snap.contains(1));
+        // Only the dead node's reservation was released.
+        assert_eq!(m.node_used(NodeId(0)), 500);
+        assert_eq!(m.node_used(NodeId(1)), 0);
+        // Rejoin: reservation re-taken, refills admit again, and the
+        // same-generation snapshot keeps mirroring them.
+        m.recover_node(NodeId(1));
+        assert_eq!(m.node_used(NodeId(1)), 500);
+        m.mark_chunks("a", [1u64]).unwrap();
+        assert!(snap.contains(1));
+        assert_eq!(m.registry.get("a").unwrap().state, DatasetState::Cached);
+        assert_eq!(m.read_location("a", 9, NodeId(1)).unwrap(), ReadLocation::Local);
+    }
+
+    #[test]
+    fn second_failure_deepens_degradation_and_evict_releases_exactly() {
+        let mut m = manager(3, 10_000, EvictionPolicy::Manual);
+        m.chunk_bytes = 250;
+        m.register(ds("a", 6, 1500), "nfs://s/a".into()).unwrap();
+        m.place("a", vec![NodeId(0), NodeId(1), NodeId(2)]).unwrap();
+        m.prefetch_tick("a", 1500).unwrap();
+        m.degrade_node(NodeId(2));
+        m.degrade_node(NodeId(1));
+        let rec = m.registry.get("a").unwrap();
+        match &rec.state {
+            DatasetState::Degraded { chunks, lost } => {
+                assert_eq!(lost, &[NodeId(2), NodeId(1)]);
+                // Chunks 0 and 3 (node 0) survive; 1, 2, 4, 5 are lost.
+                assert_eq!(chunks.marked_chunks(), 2);
+            }
+            other => panic!("expected Degraded, got {other:?}"),
+        }
+        // Evict must release exactly the survivor's share — the lost
+        // members' shares were released at failure time.
+        m.evict("a").unwrap();
+        assert_eq!((0..3).map(|i| m.node_used(NodeId(i))).sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn replace_restripes_on_survivors_with_generation_bump() {
+        let mut m = manager(3, 10_000, EvictionPolicy::Manual);
+        m.chunk_bytes = 250;
+        m.register(ds("a", 6, 1500), "nfs://s/a".into()).unwrap();
+        m.place("a", vec![NodeId(0), NodeId(1), NodeId(2)]).unwrap();
+        m.prefetch_tick("a", 1500).unwrap();
+        m.degrade_node(NodeId(2));
+        // Chunks 2 and 5 homed on the dead node; 0, 1, 3, 4 survive.
+        let (old_geom, survivors) = m.begin_replace("a").unwrap();
+        assert_eq!(old_geom.generation, 1);
+        assert_eq!(survivors, vec![0, 1, 3, 4]);
+        assert_eq!(m.registry.get("a").unwrap().state, DatasetState::Replacing);
+        assert_eq!(
+            (0..3).map(|i| m.node_used(NodeId(i))).sum::<u64>(),
+            0,
+            "replace releases the surviving reservations for the re-place"
+        );
+        m.place("a", vec![NodeId(0), NodeId(1)]).unwrap();
+        let rec = m.registry.get("a").unwrap();
+        assert_eq!(rec.generation, 2, "re-place is a new generation");
+        assert!(matches!(rec.state, DatasetState::Caching { .. }));
+        let g = m.geometry("a").unwrap();
+        assert_eq!(g.chunk_bytes(), old_geom.chunk_bytes(), "grid preserved for migration");
+        // Migrated survivors + refetched lost chunks complete the fill.
+        m.mark_chunks("a", survivors.clone()).unwrap();
+        m.mark_chunks("a", [2u64, 5]).unwrap();
+        assert_eq!(m.registry.get("a").unwrap().state, DatasetState::Cached);
     }
 
     #[test]

@@ -22,6 +22,16 @@ pub enum DatasetState {
     Caching { chunks: ChunkSet },
     /// Fully resident on its stripe set.
     Cached,
+    /// One or more stripe nodes died mid-life: `chunks` is the survivor
+    /// residency (the dead nodes' chunks cleared), `lost` the failed
+    /// nodes. Survivor chunks keep serving; lost chunks re-plan as remote
+    /// fills. Left by a coordinator re-stripe ([`Replacing`]) or a node
+    /// rejoin re-admitting the lost chunks.
+    Degraded { chunks: ChunkSet, lost: Vec<crate::netsim::NodeId> },
+    /// Coordinator-triggered re-stripe onto the survivor set is in flight:
+    /// the generation is being bumped and chunks migrated/re-fetched. Not
+    /// evictable while moving.
+    Replacing,
     /// Being removed from the cache.
     Evicting,
 }
@@ -55,15 +65,18 @@ pub struct DatasetRecord {
 
 impl DatasetRecord {
     pub fn is_evictable(&self) -> bool {
-        self.pin_count == 0 && !matches!(self.state, DatasetState::Evicting)
+        self.pin_count == 0
+            && !matches!(self.state, DatasetState::Evicting | DatasetState::Replacing)
     }
 
     /// Bytes currently occupying cache space (sum of resident chunk
     /// sizes, tail chunk included, while caching).
     pub fn resident_bytes(&self) -> u64 {
         match &self.state {
-            DatasetState::Registered => 0,
-            DatasetState::Caching { chunks } => chunks.resident_bytes(),
+            DatasetState::Registered | DatasetState::Replacing => 0,
+            DatasetState::Caching { chunks } | DatasetState::Degraded { chunks, .. } => {
+                chunks.resident_bytes()
+            }
             DatasetState::Cached | DatasetState::Evicting => self.spec.total_bytes,
         }
     }
@@ -73,16 +86,20 @@ impl DatasetRecord {
     /// sequential front's partial progress).
     pub fn fetched_bytes(&self) -> u64 {
         match &self.state {
-            DatasetState::Registered => 0,
-            DatasetState::Caching { chunks } => chunks.fetched_bytes(),
+            DatasetState::Registered | DatasetState::Replacing => 0,
+            DatasetState::Caching { chunks } | DatasetState::Degraded { chunks, .. } => {
+                chunks.fetched_bytes()
+            }
             DatasetState::Cached | DatasetState::Evicting => self.spec.total_bytes,
         }
     }
 
-    /// Chunk residency bitmap while the dataset is filling.
+    /// Chunk residency bitmap while the dataset is filling or degraded.
     pub fn chunk_set(&self) -> Option<&ChunkSet> {
         match &self.state {
-            DatasetState::Caching { chunks } => Some(chunks),
+            DatasetState::Caching { chunks } | DatasetState::Degraded { chunks, .. } => {
+                Some(chunks)
+            }
             _ => None,
         }
     }

@@ -231,6 +231,23 @@ impl ChunkSet {
         true
     }
 
+    /// Unmark chunk `c` — its bytes were **lost** (the node holding it
+    /// died or its file was reclaimed), the inverse of [`ChunkSet::mark`].
+    /// Returns `true` if it was marked. The fill front moves back to `c`
+    /// when needed so "every chunk below the front is marked" stays true.
+    pub fn clear(&mut self, c: u64) -> bool {
+        if !self.contains(c) {
+            return false;
+        }
+        self.words[(c / 64) as usize] &= !(1u64 << (c % 64));
+        self.marked -= 1;
+        self.marked_bytes -= self.chunk_len(c);
+        if c < self.front {
+            self.front = c;
+        }
+        true
+    }
+
     /// Bytes credited toward (unmarked) chunk `c` so far.
     fn credited(&self, c: u64) -> u64 {
         self.credits.range((c, 0)..=(c, u64::MAX)).map(|(_, b)| b).sum()
@@ -477,6 +494,27 @@ mod tests {
         cs.mark(10);
         assert_eq!(cs.resident_bytes(), 150, "tail chunk counts its short length");
         assert!(!cs.is_full());
+    }
+
+    #[test]
+    fn chunkset_clear_unmarks_and_pulls_front_back() {
+        let mut cs = ChunkSet::new(1050, 100); // 11 chunks, tail = 50
+        for c in 0..cs.num_chunks() {
+            cs.mark(c);
+        }
+        assert!(cs.is_full());
+        assert!(cs.clear(10), "tail chunk clears");
+        assert_eq!(cs.resident_bytes(), 1000, "tail chunk gives back its short length");
+        assert!(cs.clear(3));
+        assert!(!cs.clear(3), "re-clear is a no-op");
+        assert!(!cs.contains(3));
+        assert_eq!(cs.marked_chunks(), 9);
+        assert_eq!(cs.front(), 3, "front pulled back to the first hole");
+        // Re-marking the holes restores fullness exactly.
+        cs.mark(3);
+        cs.mark(10);
+        assert!(cs.is_full());
+        assert_eq!(cs.resident_bytes(), 1050);
     }
 
     #[test]

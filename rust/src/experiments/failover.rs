@@ -1,0 +1,354 @@
+//! Failover drill (`hoard exp failover`): epoch times of one striped
+//! dataset as cache nodes die mid-epoch, are declared failed, rejoin,
+//! and are re-placed around — the node-death lifecycle measured end to
+//! end on real sockets.
+//!
+//! What it shows: a killed peer degrades throughput but never
+//! correctness — readers classify the connection-level failure
+//! ([`PeerDown`](crate::peer::PeerDown)), re-plan the affected segments
+//! as byte-correct remote fills (`degraded_reads`), and the epoch
+//! completes. Declaring the node failed ([`DataPlane::fail_node`])
+//! turns the transient degradation into planned remote fills; a rejoin
+//! ([`DataPlane::recover_node`]) re-admits the refills that landed
+//! while the node was out, and a re-stripe onto the survivor set
+//! ([`DataPlane::replace_dataset`]) migrates surviving chunk files
+//! under a bumped generation instead of starting cold. A second table
+//! drives the same story through the `/v1/jobs` HTTP surface: the
+//! session answers with its lifecycle state, survives degradation, and
+//! a retired dataset answers `410 Gone`. Emits the standard
+//! `metrics::Table` JSON shape under `--json`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::cache::{CacheManager, EvictionPolicy, SharedCache};
+use crate::metrics::Table;
+use crate::netsim::NodeId;
+use crate::peer::{FaultAction, FaultSpec, PeerClient, PeerServer, SocketTransport};
+use crate::posix::dataplane::{DataPlane, JobSession, JobSpec};
+use crate::posix::realfs::{ReadStats, RealCluster};
+use crate::remote::NfsModel;
+use crate::storage::{Device, DeviceKind, Volume};
+use crate::workload::datagen::{self, DataGenConfig};
+use crate::workload::DatasetSpec;
+
+/// Nodes in the failover testbed (the paper's 4-node cluster).
+pub const FAILOVER_NODES: usize = 4;
+
+/// Short suspect cooldown so the drill's rejoin step probes the revived
+/// peer within one run instead of waiting out the production default.
+const DRILL_COOLDOWN: Duration = Duration::from_millis(200);
+
+/// One epoch of the drill: what happened, how long it took, and the
+/// degradation accounting that proves correctness was never traded.
+#[derive(Debug, Clone)]
+pub struct FailoverStep {
+    pub action: String,
+    pub epoch_s: f64,
+    pub items_per_s: f64,
+    /// Connection-level peer failures classified this epoch.
+    pub peer_failures: u64,
+    /// Reads that fell back to a byte-correct remote fill after a peer
+    /// failure.
+    pub degraded_reads: u64,
+    pub remote_reads: u64,
+    /// The dataset's lifecycle state after the step.
+    pub lifecycle: String,
+}
+
+fn step(
+    action: &str,
+    sess: &JobSession,
+    plane: &DataPlane,
+    cluster: &RealCluster,
+    epoch: u32,
+) -> Result<FailoverStep> {
+    cluster.take_stats();
+    let report = sess.run_epoch(epoch).with_context(|| format!("epoch '{action}'"))?;
+    let s: ReadStats = report.merged;
+    Ok(FailoverStep {
+        action: action.to_string(),
+        epoch_s: report.wall.as_secs_f64(),
+        items_per_s: report.items_per_sec(sess.cfg().num_items),
+        peer_failures: s.peer_failures,
+        degraded_reads: s.degraded_reads,
+        remote_reads: s.remote_reads,
+        lifecycle: plane.dataset_lifecycle(sess.dataset()),
+    })
+}
+
+/// The full drill over real sockets: baseline epochs, a peer killed
+/// mid-epoch, the node declared failed, a second failure, a rejoin, and
+/// a re-place onto the survivor set. Every epoch must complete
+/// byte-correct; the returned steps carry the degradation accounting.
+pub fn failover_run(items: u64, chunk_bytes: u64, readers: usize) -> Result<Vec<FailoverStep>> {
+    static RUN_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = RUN_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let root: PathBuf =
+        std::env::temp_dir().join(format!("hoard-failover-{}-{seq}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let cluster = RealCluster::create(&root, FAILOVER_NODES, 200e6)
+        .context("creating failover cluster")?
+        .with_remote_model(Box::new(NfsModel::new(200e6)));
+    let cfg = DataGenConfig { num_items: items, files_per_dir: 32, ..Default::default() };
+    let total = datagen::generate(&cluster.remote_dir, &cfg).context("generating dataset")?;
+
+    let vols = (0..FAILOVER_NODES)
+        .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 30)]))
+        .collect();
+    let mut manager = CacheManager::new(vols, EvictionPolicy::Manual);
+    manager.chunk_bytes = chunk_bytes;
+    manager.register(DatasetSpec::new("d", items, total), "nfs://remote/d".into())?;
+    manager.place("d", (0..FAILOVER_NODES).map(NodeId).collect())?;
+    let cache = SharedCache::new(manager);
+
+    // One PeerServer per node so "node death" is a real socket-level
+    // event (fault injection), not bookkeeping.
+    let mut servers: Vec<PeerServer> = Vec::new();
+    for n in 0..FAILOVER_NODES {
+        servers.push(
+            PeerServer::start_with(
+                "127.0.0.1:0",
+                cluster.node_dirs[n].clone(),
+                Some(cluster.node_bw[n].clone()),
+                Duration::from_secs(5),
+            )
+            .with_context(|| format!("starting peer server for node{n}"))?,
+        );
+    }
+    let addrs = servers.iter().map(|s| s.addr).collect();
+    let client =
+        PeerClient::connect(addrs).with_nic_bw(1.25e9).with_suspect_cooldown(DRILL_COOLDOWN);
+    let plane = Arc::new(
+        DataPlane::new(cluster.clone(), cache)
+            .with_transport(Box::new(SocketTransport::new(client))),
+    );
+    let sess = plane.open_job(JobSpec::new("d", cfg.clone()).readers(readers).seed(0xFA11))?;
+
+    let mut steps = Vec::new();
+    steps.push(step("baseline cold", &sess, &plane, &cluster, 0)?);
+    steps.push(step("baseline warm", &sess, &plane, &cluster, 1)?);
+
+    // Kill node3's peer process mid-epoch: after a couple of served
+    // chunks every request sees a connection reset — the reader pool
+    // must classify, degrade, and finish the epoch.
+    servers[3].inject_fault(FaultSpec { action: FaultAction::Kill, after: 2 });
+    steps.push(step("node3 killed mid-epoch", &sess, &plane, &cluster, 2)?);
+
+    // The coordinator declares the node failed: survivor chunks keep
+    // serving, lost chunks re-plan as remote fills.
+    plane.fail_node(NodeId(3))?;
+    steps.push(step("node3 declared failed (1 lost)", &sess, &plane, &cluster, 3)?);
+
+    // A second failure deepens the degradation.
+    servers[2].inject_fault(FaultSpec { action: FaultAction::Kill, after: 0 });
+    plane.fail_node(NodeId(2))?;
+    steps.push(step("node2 also failed (2 lost)", &sess, &plane, &cluster, 4)?);
+
+    // Recovery action A — node2 rejoins: clear the fault, wait out the
+    // suspect cooldown, re-admit the refills that landed while it was
+    // out.
+    servers[2].clear_fault();
+    plane.recover_node(NodeId(2));
+    std::thread::sleep(DRILL_COOLDOWN + Duration::from_millis(50));
+    steps.push(step("node2 rejoined", &sess, &plane, &cluster, 5)?);
+
+    // Recovery action B — node3 stays dead: re-stripe onto the
+    // survivor set under a bumped generation; surviving chunk files
+    // migrate on disk, only the lost third refetches.
+    plane.replace_dataset("d", (0..3).map(NodeId).collect())?;
+    let fresh = plane.open_job(JobSpec::new("d", cfg).readers(readers).seed(0xFA12))?;
+    steps.push(step("re-placed on [0,1,2]", &fresh, &plane, &cluster, 0)?);
+
+    for s in &mut servers {
+        s.stop();
+    }
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(steps)
+}
+
+/// The failover drill table over an explicit shape.
+pub fn failover_table_with(items: u64, chunk_bytes: u64, readers: usize) -> Table {
+    let mut t = Table::new(
+        "Real mode — failover drill: epoch time vs node failures and recovery actions (TCP peers)",
+        &[
+            "action",
+            "epoch (s)",
+            "img/s",
+            "peer failures",
+            "degraded reads",
+            "remote reads",
+            "lifecycle",
+        ],
+    );
+    match failover_run(items, chunk_bytes, readers) {
+        Ok(steps) => {
+            for s in steps {
+                t.row(vec![
+                    s.action,
+                    format!("{:.3}", s.epoch_s),
+                    format!("{:.0}", s.items_per_s),
+                    format!("{}", s.peer_failures),
+                    format!("{}", s.degraded_reads),
+                    format!("{}", s.remote_reads),
+                    s.lifecycle,
+                ]);
+            }
+        }
+        Err(e) => {
+            let mut cells = vec!["-".to_string(), format!("failed: {e:#}")];
+            cells.resize(7, String::new());
+            t.row(cells);
+        }
+    }
+    t
+}
+
+/// The default `hoard exp failover` table: sub-item chunks, 2 readers.
+/// Honors `HOARD_BENCH_SMOKE=1`.
+pub fn failover_table(items: u64) -> Table {
+    let smoke = std::env::var("HOARD_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let items = if smoke { items.min(8) } else { items };
+    failover_table_with(items, 1000, 2)
+}
+
+/// The jobs-level failover scenario, driven entirely through the
+/// `/v1/jobs` HTTP surface: open a session, degrade the plane under it,
+/// keep training, then retire the dataset and watch the API answer
+/// `410 Gone` instead of a generic 500.
+pub fn failover_jobs_table() -> Table {
+    let mut t = Table::new(
+        "Real mode — failover over /v1/jobs (session survives degradation; retired answers 410)",
+        &["step", "request", "status", "lifecycle"],
+    );
+    match failover_jobs_run() {
+        Ok(rows) => {
+            for (s, req, status, lc) in rows {
+                t.row(vec![s, req, format!("{status}"), lc]);
+            }
+        }
+        Err(e) => {
+            let mut cells = vec!["-".to_string(), format!("failed: {e:#}")];
+            cells.resize(4, String::new());
+            t.row(cells);
+        }
+    }
+    t
+}
+
+/// (step, request, status, lifecycle-after) rows for
+/// [`failover_jobs_table`] — also the jobs-level drill the tests pin.
+pub fn failover_jobs_run() -> Result<Vec<(String, String, u16, String)>> {
+    use crate::api::{request, serve_with_plane};
+    use crate::coordinator::Hoard;
+    use std::sync::Mutex;
+
+    static RUN_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = RUN_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let root: PathBuf =
+        std::env::temp_dir().join(format!("hoard-failover-jobs-{}-{seq}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let cluster = RealCluster::create(&root, FAILOVER_NODES, 200e6)
+        .context("creating jobs-drill cluster")?
+        .with_remote_model(Box::new(NfsModel::new(200e6)));
+    let cfg = DataGenConfig { num_items: 8, files_per_dir: 32, ..Default::default() };
+    let total = datagen::generate(&cluster.remote_dir, &cfg).context("generating dataset")?;
+    let vols = (0..FAILOVER_NODES)
+        .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 30)]))
+        .collect();
+    let mut manager = CacheManager::new(vols, EvictionPolicy::Manual);
+    manager.chunk_bytes = 1000;
+    manager.register(DatasetSpec::new("d", cfg.num_items, total), "nfs://remote/d".into())?;
+    manager.place("d", (0..FAILOVER_NODES).map(NodeId).collect())?;
+    let plane = Arc::new(DataPlane::new(cluster.clone(), SharedCache::new(manager)));
+    plane.register_dataset("d", cfg);
+
+    let hoard = Arc::new(Mutex::new(Hoard::paper_testbed()));
+    let mut srv = serve_with_plane("127.0.0.1:0", hoard, plane.clone())?;
+    let addr = srv.addr;
+
+    let mut rows: Vec<(String, String, u16, String)> = Vec::new();
+    let mut push = |step: &str, req: String, status: u16, plane: &DataPlane| {
+        rows.push((step.to_string(), req, status, plane.dataset_lifecycle("d")));
+    };
+
+    let (st, _) = request(
+        addr,
+        "POST",
+        "/v1/jobs",
+        r#"{"name":"train","dataset":"d","readers":1,"epochs":1}"#,
+    )?;
+    push("open + cold epoch", "POST /v1/jobs".into(), st, &plane);
+
+    plane.fail_node(NodeId(1))?;
+    let (st, _) = request(addr, "GET", "/v1/jobs/train", "")?;
+    push("node1 failed", "GET /v1/jobs/train".into(), st, &plane);
+
+    let (st, _) = request(addr, "POST", "/v1/jobs/train/epoch", "")?;
+    push("epoch while degraded", "POST /v1/jobs/train/epoch".into(), st, &plane);
+
+    plane.recover_node(NodeId(1));
+    let (st, _) = request(addr, "POST", "/v1/jobs/train/epoch", "")?;
+    push("epoch after rejoin", "POST /v1/jobs/train/epoch".into(), st, &plane);
+
+    plane.delete_dataset("d")?;
+    let (st, _) = request(addr, "GET", "/v1/jobs/train", "")?;
+    push("dataset retired: GET", "GET /v1/jobs/train".into(), st, &plane);
+    let (st, _) = request(addr, "POST", "/v1/jobs/train/epoch", "")?;
+    push("dataset retired: epoch", "POST /v1/jobs/train/epoch".into(), st, &plane);
+
+    srv.stop();
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drill_completes_every_epoch_and_degrades_without_remote_on_baseline() {
+        let steps = failover_run(8, 1000, 2).unwrap();
+        assert_eq!(steps.len(), 7);
+        assert_eq!(steps[0].action, "baseline cold");
+        assert!(steps[0].remote_reads > 0, "cold epoch fills from remote");
+        // The warm baseline is clean: no failures, no degradation.
+        assert_eq!(steps[1].peer_failures, 0);
+        assert_eq!(steps[1].degraded_reads, 0);
+        assert_eq!(steps[1].remote_reads, 0);
+        assert_eq!(steps[1].lifecycle, "cached");
+        // The mid-epoch kill is classified and degraded around.
+        assert!(steps[2].peer_failures > 0, "kill must be classified: {steps:?}");
+        assert!(steps[2].degraded_reads > 0, "kill must degrade reads: {steps:?}");
+        // Declared failures show in the lifecycle; deeper failure, deeper
+        // degradation.
+        assert_eq!(steps[3].lifecycle, "degraded(lost=3)");
+        assert_eq!(steps[4].lifecycle, "degraded(lost=3,2)");
+        // The re-place lands a fresh, fully cached generation.
+        assert_eq!(steps[6].lifecycle, "cached");
+        assert_eq!(steps[6].peer_failures, 0, "no dead peers in the survivor set");
+    }
+
+    #[test]
+    fn jobs_drill_surfaces_lifecycle_and_410() {
+        let rows = failover_jobs_run().unwrap();
+        assert_eq!(rows.len(), 6);
+        assert_eq!((rows[0].2, rows[0].3.as_str()), (201, "cached"));
+        assert_eq!((rows[1].2, rows[1].3.as_str()), (200, "degraded(lost=1)"));
+        assert_eq!(rows[2].2, 200, "epoch must survive degradation: {rows:?}");
+        assert_eq!(rows[3].2, 200, "epoch must survive rejoin: {rows:?}");
+        assert_eq!((rows[4].2, rows[4].3.as_str()), (410, "retired"));
+        assert_eq!(rows[5].2, 410, "retired epoch must answer 410: {rows:?}");
+    }
+
+    #[test]
+    fn failover_table_has_one_row_per_step() {
+        let t = failover_table_with(8, 1000, 1);
+        assert_eq!(t.rows.len(), 7, "{:?}", t.rows);
+        assert_eq!(t.rows[0][0], "baseline cold");
+        assert_eq!(t.rows[6][6], "cached", "{:?}", t.rows);
+    }
+}

@@ -6,6 +6,7 @@
 pub mod ablations;
 pub mod chunks;
 pub mod evict;
+pub mod failover;
 pub mod jobs;
 pub mod paper;
 pub mod peers;
@@ -13,6 +14,7 @@ pub mod realmode;
 
 pub use chunks::{chunk_scaling_run, chunk_size_table};
 pub use evict::{eviction_lifecycle_run, eviction_lifecycle_table};
+pub use failover::{failover_jobs_table, failover_run, failover_table};
 pub use jobs::{co_job_run, co_job_run_tiered, co_job_table};
 pub use paper::*;
 pub use peers::{peer_transport_run, peer_transport_table};

@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   exp <id|all>        reproduce a paper table/figure (t1 f3 t3 f4 f5 t4
-//!                       t5 util readers chunks peers jobs evict ablations)
+//!                       t5 util readers chunks peers jobs evict failover
+//!                       ablations)
 //!   serve [--addr A]    run the Hoard API server over an in-process cluster
 //!   datagen --out DIR   generate a synthetic real-mode dataset
 //!   sim --mode M        run the paper 4-job scenario (rem|nvme|hoard)
@@ -41,7 +42,7 @@ fn main() {
 fn print_usage() {
     eprintln!(
         "hoard — distributed data caching for DL training (paper reproduction)\n\n\
-         USAGE:\n  hoard exp <t1|f3|t3|f4|f5|t4|t5|util|readers|chunks|peers|jobs|evict|ablations|all> [--json]\n  \
+         USAGE:\n  hoard exp <t1|f3|t3|f4|f5|t4|t5|util|readers|chunks|peers|jobs|evict|failover|ablations|all> [--json]\n  \
          hoard serve [--addr 127.0.0.1:7070] [--config FILE] [--max-conns N]\n        \
          [--data-root DIR] [--data-items N] [--data-chunk BYTES]\n  \
          hoard datagen --out DIR [--items N]\n  \
@@ -97,6 +98,10 @@ fn cmd_exp(args: &[String]) -> i32 {
             "peers" => emit(experiments::peer_transport_table(24)),
             "jobs" => emit(experiments::co_job_table(24)),
             "evict" => emit(experiments::eviction_lifecycle_table(24)),
+            "failover" => {
+                emit(experiments::failover_table(24));
+                emit(experiments::failover_jobs_table());
+            }
             "ablations" => {
                 emit(ablations::ablation_stripe_width());
                 emit(ablations::ablation_prefetch());
@@ -110,7 +115,7 @@ fn cmd_exp(args: &[String]) -> i32 {
     if which == "all" {
         for id in [
             "t1", "f3", "t3", "f4", "f5", "t4", "t5", "util", "readers", "chunks", "peers",
-            "jobs", "evict", "ablations",
+            "jobs", "evict", "failover", "ablations",
         ] {
             run(id);
         }

@@ -54,6 +54,12 @@ pub const DEFAULT_POOL_IDLE_TTL: Duration = Duration::from_secs(30);
 /// the error surfaces.
 const BUSY_RETRIES: usize = 2;
 
+/// Default suspect cooldown: once a peer is classified down
+/// ([`super::PeerDown`]), every request to it inside this window fails
+/// fast instead of re-paying the connect timeout. After the window one
+/// request probes the peer again (a revived peer re-admits itself).
+pub const DEFAULT_SUSPECT_COOLDOWN: Duration = Duration::from_secs(5);
+
 /// Chunk client with a per-peer connection pool.
 pub struct PeerClient {
     peers: Vec<SocketAddr>,
@@ -63,6 +69,11 @@ pub struct PeerClient {
     nic: Option<Vec<SharedTokenBucket>>,
     io_timeout: Duration,
     idle_ttl: Duration,
+    /// Per-peer "suspected down until" marks: set by a connection-level
+    /// failure, checked before every request (fast-fail inside the
+    /// window), cleared by window expiry so the next request probes.
+    suspects: Vec<Mutex<Option<Instant>>>,
+    suspect_cooldown: Duration,
     /// Request/response round trips completed (batched or single) —
     /// observability for the batching win: K chunks per batch move K
     /// payloads over one round trip.
@@ -74,12 +85,15 @@ impl PeerClient {
     /// Connections are dialed lazily on first use.
     pub fn connect(peers: Vec<SocketAddr>) -> Self {
         let pool = peers.iter().map(|_| Mutex::new(Vec::new())).collect();
+        let suspects = peers.iter().map(|_| Mutex::new(None)).collect();
         PeerClient {
             peers,
             pool,
             nic: None,
             io_timeout: super::server::DEFAULT_IO_TIMEOUT,
             idle_ttl: DEFAULT_POOL_IDLE_TTL,
+            suspects,
+            suspect_cooldown: DEFAULT_SUSPECT_COOLDOWN,
             roundtrips: AtomicU64::new(0),
         }
     }
@@ -106,6 +120,22 @@ impl PeerClient {
     pub fn with_idle_ttl(mut self, d: Duration) -> Self {
         self.idle_ttl = d;
         self
+    }
+
+    /// Suspect cooldown after a dead-peer classification (see
+    /// [`DEFAULT_SUSPECT_COOLDOWN`]).
+    pub fn with_suspect_cooldown(mut self, d: Duration) -> Self {
+        self.suspect_cooldown = d;
+        self
+    }
+
+    /// Is `peer` currently inside its suspect cooldown? (Observability /
+    /// tests; requests check this themselves.)
+    pub fn is_suspected(&self, peer: NodeId) -> bool {
+        self.suspects
+            .get(peer.0)
+            .and_then(|m| *m.lock().unwrap())
+            .is_some_and(|until| Instant::now() < until)
     }
 
     pub fn num_peers(&self) -> usize {
@@ -174,25 +204,41 @@ impl PeerClient {
         self.pool.iter().map(|p| p.lock().unwrap().len()).sum()
     }
 
+    /// Start `peer`'s suspect cooldown and produce the typed
+    /// [`super::PeerDown`] error (as the `anyhow` source, so it survives
+    /// context layers and downcasts at the reader).
+    fn classify_down(&self, peer: NodeId, what: &str, err: anyhow::Error) -> anyhow::Error {
+        *self.suspects[peer.0].lock().unwrap() = Some(Instant::now() + self.suspect_cooldown);
+        super::PeerDown { peer: peer.0, reason: format!("{what}: {err:#}") }.into()
+    }
+
+    /// Dial + round trip on a fresh connection. Any failure here is
+    /// **connection-level by construction** — the pooled-conn stale case
+    /// has already had its one redial — so it classifies the peer as down.
+    fn fresh_request(&self, peer: NodeId, req: &Frame) -> Result<(TcpStream, Frame)> {
+        let mut fresh = match self.dial(peer) {
+            Ok(s) => s,
+            Err(e) => return Err(self.classify_down(peer, "connect failed", e)),
+        };
+        match Self::roundtrip(&mut fresh, req) {
+            Ok(r) => Ok((fresh, r)),
+            Err(e) => Err(self.classify_down(peer, "fresh connection died mid-request", e)),
+        }
+    }
+
     /// One request/response over a checked-out connection (dialing lazily;
-    /// a stale pooled connection — the server idle-closed it — is
-    /// detected by the failed round trip and retried once on a fresh
-    /// dial).
+    /// a stale pooled connection — the server idle-closed it, or it died
+    /// under us — is detected by the failed round trip and retried
+    /// **once** on a fresh dial; the failed socket is dropped, never
+    /// pooled again, so a half-written conn cannot poison the pool). A
+    /// failure on the fresh connection classifies the peer as down.
     fn request_once(&self, peer: NodeId, req: &Frame) -> Result<(TcpStream, Frame)> {
         match self.checkout(peer) {
             Some(mut s) => match Self::roundtrip(&mut s, req) {
                 Ok(r) => Ok((s, r)),
-                Err(_) => {
-                    let mut fresh = self.dial(peer)?;
-                    let r = Self::roundtrip(&mut fresh, req)?;
-                    Ok((fresh, r))
-                }
+                Err(_) => self.fresh_request(peer, req),
             },
-            None => {
-                let mut fresh = self.dial(peer)?;
-                let r = Self::roundtrip(&mut fresh, req)?;
-                Ok((fresh, r))
-            }
+            None => self.fresh_request(peer, req),
         }
     }
 
@@ -200,10 +246,27 @@ impl PeerClient {
     /// [`proto::SERVER_BUSY`] rejection (the server's connection budget is
     /// full; it closed the socket after the frame) sleeps briefly and
     /// redials, up to [`BUSY_RETRIES`] times, before the error surfaces to
-    /// the caller.
+    /// the caller. A peer inside its suspect cooldown fails fast — no
+    /// connect timeout re-paid per read — until the window expires and one
+    /// request probes it again.
     fn pooled_request(&self, peer: NodeId, req: &Frame) -> Result<(TcpStream, Frame)> {
         if peer.0 >= self.peers.len() {
             bail!("no peer address for node{}", peer.0);
+        }
+        {
+            let mut suspected = self.suspects[peer.0].lock().unwrap();
+            if let Some(until) = *suspected {
+                if Instant::now() < until {
+                    return Err(super::PeerDown {
+                        peer: peer.0,
+                        reason: "suspected down (cooldown active)".into(),
+                    }
+                    .into());
+                }
+                // Cooldown expired: clear the mark and let this request
+                // probe the peer (a revived peer re-admits itself here).
+                *suspected = None;
+            }
         }
         let mut attempt = 0usize;
         loop {
@@ -631,6 +694,44 @@ mod tests {
         // Checkout reaps lazily too: expire the pooled socket, request
         // again — the expired socket is skipped, not round-tripped.
         std::thread::sleep(Duration::from_millis(80));
+        assert_eq!(client.get_chunk(NodeId(0), 1, 1, 64, 0).unwrap(), None);
+        srv.stop();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn dead_peer_classifies_fast_fails_and_cooldown_expires() {
+        use crate::peer::{peer_down, FaultAction, FaultSpec};
+        let dir = tmpdir("down");
+        let mut srv = PeerServer::start("127.0.0.1:0", dir.clone()).unwrap();
+        let client = PeerClient::connect(vec![srv.addr])
+            .with_io_timeout(Duration::from_millis(500))
+            .with_suspect_cooldown(Duration::from_millis(150));
+        // Healthy: a NotResident answer, no suspicion.
+        assert_eq!(client.get_chunk(NodeId(0), 1, 1, 64, 0).unwrap(), None);
+        assert!(!client.is_suspected(NodeId(0)));
+        // A request-level Error frame (item request without an export) is a
+        // protocol error, NOT a dead-peer classification.
+        let err = client.get_chunk(NodeId(0), 7, 0, 0, 0).unwrap_err();
+        assert!(peer_down(&err).is_none(), "protocol errors must not classify: {err:#}");
+        assert!(!client.is_suspected(NodeId(0)));
+        // Kill fault: the pooled conn dies, the one redial dies too ⇒
+        // typed PeerDown through the context layers + suspect mark.
+        srv.inject_fault(FaultSpec { action: FaultAction::Kill, after: 0 });
+        let err = client.get_chunk(NodeId(0), 1, 1, 64, 0).unwrap_err();
+        let down = peer_down(&err).expect("kill must classify as PeerDown");
+        assert_eq!(down.peer, 0);
+        assert!(client.is_suspected(NodeId(0)));
+        // Inside the cooldown: fail fast, no dial, no connect timeout.
+        let t0 = Instant::now();
+        let err = client.get_chunk(NodeId(0), 1, 1, 64, 0).unwrap_err();
+        assert!(peer_down(&err).is_some());
+        assert!(t0.elapsed() < Duration::from_millis(100), "suspected peer must fail fast");
+        // Revive the peer; once the cooldown expires the next request
+        // probes it and the peer serves again.
+        srv.clear_fault();
+        std::thread::sleep(Duration::from_millis(200));
+        assert!(!client.is_suspected(NodeId(0)));
         assert_eq!(client.get_chunk(NodeId(0), 1, 1, 64, 0).unwrap(), None);
         srv.stop();
         std::fs::remove_dir_all(&dir).unwrap();

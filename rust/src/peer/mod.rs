@@ -32,10 +32,13 @@ pub mod client;
 pub mod proto;
 pub mod server;
 
-pub use client::{PeerClient, SocketTransport};
+pub use client::{PeerClient, SocketTransport, DEFAULT_SUSPECT_COOLDOWN};
 pub use proto::Frame;
-pub use server::{PeerServer, ThreadedPeerServer, DEFAULT_IO_TIMEOUT, DEFAULT_MAX_CONNS};
+pub use server::{
+    FaultAction, FaultSpec, PeerServer, ThreadedPeerServer, DEFAULT_IO_TIMEOUT, DEFAULT_MAX_CONNS,
+};
 
+use std::fmt;
 use std::path::Path;
 
 use anyhow::{bail, Result};
@@ -43,6 +46,41 @@ use anyhow::{bail, Result};
 use crate::cache::ChunkGeometry;
 use crate::netsim::NodeId;
 use crate::posix::realfs::{chunk_rel_path, ReadStats, RealCluster};
+
+/// A **connection-level** peer failure: the peer refused, reset, or timed
+/// out after the client's bounded redial — the peer process is gone or
+/// unreachable, as opposed to a protocol/data error (wrong frame, short
+/// payload, server-side `Error` message), which stays a plain error.
+///
+/// Raised as the typed *source* of an `anyhow::Error`
+/// (`Err(PeerDown { .. }.into())`) so it survives `.context(..)` layers
+/// and is recoverable with [`peer_down`]. Readers treat it as a
+/// degradation signal: re-plan the affected segments as remote fills
+/// (byte-correct, fetch-once) and record
+/// `peer_failures`/`degraded_reads`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PeerDown {
+    /// The unreachable peer (node index in the client's address table).
+    pub peer: usize,
+    /// What the connection attempt saw ("connect refused", "reset
+    /// mid-request", "suspected (cooldown)").
+    pub reason: String,
+}
+
+impl fmt::Display for PeerDown {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "peer node{} is down: {}", self.peer, self.reason)
+    }
+}
+
+impl std::error::Error for PeerDown {}
+
+/// Recover the typed [`PeerDown`] from an `anyhow::Error`, through any
+/// number of `.context(..)` layers. `None` ⇔ the error is not a dead-peer
+/// classification (protocol/data errors, I/O on local disk, ...).
+pub fn peer_down(err: &anyhow::Error) -> Option<&PeerDown> {
+    err.downcast_ref::<PeerDown>()
+}
 
 /// How non-local bytes reach a reader. Implementations must be cheap to
 /// share across reader threads (`&self` methods, `Send + Sync`).

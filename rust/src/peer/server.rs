@@ -79,6 +79,38 @@ type ItemPathFn = Arc<dyn Fn(u64) -> PathBuf + Send + Sync>;
 /// typically resolves through the `SharedCache` on every call.
 type ResidencyFn = Arc<dyn Fn() -> Option<Arc<ResidencySnapshot>> + Send + Sync>;
 
+/// What an armed fault does to the requests that trip it — the failure
+/// modes a failover drill needs to rehearse without actually crashing a
+/// process or losing a port binding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Close the connection without answering — what a crashed peer
+    /// process looks like on the wire (reset / EOF mid-request).
+    Kill,
+    /// Stall for the given duration, then close without answering — what
+    /// a wedged peer looks like (the client's io timeout fires).
+    Hang(Duration),
+    /// Answer `NotResident` — a peer that is alive but refuses to serve
+    /// (drained / draining member).
+    Refuse,
+}
+
+/// Fault-injection spec ([`PeerServer::inject_fault`]): serve the first
+/// `after` chunk requests normally, then apply `action` to every request
+/// until [`PeerServer::clear_fault`]. `after == 0` trips immediately —
+/// "die at chunk N" drills pick the N.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultSpec {
+    pub action: FaultAction,
+    pub after: u64,
+}
+
+/// An armed [`FaultSpec`] plus how many chunk requests it has counted.
+struct ArmedFault {
+    spec: FaultSpec,
+    seen: u64,
+}
+
 /// Everything request resolution needs, shared by the event-driven server,
 /// the threaded baseline, and every worker thread.
 struct PeerShared {
@@ -90,6 +122,30 @@ struct PeerShared {
     /// generation semantics are identical to disk serving.
     ram: RwLock<Option<Arc<RamTier>>>,
     bucket: Option<SharedTokenBucket>,
+    /// Armed fault injection, if any (drills only; `None` in production).
+    fault: Mutex<Option<ArmedFault>>,
+}
+
+impl PeerShared {
+    /// Count this request against the armed fault; returns the action to
+    /// apply when it trips. Chunk requests count by chunk (a batch of K
+    /// advances the counter K), so "after chunk N" means the same thing
+    /// under batching.
+    fn fault_trip(&self, req: &Frame) -> Option<FaultAction> {
+        let n = match req {
+            Frame::GetChunk { .. } => 1,
+            Frame::GetChunkBatch { chunks, .. } => chunks.len().max(1) as u64,
+            _ => return None,
+        };
+        let mut armed = self.fault.lock().unwrap();
+        let st = armed.as_mut()?;
+        st.seen += n;
+        if st.seen > st.spec.after {
+            Some(st.spec.action)
+        } else {
+            None
+        }
+    }
 }
 
 /// A running per-node chunk server (event-driven).
@@ -141,6 +197,7 @@ impl PeerServer {
             views: RwLock::new(HashMap::new()),
             ram: RwLock::new(None),
             bucket: disk_bucket,
+            fault: Mutex::new(None),
         });
         let svc = Arc::new(PeerService { shared: shared.clone() });
         let cfg = EngineConfig { io_timeout, max_conns, ..EngineConfig::default() };
@@ -188,6 +245,20 @@ impl PeerServer {
         self.shared.views.write().unwrap().insert(dataset_id, Arc::new(source));
     }
 
+    /// Arm fault injection: serve `spec.after` more chunk requests
+    /// normally, then apply `spec.action` (kill / hang / refuse) to every
+    /// request until [`PeerServer::clear_fault`]. Drills use this to
+    /// rehearse node death without losing the port binding, so "revive"
+    /// is just clearing the fault.
+    pub fn inject_fault(&self, spec: FaultSpec) {
+        *self.shared.fault.lock().unwrap() = Some(ArmedFault { spec, seen: 0 });
+    }
+
+    /// Disarm fault injection (the drilled peer "revives").
+    pub fn clear_fault(&self) {
+        *self.shared.fault.lock().unwrap() = None;
+    }
+
     /// Connections currently held by the engine (tests assert churn
     /// returns to zero).
     pub fn live_conns(&self) -> usize {
@@ -214,6 +285,18 @@ impl Service for PeerService {
     }
 
     fn handle(&self, req: Frame) -> Reply {
+        if let Some(action) = self.shared.fault_trip(&req) {
+            match action {
+                FaultAction::Kill => return Reply::closing(vec![]),
+                FaultAction::Hang(d) => {
+                    std::thread::sleep(d);
+                    return Reply::closing(vec![]);
+                }
+                FaultAction::Refuse => {
+                    return Reply::new(proto::encode_segments(Frame::NotResident));
+                }
+            }
+        }
         Reply::new(proto::encode_segments(respond(&self.shared, req)))
     }
 
@@ -240,6 +323,8 @@ impl Service for PeerService {
     /// goes to the workers.
     fn serve_inline(&self, req: &Frame) -> bool {
         self.shared.bucket.is_none()
+            // An armed fault may Hang — never on the loop thread.
+            && self.shared.fault.lock().unwrap().is_none()
             && matches!(
                 req,
                 Frame::GetChunk { grid_bytes, .. }
@@ -483,6 +568,7 @@ impl ThreadedPeerServer {
             views: RwLock::new(HashMap::new()),
             ram: RwLock::new(None),
             bucket: disk_bucket,
+            fault: Mutex::new(None),
         });
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
@@ -590,6 +676,21 @@ fn serve_conn(sock: &mut TcpStream, shared: &PeerShared, stop: &AtomicBool) {
             // dead pooled connection as stale and redial.
             Ok(None) | Err(_) => return,
         };
+        if let Some(action) = shared.fault_trip(&frame) {
+            match action {
+                FaultAction::Kill => return,
+                FaultAction::Hang(d) => {
+                    std::thread::sleep(d);
+                    return;
+                }
+                FaultAction::Refuse => {
+                    if proto::write_frame(sock, &Frame::NotResident).is_err() {
+                        return;
+                    }
+                    continue;
+                }
+            }
+        }
         if proto::write_frame(sock, &respond(shared, frame)).is_err() {
             return;
         }

@@ -28,7 +28,7 @@
 //! a shim that owns a private plane with one session.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -39,7 +39,7 @@ use super::reader_pool::{
     prefetch_chunks, prefetch_items, read_item_concurrent_fast, read_item_range_chunked_fast,
     EpochReport, FillTable,
 };
-use super::realfs::{gc_dataset_chunks, ReadStats, RealCluster};
+use super::realfs::{chunk_rel_path, gc_dataset_chunks, gc_node_chunks, ReadStats, RealCluster};
 use crate::cache::{CacheEvent, ChunkGeometry, RamTier, ResidencySnapshot, SharedCache};
 use crate::netsim::NodeId;
 use crate::peer::{ChunkTransport, DirTransport};
@@ -143,6 +143,43 @@ impl ReadRequest {
     }
 }
 
+/// Why a dataset's ledger was poisoned — the lifecycle decision sessions
+/// report instead of one generic "reset" message for every cause.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoisonReason {
+    /// Evicted (or manually reset): the placement is gone; the dataset
+    /// can be re-placed and reopened.
+    Reset,
+    /// Re-placed onto a new node set under a bumped generation
+    /// ([`DataPlane::replace_dataset`]): reopen to read the new placement.
+    Replaced,
+    /// Deleted entirely — the dataset no longer exists on this plane. The
+    /// API layer maps this to `410 Gone`.
+    Retired,
+}
+
+const POISON_NONE: u8 = 0;
+const POISON_RESET: u8 = 1;
+const POISON_REPLACED: u8 = 2;
+const POISON_RETIRED: u8 = 3;
+
+/// Typed marker for reads against a **retired** (deleted) dataset, raised
+/// as the source of the session error so the API layer can answer
+/// `410 Gone` instead of a generic 500. Recover with
+/// `anyhow::Error::downcast_ref::<DatasetRetired>()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DatasetRetired {
+    pub dataset: String,
+}
+
+impl std::fmt::Display for DatasetRetired {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "dataset '{}' is retired (deleted); it no longer serves reads", self.dataset)
+    }
+}
+
+impl std::error::Error for DatasetRetired {}
+
 /// Per-dataset shared state: the fetch-once ledger plus how it addresses
 /// the dataset. One per dataset per plane — every session on the dataset
 /// holds the same `Arc`, which is what makes fills shared.
@@ -155,11 +192,34 @@ struct Ledger {
     /// mismatched `cfg` or a stale grid errors instead of indexing out
     /// of bounds.
     slots: u64,
-    /// Poisoned by [`DataPlane::reset_dataset`] (evict / re-place / node
-    /// failure): sessions still holding this ledger refuse further reads
+    /// Lifecycle poison ([`PoisonReason`] as a `u8`, `POISON_NONE` while
+    /// live). Set by evict / re-place / delete: sessions still holding
+    /// this ledger refuse further reads with a reason-precise error
     /// instead of trusting its Done slots — the files those slots vouch
-    /// for may be gone or belong to a dead placement generation.
-    reset: AtomicBool,
+    /// for may be gone or belong to a dead placement generation. Node
+    /// **degradation** deliberately does *not* poison: survivor chunks
+    /// keep serving and lost chunks re-plan as remote fills.
+    poison: AtomicU8,
+}
+
+impl Ledger {
+    fn poison(&self, why: PoisonReason) {
+        let code = match why {
+            PoisonReason::Reset => POISON_RESET,
+            PoisonReason::Replaced => POISON_REPLACED,
+            PoisonReason::Retired => POISON_RETIRED,
+        };
+        self.poison.store(code, Ordering::Release);
+    }
+
+    fn poisoned(&self) -> Option<PoisonReason> {
+        match self.poison.load(Ordering::Acquire) {
+            POISON_RESET => Some(PoisonReason::Reset),
+            POISON_REPLACED => Some(PoisonReason::Replaced),
+            POISON_RETIRED => Some(PoisonReason::Retired),
+            _ => None,
+        }
+    }
 }
 
 #[derive(Debug)]
@@ -190,6 +250,22 @@ const PLANE_BUF_BYTES: usize = 64 << 20;
 #[derive(Debug, Clone, Default)]
 pub struct PlacementOutcome {
     pub evicted: Vec<String>,
+    pub reclaimed_bytes: u64,
+}
+
+/// What [`DataPlane::replace_dataset`] accomplished: the new placement
+/// generation, how much of the old placement was migrated warm instead of
+/// re-fetched, and the old-generation bytes GC'd from disk.
+#[derive(Debug, Clone, Default)]
+pub struct ReplaceOutcome {
+    /// Generation of the new placement (old + 1).
+    pub generation: u64,
+    /// Surviving chunks renamed into the new generation's trees (these
+    /// never touch the remote store again).
+    pub migrated_chunks: u64,
+    /// Payload bytes those migrated chunk files carried.
+    pub migrated_bytes: u64,
+    /// Old-generation on-disk bytes GC'd after the migration.
     pub reclaimed_bytes: u64,
 }
 
@@ -292,11 +368,18 @@ impl DataPlane {
     /// with a "reset" error instead of serving stale bytes, and drop the
     /// ledger so the next session opened on the dataset starts fresh.
     pub fn reset_dataset(&self, dataset: &str) {
+        self.poison_dataset(dataset, PoisonReason::Reset);
+    }
+
+    /// [`DataPlane::reset_dataset`] with an explicit lifecycle reason —
+    /// what sessions still holding the ledger report instead of the
+    /// generic "reset" message.
+    fn poison_dataset(&self, dataset: &str, why: PoisonReason) {
         if let Ok(snap) = self.cache.snapshot(dataset) {
             snap.retire();
         }
         if let Some(l) = self.ledgers.lock().unwrap().remove(dataset) {
-            l.reset.store(true, Ordering::Release);
+            l.poison(why);
         }
         // Best-effort RAM drop (generation-keyed entries are unreachable
         // from the next placement anyway — this reclaims their budget).
@@ -337,7 +420,7 @@ impl DataPlane {
     pub fn delete_dataset(&self, dataset: &str) -> Result<u64> {
         let id = self.cache.dataset_id(dataset)?;
         self.cache.with_mut(|m| m.delete(dataset))?;
-        self.reset_dataset(dataset);
+        self.poison_dataset(dataset, PoisonReason::Retired);
         // The registration is gone, so reset_dataset could not resolve the
         // id — invalidate RAM with the one resolved above.
         self.invalidate_ram(id);
@@ -374,19 +457,196 @@ impl DataPlane {
         Ok(PlacementOutcome { evicted, reclaimed_bytes })
     }
 
-    /// Mark node `n` failed in the cache manager and run the invalidation
-    /// for every dataset striped on it (their placements are lost —
-    /// striping without replication). Returns the affected dataset names
-    /// and the disk bytes their chunk trees freed cluster-wide.
+    /// Mark node `n` failed and **degrade** every dataset striped on it
+    /// ([`CacheManager::degrade_node`](crate::cache::CacheManager::degrade_node)):
+    /// survivor chunks keep serving from their nodes while the lost
+    /// chunks re-plan as remote fills — open sessions keep running
+    /// mid-epoch (byte-correct, `degraded_reads` accounted) instead of
+    /// dying with a reset error. Per dataset this rolls back the lost
+    /// slots of the fetch-once ledger (their Done entries vouch for
+    /// files that lived on the dead node) and GCs only the dead node's
+    /// chunk tree. Returns the degraded dataset names and the disk bytes
+    /// freed on the dead node.
     pub fn fail_node(&self, n: NodeId) -> Result<(Vec<String>, u64)> {
-        let affected = self.cache.with_mut(|m| m.fail_node(n));
+        let affected = self.cache.with_mut(|m| m.degrade_node(n));
         let mut reclaimed = 0;
         for name in &affected {
             let id = self.cache.dataset_id(name)?;
-            self.reset_dataset(name);
-            reclaimed += gc_dataset_chunks(&self.cluster, id, None);
+            if let Some(l) = self.ledgers.lock().unwrap().get(name).cloned() {
+                match &l.mode {
+                    LedgerMode::Chunked(geom) => {
+                        for c in 0..geom.num_chunks() {
+                            if geom.node_of_chunk(c) == n {
+                                l.fill.abort(c);
+                            }
+                        }
+                    }
+                    LedgerMode::WholeFile => {
+                        if let Ok(geom) = self.cache.geometry(name) {
+                            for i in 0..geom.num_items {
+                                if geom.node_of_item(i) == n {
+                                    l.fill.abort(i);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            reclaimed += gc_node_chunks(&self.cluster, n, id);
         }
         Ok((affected, reclaimed))
+    }
+
+    /// Bring a failed node back into the fleet: degraded datasets
+    /// re-admit it (reservation re-taken; the dataset leaves `Degraded`
+    /// once no lost member remains). Refills that ran while the node was
+    /// out wrote byte-complete chunk files into its directory but were
+    /// refused residency marks (no live home) — re-admit them here by
+    /// vouching every `Done` ledger slot homed on `n` whose file is on
+    /// disk, so the snapshot (and peer serving) goes warm again instead
+    /// of waiting for the chunks to be refetched.
+    pub fn recover_node(&self, n: NodeId) {
+        self.cache.with_mut(|m| m.recover_node(n));
+        let ledgers: Vec<(String, Arc<Ledger>)> = self
+            .ledgers
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        for (name, l) in ledgers {
+            let LedgerMode::Chunked(geom) = &l.mode else { continue };
+            // Skip stale ledgers from an earlier generation.
+            let Ok(cur) = self.cache.geometry(&name) else { continue };
+            if cur.generation != geom.generation {
+                continue;
+            }
+            let mut landed: Vec<u64> = Vec::new();
+            for c in 0..geom.num_chunks() {
+                if geom.node_of_chunk(c) != n || !l.fill.is_done(c) {
+                    continue;
+                }
+                let path = self.cluster.node_dirs[n.0].join(chunk_rel_path(
+                    geom.dataset_id,
+                    geom.generation,
+                    geom.chunk_bytes(),
+                    c,
+                ));
+                if path.exists() {
+                    landed.push(c);
+                }
+            }
+            if !landed.is_empty() {
+                let _ = self.cache.mark_chunks(&name, &landed);
+            }
+        }
+    }
+
+    /// Coordinator-triggered re-stripe of `dataset` onto `nodes`
+    /// (typically the survivor set after a node death): bumps the
+    /// generation and re-places **without a full cold start**. Chunk
+    /// payloads still resident on survivors are migrated on disk —
+    /// renamed from the old generation's tree into the new one, landing
+    /// on whichever node the new stripe homes them — and marked
+    /// resident, so only the chunks that died with the lost node
+    /// re-fetch from remote. The old ledger is poisoned with a precise
+    /// "re-placed" reason; open sessions reopen to read the new
+    /// generation.
+    ///
+    /// Migration needs the chunk grid to survive the re-place (same
+    /// `chunk_bytes` — true whenever the configured chunk is ≤
+    /// `total/k` on both node sets); when the grid changes, every chunk
+    /// re-fetches cold.
+    pub fn replace_dataset(&self, dataset: &str, nodes: Vec<NodeId>) -> Result<ReplaceOutcome> {
+        let (old_geom, survivors) = self.cache.with_mut(|m| m.begin_replace(dataset))?;
+        // Poison the old ledger *before* the new placement exists: no
+        // session may carry Done slots across the generation bump.
+        if let Some(l) = self.ledgers.lock().unwrap().remove(dataset) {
+            l.poison(PoisonReason::Replaced);
+        }
+        self.cache.with_mut(|m| m.place(dataset, nodes))?;
+        let new_geom = self.cache.geometry(dataset)?;
+        let mut migrated_chunks = 0u64;
+        let mut migrated_bytes = 0u64;
+        if new_geom.chunk_bytes() == old_geom.chunk_bytes()
+            && new_geom.total_bytes == old_geom.total_bytes
+        {
+            // Chunk c's payload is bytes [c·chunk, (c+1)·chunk) of the
+            // dataset regardless of which node homes it — a same-grid
+            // re-place moves files, not bytes.
+            let mut landed: Vec<u64> = Vec::with_capacity(survivors.len());
+            for &c in &survivors {
+                let src = self.cluster.node_dirs[old_geom.node_of_chunk(c).0].join(
+                    chunk_rel_path(
+                        old_geom.dataset_id,
+                        old_geom.generation,
+                        old_geom.chunk_bytes(),
+                        c,
+                    ),
+                );
+                let dst = self.cluster.node_dirs[new_geom.node_of_chunk(c).0].join(
+                    chunk_rel_path(
+                        new_geom.dataset_id,
+                        new_geom.generation,
+                        new_geom.chunk_bytes(),
+                        c,
+                    ),
+                );
+                let Ok(meta) = std::fs::metadata(&src) else {
+                    continue; // never landed on disk — refetches cold
+                };
+                if let Some(parent) = dst.parent() {
+                    if std::fs::create_dir_all(parent).is_err() {
+                        continue;
+                    }
+                }
+                if std::fs::rename(&src, &dst).is_ok() {
+                    landed.push(c);
+                    migrated_bytes += meta.len();
+                }
+            }
+            if !landed.is_empty() {
+                self.cache.with_mut(|m| m.mark_chunks(dataset, landed.iter().copied()))?;
+            }
+            migrated_chunks = landed.len() as u64;
+        }
+        // Whatever the old generation still holds on disk is dead weight.
+        let reclaimed_bytes =
+            gc_dataset_chunks(&self.cluster, new_geom.dataset_id, Some(new_geom.generation));
+        self.invalidate_ram(new_geom.dataset_id);
+        Ok(ReplaceOutcome {
+            generation: new_geom.generation,
+            migrated_chunks,
+            migrated_bytes,
+            reclaimed_bytes,
+        })
+    }
+
+    /// Human-readable lifecycle state of `dataset` for the control-plane
+    /// API ("caching", "cached", "degraded(lost=2)", "replacing",
+    /// "retired" once the registration is gone, ...).
+    pub fn dataset_lifecycle(&self, dataset: &str) -> String {
+        use crate::cache::DatasetState;
+        self.cache.with(|m| match m.registry.get(dataset) {
+            None => "retired".to_string(),
+            Some(rec) => match &rec.state {
+                DatasetState::Registered => "registered".to_string(),
+                DatasetState::Caching { .. } => {
+                    if rec.generation <= 1 && rec.fetched_bytes() == 0 {
+                        "placing".to_string()
+                    } else {
+                        "caching".to_string()
+                    }
+                }
+                DatasetState::Cached => "cached".to_string(),
+                DatasetState::Degraded { lost, .. } => {
+                    let l: Vec<String> = lost.iter().map(|x| x.0.to_string()).collect();
+                    format!("degraded(lost={})", l.join(","))
+                }
+                DatasetState::Replacing => "replacing".to_string(),
+                DatasetState::Evicting => "evicting".to_string(),
+            },
+        })
     }
 
     fn ledger(
@@ -427,7 +687,7 @@ impl DataPlane {
                 fill: FillTable::new(cfg.num_items),
                 mode: LedgerMode::WholeFile,
                 slots: cfg.num_items,
-                reset: AtomicBool::new(false),
+                poison: AtomicU8::new(POISON_NONE),
             }),
             Granularity::Chunked => {
                 let geom = self.cache.geometry(dataset)?;
@@ -436,7 +696,7 @@ impl DataPlane {
                     fill: FillTable::new(slots),
                     mode: LedgerMode::Chunked(geom),
                     slots,
-                    reset: AtomicBool::new(false),
+                    poison: AtomicU8::new(POISON_NONE),
                 })
             }
         };
@@ -627,17 +887,29 @@ impl JobSession {
         self.read_inner(req, reader, snap, stats)
     }
 
-    /// Refuse to serve through a ledger [`DataPlane::reset_dataset`] has
-    /// poisoned: its Done slots vouch for files that may be deleted or
-    /// belong to a dead placement generation.
+    /// Refuse to serve through a poisoned ledger — with the *precise*
+    /// lifecycle reason, not one generic message for every cause: its
+    /// Done slots vouch for files that may be deleted or belong to a
+    /// dead placement generation. Node degradation never poisons (the
+    /// state machine decided those sessions keep running, re-planning
+    /// lost segments as remote fills), so a mid-epoch node death is
+    /// *not* an error here.
     fn check_reset(&self) -> Result<()> {
-        if self.ledger.reset.load(Ordering::Acquire) {
-            bail!(
-                "dataset '{}' was reset (evicted or re-placed); reopen the job session",
+        match self.ledger.poisoned() {
+            None => Ok(()),
+            Some(PoisonReason::Reset) => bail!(
+                "dataset '{}' was reset (evicted or manually invalidated); reopen the job session",
                 self.dataset
-            );
+            ),
+            Some(PoisonReason::Replaced) => bail!(
+                "dataset '{}' was re-placed onto a new node set (generation bumped); \
+                 reopen the job session to read the new placement",
+                self.dataset
+            ),
+            Some(PoisonReason::Retired) => {
+                Err(DatasetRetired { dataset: self.dataset.clone() }.into())
+            }
         }
-        Ok(())
     }
 
     fn read_inner(
@@ -963,6 +1235,71 @@ mod tests {
         let fresh = plane.open_job(JobSpec::new("d", cfg.clone())).unwrap();
         let (_, want) = datagen::make_record(&cfg, 0);
         assert_eq!(fresh.read(&ReadRequest::item(0), NodeId(0)).unwrap(), want);
+        std::fs::remove_dir_all(&cluster.root).unwrap();
+    }
+
+    #[test]
+    fn node_death_degrades_sessions_without_poisoning() {
+        let (cluster, cache, cfg) = fixture("degrade", 8, 1000);
+        let plane = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+        let sess = plane.open_job(JobSpec::new("d", cfg.clone())).unwrap();
+        sess.run_epoch(0).unwrap(); // cold epoch: every chunk lands
+        let (affected, freed) = plane.fail_node(NodeId(2)).unwrap();
+        assert_eq!(affected, vec!["d".to_string()]);
+        assert!(freed > 0, "the dead node's chunk tree is GC'd");
+        assert_eq!(plane.dataset_lifecycle("d"), "degraded(lost=2)");
+        // The open session keeps serving byte-identical items — lost
+        // chunks re-plan as remote fills, no reset error.
+        for i in 0..cfg.num_items {
+            let (_, want) = datagen::make_record(&cfg, i);
+            assert_eq!(sess.read(&ReadRequest::item(i), NodeId(0)).unwrap(), want, "item {i}");
+        }
+        // Rejoin: the refills that landed in the dead node's directory
+        // while it was out are re-admitted (Done ledger slots + on-disk
+        // files), so the dataset goes straight back to fully cached.
+        plane.recover_node(NodeId(2));
+        assert_eq!(plane.dataset_lifecycle("d"), "cached");
+        sess.run_epoch(1).unwrap();
+        std::fs::remove_dir_all(&cluster.root).unwrap();
+    }
+
+    #[test]
+    fn replace_migrates_survivors_and_reports_precise_errors() {
+        let (cluster, cache, cfg) = fixture("replace", 8, 1000);
+        let plane = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+        let sess = plane.open_job(JobSpec::new("d", cfg.clone())).unwrap();
+        sess.run_epoch(0).unwrap();
+        plane.fail_node(NodeId(3)).unwrap();
+        let out = plane.replace_dataset("d", (0..3).map(NodeId).collect()).unwrap();
+        assert_eq!(out.generation, 2, "re-place bumps the generation");
+        assert!(out.migrated_chunks > 0, "survivor chunks migrate warm, not cold");
+        assert_eq!(cache.geometry("d").unwrap().generation, 2);
+        // The old session reports the precise lifecycle reason, not the
+        // generic reset message.
+        let err = sess.read(&ReadRequest::item(0), NodeId(0)).unwrap_err();
+        assert!(err.to_string().contains("re-placed"), "got: {err}");
+        // A fresh session reads the migrated generation byte-identically.
+        let fresh = plane.open_job(JobSpec::new("d", cfg.clone())).unwrap();
+        for i in 0..cfg.num_items {
+            let (_, want) = datagen::make_record(&cfg, i);
+            assert_eq!(fresh.read(&ReadRequest::item(i), NodeId(0)).unwrap(), want, "item {i}");
+        }
+        std::fs::remove_dir_all(&cluster.root).unwrap();
+    }
+
+    #[test]
+    fn deleted_dataset_reports_retired_marker() {
+        let (cluster, cache, cfg) = fixture("retired", 8, 1000);
+        let plane = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+        let sess = plane.open_job(JobSpec::new("d", cfg.clone())).unwrap();
+        sess.read(&ReadRequest::item(0), NodeId(0)).unwrap();
+        plane.delete_dataset("d").unwrap();
+        assert_eq!(plane.dataset_lifecycle("d"), "retired");
+        let err = sess.read(&ReadRequest::item(1), NodeId(0)).unwrap_err();
+        assert!(
+            err.downcast_ref::<DatasetRetired>().is_some(),
+            "retired reads carry the typed marker (for the 410 mapping), got: {err}"
+        );
         std::fs::remove_dir_all(&cluster.root).unwrap();
     }
 

@@ -234,6 +234,15 @@ impl FillTable {
         self.finish(i, false);
     }
 
+    /// Whether slot `i` is `Done`, without claiming anything — the node
+    /// rejoin re-admission probe ([`DataPlane::recover_node`]
+    /// (crate::posix::dataplane::DataPlane::recover_node) vouches a
+    /// rejoined node's refilled files back into residency with it).
+    pub fn is_done(&self, i: u64) -> bool {
+        let (shard, idx) = self.shard_of(i);
+        shard.state.lock().unwrap().slots[idx] == FillState::Done
+    }
+
     /// Roll a failed fill back to `Empty` so another reader can retry.
     pub fn abort(&self, i: u64) {
         let (shard, idx) = self.shard_of(i);
@@ -387,7 +396,16 @@ pub fn read_item_concurrent_fast(
             }
             return Ok(None);
         }
-        transport.fetch_item(cluster, dataset_id, &rel, i, home, reader, stats)
+        match transport.fetch_item(cluster, dataset_id, &rel, i, home, reader, stats) {
+            // A dead peer degrades to a remote fill (same fallback as a
+            // `NotResident` answer) — byte-correct, accounted, no hang.
+            Err(err) if crate::peer::peer_down(&err).is_some() => {
+                stats.peer_failures += 1;
+                stats.degraded_reads += 1;
+                Ok(None)
+            }
+            other => other,
+        }
     };
     match fill.claim_or_wait(i) {
         Claim::Resident => match serve(stats)? {
@@ -779,6 +797,14 @@ pub fn read_item_range_chunked_fast(
                             Ok(true)
                         }
                         Ok(None) => Ok(false),
+                        // Dead peer ⇒ degrade this segment to a remote
+                        // fill (the `Ok(false)` path below): byte-correct,
+                        // fetch-once through the claim we already hold.
+                        Err(err) if crate::peer::peer_down(&err).is_some() => {
+                            stats.peer_failures += 1;
+                            stats.degraded_reads += 1;
+                            Ok(false)
+                        }
                         Err(e) => Err(e),
                     }
                 };
@@ -817,7 +843,25 @@ pub fn read_item_range_chunked_fast(
     for (_home, reqs) in batches {
         let trip: Vec<(u64, u64, u64)> =
             reqs.iter().map(|&(c, off, _, len)| (c, off, len)).collect();
-        let got = transport.fetch_chunk_ranges(cluster, geom, &trip, reader, stats)?;
+        let got = match transport.fetch_chunk_ranges(cluster, geom, &trip, reader, stats) {
+            Ok(got) => got,
+            // The whole serving peer is down: re-plan every segment of
+            // this batch as a remote fill. Resident chunks stay marked —
+            // the refill re-lands the payload and the epoch completes
+            // byte-identical, just slower.
+            Err(err) if crate::peer::peer_down(&err).is_some() => {
+                stats.peer_failures += 1;
+                stats.degraded_reads += reqs.len() as u64;
+                for (c, off, pos, len) in reqs {
+                    let dst = &mut out[pos..pos + len as usize];
+                    refill_segment(
+                        cluster, cache, bufs, ram, dataset, cfg, geom, c, off, dst, stats,
+                    )?;
+                }
+                continue;
+            }
+            Err(err) => return Err(err),
+        };
         if got.len() != reqs.len() {
             // A short response must never zip-truncate into silently
             // zero-filled segments.

@@ -129,6 +129,22 @@ pub fn gc_dataset_chunks(
     reclaimed
 }
 
+/// Per-node chunk GC: delete dataset `dataset_id`'s chunk tree from
+/// **one** node's directory only, returning the bytes reclaimed. This is
+/// the `Degraded` cleanup: a failed node's chunks are unreachable and get
+/// reclaimed, while the survivors' trees keep serving untouched (no full
+/// cold start). Idempotent and best-effort like [`gc_dataset_chunks`].
+pub fn gc_node_chunks(cluster: &RealCluster, node: NodeId, dataset_id: u64) -> u64 {
+    let Some(nd) = cluster.node_dirs.get(node.0) else { return 0 };
+    let droot = nd.join(dataset_chunk_dir(dataset_id));
+    let bytes = tree_bytes(&droot);
+    if fs::remove_dir_all(&droot).is_ok() {
+        bytes
+    } else {
+        0
+    }
+}
+
 /// Fetch chunk `c`'s payload from the remote store — one ranged read per
 /// overlapped item file — and persist it on the chunk's home node.
 /// Recording residency (SharedCache vs `&mut CacheManager`) is the
@@ -259,6 +275,13 @@ pub struct ReadStats {
     /// Segments served from the `RamTier`, split from the disk-local
     /// `local_reads`.
     pub ram_hits: u64,
+    /// Peer requests that failed at the connection level (dead peer):
+    /// refused, reset, or timed out after the bounded redial. Each one
+    /// produced a degradation decision, never a wrong byte.
+    pub peer_failures: u64,
+    /// Segments re-planned as remote fills because their serving peer was
+    /// down — the visible cost of surviving node death mid-epoch.
+    pub degraded_reads: u64,
     /// Seconds spent waiting on the shared remote bucket.
     pub remote_wait_s: f64,
 }
@@ -276,6 +299,8 @@ impl ReadStats {
         self.peer_reads += other.peer_reads;
         self.peer_net_reads += other.peer_net_reads;
         self.ram_hits += other.ram_hits;
+        self.peer_failures += other.peer_failures;
+        self.degraded_reads += other.degraded_reads;
         self.remote_wait_s += other.remote_wait_s;
     }
 
@@ -706,7 +731,7 @@ impl Mount for ChunkedMount<'_> {
                     None
                 }
             } else {
-                self.transport.fetch_chunk_range(
+                match self.transport.fetch_chunk_range(
                     self.cluster,
                     &self.geom,
                     c,
@@ -714,7 +739,18 @@ impl Mount for ChunkedMount<'_> {
                     len,
                     reader,
                     &mut shard,
-                )?
+                ) {
+                    Ok(got) => got,
+                    // A dead peer is a degradation signal, not an error:
+                    // re-plan this segment as a remote fill (byte-correct,
+                    // just slower) and account the decision.
+                    Err(err) if crate::peer::peer_down(&err).is_some() => {
+                        shard.peer_failures += 1;
+                        shard.degraded_reads += 1;
+                        None
+                    }
+                    Err(err) => return Err(err),
+                }
             };
             self.cluster.merge_stats(&shard);
             match got {

@@ -1,0 +1,176 @@
+//! Integration tests for node-death failover: a peer killed mid-epoch
+//! must degrade — not corrupt, not hang — the running epoch; a re-place
+//! onto the survivor set must serve the next generation warm; a node
+//! rejoin must re-admit its chunks; and a suspected peer must serve
+//! again once its cooldown expires.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use hoard::cache::{CacheManager, EvictionPolicy, SharedCache};
+use hoard::netsim::NodeId;
+use hoard::peer::{FaultAction, FaultSpec, PeerClient, PeerServer, SocketTransport};
+use hoard::posix::{DataPlane, JobSpec, ReadRequest};
+use hoard::remote::NfsModel;
+use hoard::storage::{Device, DeviceKind, Volume};
+use hoard::workload::datagen::{self, DataGenConfig};
+use hoard::workload::DatasetSpec;
+
+const NODES: usize = 4;
+const COOLDOWN: Duration = Duration::from_millis(150);
+
+/// A striped socket-transport testbed: one `PeerServer` per node over the
+/// cluster's node directories, a pooled client with a short suspect
+/// cooldown, and a `DataPlane` whose sessions read over the wire.
+struct Testbed {
+    cluster: hoard::posix::RealCluster,
+    plane: Arc<DataPlane>,
+    servers: Vec<PeerServer>,
+    cfg: DataGenConfig,
+}
+
+fn testbed(tag: &str, items: u64, chunk_bytes: u64) -> Testbed {
+    let root: PathBuf =
+        std::env::temp_dir().join(format!("hoard-failover-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let cluster = hoard::posix::RealCluster::create(&root, NODES, 200e6)
+        .unwrap()
+        .with_remote_model(Box::new(NfsModel::new(200e6)));
+    let cfg = DataGenConfig { num_items: items, files_per_dir: 32, ..Default::default() };
+    let total = datagen::generate(&cluster.remote_dir, &cfg).unwrap();
+    let vols = (0..NODES)
+        .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 30)]))
+        .collect();
+    let mut manager = CacheManager::new(vols, EvictionPolicy::Manual);
+    manager.chunk_bytes = chunk_bytes;
+    manager.register(DatasetSpec::new("d", items, total), "nfs://remote/d".into()).unwrap();
+    manager.place("d", (0..NODES).map(NodeId).collect()).unwrap();
+    let cache = SharedCache::new(manager);
+
+    let servers: Vec<PeerServer> = (0..NODES)
+        .map(|n| {
+            PeerServer::start_with(
+                "127.0.0.1:0",
+                cluster.node_dirs[n].clone(),
+                Some(cluster.node_bw[n].clone()),
+                Duration::from_secs(5),
+            )
+            .unwrap()
+        })
+        .collect();
+    let addrs = servers.iter().map(|s| s.addr).collect();
+    let client =
+        PeerClient::connect(addrs).with_nic_bw(1.25e9).with_suspect_cooldown(COOLDOWN);
+    let plane = Arc::new(
+        DataPlane::new(cluster.clone(), cache)
+            .with_transport(Box::new(SocketTransport::new(client))),
+    );
+    Testbed { cluster, plane, servers, cfg }
+}
+
+impl Testbed {
+    /// Every item read through the plane, byte-compared against the
+    /// generator — the invariant no failure mode may break.
+    fn assert_byte_identical(&self, sess: &hoard::posix::JobSession) {
+        for i in 0..self.cfg.num_items {
+            let (_, want) = datagen::make_record(&self.cfg, i);
+            let got = sess.read(&ReadRequest::item(i), NodeId(0)).unwrap();
+            assert_eq!(got, want, "item {i} corrupted");
+        }
+    }
+
+    fn teardown(mut self) {
+        for s in &mut self.servers {
+            s.stop();
+        }
+        let _ = std::fs::remove_dir_all(&self.cluster.root);
+    }
+}
+
+/// Killing a live peer mid-epoch degrades the epoch — it completes, every
+/// byte is correct, `degraded_reads` is accounted — and once the fault is
+/// cleared and the suspect cooldown expires, the revived peer serves
+/// again with no degradation.
+#[test]
+fn mid_epoch_kill_degrades_then_cooldown_revives() {
+    let tb = testbed("kill", 8, 1000);
+    let sess = tb.plane.open_job(JobSpec::new("d", tb.cfg.clone()).readers(2)).unwrap();
+    sess.run_epoch(0).unwrap(); // cold: all chunks land, dataset caches
+
+    // Node3's peer "crashes" two chunks into the warm epoch.
+    tb.servers[3].inject_fault(FaultSpec { action: FaultAction::Kill, after: 2 });
+    let report = sess.run_epoch(1).unwrap(); // must not hang
+    assert!(report.merged.peer_failures > 0, "kill never classified: {:?}", report.merged);
+    assert!(report.merged.degraded_reads > 0, "kill never degraded: {:?}", report.merged);
+
+    // Bytes stay correct while the peer is still dead.
+    tb.assert_byte_identical(&sess);
+
+    // Revive: clear the fault, wait out the suspect cooldown; the next
+    // epoch peer-serves node3's chunks again without degradation.
+    tb.servers[3].clear_fault();
+    std::thread::sleep(COOLDOWN + Duration::from_millis(50));
+    let report = sess.run_epoch(2).unwrap();
+    assert_eq!(report.merged.degraded_reads, 0, "revived peer still degraded: {:?}", report.merged);
+    assert_eq!(report.merged.remote_reads, 0, "revived warm epoch touched remote");
+    tb.teardown();
+}
+
+/// Declaring the node failed and re-placing onto the survivor set bumps
+/// the generation, migrates the surviving chunk files (no full cold
+/// start), and serves generation N+1 byte-identically.
+#[test]
+fn replace_on_survivors_serves_next_generation() {
+    let tb = testbed("replace", 8, 1000);
+    let sess = tb.plane.open_job(JobSpec::new("d", tb.cfg.clone()).readers(2)).unwrap();
+    sess.run_epoch(0).unwrap();
+
+    tb.servers[3].inject_fault(FaultSpec { action: FaultAction::Kill, after: 0 });
+    let (affected, _) = tb.plane.fail_node(NodeId(3)).unwrap();
+    assert_eq!(affected, vec!["d".to_string()]);
+
+    let out = tb.plane.replace_dataset("d", (0..3).map(NodeId).collect()).unwrap();
+    assert_eq!(out.generation, 2, "re-place must bump the generation");
+    assert!(out.migrated_chunks > 0, "survivors must migrate warm: {out:?}");
+
+    // The old session is poisoned with the precise reason…
+    let err = sess.read(&ReadRequest::item(0), NodeId(0)).unwrap_err();
+    assert!(err.to_string().contains("re-placed"), "got: {err}");
+
+    // …and a fresh session streams generation 2 byte-identically over
+    // the survivor set.
+    let fresh = tb.plane.open_job(JobSpec::new("d", tb.cfg.clone()).readers(2)).unwrap();
+    fresh.run_epoch(0).unwrap();
+    tb.assert_byte_identical(&fresh);
+    assert_eq!(tb.plane.dataset_lifecycle("d"), "cached");
+    tb.teardown();
+}
+
+/// A failed node that rejoins is re-admitted: the refills that landed in
+/// its directory while it was lost are vouched back into residency, the
+/// dataset returns to `cached`, and the next warm epoch never touches
+/// the remote store.
+#[test]
+fn rejoin_readmits_chunks_and_serves_warm() {
+    let tb = testbed("rejoin", 8, 1000);
+    let sess = tb.plane.open_job(JobSpec::new("d", tb.cfg.clone()).readers(2)).unwrap();
+    sess.run_epoch(0).unwrap();
+
+    tb.plane.fail_node(NodeId(1)).unwrap();
+    assert_eq!(tb.plane.dataset_lifecycle("d"), "degraded(lost=1)");
+
+    // A degraded epoch refetches the lost chunks from remote (into the
+    // lost node's directory — its home in the unchanged geometry).
+    let report = sess.run_epoch(1).unwrap();
+    assert!(report.merged.remote_reads > 0, "lost chunks must refetch: {:?}", report.merged);
+
+    // Rejoin re-admits those refills: fully cached again, and the next
+    // epoch is pure cache traffic.
+    tb.plane.recover_node(NodeId(1));
+    assert_eq!(tb.plane.dataset_lifecycle("d"), "cached");
+    let report = sess.run_epoch(2).unwrap();
+    assert_eq!(report.merged.remote_reads, 0, "rejoin not re-admitted: {:?}", report.merged);
+    tb.assert_byte_identical(&sess);
+    tb.teardown();
+}

@@ -61,6 +61,22 @@ impl Error {
     pub fn root_cause(&self) -> String {
         self.chain().pop().unwrap_or_else(|| "unknown error".to_string())
     }
+
+    /// Walk the source chain looking for a concrete error type `E` — the
+    /// `anyhow::Error::downcast_ref` subset. Context layers are just
+    /// strings here, so only the typed source chain is searched; an error
+    /// built from `anyhow!`/`bail!` (message-only) never downcasts.
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        let mut src: Option<&(dyn StdError + 'static)> =
+            self.source.as_ref().map(|s| s.as_ref() as &(dyn StdError + 'static));
+        while let Some(s) = src {
+            if let Some(e) = s.downcast_ref::<E>() {
+                return Some(e);
+            }
+            src = s.source();
+        }
+        None
+    }
 }
 
 impl fmt::Display for Error {
@@ -238,6 +254,16 @@ mod tests {
         assert_eq!(fails(11).unwrap_err().to_string(), "n too big: 11");
         let e = anyhow!("plain");
         assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn downcast_ref_finds_typed_source_through_context() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        let io = e.downcast_ref::<std::io::Error>().expect("typed source survives context");
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
+        // Message-only errors carry no typed source to downcast.
+        assert!(anyhow!("plain").downcast_ref::<std::io::Error>().is_none());
     }
 
     #[test]
