@@ -1037,6 +1037,21 @@ impl CacheManager {
             .filter_map(|r| r.stripe.as_ref().map(|s| s.bytes_on_node(n, r.spec.total_bytes)))
             .sum()
     }
+
+    /// Unreserved capacity on node `n`'s cache volume — bytes a new
+    /// placement could take *without* the admission planner having to
+    /// evict anything. (Placement reserves a dataset's full footprint up
+    /// front, so reserved-but-not-yet-filled space is already excluded.)
+    pub fn node_headroom(&self, n: NodeId) -> u64 {
+        self.volumes[n.0].free()
+    }
+
+    /// Cluster-wide unreserved cache capacity — what the prefetch
+    /// pressure rule ([`crate::prefetch::Pressure::Headroom`]) budgets
+    /// speculative ahead-bytes against.
+    pub fn headroom_bytes(&self) -> u64 {
+        (0..self.volumes.len()).map(|n| self.node_headroom(NodeId(n))).sum()
+    }
 }
 
 /// Thread-safe handle over a [`CacheManager`] for the concurrent real-mode
@@ -1107,6 +1122,12 @@ impl SharedCache {
     /// Mark every chunk of one item resident (whole-file fill landed).
     pub fn mark_item(&self, name: &str, item: u64) -> Result<(), CacheError> {
         self.inner.write().unwrap().mark_item(name, item)
+    }
+
+    /// Cluster-wide unreserved cache capacity (shared lock) — the
+    /// prefetch pressure budget source.
+    pub fn headroom_bytes(&self) -> u64 {
+        self.inner.read().unwrap().headroom_bytes()
     }
 
     /// Is the dataset fully resident? (Used to skip the prefetcher.)

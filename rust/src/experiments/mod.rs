@@ -10,6 +10,7 @@ pub mod failover;
 pub mod jobs;
 pub mod paper;
 pub mod peers;
+pub mod prefetch;
 pub mod realmode;
 
 pub use chunks::{chunk_scaling_run, chunk_size_table};
@@ -18,6 +19,7 @@ pub use failover::{failover_jobs_table, failover_run, failover_table};
 pub use jobs::{co_job_run, co_job_run_tiered, co_job_table};
 pub use paper::*;
 pub use peers::{peer_transport_run, peer_transport_table};
+pub use prefetch::{prefetch_run, prefetch_table};
 pub use realmode::{ram_tier_run, ram_tier_table, realmode_reader_scaling, reader_scaling_run};
 
 /// Calibration constants derived from the paper's own numbers; the deeper

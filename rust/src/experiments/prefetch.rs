@@ -1,0 +1,294 @@
+//! Clairvoyant vs blind prefetch experiment (`hoard exp prefetch`): the
+//! cold/first-epoch ablation the new [`crate::prefetch`] subsystem
+//! exists for.
+//!
+//! Setup: one freshly generated dataset behind a remote store with a
+//! per-request latency knob turned on (2 ms — the regime where *order*
+//! matters; pure bandwidth-bound fills finish in the same wall time no
+//! matter the order, because every byte must cross the same pipe
+//! exactly once). J ∈ {1, 2} co-scheduled jobs on one [`DataPlane`]
+//! then run their first epoch concurrently with the prefetch strategy
+//! swept: the legacy sequential stripe walk vs the clairvoyant
+//! scheduler, plus a pressure-constrained clairvoyant variant (a tight
+//! explicit ahead-bytes budget, showing graceful degradation toward
+//! just-in-time rather than collapse).
+//!
+//! Invariant checked on every point, J=1 and J=2 alike: the shared
+//! ledger records exactly `num_chunks` fills and the remote store
+//! supplies the dataset's bytes once — co-scheduled clairvoyant
+//! schedulers dedup through `FillTable` claims, never double-fetch.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::cache::{CacheManager, EvictionPolicy, SharedCache};
+use crate::metrics::Table;
+use crate::netsim::NodeId;
+use crate::posix::dataplane::{DataPlane, JobSession, JobSpec};
+use crate::posix::realfs::{ReadStats, RealCluster};
+use crate::prefetch::{PrefetchStrategy, Pressure};
+use crate::remote::NfsModel;
+use crate::storage::{Device, DeviceKind, Volume};
+use crate::workload::datagen::{self, DataGenConfig};
+use crate::workload::DatasetSpec;
+
+use super::items_per_sec;
+
+/// Nodes in the prefetch testbed (matches the co-job testbed).
+pub const PREFETCH_NODES: usize = 4;
+
+/// Per-request remote latency the testbed injects: makes the cold epoch
+/// latency-bound, the regime where prefetch order and parallelism are
+/// visible in wall time.
+pub const REMOTE_LATENCY: Duration = Duration::from_millis(2);
+
+/// Readers per job in the sweep.
+const SWEEP_READERS: usize = 2;
+
+/// Clairvoyant knobs pinned for the sweep: enough lookahead to keep the
+/// scheduler busy, 4 in-flight fills.
+const SWEEP_LOOKAHEAD: u64 = 256;
+const SWEEP_INFLIGHT: usize = 4;
+
+/// One measured point: J cold jobs, one strategy.
+#[derive(Debug, Clone)]
+pub struct PrefetchPoint {
+    pub jobs: usize,
+    pub strategy: PrefetchStrategy,
+    /// The pressure rule, when the point ran constrained.
+    pub pressure: Option<Pressure>,
+    /// Wall of the concurrent cold phase (all J jobs' epoch 0).
+    pub cold_s: f64,
+    /// Aggregate first-epoch throughput (J × items / cold wall).
+    pub items_per_sec: f64,
+    /// Remote fills recorded by the shared ledger — `== chunks` on every
+    /// strategy (fetch-once holds under prefetch races too).
+    pub fills: u64,
+    pub chunks: u64,
+    /// Sum over jobs of `ReadStats::prefetch_issued` / `prefetch_hits` /
+    /// `prefetch_wasted`.
+    pub issued: u64,
+    pub hits: u64,
+    pub wasted: u64,
+    /// Cluster-wide cold-phase stats (all jobs merged).
+    pub cold: ReadStats,
+    pub items: u64,
+    pub total_bytes: u64,
+}
+
+/// Run J co-scheduled jobs' first epoch over one freshly placed dataset
+/// with the given prefetch strategy (and optional pressure rule).
+pub fn prefetch_run(
+    jobs: usize,
+    strategy: PrefetchStrategy,
+    pressure: Option<Pressure>,
+    items: u64,
+    chunk_bytes: u64,
+) -> Result<PrefetchPoint> {
+    static RUN_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = RUN_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let root: PathBuf = std::env::temp_dir().join(format!(
+        "hoard-prefetch-{jobs}-{}-{}-{seq}",
+        strategy.name(),
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    let cluster = RealCluster::create(&root, PREFETCH_NODES, 200e6)
+        .context("creating prefetch cluster")?
+        .with_remote_model(Box::new(NfsModel::new(200e6)));
+    cluster.set_remote_read_latency(REMOTE_LATENCY);
+    let cfg = DataGenConfig { num_items: items, files_per_dir: 32, ..Default::default() };
+    let total = datagen::generate(&cluster.remote_dir, &cfg).context("generating dataset")?;
+
+    let vols = (0..PREFETCH_NODES)
+        .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 30)]))
+        .collect();
+    let mut manager = CacheManager::new(vols, EvictionPolicy::Manual);
+    manager.chunk_bytes = chunk_bytes;
+    manager.register(DatasetSpec::new("pf", items, total), "nfs://remote/pf".into())?;
+    manager.place("pf", (0..PREFETCH_NODES).map(NodeId).collect())?;
+    let cache = SharedCache::new(manager);
+    let chunks = cache.geometry("pf")?.num_chunks();
+
+    let plane = Arc::new(DataPlane::new(cluster.clone(), cache));
+    let sessions: Vec<JobSession> = (0..jobs)
+        .map(|j| {
+            let mut spec = JobSpec::new("pf", cfg.clone())
+                .readers(SWEEP_READERS)
+                .seed(0xC05C + j as u64)
+                .prefetch_strategy(strategy)
+                .lookahead(SWEEP_LOOKAHEAD)
+                .prefetch_inflight(SWEEP_INFLIGHT);
+            if let Some(p) = pressure {
+                spec = spec.prefetch_pressure(p);
+            }
+            plane.open_job(spec)
+        })
+        .collect::<Result<_>>()?;
+
+    // Cold phase: all J jobs race their first epoch over the shared
+    // ledger at once.
+    let t0 = Instant::now();
+    let per_job: Vec<ReadStats> = {
+        let results: Vec<Result<ReadStats>> = std::thread::scope(|s| {
+            let handles: Vec<_> = sessions
+                .iter()
+                .map(|sess| s.spawn(move || sess.run_epoch(0).map(|r| r.merged)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("job thread panicked"))))
+                .collect()
+        });
+        results.into_iter().collect::<Result<_>>()?
+    };
+    let cold_s = t0.elapsed().as_secs_f64();
+    let fills = plane.dataset_fills("pf");
+    let cold = cluster.take_stats();
+    ensure!(
+        fills == chunks,
+        "fetch-once violated: {fills} fills for {chunks} chunks (J={jobs}, {})",
+        strategy.name()
+    );
+
+    let point = PrefetchPoint {
+        jobs,
+        strategy,
+        pressure,
+        cold_s,
+        items_per_sec: items_per_sec(items * jobs as u64, cold_s),
+        fills,
+        chunks,
+        issued: per_job.iter().map(|s| s.prefetch_issued).sum(),
+        hits: per_job.iter().map(|s| s.prefetch_hits).sum(),
+        wasted: per_job.iter().map(|s| s.prefetch_wasted).sum(),
+        cold,
+        items,
+        total_bytes: total,
+    };
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(point)
+}
+
+/// The `hoard exp prefetch` sweep: blind vs clairvoyant at J ∈ {1, 2},
+/// plus one pressure-constrained clairvoyant point.
+pub fn prefetch_table_with(items: u64, chunk_bytes: u64) -> Table {
+    let mut t = Table::new(
+        "Real mode — cold first epoch, blind vs clairvoyant prefetch (shared fills)",
+        &[
+            "jobs",
+            "strategy",
+            "pressure",
+            "cold phase (s)",
+            "img/s",
+            "fills",
+            "chunks",
+            "issued",
+            "hits",
+            "wasted",
+            "cold remote bytes",
+            "dataset bytes",
+        ],
+    );
+    // The constrained point budgets ahead-bytes to a handful of chunks —
+    // tight enough to bite, loose enough to finish (the gauge degrades to
+    // just-in-time, never deadlocks).
+    let budget = Pressure::Budget(4 * chunk_bytes);
+    let points: Vec<(usize, PrefetchStrategy, Option<Pressure>)> = vec![
+        (1, PrefetchStrategy::Sequential, None),
+        (1, PrefetchStrategy::Clairvoyant, None),
+        (2, PrefetchStrategy::Sequential, None),
+        (2, PrefetchStrategy::Clairvoyant, None),
+        (1, PrefetchStrategy::Clairvoyant, Some(budget)),
+    ];
+    for (jobs, strategy, pressure) in points {
+        match prefetch_run(jobs, strategy, pressure, items, chunk_bytes) {
+            Ok(p) => {
+                t.row(vec![
+                    format!("{jobs}"),
+                    strategy.name().to_string(),
+                    pressure.map(|pr| pr.name().to_string()).unwrap_or_else(|| "-".into()),
+                    format!("{:.3}", p.cold_s),
+                    format!("{:.0}", p.items_per_sec),
+                    format!("{}", p.fills),
+                    format!("{}", p.chunks),
+                    format!("{}", p.issued),
+                    format!("{}", p.hits),
+                    format!("{}", p.wasted),
+                    format!("{}", p.cold.remote_bytes),
+                    format!("{}", p.total_bytes),
+                ]);
+            }
+            Err(e) => {
+                let mut cells = vec![
+                    format!("{jobs}"),
+                    strategy.name().to_string(),
+                    pressure.map(|pr| pr.name().to_string()).unwrap_or_else(|| "-".into()),
+                    format!("failed: {e:#}"),
+                ];
+                cells.resize(12, String::new());
+                t.row(cells);
+            }
+        }
+    }
+    t
+}
+
+/// The default `hoard exp prefetch` table. Honors `HOARD_BENCH_SMOKE=1`
+/// (smaller dataset so CI smoke runs stay fast).
+pub fn prefetch_table(items: u64) -> Table {
+    let smoke = std::env::var("HOARD_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let items = if smoke { items.min(16) } else { items };
+    prefetch_table_with(items, 1000)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clairvoyant_point_fills_once_and_counts_issues() {
+        let p = prefetch_run(2, PrefetchStrategy::Clairvoyant, None, 12, 777).unwrap();
+        assert_eq!(p.fills, p.chunks, "co-scheduled clairvoyant jobs must share fills once");
+        assert_eq!(p.cold.remote_bytes, p.total_bytes, "remote supplies every byte once");
+        assert!(p.issued > 0, "a cold epoch must issue prefetches");
+        assert!(p.hits <= p.issued, "each prefetched unit yields at most one hit");
+        assert!(p.issued <= p.chunks, "cannot issue more than the chunk grid");
+    }
+
+    #[test]
+    fn pressure_constrained_point_still_completes() {
+        let p = prefetch_run(
+            1,
+            PrefetchStrategy::Clairvoyant,
+            Some(Pressure::Budget(2 * 777)),
+            8,
+            777,
+        )
+        .unwrap();
+        assert_eq!(p.fills, p.chunks, "a tight budget defers, it must not drop chunks");
+    }
+
+    #[test]
+    fn table_has_the_five_sweep_rows() {
+        let t = prefetch_table_with(8, 1000);
+        assert_eq!(t.rows.len(), 5);
+        assert_eq!((t.rows[0][0].as_str(), t.rows[0][1].as_str()), ("1", "sequential"));
+        assert_eq!((t.rows[1][0].as_str(), t.rows[1][1].as_str()), ("1", "clairvoyant"));
+        assert_eq!((t.rows[2][0].as_str(), t.rows[2][1].as_str()), ("2", "sequential"));
+        assert_eq!((t.rows[3][0].as_str(), t.rows[3][1].as_str()), ("2", "clairvoyant"));
+        assert_eq!(t.rows[4][2].as_str(), "budget");
+        for row in &t.rows {
+            let fills: u64 = row[5]
+                .parse()
+                .unwrap_or_else(|_| panic!("fills column not numeric — run failed? {row:?}"));
+            let chunks: u64 = row[6]
+                .parse()
+                .unwrap_or_else(|_| panic!("chunks column not numeric — run failed? {row:?}"));
+            assert_eq!(fills, chunks, "fills must equal chunks: {row:?}");
+        }
+    }
+}

@@ -30,6 +30,7 @@ pub mod metrics;
 pub mod net;
 pub mod peer;
 pub mod posix;
+pub mod prefetch;
 pub mod runtime;
 pub mod netsim;
 pub mod remote;

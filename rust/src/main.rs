@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   exp <id|all>        reproduce a paper table/figure (t1 f3 t3 f4 f5 t4
 //!                       t5 util readers chunks peers jobs evict failover
-//!                       ablations)
+//!                       prefetch ablations)
 //!   serve [--addr A]    run the Hoard API server over an in-process cluster
 //!   datagen --out DIR   generate a synthetic real-mode dataset
 //!   sim --mode M        run the paper 4-job scenario (rem|nvme|hoard)
@@ -42,7 +42,7 @@ fn main() {
 fn print_usage() {
     eprintln!(
         "hoard — distributed data caching for DL training (paper reproduction)\n\n\
-         USAGE:\n  hoard exp <t1|f3|t3|f4|f5|t4|t5|util|readers|chunks|peers|jobs|evict|failover|ablations|all> [--json]\n  \
+         USAGE:\n  hoard exp <t1|f3|t3|f4|f5|t4|t5|util|readers|chunks|peers|jobs|evict|failover|prefetch|ablations|all> [--json]\n  \
          hoard serve [--addr 127.0.0.1:7070] [--config FILE] [--max-conns N]\n        \
          [--data-root DIR] [--data-items N] [--data-chunk BYTES]\n  \
          hoard datagen --out DIR [--items N]\n  \
@@ -102,6 +102,7 @@ fn cmd_exp(args: &[String]) -> i32 {
                 emit(experiments::failover_table(24));
                 emit(experiments::failover_jobs_table());
             }
+            "prefetch" => emit(experiments::prefetch_table(96)),
             "ablations" => {
                 emit(ablations::ablation_stripe_width());
                 emit(ablations::ablation_prefetch());
@@ -115,7 +116,7 @@ fn cmd_exp(args: &[String]) -> i32 {
     if which == "all" {
         for id in [
             "t1", "f3", "t3", "f4", "f5", "t4", "t5", "util", "readers", "chunks", "peers",
-            "jobs", "evict", "failover", "ablations",
+            "jobs", "evict", "failover", "prefetch", "ablations",
         ] {
             run(id);
         }

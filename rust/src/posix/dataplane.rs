@@ -43,6 +43,10 @@ use super::realfs::{chunk_rel_path, gc_dataset_chunks, gc_node_chunks, ReadStats
 use crate::cache::{CacheEvent, ChunkGeometry, RamTier, ResidencySnapshot, SharedCache};
 use crate::netsim::NodeId;
 use crate::peer::{ChunkTransport, DirTransport};
+use crate::prefetch::{
+    run_clairvoyant_chunks, run_clairvoyant_items, PrefetchConfig, PrefetchStrategy, Pressure,
+    ReadCursor,
+};
 use crate::util::Rng;
 use crate::workload::datagen::DataGenConfig;
 
@@ -78,11 +82,17 @@ pub struct JobSpec {
     /// their own stochastic read order.
     pub seed: u64,
     pub granularity: Granularity,
-    pub prefetch: bool,
+    /// How this job warms the cache during an epoch (see
+    /// [`PrefetchStrategy`]); clairvoyant by default.
+    pub prefetch: PrefetchStrategy,
+    /// Lookahead/in-flight/pressure knobs for the clairvoyant scheduler
+    /// (ignored by `Off`/`Sequential`).
+    pub prefetch_cfg: PrefetchConfig,
 }
 
 impl JobSpec {
-    /// Defaults: 1 reader, seed 0, chunked addressing, prefetch on.
+    /// Defaults: 1 reader, seed 0, chunked addressing, clairvoyant
+    /// prefetch with default knobs.
     pub fn new(dataset: impl Into<String>, cfg: DataGenConfig) -> Self {
         JobSpec {
             dataset: dataset.into(),
@@ -90,7 +100,8 @@ impl JobSpec {
             readers: 1,
             seed: 0,
             granularity: Granularity::Chunked,
-            prefetch: true,
+            prefetch: PrefetchStrategy::Clairvoyant,
+            prefetch_cfg: PrefetchConfig::default(),
         }
     }
 
@@ -109,8 +120,35 @@ impl JobSpec {
         self
     }
 
+    /// On/off convenience kept for existing callers: `true` ⇒ the default
+    /// clairvoyant strategy, `false` ⇒ no prefetch.
     pub fn prefetch(mut self, on: bool) -> Self {
-        self.prefetch = on;
+        self.prefetch =
+            if on { PrefetchStrategy::Clairvoyant } else { PrefetchStrategy::Off };
+        self
+    }
+
+    /// Pick the prefetch strategy explicitly (the ablation knob).
+    pub fn prefetch_strategy(mut self, s: PrefetchStrategy) -> Self {
+        self.prefetch = s;
+        self
+    }
+
+    /// Clairvoyant lookahead window, in epoch positions.
+    pub fn lookahead(mut self, positions: u64) -> Self {
+        self.prefetch_cfg.lookahead = positions;
+        self
+    }
+
+    /// Clairvoyant in-flight fill budget (worker threads).
+    pub fn prefetch_inflight(mut self, n: usize) -> Self {
+        self.prefetch_cfg.inflight = n;
+        self
+    }
+
+    /// Cache-pressure rule for the clairvoyant scheduler's ahead-bytes.
+    pub fn prefetch_pressure(mut self, p: Pressure) -> Self {
+        self.prefetch_cfg.pressure = p;
         self
     }
 }
@@ -722,6 +760,7 @@ impl DataPlane {
             readers: spec.readers,
             seed: spec.seed,
             prefetch: spec.prefetch,
+            prefetch_cfg: spec.prefetch_cfg,
             transport: None,
             stats: Mutex::new(ReadStats::default()),
             epochs: AtomicU64::new(0),
@@ -741,7 +780,8 @@ pub struct JobSession {
     ledger: Arc<Ledger>,
     readers: usize,
     seed: u64,
-    prefetch: bool,
+    prefetch: PrefetchStrategy,
+    prefetch_cfg: PrefetchConfig,
     /// Session-level transport override (e.g. sockets for this job only);
     /// `None` ⇒ the plane default.
     transport: Option<Box<dyn ChunkTransport>>,
@@ -757,9 +797,17 @@ pub struct JobSession {
 }
 
 impl JobSession {
-    /// Toggle the background prefetcher (on by default; builder-style).
+    /// Toggle the background prefetcher (builder-style): `true` ⇒ the
+    /// default clairvoyant strategy, `false` ⇒ off.
     pub fn with_prefetch(mut self, on: bool) -> Self {
-        self.prefetch = on;
+        self.prefetch =
+            if on { PrefetchStrategy::Clairvoyant } else { PrefetchStrategy::Off };
+        self
+    }
+
+    /// Pick the prefetch strategy explicitly (builder-style).
+    pub fn with_prefetch_strategy(mut self, s: PrefetchStrategy) -> Self {
+        self.prefetch = s;
         self
     }
 
@@ -1015,47 +1063,90 @@ impl JobSession {
     pub fn run_epoch_order(&self, order: &[u64]) -> Result<EpochReport> {
         self.check_reset()?;
         let t0 = Instant::now();
-        let run_prefetcher = self.prefetch && !self.plane.cache.is_cached(&self.dataset);
         // One shared-lock acquisition per epoch: every reader thread then
         // resolves residency through the lock-free snapshot (readers fall
         // back to the locked lane if it retires mid-epoch).
         let snapshot = self.plane.cache.snapshot(&self.dataset).ok();
+        // Gate the prefetcher on *full residency*, judged by the snapshot
+        // bitmap when one is live — not on the registry's `Cached` state.
+        // A partially-warm dataset (a `recover_node` re-admission, a
+        // `Degraded` survivor set, an interrupted first epoch) is not
+        // `Cached`, but it is not cold either: it should prefetch exactly
+        // the missing chunks, which the clairvoyant scheduler's
+        // per-unit residency skip (and the sequential pass's adoption
+        // probe) already does once the pass is allowed to run.
+        let fully_resident = match snapshot.as_deref() {
+            Some(s) if !s.retired() => s.is_full(),
+            _ => self.plane.cache.is_cached(&self.dataset),
+        };
+        let strategy =
+            if fully_resident { PrefetchStrategy::Off } else { self.prefetch };
+        let cursor = ReadCursor::new(order.len() as u64);
+        // `prefetch_wasted` = credits the epoch leaves unconsumed, as a
+        // delta so co-scheduled epochs on the shared ledger don't claim
+        // each other's leftovers.
+        let pf_out0 = self.ledger.fill.prefetch_outstanding();
         let (reader_shards, prefetch_shard) = std::thread::scope(|s| {
-            let prefetcher = if run_prefetcher {
-                Some(s.spawn(|| self.prefetch_pass()))
-            } else {
-                None
-            };
+            let prefetcher = (strategy != PrefetchStrategy::Off).then(|| {
+                s.spawn(|| self.prefetch_pass(strategy, order, &cursor, snapshot.as_deref()))
+            });
+            // Readers advance the cursor only when a clairvoyant
+            // scheduler is actually trailing it.
+            let advance = (strategy == PrefetchStrategy::Clairvoyant).then_some(&cursor);
             let mut handles = Vec::with_capacity(self.readers);
             for r in 0..self.readers {
                 let items: Vec<u64> =
                     order.iter().skip(r).step_by(self.readers).copied().collect();
                 let snap = snapshot.clone();
-                handles.push(s.spawn(move || self.reader_pass(r, &items, snap.as_deref())));
+                handles
+                    .push(s.spawn(move || self.reader_pass(r, &items, snap.as_deref(), advance)));
             }
-            let shards: Vec<Result<ReadStats>> = handles
+            let shards: Vec<(ReadStats, Result<()>)> = handles
                 .into_iter()
-                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("reader thread panicked"))))
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        (ReadStats::default(), Err(anyhow!("reader thread panicked")))
+                    })
+                })
                 .collect();
-            let pf: Option<Result<ReadStats>> = prefetcher
-                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("prefetcher thread panicked"))));
+            // Readers are done (or dead): release the scheduler's parked
+            // workers so the prefetcher can wind down, then join it.
+            cursor.stop();
+            let pf: Option<(ReadStats, Result<()>)> = prefetcher.map(|h| {
+                h.join().unwrap_or_else(|_| {
+                    (ReadStats::default(), Err(anyhow!("prefetcher thread panicked")))
+                })
+            });
             (shards, pf)
         });
 
+        // Merge every shard — including the partial shards of passes that
+        // errored — *before* propagating the first error, so the job and
+        // cluster accumulators stay exact even for failed epochs.
+        let mut first_err: Option<anyhow::Error> = None;
         let mut per_reader = Vec::with_capacity(self.readers);
-        for shard in reader_shards {
-            per_reader.push(shard?);
-        }
-        let prefetcher = prefetch_shard.transpose()?;
         let mut merged = ReadStats::default();
-        for s in &per_reader {
-            merged.merge(s);
+        for (shard, res) in reader_shards {
+            merged.merge(&shard);
+            per_reader.push(shard);
+            if let Err(e) = res {
+                first_err.get_or_insert(e);
+            }
         }
-        if let Some(p) = &prefetcher {
-            merged.merge(p);
-        }
+        let prefetcher = prefetch_shard.map(|(mut shard, res)| {
+            shard.prefetch_wasted =
+                self.ledger.fill.prefetch_outstanding().saturating_sub(pf_out0);
+            merged.merge(&shard);
+            if let Err(e) = res {
+                first_err.get_or_insert(e);
+            }
+            shard
+        });
         self.plane.cluster.merge_stats(&merged);
         self.record(&merged);
+        if let Some(e) = first_err {
+            return Err(e);
+        }
         self.epochs.fetch_add(1, Ordering::Relaxed);
         Ok(EpochReport { wall: t0.elapsed(), merged, per_reader, prefetcher })
     }
@@ -1065,60 +1156,81 @@ impl JobSession {
         r: usize,
         items: &[u64],
         snap: Option<&ResidencySnapshot>,
-    ) -> Result<ReadStats> {
+        cursor: Option<&ReadCursor>,
+    ) -> (ReadStats, Result<()>) {
         let reader = self.reader_node(r);
         let plane = &self.plane;
         let mut stats = ReadStats::default();
-        match &self.ledger.mode {
-            LedgerMode::WholeFile => {
-                // Specialized arm: the dataset ID is resolved once per
-                // pass, not per read.
-                let transport = self.effective_transport();
-                let dataset_id = plane.cache.dataset_id(&self.dataset)?;
-                for &i in items {
-                    self.check_reset()?;
-                    read_item_concurrent_fast(
-                        &plane.cluster,
-                        &plane.cache,
-                        &self.ledger.fill,
-                        transport,
-                        snap,
-                        dataset_id,
-                        &self.dataset,
-                        &self.cfg,
-                        i,
-                        reader,
-                        &mut stats,
-                    )?;
+        let res = (|| -> Result<()> {
+            match &self.ledger.mode {
+                LedgerMode::WholeFile => {
+                    // Specialized arm: the dataset ID is resolved once per
+                    // pass, not per read.
+                    let transport = self.effective_transport();
+                    let dataset_id = plane.cache.dataset_id(&self.dataset)?;
+                    for &i in items {
+                        self.check_reset()?;
+                        read_item_concurrent_fast(
+                            &plane.cluster,
+                            &plane.cache,
+                            &self.ledger.fill,
+                            transport,
+                            snap,
+                            dataset_id,
+                            &self.dataset,
+                            &self.cfg,
+                            i,
+                            reader,
+                            &mut stats,
+                        )?;
+                        if let Some(c) = cursor {
+                            c.advance();
+                        }
+                    }
+                }
+                LedgerMode::Chunked(_) => {
+                    // One dispatch implementation: the epoch driver runs
+                    // the exact same path a `ReadRequest` does
+                    // (read_inner), with the per-pass snapshot supplied by
+                    // the caller.
+                    for &i in items {
+                        self.read_inner(&ReadRequest::item(i), reader, snap, &mut stats)?;
+                        if let Some(c) = cursor {
+                            c.advance();
+                        }
+                    }
                 }
             }
-            LedgerMode::Chunked(_) => {
-                // One dispatch implementation: the epoch driver runs the
-                // exact same path a `ReadRequest` does (read_inner), with
-                // the per-pass snapshot supplied by the caller.
-                for &i in items {
-                    self.read_inner(&ReadRequest::item(i), reader, snap, &mut stats)?;
-                }
-            }
-        }
-        Ok(stats)
+            Ok(())
+        })();
+        (stats, res)
     }
 
-    /// The background AFM prefetcher thread body (walks items in
-    /// whole-file mode, the chunk grid in chunked mode).
-    fn prefetch_pass(&self) -> Result<ReadStats> {
+    /// The background prefetcher thread body: the clairvoyant scheduler
+    /// (priority by first access within the lookahead window, trailing
+    /// `cursor`) or the legacy sequential walk, per `strategy`. Returns
+    /// the stats shard *alongside* the result, so a mid-epoch error keeps
+    /// its partial accounting.
+    fn prefetch_pass(
+        &self,
+        strategy: PrefetchStrategy,
+        order: &[u64],
+        cursor: &ReadCursor,
+        snap: Option<&ResidencySnapshot>,
+    ) -> (ReadStats, Result<()>) {
         let plane = &self.plane;
         let mut stats = ReadStats::default();
-        match &self.ledger.mode {
-            LedgerMode::WholeFile => prefetch_items(
+        let res = match (&self.ledger.mode, strategy) {
+            (_, PrefetchStrategy::Off) => Ok(()),
+            (LedgerMode::WholeFile, PrefetchStrategy::Sequential) => prefetch_items(
                 &plane.cluster,
                 &plane.cache,
                 &self.ledger.fill,
                 &self.dataset,
                 &self.cfg,
                 &mut stats,
-            )?,
-            LedgerMode::Chunked(geom) => prefetch_chunks(
+            ),
+            (LedgerMode::Chunked(geom), PrefetchStrategy::Sequential) => prefetch_chunks(
                 &plane.cluster,
                 &plane.cache,
                 &self.ledger.fill,
@@ -1127,9 +1239,35 @@ impl JobSession {
                 &self.cfg,
                 geom,
                 &mut stats,
-            )?,
-        }
-        Ok(stats)
+            ),
+            (LedgerMode::WholeFile, PrefetchStrategy::Clairvoyant) => run_clairvoyant_items(
+                &plane.cluster,
+                &plane.cache,
+                &self.ledger.fill,
+                snap,
+                &self.dataset,
+                &self.cfg,
+                order,
+                cursor,
+                &self.prefetch_cfg,
+                &mut stats,
+            ),
+            (LedgerMode::Chunked(geom), PrefetchStrategy::Clairvoyant) => run_clairvoyant_chunks(
+                &plane.cluster,
+                &plane.cache,
+                &self.ledger.fill,
+                plane.ram.as_deref(),
+                snap,
+                &self.dataset,
+                &self.cfg,
+                geom,
+                order,
+                cursor,
+                &self.prefetch_cfg,
+                &mut stats,
+            ),
+        };
+        (stats, res)
     }
 }
 

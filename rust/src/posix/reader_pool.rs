@@ -107,6 +107,14 @@ struct FillShardState {
     /// (`complete`), as opposed to adoptions (`mark_resident`) — the
     /// cross-job fills-shared-once evidence.
     fills: u64,
+    /// Per-slot "a prefetcher filled this and no reader has consumed the
+    /// credit yet" flag — the first [`FillTable::claim_or_wait_credit`]
+    /// to land on the slot takes it as a `prefetch_hits` tick.
+    prefetched: Vec<bool>,
+    /// Shard-local count of set `prefetched` flags, so
+    /// [`FillTable::prefetch_outstanding`] (the `prefetch_wasted` source)
+    /// sums S counters instead of scanning slots.
+    pf_out: u64,
     /// Threads currently parked on this shard's condvar — what makes
     /// `notify_one`-where-safe decidable (see [`FillTable::complete`]).
     waiters: u64,
@@ -148,6 +156,8 @@ impl FillTable {
                         slots: vec![FillState::Empty; per_shard],
                         done: 0,
                         fills: 0,
+                        prefetched: vec![false; per_shard],
+                        pf_out: 0,
                         waiters: 0,
                     }),
                     cv: Condvar::new(),
@@ -196,6 +206,38 @@ impl FillTable {
         }
     }
 
+    /// [`FillTable::claim_or_wait`] that also consumes the slot's
+    /// prefetch credit: the second element is `true` iff the slot is
+    /// `Done` *because a prefetcher filled it* and this caller is the
+    /// first reader to arrive since — i.e. a `prefetch_hits` tick. The
+    /// credit is taken exactly once; later readers (and co-scheduled
+    /// jobs' readers) see plain residency.
+    pub fn claim_or_wait_credit(&self, i: u64) -> (Claim, bool) {
+        let (shard, idx) = self.shard_of(i);
+        let mut st = shard.state.lock().unwrap();
+        loop {
+            match st.slots[idx] {
+                FillState::Done => {
+                    let credit = st.prefetched[idx];
+                    if credit {
+                        st.prefetched[idx] = false;
+                        st.pf_out -= 1;
+                    }
+                    return (Claim::Resident, credit);
+                }
+                FillState::Empty => {
+                    st.slots[idx] = FillState::InFlight;
+                    return (Claim::Filler, false);
+                }
+                FillState::InFlight => {
+                    st.waiters += 1;
+                    st = shard.cv.wait(st).unwrap();
+                    st.waiters -= 1;
+                }
+            }
+        }
+    }
+
     /// Non-blocking claim (the prefetcher: skip items someone is already
     /// fetching). `true` ⇒ caller owns the fill.
     pub fn try_claim(&self, i: u64) -> bool {
@@ -234,6 +276,26 @@ impl FillTable {
         self.finish(i, false);
     }
 
+    /// [`FillTable::complete`] from a *prefetcher*: the Done slot also
+    /// carries a one-shot credit the first subsequent
+    /// [`FillTable::claim_or_wait_credit`] consumes as a `prefetch_hits`
+    /// tick. Credits still outstanding when the epoch ends are the
+    /// `prefetch_wasted` count (fetched, never read).
+    pub fn complete_prefetched(&self, i: u64) {
+        let (shard, idx) = self.shard_of(i);
+        let mut st = shard.state.lock().unwrap();
+        if st.slots[idx] != FillState::Done {
+            st.slots[idx] = FillState::Done;
+            st.done += 1;
+            st.fills += 1;
+            if !st.prefetched[idx] {
+                st.prefetched[idx] = true;
+                st.pf_out += 1;
+            }
+        }
+        Self::wake(shard, &st);
+    }
+
     /// Whether slot `i` is `Done`, without claiming anything — the node
     /// rejoin re-admission probe ([`DataPlane::recover_node`]
     /// (crate::posix::dataplane::DataPlane::recover_node) vouches a
@@ -249,6 +311,10 @@ impl FillTable {
         let mut st = shard.state.lock().unwrap();
         if st.slots[idx] == FillState::Done {
             st.done -= 1;
+        }
+        if st.prefetched[idx] {
+            st.prefetched[idx] = false;
+            st.pf_out -= 1;
         }
         st.slots[idx] = FillState::Empty;
         Self::wake(shard, &st);
@@ -266,6 +332,12 @@ impl FillTable {
     /// the slot count, not J× it.
     pub fn fills_completed(&self) -> u64 {
         self.shards.iter().map(|s| s.state.lock().unwrap().fills).sum()
+    }
+
+    /// Prefetch credits not yet consumed by a reader. Sampled before and
+    /// after an epoch, the delta is that epoch's `prefetch_wasted`.
+    pub fn prefetch_outstanding(&self) -> u64 {
+        self.shards.iter().map(|s| s.state.lock().unwrap().pf_out).sum()
     }
 }
 
@@ -407,7 +479,11 @@ pub fn read_item_concurrent_fast(
             other => other,
         }
     };
-    match fill.claim_or_wait(i) {
+    let (claim, pf_hit) = fill.claim_or_wait_credit(i);
+    if pf_hit {
+        stats.prefetch_hits += 1;
+    }
+    match claim {
         Claim::Resident => match serve(stats)? {
             Some(data) => Ok(data),
             // Resident per the ledger but gone at the source (peer lost
@@ -479,7 +555,10 @@ pub(crate) fn prefetch_items(
             continue;
         }
         match fill_from_remote(cluster, cache, dataset, cfg, i, home, stats) {
-            Ok(_) => fill.complete(i),
+            Ok(_) => {
+                fill.complete_prefetched(i);
+                stats.prefetch_issued += 1;
+            }
             Err(e) => {
                 fill.abort(i);
                 return Err(e);
@@ -492,7 +571,9 @@ pub(crate) fn prefetch_items(
 /// The fill itself: remote fetch (shared throttled bucket), write to the
 /// home node's stripe, and mark the item's exact chunks in the residency
 /// bitmap (out-of-order fills no longer pretend to be a sequential front).
-fn fill_from_remote(
+/// `pub(crate)` so the clairvoyant scheduler's whole-file target
+/// ([`crate::prefetch`]) issues through the same single implementation.
+pub(crate) fn fill_from_remote(
     cluster: &RealCluster,
     cache: &SharedCache,
     dataset: &str,
@@ -703,7 +784,11 @@ pub fn read_item_range_chunked_fast(
             continue;
         }
         let (off, pos, len) = (seg_lo - cs, (seg_lo - gs) as usize, seg_hi - seg_lo);
-        match fill.claim_or_wait(c) {
+        let (claim, pf_hit) = fill.claim_or_wait_credit(c);
+        if pf_hit {
+            stats.prefetch_hits += 1;
+        }
+        match claim {
             Claim::Resident if home != reader => {
                 // A tier hit beats a peer round trip too: co-scheduled jobs
                 // on this plane (or an earlier refill) may have parked the
@@ -925,7 +1010,10 @@ pub(crate) fn prefetch_chunks(
                     r.offer((geom.dataset_id, geom.generation, geom.chunk_bytes(), c), &buf);
                 }
             }) {
-            Ok(()) => fill.complete(c),
+            Ok(()) => {
+                fill.complete_prefetched(c);
+                stats.prefetch_issued += 1;
+            }
             Err(e) => {
                 fill.abort(c);
                 return Err(e);

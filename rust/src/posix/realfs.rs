@@ -284,6 +284,18 @@ pub struct ReadStats {
     pub degraded_reads: u64,
     /// Seconds spent waiting on the shared remote bucket.
     pub remote_wait_s: f64,
+    /// Units (chunks or item files) a prefetcher fetched from the remote
+    /// store through the fill ledger (adoptions of already-on-disk data
+    /// excluded). Not a read — excluded from `total_reads`.
+    pub prefetch_issued: u64,
+    /// Demand reads that landed on a slot a prefetcher had filled and
+    /// whose credit was still unconsumed — each prefetched unit yields at
+    /// most one hit, so `hits ≤ issued` always.
+    pub prefetch_hits: u64,
+    /// Prefetched units no reader consumed by epoch end (fetched, never
+    /// read) — the clairvoyant scheduler's windowing keeps this at 0 for
+    /// full epochs; the blind pass can waste under partial orders.
+    pub prefetch_wasted: u64,
 }
 
 impl ReadStats {
@@ -302,6 +314,9 @@ impl ReadStats {
         self.peer_failures += other.peer_failures;
         self.degraded_reads += other.degraded_reads;
         self.remote_wait_s += other.remote_wait_s;
+        self.prefetch_issued += other.prefetch_issued;
+        self.prefetch_hits += other.prefetch_hits;
+        self.prefetch_wasted += other.prefetch_wasted;
     }
 
     pub fn total_reads(&self) -> u64 {

@@ -1,0 +1,58 @@
+//! Clairvoyant prefetching (NoPFS-style, PAPERS.md): exploit the fact
+//! that a training job's epoch access sequence is *known* — the seeded
+//! permutation exists before the first read — to warm the cache in
+//! time-until-first-access order instead of blind stripe order.
+//!
+//! Three pieces:
+//!
+//! * [`schedule`] — derive per-unit first-access positions from the
+//!   epoch permutation ([`EpochSchedule`]) and track the live read
+//!   cursor the lookahead window trails ([`ReadCursor`]).
+//! * [`scheduler`] — the priority-queue drain loop: bounded in-flight
+//!   workers issuing fills through the dataset's shared fetch-once
+//!   [`FillTable`](crate::posix::FillTable) ledger, so co-scheduled
+//!   jobs never double-fetch a chunk.
+//! * [`pressure`] — ahead-bytes budgeting against cache headroom
+//!   ([`Pressure`], [`PressureGauge`]): defer speculative fills that
+//!   would crowd the cache, degrade to just-in-time under a tight
+//!   budget, never deadlock.
+//!
+//! [`JobSession::run_epoch`](crate::posix::dataplane::JobSession)
+//! drives all of this; the old blind pass survives as
+//! [`PrefetchStrategy::Sequential`] for the ablation
+//! (`hoard exp prefetch`).
+
+pub mod pressure;
+pub mod schedule;
+pub mod scheduler;
+
+pub use pressure::{Pressure, PressureGauge};
+pub use schedule::{EpochSchedule, ReadCursor};
+pub use scheduler::{
+    run_clairvoyant_chunks, run_clairvoyant_items, run_scheduled_chunks, PrefetchConfig,
+    DEFAULT_INFLIGHT, DEFAULT_LOOKAHEAD,
+};
+
+/// How a job warms the cache during an epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefetchStrategy {
+    /// No prefetch: every miss is a demand fill on the read path.
+    Off,
+    /// The legacy blind pass: one thread walking units in stripe order,
+    /// ignoring the permutation (kept for the ablation).
+    Sequential,
+    /// The scheduler in this module: priority by time-until-first-access
+    /// within a bounded lookahead window behind the read cursor.
+    Clairvoyant,
+}
+
+impl PrefetchStrategy {
+    /// Table/log tag.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PrefetchStrategy::Off => "off",
+            PrefetchStrategy::Sequential => "sequential",
+            PrefetchStrategy::Clairvoyant => "clairvoyant",
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Cache-pressure awareness for the prefetch scheduler: bound the bytes
+//! the prefetcher holds *ahead* of the readers.
+//!
+//! Placement reserves a dataset's full footprint up front
+//! ([`CacheManager::place`](crate::cache::CacheManager::place) runs the
+//! admission plan and allocates every node's share before the first
+//! fill), so a fill itself can never overrun a volume. What speculation
+//! *can* do is pile bytes into the cache long before any reader needs
+//! them — exactly the space the RAM tier, co-scheduled placements and
+//! the admission planner compete for. The pressure rule (ROADMAP's
+//! iCache-style stretch) is therefore expressed on the prefetcher's
+//! **ahead-bytes**: payload it has issued whose first access the readers
+//! have not reached yet.
+//!
+//! * [`Pressure::Unbounded`] — no gauge; the lookahead window is the only
+//!   bound.
+//! * [`Pressure::Headroom`] — budget the ahead-bytes by the cluster's
+//!   unreserved cache headroom ([`SharedCache::headroom_bytes`]), sampled
+//!   when the epoch's scheduler starts: prefetch freely into free space,
+//!   degrade to just-in-time when the cache is packed (when filling ahead
+//!   would force the admission policy toward eviction).
+//! * [`Pressure::Budget`] — an explicit byte budget (experiments and
+//!   tests pin the constrained variant with it).
+//!
+//! Deferral, not loss: a denied unit keeps its place in the queue and is
+//! re-offered once the cursor passes other units' first accesses and
+//! frees their budget. The gauge also floors the budget at one unit, so
+//! a budget smaller than a single chunk degrades to strictly
+//! just-in-time prefetch instead of deadlock.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Mutex;
+
+use crate::cache::SharedCache;
+
+/// How the scheduler responds to cache pressure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pressure {
+    /// No ahead-bytes bound (the lookahead window still applies).
+    Unbounded,
+    /// Bound ahead-bytes by the cluster's unreserved cache headroom,
+    /// sampled at epoch start.
+    Headroom,
+    /// Explicit ahead-bytes budget.
+    Budget(u64),
+}
+
+impl Pressure {
+    /// Resolve to a concrete byte budget (`None` ⇔ unbounded).
+    pub fn resolve(&self, cache: &SharedCache) -> Option<u64> {
+        match *self {
+            Pressure::Unbounded => None,
+            Pressure::Headroom => Some(cache.headroom_bytes()),
+            Pressure::Budget(b) => Some(b),
+        }
+    }
+
+    /// Table/log tag.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pressure::Unbounded => "unbounded",
+            Pressure::Headroom => "headroom",
+            Pressure::Budget(_) => "budget",
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct GaugeInner {
+    /// Bytes issued ahead of the cursor, not yet consumed.
+    ahead: u64,
+    /// Issued units by first-access position — popped (and their bytes
+    /// released) as the cursor passes them.
+    issued: BinaryHeap<Reverse<(u64, u64)>>,
+}
+
+/// Tracks the prefetcher's ahead-bytes against a budget. Shared by the
+/// scheduler's workers; every operation is one short mutex hold.
+#[derive(Debug)]
+pub struct PressureGauge {
+    budget: Option<u64>,
+    inner: Mutex<GaugeInner>,
+}
+
+impl PressureGauge {
+    pub fn new(budget: Option<u64>) -> Self {
+        PressureGauge { budget, inner: Mutex::new(GaugeInner::default()) }
+    }
+
+    pub fn budget(&self) -> Option<u64> {
+        self.budget
+    }
+
+    /// May a unit of `bytes` whose first access is at `first_pos` be
+    /// issued, given the cursor at `cursor_pos`? Admitting charges the
+    /// gauge; a `false` means defer (nothing is charged). Units whose
+    /// first access the cursor has already passed are released first —
+    /// their bytes are demand, not speculation, from `cursor_pos` on.
+    ///
+    /// Progress floor: with nothing outstanding the unit is admitted
+    /// even when it alone exceeds the budget — the gauge throttles to
+    /// just-in-time, it never starves the scheduler outright.
+    pub fn admit(&self, first_pos: u64, bytes: u64, cursor_pos: u64) -> bool {
+        let Some(budget) = self.budget else { return true };
+        let mut g = self.inner.lock().unwrap();
+        while let Some(&Reverse((pos, by))) = g.issued.peek() {
+            if pos >= cursor_pos {
+                break;
+            }
+            g.issued.pop();
+            g.ahead = g.ahead.saturating_sub(by);
+        }
+        if g.ahead > 0 && g.ahead.saturating_add(bytes) > budget {
+            return false;
+        }
+        g.ahead += bytes;
+        g.issued.push(Reverse((first_pos, bytes)));
+        true
+    }
+
+    /// Ahead-bytes currently charged (test/observability helper).
+    pub fn outstanding(&self) -> u64 {
+        self.inner.lock().unwrap().ahead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbounded_always_admits() {
+        let g = PressureGauge::new(None);
+        assert!(g.admit(0, u64::MAX, 0));
+        assert_eq!(g.outstanding(), 0, "unbounded gauge charges nothing");
+    }
+
+    #[test]
+    fn budget_defers_then_releases_as_cursor_passes() {
+        let g = PressureGauge::new(Some(100));
+        assert!(g.admit(0, 60, 0), "fits");
+        assert!(!g.admit(5, 60, 0), "60+60 > 100: deferred");
+        assert_eq!(g.outstanding(), 60);
+        // Cursor passes position 0: the first unit's bytes are demand now.
+        assert!(g.admit(5, 60, 1), "released 60, 0+60 fits");
+        assert_eq!(g.outstanding(), 60);
+    }
+
+    #[test]
+    fn progress_floor_admits_one_oversized_unit() {
+        let g = PressureGauge::new(Some(10));
+        assert!(g.admit(0, 500, 0), "empty gauge must admit (just-in-time floor)");
+        assert!(!g.admit(1, 500, 0), "but only one at a time");
+    }
+
+    #[test]
+    fn names_and_resolution_tags() {
+        assert_eq!(Pressure::Unbounded.name(), "unbounded");
+        assert_eq!(Pressure::Headroom.name(), "headroom");
+        assert_eq!(Pressure::Budget(1).name(), "budget");
+    }
+}

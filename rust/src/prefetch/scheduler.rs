@@ -1,0 +1,409 @@
+//! The clairvoyant prefetch scheduler: a priority queue of schedule
+//! entries ordered by time-until-first-access, drained by a small pool
+//! of fill workers inside a lookahead window behind the live read
+//! cursor.
+//!
+//! Coordination invariants (the reason this lives behind the same
+//! [`FillTable`] the readers use):
+//!
+//! * **Fetch-once across jobs** — every issue goes through
+//!   [`FillTable::try_claim`] on the dataset's *shared* ledger. A chunk
+//!   another co-scheduled session (or this session's own readers)
+//!   already filled or holds in flight is skipped without blocking —
+//!   never double-fetched. Residency recorded by earlier epochs is
+//!   skipped even earlier, via the lock-free snapshot, without touching
+//!   the ledger at all.
+//! * **Bounded lookahead** — a unit is issued only while its first
+//!   access lies within `lookahead` positions of the cursor. The window
+//!   is re-checked against the live cursor on every pop, so the
+//!   scheduler can trail the readers but never run ahead of the bound
+//!   (asserted in `tests/prefetch.rs` via `prefetch_issued`).
+//! * **Bounded in-flight budget** — at most `inflight` fills run at
+//!   once (one per worker thread); each fill goes through the same
+//!   token-bucket-charged cluster helpers as every other remote/NVMe
+//!   byte in the system, so the prefetcher shares bandwidth fairly
+//!   instead of bursting past the caps.
+//! * **Pressure** — before fetching, each issue passes the
+//!   [`PressureGauge`]; a denial rolls the claim back (a demand read can
+//!   take it immediately), requeues the unit, and waits for the cursor.
+//!
+//! Error containment: a worker that fails aborts its claim (so readers
+//! retry/fill the unit themselves), flags the pool dead, and its
+//! *partial* stats shard still merges into the pass result — accounting
+//! stays exact even for failed epochs (the satellite bugfix in
+//! `run_epoch_order` relies on this shape).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::pressure::{Pressure, PressureGauge};
+use super::schedule::{EpochSchedule, ReadCursor};
+use crate::cache::{ChunkGeometry, RamTier, ReadLocation, ResidencySnapshot, SharedCache};
+use crate::netsim::NodeId;
+use crate::posix::reader_pool::{fill_from_remote, FillTable};
+use crate::posix::realfs::{chunk_rel_path, fetch_chunk_payload_into, ReadStats, RealCluster};
+use crate::workload::datagen::DataGenConfig;
+
+/// Default lookahead window, in epoch positions (items).
+pub const DEFAULT_LOOKAHEAD: u64 = 64;
+
+/// Default in-flight fill budget (worker threads).
+pub const DEFAULT_INFLIGHT: usize = 2;
+
+/// Backstop poll while parked on the cursor (wakeups normally arrive via
+/// [`ReadCursor::advance`]; the timeout only covers a lost fast-path
+/// wake or an externally frozen cursor).
+const CURSOR_POLL: Duration = Duration::from_millis(5);
+
+/// Knobs a job passes down to the clairvoyant scheduler
+/// ([`JobSpec`](crate::posix::dataplane::JobSpec) carries one).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefetchConfig {
+    /// How far past the read cursor (in epoch positions) the scheduler
+    /// may issue.
+    pub lookahead: u64,
+    /// Concurrent fills (worker threads) the scheduler may keep in
+    /// flight.
+    pub inflight: usize,
+    /// Cache-pressure rule for ahead-bytes.
+    pub pressure: Pressure,
+}
+
+impl Default for PrefetchConfig {
+    fn default() -> Self {
+        PrefetchConfig {
+            lookahead: DEFAULT_LOOKAHEAD,
+            inflight: DEFAULT_INFLIGHT,
+            pressure: Pressure::Unbounded,
+        }
+    }
+}
+
+impl PrefetchConfig {
+    pub fn lookahead(mut self, positions: u64) -> Self {
+        self.lookahead = positions;
+        self
+    }
+
+    pub fn inflight(mut self, n: usize) -> Self {
+        self.inflight = n;
+        self
+    }
+
+    pub fn pressure(mut self, p: Pressure) -> Self {
+        self.pressure = p;
+        self
+    }
+}
+
+/// What the generic worker loop needs to know about one unit kind.
+/// Implemented for stripe chunks and for whole item files; everything
+/// else (window, claims, pressure, stats) is shared.
+trait PrefetchTarget: Sync {
+    /// Payload bytes of `unit` (what the pressure gauge charges).
+    fn bytes_of(&self, unit: u64) -> u64;
+
+    /// Already resident per the lock-free snapshot? (Skip without even
+    /// touching the ledger — the partially-warm fast path.)
+    fn resident(&self, unit: u64) -> bool;
+
+    /// Adoption probe under a held claim: `Ok(true)` ⇔ the payload was
+    /// already on its home's disk and residency is now recorded — no
+    /// fetch needed.
+    fn try_adopt(&self, unit: u64) -> Result<bool>;
+
+    /// Fetch the unit from the remote store onto its home node and
+    /// record residency. `buf` is the worker's reusable scratch buffer.
+    fn fill(&self, unit: u64, buf: &mut Vec<u8>, stats: &mut ReadStats) -> Result<()>;
+}
+
+/// Chunk-granular target (the canonical mode).
+struct ChunkTarget<'a> {
+    cluster: &'a RealCluster,
+    cache: &'a SharedCache,
+    ram: Option<&'a RamTier>,
+    snapshot: Option<&'a ResidencySnapshot>,
+    dataset: &'a str,
+    cfg: &'a DataGenConfig,
+    geom: &'a ChunkGeometry,
+}
+
+impl PrefetchTarget for ChunkTarget<'_> {
+    fn bytes_of(&self, c: u64) -> u64 {
+        let (s, e) = self.geom.chunk_range(c);
+        e - s
+    }
+
+    fn resident(&self, c: u64) -> bool {
+        self.snapshot.filter(|s| !s.retired()).map(|s| s.contains(c)).unwrap_or(false)
+    }
+
+    fn try_adopt(&self, c: u64) -> Result<bool> {
+        let g = self.geom;
+        let crel = chunk_rel_path(g.dataset_id, g.generation, g.chunk_bytes(), c);
+        if !self.cluster.node_has(g.node_of_chunk(c), &crel) {
+            return Ok(false);
+        }
+        self.cache.mark_chunks(self.dataset, &[c])?;
+        Ok(true)
+    }
+
+    fn fill(&self, c: u64, buf: &mut Vec<u8>, stats: &mut ReadStats) -> Result<()> {
+        let g = self.geom;
+        fetch_chunk_payload_into(self.cluster, self.cfg, g, c, buf, stats)?;
+        self.cache.mark_chunks(self.dataset, &[c])?;
+        // Payload in hand: let the RAM tier's second-touch admission
+        // decide, same as the sequential pass.
+        if let Some(r) = self.ram {
+            r.offer((g.dataset_id, g.generation, g.chunk_bytes(), c), buf);
+        }
+        Ok(())
+    }
+}
+
+/// Whole-file target (the degenerate one-slot-per-item ledgers).
+struct ItemTarget<'a> {
+    cluster: &'a RealCluster,
+    cache: &'a SharedCache,
+    snapshot: Option<&'a ResidencySnapshot>,
+    dataset: &'a str,
+    cfg: &'a DataGenConfig,
+}
+
+impl ItemTarget<'_> {
+    fn home_of(&self, i: u64) -> Result<NodeId> {
+        Ok(match self.cache.read_location(self.dataset, i, NodeId(0))? {
+            ReadLocation::Local => NodeId(0),
+            ReadLocation::Peer(p) => p,
+            ReadLocation::RemoteFill { fill_node } => fill_node,
+        })
+    }
+}
+
+impl PrefetchTarget for ItemTarget<'_> {
+    fn bytes_of(&self, _i: u64) -> u64 {
+        self.cfg.record_bytes() as u64
+    }
+
+    fn resident(&self, i: u64) -> bool {
+        self.snapshot.and_then(|s| s.item_resident(i)).unwrap_or(false)
+    }
+
+    fn try_adopt(&self, i: u64) -> Result<bool> {
+        let home = self.home_of(i)?;
+        if !self.cluster.node_has(home, &self.cfg.item_rel_path(i)) {
+            return Ok(false);
+        }
+        self.cache.mark_item(self.dataset, i)?;
+        Ok(true)
+    }
+
+    fn fill(&self, i: u64, _buf: &mut Vec<u8>, stats: &mut ReadStats) -> Result<()> {
+        let home = self.home_of(i)?;
+        fill_from_remote(self.cluster, self.cache, self.dataset, self.cfg, i, home, stats)
+            .map(|_| ())
+    }
+}
+
+/// Run the clairvoyant scheduler for one chunked epoch: derive the
+/// schedule from `order` and drain it within the window. Blocks until
+/// every scheduled unit is filled/skipped or the cursor stops.
+#[allow(clippy::too_many_arguments)]
+pub fn run_clairvoyant_chunks(
+    cluster: &RealCluster,
+    cache: &SharedCache,
+    fill: &FillTable,
+    ram: Option<&RamTier>,
+    snapshot: Option<&ResidencySnapshot>,
+    dataset: &str,
+    cfg: &DataGenConfig,
+    geom: &ChunkGeometry,
+    order: &[u64],
+    cursor: &ReadCursor,
+    pcfg: &PrefetchConfig,
+    stats: &mut ReadStats,
+) -> Result<()> {
+    let schedule = EpochSchedule::for_chunks(order, geom);
+    run_scheduled_chunks(
+        cluster, cache, fill, ram, snapshot, dataset, cfg, geom, &schedule, cursor, pcfg, stats,
+    )
+}
+
+/// [`run_clairvoyant_chunks`] with an explicit pre-derived schedule —
+/// the window/race tests drive this directly with a frozen cursor.
+#[allow(clippy::too_many_arguments)]
+pub fn run_scheduled_chunks(
+    cluster: &RealCluster,
+    cache: &SharedCache,
+    fill: &FillTable,
+    ram: Option<&RamTier>,
+    snapshot: Option<&ResidencySnapshot>,
+    dataset: &str,
+    cfg: &DataGenConfig,
+    geom: &ChunkGeometry,
+    schedule: &EpochSchedule,
+    cursor: &ReadCursor,
+    pcfg: &PrefetchConfig,
+    stats: &mut ReadStats,
+) -> Result<()> {
+    let target = ChunkTarget { cluster, cache, ram, snapshot, dataset, cfg, geom };
+    run_scheduled(&target, fill, cache, schedule, cursor, pcfg, stats)
+}
+
+/// Run the clairvoyant scheduler for one whole-file epoch (unit = item).
+#[allow(clippy::too_many_arguments)]
+pub fn run_clairvoyant_items(
+    cluster: &RealCluster,
+    cache: &SharedCache,
+    fill: &FillTable,
+    snapshot: Option<&ResidencySnapshot>,
+    dataset: &str,
+    cfg: &DataGenConfig,
+    order: &[u64],
+    cursor: &ReadCursor,
+    pcfg: &PrefetchConfig,
+    stats: &mut ReadStats,
+) -> Result<()> {
+    let schedule = EpochSchedule::for_items(order);
+    let target = ItemTarget { cluster, cache, snapshot, dataset, cfg };
+    run_scheduled(&target, fill, cache, schedule_ref(&schedule), cursor, pcfg, stats)
+}
+
+/// Identity helper so both public entries share one call shape.
+fn schedule_ref(s: &EpochSchedule) -> &EpochSchedule {
+    s
+}
+
+/// The shared drain loop: `inflight` workers over one priority heap.
+/// Per-worker stat shards merge into `stats`; the first error wins (the
+/// others' partial shards still merge).
+fn run_scheduled(
+    target: &dyn PrefetchTarget,
+    fill: &FillTable,
+    cache: &SharedCache,
+    schedule: &EpochSchedule,
+    cursor: &ReadCursor,
+    pcfg: &PrefetchConfig,
+    stats: &mut ReadStats,
+) -> Result<()> {
+    if schedule.is_empty() {
+        return Ok(());
+    }
+    let gauge = PressureGauge::new(pcfg.pressure.resolve(cache));
+    let heap: Mutex<BinaryHeap<Reverse<(u64, u64)>>> =
+        Mutex::new(schedule.entries().iter().map(|&e| Reverse(e)).collect());
+    let dead = AtomicBool::new(false);
+    let workers = pcfg.inflight.max(1);
+    let shards: Vec<(ReadStats, Result<()>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| worker(target, fill, &heap, cursor, &gauge, pcfg.lookahead, &dead))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join().unwrap_or_else(|_| {
+                    (ReadStats::default(), Err(anyhow!("prefetch worker panicked")))
+                })
+            })
+            .collect()
+    });
+    let mut first_err = None;
+    for (shard, res) in shards {
+        stats.merge(&shard);
+        if let Err(e) = res {
+            first_err.get_or_insert(e);
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// One worker: pop the nearest-first-access unit inside the window,
+/// claim, adopt-or-fill, repeat. Exits when the heap drains, the cursor
+/// stops (epoch over — anything left would be filled after its only
+/// use), or a sibling worker died.
+fn worker(
+    target: &dyn PrefetchTarget,
+    fill: &FillTable,
+    heap: &Mutex<BinaryHeap<Reverse<(u64, u64)>>>,
+    cursor: &ReadCursor,
+    gauge: &PressureGauge,
+    lookahead: u64,
+    dead: &AtomicBool,
+) -> (ReadStats, Result<()>) {
+    let mut stats = ReadStats::default();
+    let mut buf = Vec::new();
+    let res = (|| -> Result<()> {
+        loop {
+            if dead.load(Ordering::Acquire) || cursor.stopped() {
+                return Ok(());
+            }
+            let (pos, unit) = {
+                let mut q = heap.lock().unwrap();
+                let Some(&Reverse((pos, _))) = q.peek() else { return Ok(()) };
+                let now = cursor.position();
+                if pos >= now.saturating_add(lookahead.max(1)) {
+                    // Nearest unit is outside the window: park until the
+                    // readers advance (never issue past the bound).
+                    drop(q);
+                    cursor.wait_for_progress(now, CURSOR_POLL);
+                    continue;
+                }
+                let Reverse(e) = q.pop().expect("peeked above");
+                e
+            };
+            if target.resident(unit) {
+                continue;
+            }
+            if !fill.try_claim(unit) {
+                // A reader or a co-scheduled job's prefetcher owns it:
+                // fetch-once says we are done with this unit.
+                continue;
+            }
+            match target.try_adopt(unit) {
+                Ok(true) => {
+                    fill.mark_resident(unit);
+                    continue;
+                }
+                Ok(false) => {}
+                Err(e) => {
+                    fill.abort(unit);
+                    return Err(e);
+                }
+            }
+            let now = cursor.position();
+            if !gauge.admit(pos, target.bytes_of(unit), now) {
+                // Pressure: filling now would pile speculative bytes past
+                // the budget. Release the claim (a demand read may take
+                // it), requeue, wait for the cursor to free budget.
+                fill.abort(unit);
+                heap.lock().unwrap().push(Reverse((pos, unit)));
+                cursor.wait_for_progress(now, CURSOR_POLL);
+                continue;
+            }
+            match target.fill(unit, &mut buf, &mut stats) {
+                Ok(()) => {
+                    fill.complete_prefetched(unit);
+                    stats.prefetch_issued += 1;
+                }
+                Err(e) => {
+                    fill.abort(unit);
+                    return Err(e);
+                }
+            }
+        }
+    })();
+    if res.is_err() {
+        dead.store(true, Ordering::Release);
+    }
+    (stats, res)
+}

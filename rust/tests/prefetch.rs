@@ -1,0 +1,288 @@
+//! Integration tests for the clairvoyant prefetch subsystem
+//! (`rust/src/prefetch/`): fetch-once under prefetcher/reader races,
+//! byte-identity across strategies, the lookahead window bound, the
+//! partially-warm gate (prefetch only missing chunks; skip entirely when
+//! fully resident), partial-stats merging on mid-epoch errors, and the
+//! FillTable prefetch-credit protocol.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hoard::cache::{CacheManager, EvictionPolicy, SharedCache};
+use hoard::netsim::NodeId;
+use hoard::posix::dataplane::{DataPlane, JobSpec, ReadRequest};
+use hoard::posix::reader_pool::{Claim, FillTable};
+use hoard::posix::realfs::{ReadStats, RealCluster};
+use hoard::prefetch::{
+    run_scheduled_chunks, EpochSchedule, PrefetchConfig, PrefetchStrategy, ReadCursor,
+};
+use hoard::storage::{Device, DeviceKind, Volume};
+use hoard::workload::datagen::{self, DataGenConfig};
+use hoard::workload::DatasetSpec;
+
+const NODES: usize = 4;
+
+fn fixture(tag: &str, items: u64, chunk_bytes: u64) -> (RealCluster, SharedCache, DataGenConfig) {
+    let root = std::env::temp_dir().join(format!("hoard-prefetch-t-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let cluster = RealCluster::create(&root, NODES, 500e6).unwrap();
+    let cfg = DataGenConfig { num_items: items, files_per_dir: 32, ..Default::default() };
+    let total = datagen::generate(&cluster.remote_dir, &cfg).unwrap();
+    let vols = (0..NODES)
+        .map(|_| Volume::new(vec![Device::new(DeviceKind::Nvme, 1 << 30)]))
+        .collect();
+    let mut manager = CacheManager::new(vols, EvictionPolicy::Manual);
+    manager.chunk_bytes = chunk_bytes;
+    manager.register(DatasetSpec::new("d", items, total), "nfs://r/d".into()).unwrap();
+    manager.place("d", (0..NODES).map(NodeId).collect()).unwrap();
+    (cluster, SharedCache::new(manager), cfg)
+}
+
+/// The tentpole race: two clairvoyant sessions × 4 readers each, cold,
+/// racing one shared ledger — exactly `num_chunks` fills, the remote
+/// store supplies every byte once, and the prefetch counters obey their
+/// invariants (`hits ≤ issued ≤ fills`).
+#[test]
+fn clairvoyant_cold_race_fills_each_chunk_once() {
+    let (cluster, cache, cfg) = fixture("race", 24, 777);
+    let total = cfg.num_items * cfg.record_bytes() as u64;
+    let chunks = cache.geometry("d").unwrap().num_chunks();
+    let plane = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+    let a = plane
+        .open_job(
+            JobSpec::new("d", cfg.clone())
+                .readers(4)
+                .seed(1)
+                .prefetch_strategy(PrefetchStrategy::Clairvoyant)
+                .prefetch_inflight(4),
+        )
+        .unwrap();
+    let b = plane
+        .open_job(
+            JobSpec::new("d", cfg.clone())
+                .readers(4)
+                .seed(2)
+                .prefetch_strategy(PrefetchStrategy::Clairvoyant)
+                .prefetch_inflight(4),
+        )
+        .unwrap();
+    let (ra, rb) = std::thread::scope(|s| {
+        let ha = s.spawn(|| a.run_epoch(0).unwrap());
+        let hb = s.spawn(|| b.run_epoch(0).unwrap());
+        (ha.join().unwrap(), hb.join().unwrap())
+    });
+    assert_eq!(
+        plane.dataset_fills("d"),
+        chunks,
+        "2 racing clairvoyant jobs must fill every chunk exactly once, together"
+    );
+    let stats = cluster.take_stats();
+    assert_eq!(stats.remote_bytes, total, "remote supplied every byte exactly once");
+    let issued = ra.merged.prefetch_issued + rb.merged.prefetch_issued;
+    let hits = ra.merged.prefetch_hits + rb.merged.prefetch_hits;
+    assert!(issued <= chunks, "cannot issue more prefetches than chunks ({issued} > {chunks})");
+    assert!(hits <= issued, "each prefetched chunk yields at most one credit ({hits} > {issued})");
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
+
+/// Byte-identity ablation: off / sequential / clairvoyant cold epochs all
+/// produce generator-exact bytes for every item.
+#[test]
+fn epochs_byte_identical_across_strategies() {
+    for (tag, strategy) in [
+        ("id-off", PrefetchStrategy::Off),
+        ("id-seq", PrefetchStrategy::Sequential),
+        ("id-cv", PrefetchStrategy::Clairvoyant),
+    ] {
+        let (cluster, cache, cfg) = fixture(tag, 10, 777);
+        let plane = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+        let sess = plane
+            .open_job(JobSpec::new("d", cfg.clone()).readers(2).prefetch_strategy(strategy))
+            .unwrap();
+        sess.run_epoch(0).unwrap();
+        for i in 0..cfg.num_items {
+            let (_, want) = datagen::make_record(&cfg, i);
+            let got = sess.read(&ReadRequest::item(i), NodeId(0)).unwrap();
+            assert_eq!(got, want, "item {i} under {} prefetch", strategy.name());
+        }
+        std::fs::remove_dir_all(&cluster.root).unwrap();
+    }
+}
+
+/// Poll until `fill.fills_completed()` reaches `want` (progress) and then
+/// *stays* there (bound) — the scheduler must neither stall inside the
+/// window nor issue a single unit beyond it.
+fn expect_fills_exactly(fill: &FillTable, want: u64, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while fill.fills_completed() < want {
+        assert!(Instant::now() < deadline, "{what}: stuck at {} of {want}", fill.fills_completed());
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // Settle time ≫ the scheduler's poll interval: any unit past the
+    // window would have been issued by now.
+    std::thread::sleep(Duration::from_millis(60));
+    assert_eq!(fill.fills_completed(), want, "{what}: issued past the lookahead window");
+}
+
+/// The lookahead window bound, driven directly: a frozen cursor admits
+/// exactly the units whose first access is inside the window, advancing
+/// the cursor widens it by exactly that much, and `prefetch_issued`
+/// matches the ledger fill count at the end.
+#[test]
+fn lookahead_window_never_issues_beyond_bound() {
+    let (cluster, cache, cfg) = fixture("window", 16, 777);
+    let geom = cache.geometry("d").unwrap();
+    let order: Vec<u64> = (0..cfg.num_items).rev().collect();
+    let schedule = EpochSchedule::for_chunks(&order, &geom);
+    let fill = FillTable::new(geom.num_chunks());
+    let cursor = ReadCursor::new(order.len() as u64);
+    const LOOKAHEAD: u64 = 3;
+    let pcfg = PrefetchConfig::default().lookahead(LOOKAHEAD).inflight(2);
+    let in_window =
+        |hi: u64| schedule.entries().iter().filter(|&&(p, _)| p < hi).count() as u64;
+
+    let mut stats = ReadStats::default();
+    std::thread::scope(|s| {
+        let h = s.spawn(|| {
+            let mut st = ReadStats::default();
+            run_scheduled_chunks(
+                &cluster, &cache, &fill, None, None, "d", &cfg, &geom, &schedule, &cursor,
+                &pcfg, &mut st,
+            )
+            .unwrap();
+            st
+        });
+        // Cursor frozen at 0: only first accesses in 0..LOOKAHEAD may go.
+        expect_fills_exactly(&fill, in_window(LOOKAHEAD), "frozen cursor");
+        // Advance 4 positions: the window slides to 0..4+LOOKAHEAD.
+        for _ in 0..4 {
+            cursor.advance();
+        }
+        expect_fills_exactly(&fill, in_window(4 + LOOKAHEAD), "advanced cursor");
+        // Epoch over: parked workers exit without issuing the rest.
+        cursor.stop();
+        stats = h.join().unwrap();
+    });
+    assert_eq!(
+        stats.prefetch_issued,
+        fill.fills_completed(),
+        "issued counter must match the ledger exactly"
+    );
+    assert_eq!(fill.fills_completed(), in_window(4 + LOOKAHEAD));
+    assert!(fill.fills_completed() < geom.num_chunks(), "the bound must have bitten");
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
+
+/// The partially-warm satellite: a dataset warmed over half its items is
+/// *not* `Cached`, but the clairvoyant epoch must fetch exactly the
+/// missing chunks' bytes (resident chunks are skipped without a claim) —
+/// and once fully resident, the prefetcher is skipped outright.
+#[test]
+fn partially_warm_prefetches_only_missing_chunks() {
+    let (cluster, cache, cfg) = fixture("warm", 16, 777);
+    let total = cfg.num_items * cfg.record_bytes() as u64;
+    let geom = cache.geometry("d").unwrap();
+    // Warm half the items (a prefix of chunks) through a no-prefetch job.
+    let plane_a = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+    let a = plane_a.open_job(JobSpec::new("d", cfg.clone()).prefetch(false)).unwrap();
+    let half: Vec<u64> = (0..cfg.num_items / 2).collect();
+    a.run_epoch_order(&half).unwrap();
+    assert!(!cache.is_cached("d"), "half-warm must not be Cached");
+    let snap = cache.snapshot("d").unwrap();
+    let missing_bytes: u64 = (0..geom.num_chunks())
+        .filter(|&c| !snap.contains(c))
+        .map(|c| {
+            let (s, e) = geom.chunk_range(c);
+            e - s
+        })
+        .sum();
+    assert!(missing_bytes > 0 && missing_bytes < total, "fixture must be partially warm");
+    cluster.take_stats();
+
+    // A fresh plane (fresh ledger — nothing pre-claimed) runs clairvoyant:
+    // exactly the missing bytes cross the remote link.
+    let plane_b = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+    let b = plane_b
+        .open_job(
+            JobSpec::new("d", cfg.clone())
+                .readers(2)
+                .prefetch_strategy(PrefetchStrategy::Clairvoyant),
+        )
+        .unwrap();
+    let rb = b.run_epoch(0).unwrap();
+    assert!(rb.prefetcher.is_some(), "partially-warm dataset must still run the prefetcher");
+    let stats = cluster.take_stats();
+    assert_eq!(
+        stats.remote_bytes, missing_bytes,
+        "clairvoyant epoch must fetch exactly the missing chunks"
+    );
+    assert!(cache.is_cached("d"), "epoch over a half-warm dataset completes the stripe");
+
+    // Fully resident now: the prefetcher must not run at all.
+    let c = plane_b.open_job(JobSpec::new("d", cfg.clone()).seed(9)).unwrap();
+    let rc = c.run_epoch(0).unwrap();
+    assert!(rc.prefetcher.is_none(), "fully-resident dataset must skip the prefetcher");
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
+
+/// The partial-stats satellite: a prefetcher that dies mid-epoch (remote
+/// file vanished) fails the epoch, but the bytes it *did* move stay in
+/// the job accumulator — accounting is exact even for failed epochs.
+#[test]
+fn prefetcher_error_keeps_partial_stats() {
+    let (cluster, cache, cfg) = fixture("err", 16, 777);
+    // Vaporize the last item's remote file: the sequential pass (stripe
+    // order) fills every earlier chunk, then dies on the tail.
+    std::fs::remove_file(cluster.remote_dir.join(cfg.item_rel_path(cfg.num_items - 1))).unwrap();
+    let plane = Arc::new(DataPlane::new(cluster.clone(), cache.clone()));
+    let sess = plane
+        .open_job(
+            JobSpec::new("d", cfg.clone()).prefetch_strategy(PrefetchStrategy::Sequential),
+        )
+        .unwrap();
+    // Readers touch only item 0 (which exists) — the epoch's error comes
+    // from the prefetcher alone.
+    sess.run_epoch_order(&[0]).unwrap_err();
+    let stats = sess.stats();
+    assert!(
+        stats.prefetch_issued > 0,
+        "the prefetcher's partial shard must be merged, not dropped"
+    );
+    assert!(stats.remote_bytes > 0, "partial fills happened and must be accounted");
+    std::fs::remove_dir_all(&cluster.root).unwrap();
+}
+
+/// The FillTable prefetch-credit protocol: `complete_prefetched` arms a
+/// one-shot credit, the first crediting claim consumes it, `abort` clears
+/// it, and `prefetch_outstanding` tracks the armed count.
+#[test]
+fn fill_table_prefetch_credit_protocol() {
+    let t = FillTable::new(40);
+    assert_eq!(t.prefetch_outstanding(), 0);
+    // Prefetcher claims and completes slot 7.
+    assert!(t.try_claim(7));
+    t.complete_prefetched(7);
+    assert_eq!(t.fills_completed(), 1);
+    assert_eq!(t.prefetch_outstanding(), 1);
+    // First reader takes the credit; second sees plain residency.
+    assert_eq!(t.claim_or_wait_credit(7), (Claim::Resident, true));
+    assert_eq!(t.prefetch_outstanding(), 0);
+    assert_eq!(t.claim_or_wait_credit(7), (Claim::Resident, false));
+    // The legacy claim never consumes a credit.
+    assert!(t.try_claim(23));
+    t.complete_prefetched(23);
+    assert_eq!(t.claim_or_wait(23), Claim::Resident);
+    assert_eq!(t.prefetch_outstanding(), 1, "claim_or_wait must leave the credit armed");
+    assert_eq!(t.claim_or_wait_credit(23), (Claim::Resident, true));
+    // Abort rolls the slot *and* its credit back.
+    assert!(t.try_claim(8));
+    t.complete_prefetched(8);
+    assert_eq!(t.prefetch_outstanding(), 1);
+    t.abort(8);
+    assert_eq!(t.prefetch_outstanding(), 0);
+    assert_eq!(t.claim_or_wait_credit(8), (Claim::Filler, false));
+    // A plain demand fill never arms a credit.
+    t.complete(8);
+    assert_eq!(t.claim_or_wait_credit(8), (Claim::Resident, false));
+    assert_eq!(t.prefetch_outstanding(), 0);
+}
